@@ -1,0 +1,56 @@
+//! Design-space exploration: sweep architectural parameters of the
+//! accelerator and print the latency surface — the workflow an
+//! architect would use this library for (paper Sec. VIII-C).
+//!
+//! Sweeps DRAM channels × vertex-tiling (m) for GCN and G-GCN on a
+//! Pokec-like workload and prints µs per cell, plus the paper
+//! configuration's position.
+//!
+//! Run: `cargo run --release --example arch_sweep`
+
+use grip::config::{GripConfig, ModelConfig};
+use grip::graph::Dataset;
+use grip::greta::{compile, GnnModel};
+use grip::nodeflow::{Nodeflow, Sampler};
+use grip::sim::simulate;
+
+fn main() {
+    let mc = ModelConfig::paper();
+    let g = Dataset::Pokec.generate(0.005, 17);
+    let sampler = Sampler::new(42);
+    // A canonical full-fanout nodeflow.
+    let nf = (0..500u32)
+        .map(|v| Nodeflow::build(&g, &sampler, &[v], &mc))
+        .max_by_key(|n| (n.layers[0].num_outputs, n.neighborhood_size()))
+        .unwrap();
+    println!(
+        "workload: nodeflow with {} unique vertices, {} edges\n",
+        nf.neighborhood_size(),
+        nf.total_edges()
+    );
+
+    for model in [GnnModel::Gcn, GnnModel::Ggcn] {
+        let plan = compile(model, &mc);
+        println!("== {} latency (µs): DRAM channels × tile_m ==", model.name());
+        print!("{:>9}", "ch\\m");
+        let ms = [1usize, 4, 8, 11, 16];
+        for m in ms {
+            print!(" {:>8}", m);
+        }
+        println!();
+        for ch in [1usize, 2, 4, 8, 16] {
+            print!("{:>9}", ch);
+            for m in ms {
+                let mut c = GripConfig::paper();
+                c.dram_channels = ch;
+                c.prefetch_lanes = ch;
+                c.tile_m = m;
+                let r = simulate(&c, &plan, &nf);
+                let marker = if ch == 4 && m == 11 { "*" } else { " " };
+                print!(" {:>7.1}{}", r.us(&c), marker);
+            }
+            println!();
+        }
+        println!("(* = paper configuration)\n");
+    }
+}

@@ -1,0 +1,157 @@
+"""AOT pipeline: lower every L2 model to HLO *text* + a JSON manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the runtime's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser on the Rust side reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage (driven by `make artifacts`):
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODEL_FNS, MODELS, PadShapes, param_names, set_impl
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, shapes: PadShapes, impl: str = "ref") -> str:
+    """Lower one model with the chosen kernel implementation: "ref" =
+    jnp bodies (XLA-fusable, the fast CPU serving artifact), "pallas" =
+    L1 Pallas vertex-tiling bodies (the hardware-structural artifact).
+    Both are asserted numerically identical at AOT time."""
+    set_impl(impl)
+    try:
+        fn, example_args = MODEL_FNS[name]
+        lowered = jax.jit(fn).lower(*example_args(shapes))
+        return to_hlo_text(lowered)
+    finally:
+        set_impl("pallas")
+
+
+def arg_manifest(name: str, shapes: PadShapes) -> list[dict]:
+    _, example_args = MODEL_FNS[name]
+    names = ["a1", "a2", "h"] + param_names(name)
+    specs = example_args(shapes)
+    assert len(names) == len(specs), (name, names, len(specs))
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+        for n, s in zip(names, specs)
+    ]
+
+
+def _lcg_stream(seed: int):
+    """Deterministic LCG shared bit-for-bit with rust/src/runtime/golden.rs.
+
+    state' = state * 6364136223846793005 + 1442695040888963407 (mod 2^64)
+    value  = ((state' >> 33) as u31) / 2^31 - 0.5   in [-0.5, 0.5)
+    """
+    state = seed & 0xFFFFFFFFFFFFFFFF
+    while True:
+        state = (state * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        yield ((state >> 33) & 0x7FFFFFFF) / float(1 << 31) - 0.5
+
+
+def golden_args(name: str, shapes: PadShapes, seed: int = 42):
+    """Concrete inputs for the golden vector, in manifest order.  a1/a2
+    are thresholded to a 0/1 incidence (valid for every model); other
+    args are small dense values."""
+    import numpy as np
+
+    stream = _lcg_stream(seed)
+    args = []
+    for i, spec in enumerate(arg_manifest(name, shapes)):
+        n = int(np.prod(spec["shape"])) if spec["shape"] else 1
+        vals = np.fromiter((next(stream) for _ in range(n)), dtype=np.float32, count=n)
+        if i < 2:
+            vals = (vals > 0.35).astype(np.float32)  # ~15% density
+        else:
+            vals = vals * 0.25
+        args.append(vals.reshape(spec["shape"]) if spec["shape"] else np.float32(vals[0]))
+    return args
+
+
+def golden_output(name: str, shapes: PadShapes, seed: int = 42, impl: str = "ref"):
+    import numpy as np
+
+    set_impl(impl)
+    try:
+        fn, _ = MODEL_FNS[name]
+        (out,) = fn(*golden_args(name, shapes, seed))
+        return np.asarray(out)
+    finally:
+        set_impl("pallas")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+
+    shapes = PadShapes()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "pad_shapes": dataclasses.asdict(shapes),
+        "models": {},
+    }
+    import numpy as np
+
+    for name in args.models.split(","):
+        # Serving artifact: ref-impl bodies (XLA-fusable on CPU PJRT).
+        text = lower_model(name, shapes, impl="ref")
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Hardware-structural artifact: Pallas vertex-tiling bodies.
+        text_pl = lower_model(name, shapes, impl="pallas")
+        with open(os.path.join(args.out, f"{name}.pallas.hlo.txt"), "w") as f:
+            f.write(text_pl)
+        # Build-time cross-check: both impls compute the same numbers.
+        gold = golden_output(name, shapes, impl="ref")
+        gold_pl = golden_output(name, shapes, impl="pallas")
+        np.testing.assert_allclose(gold, gold_pl, rtol=2e-4, atol=2e-4)
+        manifest["models"][name] = {
+            "hlo": f"{name}.hlo.txt",
+            "hlo_pallas": f"{name}.pallas.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "args": arg_manifest(name, shapes),
+            "output": {
+                "shape": [shapes.v2, shapes.f_out],
+                "dtype": "float32",
+            },
+            "golden": {
+                "seed": 42,
+                # first row of the output, enough to pin the whole pipeline
+                "row0": [float(x) for x in gold[0]],
+            },
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

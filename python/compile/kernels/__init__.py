@@ -1,0 +1,3 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .vertex_tiled import vertex_tiled_matmul, vmem_footprint_bytes  # noqa: F401
+from .edge_accum import masked_max  # noqa: F401

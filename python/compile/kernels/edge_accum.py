@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: masked max edge-accumulate (GReTA ``reduce = max``).
+
+GraphSAGE-max aggregates per-edge messages with an element-wise max
+(paper Sec. VII Models).  In GRIP hardware this runs on the reduce lanes
+of the edge unit; here it is a Pallas kernel tiled over output vertices,
+so each reduce lane's accumulator register file corresponds to one
+(m, f) output tile held in VMEM.
+
+``mask`` is the dense nodeflow incidence (V, U) with 1.0 where an edge
+(u -> v) exists; messages ``msg`` are (U, F).  Vertices with no
+in-edges reduce to 0 (matching GRIP's zero-initialized edge
+accumulator), not -inf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -3.0e38  # effectively -inf for f32 without generating NaN via 0*inf
+
+
+def _mm_kernel(mask_ref, msg_ref, o_ref):
+    mask = mask_ref[...]  # (m, U)
+    msg = msg_ref[...]  # (U, f)
+    # Broadcast-select then reduce over U: reduce lanes accumulate the
+    # running max per destination vertex.
+    sel = jnp.where(mask[:, :, None] > 0, msg[None, :, :], _NEG)
+    acc = jnp.max(sel, axis=1)  # (m, f)
+    has_edge = jnp.sum(mask, axis=1, keepdims=True) > 0
+    o_ref[...] = jnp.where(has_edge, acc, 0.0)
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return (x + q - 1) // q * q
+
+
+@functools.partial(jax.jit, static_argnames=("m", "f"))
+def masked_max(mask, msg, *, m: int = 8, f: int = 64):
+    """Per-output-vertex masked element-wise max of messages.
+
+    Args:
+      mask: (V, U) dense incidence, nonzero -> edge exists.
+      msg:  (U, F) per-input-vertex messages.
+    Returns: (V, F) with rows of isolated vertices equal to 0.
+    """
+    v_dim, u_dim = mask.shape
+    u2, f_dim = msg.shape
+    assert u_dim == u2
+
+    vp, fp = _ceil_to(v_dim, m), _ceil_to(f_dim, f)
+    mask_p = jnp.pad(mask, ((0, vp - v_dim), (0, 0)))
+    msg_p = jnp.pad(msg, ((0, 0), (0, fp - f_dim)))
+
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(vp // m, fp // f),
+        in_specs=[
+            pl.BlockSpec((m, u_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((u_dim, f), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((vp, fp), jnp.float32),
+        interpret=True,
+    )(mask_p, msg_p)
+    return out[:v_dim, :f_dim]

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: GRIP's *vertex-tiling* schedule (paper Sec. VI-B).
+
+Computes ``Z = (A @ H) @ W`` — the fused edge-accumulate +
+vertex-accumulate of a GReTA program whose ``transform`` is affine —
+without ever materializing the full edge-accumulator matrix ``P = A @ H``
+(shape V x F).  Instead the grid walks (vertex tiles of m rows, output
+tiles of o columns, feature tiles of f columns) and materializes only an
+``m x f`` edge-accumulator tile, exactly the 1.5 KiB tile the paper's
+hardware keeps (Fig. 8).  Each ``f x o`` weight tile streamed from the
+tile buffer is reused across the m vertices of the tile, cutting weight
+bandwidth by 1/m — the paper's key bandwidth observation.
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation):
+  * weight BlockSpec (f, o)      <-> tile buffer resident tile
+  * transient ``p`` tile (m, f)  <-> edge accumulator SRAM
+  * ``jnp.dot`` on (m,f)x(f,o)   <-> 16x32 weight-stationary PE array
+
+interpret=True always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against ``ref.py`` and real-TPU
+efficiency is *estimated* from the tile shapes (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vt_kernel(a_ref, h_ref, w_ref, o_ref):
+    """One grid step: edge-accumulate an (m, f) tile, then consume it
+    against the resident (f, o) weight tile."""
+    k = pl.program_id(2)
+
+    # Edge-accumulate phase for this tile: rows of A gather+reduce the
+    # f-wide feature slice of every input vertex (prefetch lanes +
+    # crossbar + reduce lanes in hardware).
+    p_tile = jnp.dot(a_ref[...], h_ref[...], preferred_element_type=jnp.float32)
+
+    # Vertex-accumulate phase: the weight tile is stationary for all m
+    # vertices of the tile (this is the 1/m bandwidth saving).
+    contrib = jnp.dot(p_tile, w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += contrib
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return (x + q - 1) // q * q
+
+
+@functools.partial(jax.jit, static_argnames=("m", "f", "o"))
+def vertex_tiled_matmul(a, h, w, *, m: int = 8, f: int = 64, o: int = 128):
+    """``(A @ H) @ W`` via the GRIP vertex-tiling schedule.
+
+    Args:
+      a: dense nodeflow adjacency, shape (V, U), float32.
+      h: input vertex features, shape (U, F), float32.
+      w: layer weights, shape (F, O), float32.
+      m: vertices per tile (paper's M tiling parameter).
+      f: edge-accumulator features per tile (paper's F parameter).
+      o: output features per weight tile.
+
+    Shapes need not divide the tile sizes; inputs are zero-padded (zero
+    rows/cols contribute nothing to the affine transform).
+    """
+    v_dim, u_dim = a.shape
+    u2, f_dim = h.shape
+    f2, o_dim = w.shape
+    assert u_dim == u2 and f_dim == f2, (a.shape, h.shape, w.shape)
+
+    vp, fp, op = _ceil_to(v_dim, m), _ceil_to(f_dim, f), _ceil_to(o_dim, o)
+    a_p = jnp.pad(a, ((0, vp - v_dim), (0, 0)))
+    h_p = jnp.pad(h, ((0, 0), (0, fp - f_dim)))
+    w_p = jnp.pad(w, ((0, fp - f_dim), (0, op - o_dim)))
+
+    grid = (vp // m, op // o, fp // f)
+    out = pl.pallas_call(
+        _vt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, u_dim), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((u_dim, f), lambda i, j, k: (0, k)),
+            pl.BlockSpec((f, o), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((m, o), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((vp, op), jnp.float32),
+        interpret=True,
+    )(a_p, h_p, w_p)
+    return out[:v_dim, :o_dim]
+
+
+def vmem_footprint_bytes(u_dim: int, m: int, f: int, o: int, elem: int = 4) -> int:
+    """Estimated VMEM bytes resident per grid step (EXPERIMENTS.md §Perf):
+    A tile (m, U) + H tile (U, f) + W tile (f, o) + out tile (m, o) +
+    transient edge-accumulator (m, f)."""
+    return elem * (m * u_dim + u_dim * f + f * o + m * o + m * f)

@@ -1,0 +1,221 @@
+"""L2: the four GNN models (paper Sec. VII) as JAX forward passes over a
+*padded nodeflow*, calling the L1 Pallas kernels.
+
+Each model is a pure function over fixed-shape dense arrays so it can be
+AOT-lowered once (aot.py) and executed forever from the Rust coordinator
+with zero Python on the request path.
+
+Shared nodeflow convention (also implemented by rust/src/nodeflow and
+asserted in integration tests):
+
+  * Layer i has input vertices U_i and output vertices V_i; the first
+    |V_i| entries of U_i are the output vertices themselves, so a
+    layer's self-features are ``h[:V_i]``.
+  * ``a1``/``a2`` are dense (V_i, U_i) nodeflow matrices.  For GCN they
+    carry mean-normalized weights (rows sum to 1); for GIN/G-GCN they
+    are 0/1 sum-incidence; for GraphSAGE-max they are 0/1 masks.
+  * All shapes are padded to PadShapes; padding rows/cols are zero and
+    are provably inert for every model (masked max treats empty rows as
+    0; affine transforms map zero rows to zero).
+
+Default shapes follow the paper: 2 layers, samples (25, 10), feature
+dims 602 -> 512 -> 256, batch = 1 target vertex.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_max, vertex_tiled_matmul
+from .kernels import ref as _ref
+
+MODELS = ("gcn", "sage", "gin", "ggcn")
+
+# ---------------------------------------------------------------- impls
+# The models are written against this kernel table. "pallas" routes the
+# hot spots through the L1 Pallas kernels (the hardware-structural
+# lowering, used for TPU targets and kernel validation); "ref" routes
+# them through the pure-jnp oracles (identical math -- asserted both by
+# python/tests and at AOT time -- but XLA-fusable, ~5x faster on the CPU
+# PJRT serving path; see EXPERIMENTS.md section Perf).
+_KERNELS = {
+    "pallas": {"vtm": vertex_tiled_matmul, "mmax": masked_max},
+    "ref": {"vtm": _ref.vertex_tiled_matmul_ref, "mmax": _ref.masked_max_ref},
+}
+_impl = "pallas"
+
+
+def set_impl(name: str) -> None:
+    """Select the kernel implementation used by subsequent tracing."""
+    assert name in _KERNELS, name
+    global _impl
+    _impl = name
+
+
+def _vtm(a, h, w):
+    return _KERNELS[_impl]["vtm"](a, h, w)
+
+
+def _mmax(mask, msg):
+    return _KERNELS[_impl]["mmax"](mask, msg)
+
+
+@dataclass(frozen=True)
+class PadShapes:
+    """Fixed padded nodeflow dimensions baked into the HLO artifact."""
+
+    u1: int = 288  # >= 11 * 25 sampled layer-1 inputs, padded to tile
+    v1: int = 16  # >= 1 + 10 layer-1 outputs
+    u2: int = 16  # == v1
+    v2: int = 8  # >= 1 target vertex (m-tile aligned)
+    f_in: int = 602
+    f_hid: int = 512
+    f_out: int = 256
+
+    # Vertex-tiling parameters for the L1 kernel (paper Fig. 13b region
+    # of peak performance: F = 64, M around the output-vertex count).
+    m: int = 8
+    f: int = 64
+    o: int = 128
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Unpadded logical dims (for tests and the Rust manifest)."""
+
+    sample1: int = 25
+    sample2: int = 10
+    f_in: int = 602
+    f_hid: int = 512
+    f_out: int = 256
+
+
+# --------------------------------------------------------------------- GCN
+def gcn_fwd(a1, a2, h, w1, w2):
+    """Z = relu(Â relu(Â H W1) W2) — both layers through the vertex-tiled
+    kernel (transform is a single matmul, the paper's canonical case)."""
+    z1 = jnp.maximum(_vtm(a1, h, w1), 0.0)
+    z2 = jnp.maximum(_vtm(a2, z1, w2), 0.0)
+    return (z2,)
+
+
+def gcn_example_args(s: PadShapes):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((s.v1, s.u1), f32),
+        jax.ShapeDtypeStruct((s.v2, s.u2), f32),
+        jax.ShapeDtypeStruct((s.u1, s.f_in), f32),
+        jax.ShapeDtypeStruct((s.f_in, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_out), f32),
+    )
+
+
+# --------------------------------------------------------- GraphSAGE (max)
+def _sage_layer(mask, h, wp, ws, wn):
+    v = mask.shape[0]
+    msg = jnp.maximum(h @ wp, 0.0)  # per-edge transform (program 1)
+    agg = _mmax(mask, msg)  # edge-accumulate, reduce = max
+    return jnp.maximum(h[:v] @ ws + agg @ wn, 0.0)
+
+
+def sage_fwd(m1, m2, h, wp1, ws1, wn1, wp2, ws2, wn2):
+    z1 = _sage_layer(m1, h, wp1, ws1, wn1)
+    z2 = _sage_layer(m2, z1, wp2, ws2, wn2)
+    return (z2,)
+
+
+def sage_example_args(s: PadShapes):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((s.v1, s.u1), f32),
+        jax.ShapeDtypeStruct((s.v2, s.u2), f32),
+        jax.ShapeDtypeStruct((s.u1, s.f_in), f32),
+        jax.ShapeDtypeStruct((s.f_in, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_in, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_out), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_out), f32),
+    )
+
+
+# --------------------------------------------------------------------- GIN
+def _gin_layer(a_sum, h, eps, w1, w2):
+    v = a_sum.shape[0]
+    # (Â H) W1 through the tiled kernel + the (1+eps) self-term folded in.
+    t = _vtm(a_sum, h, w1) + (1.0 + eps) * (h[:v] @ w1)
+    return jnp.maximum(jnp.maximum(t, 0.0) @ w2, 0.0)
+
+
+def gin_fwd(a1, a2, h, eps1, eps2, w1a, w1b, w2a, w2b):
+    z1 = _gin_layer(a1, h, eps1, w1a, w1b)
+    z2 = _gin_layer(a2, z1, eps2, w2a, w2b)
+    return (z2,)
+
+
+def gin_example_args(s: PadShapes):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((s.v1, s.u1), f32),
+        jax.ShapeDtypeStruct((s.v2, s.u2), f32),
+        jax.ShapeDtypeStruct((s.u1, s.f_in), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((s.f_in, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_out), f32),
+    )
+
+
+# ------------------------------------------------------------------- G-GCN
+def _ggcn_layer(a_sum, h, wg, wm, ws):
+    v = a_sum.shape[0]
+    # program 1: scalar per-source gate (Marcheggiani & Titov edge gates)
+    gate = jax.nn.sigmoid(h @ wg)  # (U, 1), broadcasts over msg
+    msg = gate * (h @ wm)
+    agg = a_sum @ msg  # edge-accumulate, reduce = sum
+    return jnp.maximum(agg + h[:v] @ ws, 0.0)
+
+
+def ggcn_fwd(a1, a2, h, wg1, wm1, ws1, wg2, wm2, ws2):
+    z1 = _ggcn_layer(a1, h, wg1, wm1, ws1)
+    z2 = _ggcn_layer(a2, z1, wg2, wm2, ws2)
+    return (z2,)
+
+
+def ggcn_example_args(s: PadShapes):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((s.v1, s.u1), f32),
+        jax.ShapeDtypeStruct((s.v2, s.u2), f32),
+        jax.ShapeDtypeStruct((s.u1, s.f_in), f32),
+        jax.ShapeDtypeStruct((s.f_in, 1), f32),
+        jax.ShapeDtypeStruct((s.f_in, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_in, s.f_hid), f32),
+        jax.ShapeDtypeStruct((s.f_hid, 1), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_out), f32),
+        jax.ShapeDtypeStruct((s.f_hid, s.f_out), f32),
+    )
+
+
+MODEL_FNS = {
+    "gcn": (gcn_fwd, gcn_example_args),
+    "sage": (sage_fwd, sage_example_args),
+    "gin": (gin_fwd, gin_example_args),
+    "ggcn": (ggcn_fwd, ggcn_example_args),
+}
+
+
+def param_names(model: str) -> list[str]:
+    """Ordered parameter names after (a1, a2, h) — mirrored by the Rust
+    manifest so the coordinator feeds literals in the right order."""
+    return {
+        "gcn": ["w1", "w2"],
+        "sage": ["wp1", "ws1", "wn1", "wp2", "ws2", "wn2"],
+        "gin": ["eps1", "eps2", "w1a", "w1b", "w2a", "w2b"],
+        "ggcn": ["wg1", "wm1", "ws1", "wg2", "wm2", "ws2"],
+    }[model]

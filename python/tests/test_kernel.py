@@ -1,0 +1,177 @@
+"""Kernel vs pure-jnp oracle — the CORE correctness signal for L1.
+
+hypothesis sweeps shapes (including non-tile-divisible ones) and tile
+parameters; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_max, vertex_tiled_matmul, vmem_footprint_bytes
+from compile.kernels.ref import masked_max_ref, vertex_tiled_matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ------------------------------------------------------- vertex_tiled
+class TestVertexTiled:
+    def test_paper_shapes_layer1(self):
+        """Paper layer-1 shapes: V=16, U=288, F=602, O=512."""
+        ka, kh, kw = _keys(0, 3)
+        a, h, w = _rand(ka, 16, 288), _rand(kh, 288, 602), _rand(kw, 602, 512)
+        got = vertex_tiled_matmul(a, h, w)
+        np.testing.assert_allclose(
+            got, vertex_tiled_matmul_ref(a, h, w), rtol=2e-4, atol=2e-3
+        )
+
+    def test_paper_shapes_layer2(self):
+        ka, kh, kw = _keys(1, 3)
+        a, h, w = _rand(ka, 8, 16), _rand(kh, 16, 512), _rand(kw, 512, 256)
+        got = vertex_tiled_matmul(a, h, w)
+        np.testing.assert_allclose(
+            got, vertex_tiled_matmul_ref(a, h, w), rtol=2e-4, atol=2e-3
+        )
+
+    def test_identity_weights(self):
+        """W = I reduces the kernel to plain edge-accumulate A @ H."""
+        ka, kh = _keys(2, 2)
+        a, h = _rand(ka, 8, 32), _rand(kh, 32, 64)
+        got = vertex_tiled_matmul(a, h, jnp.eye(64))
+        np.testing.assert_allclose(got, a @ h, rtol=2e-4, atol=2e-3)
+
+    def test_zero_adjacency(self):
+        kh, kw = _keys(3, 2)
+        a = jnp.zeros((8, 16))
+        got = vertex_tiled_matmul(a, _rand(kh, 16, 32), _rand(kw, 32, 16))
+        assert jnp.all(got == 0.0)
+
+    def test_single_vertex(self):
+        """V=1 (the serving batch-1 case) with padding to the m tile."""
+        ka, kh, kw = _keys(4, 3)
+        a, h, w = _rand(ka, 1, 11), _rand(kh, 11, 37), _rand(kw, 37, 5)
+        got = vertex_tiled_matmul(a, h, w, m=8, f=16, o=8)
+        assert got.shape == (1, 5)
+        np.testing.assert_allclose(
+            got, vertex_tiled_matmul_ref(a, h, w), rtol=2e-4, atol=2e-3
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        v=st.integers(1, 33),
+        u=st.integers(1, 40),
+        fdim=st.integers(1, 70),
+        odim=st.integers(1, 50),
+        m=st.sampled_from([1, 4, 8]),
+        f=st.sampled_from([8, 16, 64]),
+        o=st.sampled_from([8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, v, u, fdim, odim, m, f, o, seed):
+        """Arbitrary (non-divisible) shapes x tile params match the oracle."""
+        ka, kh, kw = _keys(seed, 3)
+        a, h, w = _rand(ka, v, u), _rand(kh, u, fdim), _rand(kw, fdim, odim)
+        got = vertex_tiled_matmul(a, h, w, m=m, f=f, o=o)
+        assert got.shape == (v, odim)
+        np.testing.assert_allclose(
+            got, vertex_tiled_matmul_ref(a, h, w), rtol=1e-3, atol=1e-2
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([1, 2, 8, 16]),
+        f=st.sampled_from([8, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tiling_invariance(self, m, f, seed):
+        """Result is independent of (m, f) tiling — the optimization is
+        purely a schedule (paper Sec. VI-B)."""
+        ka, kh, kw = _keys(seed, 3)
+        a, h, w = _rand(ka, 12, 20), _rand(kh, 20, 96), _rand(kw, 96, 24)
+        base = vertex_tiled_matmul(a, h, w, m=8, f=64, o=128)
+        got = vertex_tiled_matmul(a, h, w, m=m, f=f, o=128)
+        np.testing.assert_allclose(got, base, rtol=1e-3, atol=1e-2)
+
+    def test_dtype_bf16_inputs(self):
+        """bf16 inputs accumulate in f32 (preferred_element_type)."""
+        ka, kh, kw = _keys(7, 3)
+        a = _rand(ka, 8, 16).astype(jnp.bfloat16).astype(jnp.float32)
+        h = _rand(kh, 16, 64).astype(jnp.bfloat16).astype(jnp.float32)
+        w = _rand(kw, 64, 32).astype(jnp.bfloat16).astype(jnp.float32)
+        got = vertex_tiled_matmul(a, h, w)
+        np.testing.assert_allclose(
+            got, vertex_tiled_matmul_ref(a, h, w), rtol=2e-2, atol=2e-2
+        )
+
+    def test_vmem_footprint_monotone_in_m(self):
+        lo = vmem_footprint_bytes(288, 4, 64, 128)
+        hi = vmem_footprint_bytes(288, 16, 64, 128)
+        assert lo < hi
+
+
+# --------------------------------------------------------- masked_max
+class TestMaskedMax:
+    def test_paper_shapes(self):
+        km, kg = _keys(10, 2)
+        mask = (jax.random.uniform(km, (16, 288)) < 0.1).astype(jnp.float32)
+        msg = _rand(kg, 288, 512)
+        np.testing.assert_allclose(
+            masked_max(mask, msg), masked_max_ref(mask, msg), rtol=1e-5, atol=1e-5
+        )
+
+    def test_empty_rows_are_zero(self):
+        """Isolated vertices reduce to 0 (GRIP's zeroed edge accumulator)."""
+        kg = _keys(11, 1)[0]
+        mask = jnp.zeros((4, 8))
+        out = masked_max(mask, _rand(kg, 8, 16))
+        assert jnp.all(out == 0.0)
+
+    def test_full_mask_is_columnwise_max(self):
+        kg = _keys(12, 1)[0]
+        msg = _rand(kg, 8, 16)
+        out = masked_max(jnp.ones((3, 8)), msg)
+        np.testing.assert_allclose(out[0], jnp.max(msg, axis=0), rtol=1e-6)
+
+    def test_single_edge_selects_message(self):
+        kg = _keys(13, 1)[0]
+        msg = _rand(kg, 8, 16)
+        mask = jnp.zeros((2, 8)).at[0, 3].set(1.0)
+        out = masked_max(mask, msg)
+        np.testing.assert_allclose(out[0], msg[3], rtol=1e-6)
+        assert jnp.all(out[1] == 0.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        v=st.integers(1, 24),
+        u=st.integers(1, 40),
+        fdim=st.integers(1, 80),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, v, u, fdim, density, seed):
+        km, kg = _keys(seed, 2)
+        mask = (jax.random.uniform(km, (v, u)) < density).astype(jnp.float32)
+        msg = _rand(kg, u, fdim)
+        got = masked_max(mask, msg, m=8, f=32)
+        assert got.shape == (v, fdim)
+        np.testing.assert_allclose(
+            got, masked_max_ref(mask, msg), rtol=1e-5, atol=1e-5
+        )
+
+    def test_negative_messages_not_clamped(self):
+        """Max over strictly negative messages stays negative (regression:
+        a sentinel of 0 would corrupt this)."""
+        mask = jnp.ones((1, 4))
+        msg = -jnp.abs(_rand(_keys(14, 1)[0], 4, 8)) - 1.0
+        out = masked_max(mask, msg)
+        assert jnp.all(out < 0.0)

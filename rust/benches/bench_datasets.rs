@@ -1,0 +1,20 @@
+//! Dataset generation + sampling benchmarks (Table I machinery).
+
+use grip::benchutil::bench;
+use grip::config::ModelConfig;
+use grip::graph::{Dataset, TABLE1};
+use grip::nodeflow::Sampler;
+
+fn main() {
+    println!("== bench_datasets: generation and 2-hop sampling ==");
+    for ds in TABLE1 {
+        bench(&format!("generate/{}@0.003", ds.spec().name), 1, 5, || {
+            ds.generate(0.003, 17).num_edges()
+        });
+    }
+    let g = Dataset::Pokec.generate(0.005, 17);
+    let s = Sampler::new(7);
+    let mc = ModelConfig::paper();
+    bench("two_hop_unique/pokec", 10, 200, || s.two_hop_unique(&g, 123, mc.sample1, mc.sample2));
+    bench("sample25/pokec", 100, 5000, || s.sample(&g, 123, 25, 0).len());
+}

@@ -1,0 +1,20 @@
+//! Per-figure regeneration benchmarks: one timed target per paper
+//! figure (fig2, fig9a/b, fig10a-d, fig11a/b, fig12, fig13a/b, table4).
+
+use grip::benchutil::bench;
+use grip::repro::ReproCtx;
+
+fn main() {
+    println!("== bench_figures: per-figure regeneration ==");
+    let ctx = ReproCtx { scale: 0.003, targets_per_dataset: 24, ..Default::default() };
+    for exp in [
+        "fig2", "fig9a", "fig9b", "fig10a", "fig10b", "fig10c", "fig10d", "fig11a",
+        "fig11b", "fig12", "fig13a", "fig13b", "table4",
+    ] {
+        bench(&format!("repro/{exp}"), 1, 3, || {
+            let mut sink = Vec::new();
+            grip::repro::run(exp, &ctx, &mut sink).unwrap();
+            sink.len()
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! PJRT numeric-path benchmarks: the real request-path hot loop
+//! (argument marshalling + HLO execution). Skipped without artifacts.
+
+use grip::benchutil::bench;
+use grip::config::ModelConfig;
+use grip::graph::Dataset;
+use grip::greta::{compile, exec_test_args, execute_model, GnnModel};
+use grip::nodeflow::{Nodeflow, Sampler};
+use grip::runtime::{build_args, build_args_cached, serving_weights, Executor, FeatureStore, Manifest};
+
+fn main() {
+    let mc = ModelConfig::paper();
+    let g = Dataset::Youtube.generate(0.002, 5);
+    let s = Sampler::new(3);
+    let nf = Nodeflow::build(&g, &s, &[42], &mc);
+
+    println!("== bench_runtime: PJRT + marshalling + fixed-point paths ==");
+    match Executor::load(&Manifest::default_dir()) {
+        Ok(exec) => {
+            for name in ["gcn", "gin", "sage", "ggcn"] {
+                let model = GnnModel::from_name(name).unwrap();
+                let artifact = exec.model(name).unwrap().artifact.clone();
+                let args = build_args(model, &artifact, &nf).unwrap();
+                bench(&format!("pjrt_execute/{name}"), 3, 20, || {
+                    exec.run(name, &args).unwrap().len()
+                });
+                bench(&format!("build_args/{name}"), 3, 50, || {
+                    build_args(model, &artifact, &nf).unwrap().len()
+                });
+                let w = serving_weights(&artifact);
+                let mut store = FeatureStore::new();
+                bench(&format!("build_args_cached/{name}"), 3, 50, || {
+                    build_args_cached(model, &artifact, &nf, &w, &mut store).unwrap().len()
+                });
+            }
+        }
+        Err(e) => println!("(pjrt benches skipped: {e})"),
+    }
+
+    // Fixed-point functional executor (scalar datapath model).
+    let small = ModelConfig { sample1: 6, sample2: 4, f_in: 32, f_hid: 24, f_out: 12 };
+    let nf_s = Nodeflow::build(&g, &s, &[42], &small);
+    for model in [GnnModel::Gcn, GnnModel::Ggcn] {
+        let plan = compile(model, &small);
+        let mut args = exec_test_args(&plan, 9);
+        args.insert("eps1".into(), (vec![], vec![0.1]));
+        args.insert("eps2".into(), (vec![], vec![0.2]));
+        let h: Vec<f32> = (0..nf_s.layers[0].num_inputs() * small.f_in)
+            .map(|i| ((i % 17) as f32 - 8.0) / 40.0)
+            .collect();
+        bench(&format!("fx16_exec/{}@32dim", plan.model.name()), 3, 30, || {
+            execute_model(&plan, &nf_s, &h, &args).unwrap().len()
+        });
+    }
+}

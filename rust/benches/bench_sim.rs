@@ -1,0 +1,36 @@
+//! Simulator hot-path benchmarks (L3 perf target: the cycle simulator
+//! must be orders of magnitude faster than the simulated hardware so
+//! sweeps stay interactive — EXPERIMENTS.md §Perf tracks these).
+
+use grip::benchutil::bench;
+use grip::config::{GripConfig, ModelConfig};
+use grip::graph::Dataset;
+use grip::greta::{compile, GnnModel, ALL_MODELS};
+use grip::nodeflow::{Nodeflow, PartitionedLayer, Sampler};
+use grip::sim::simulate;
+
+fn main() {
+    let cfg = GripConfig::paper();
+    let mc = ModelConfig::paper();
+    let g = Dataset::Pokec.generate(0.005, 17);
+    let s = Sampler::new(42);
+    let nf = Nodeflow::build(&g, &s, &[100], &mc);
+    println!("== bench_sim: simulator core (nodeflow {} verts) ==", nf.neighborhood_size());
+
+    for model in ALL_MODELS {
+        let plan = compile(model, &mc);
+        bench(&format!("simulate/{}", model.name()), 50, 500, || simulate(&cfg, &plan, &nf).cycles);
+    }
+
+    bench("nodeflow_build/pokec", 20, 200, || {
+        Nodeflow::build(&g, &s, &[100], &mc).total_edges()
+    });
+
+    bench("partition/layer0", 50, 500, || {
+        PartitionedLayer::new(&nf.layers[0], cfg.part_inputs, cfg.part_outputs).total_edges()
+    });
+
+    let plan = compile(GnnModel::Gcn, &mc);
+    bench("greta_compile/gcn", 100, 2000, || plan.weight_bytes(2));
+    bench("greta_compile/fresh", 100, 1000, || compile(GnnModel::Ggcn, &mc).layers.len());
+}

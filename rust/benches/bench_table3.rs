@@ -1,0 +1,20 @@
+//! Table III end-to-end regeneration benchmark: the full 4-model x
+//! 4-dataset p99 latency table (the paper's headline experiment).
+
+use grip::benchutil::bench;
+use grip::repro::ReproCtx;
+
+fn main() {
+    println!("== bench_table3: full Table III regeneration ==");
+    let ctx = ReproCtx { scale: 0.003, targets_per_dataset: 32, ..Default::default() };
+    bench("repro/table3@scale0.003", 1, 3, || {
+        let mut sink = Vec::new();
+        grip::repro::run("table3", &ctx, &mut sink).unwrap();
+        sink.len()
+    });
+    bench("repro/table1@scale0.003", 1, 3, || {
+        let mut sink = Vec::new();
+        grip::repro::run("table1", &ctx, &mut sink).unwrap();
+        sink.len()
+    });
+}

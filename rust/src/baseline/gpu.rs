@@ -1,0 +1,89 @@
+//! GPU (Nvidia P100) latency model.
+//!
+//! Paper Sec. VIII-A attributes GPU inference latency to exactly three
+//! terms, which we model directly:
+//! 1. host→device embedding transfer: "roughly 200–500 µs, depending on
+//!    the neighborhood size" (25–50% of total for GCN);
+//! 2. kernel-launch / framework-dispatch overhead, dominating at batch
+//!    size 1 ("the overhead of launching each kernel tends to
+//!    dominate");
+//! 3. low-utilization compute.
+
+use crate::greta::GnnModel;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    /// PCIe transfer base cost (µs).
+    pub transfer_base_us: f64,
+    /// Transfer cost per unique neighbor row (µs).
+    pub transfer_per_vertex_us: f64,
+    /// Kernel launches per inference (ops per layer × layers).
+    pub kernels: usize,
+    /// Per-kernel launch + dispatch overhead (µs).
+    pub launch_us: f64,
+    /// Effective compute throughput at batch-1 occupancy (GFLOP/s).
+    pub eff_gflops: f64,
+}
+
+impl GpuModel {
+    pub fn for_model(m: GnnModel) -> Self {
+        // Kernel counts follow the per-layer op structure of each model
+        // in TF (gather, spmm/segment ops, matmuls, activations, concat).
+        let kernels = match m {
+            GnnModel::Gcn => 10,
+            GnnModel::Gin => 12,
+            GnnModel::Sage => 14,
+            GnnModel::Ggcn => 16,
+        };
+        Self {
+            transfer_base_us: 200.0,
+            transfer_per_vertex_us: 1.0,
+            kernels,
+            launch_us: 70.0,
+            eff_gflops: 500.0,
+        }
+    }
+
+    pub fn latency_us(&self, unique_neighbors: usize, flops: f64) -> f64 {
+        let transfer = self.transfer_base_us + self.transfer_per_vertex_us * unique_neighbors as f64;
+        let launch = self.kernels as f64 * self.launch_us;
+        let compute = flops / (self.eff_gflops * 1e3); // µs
+        transfer + launch + compute
+    }
+}
+
+/// GPU latency for `model` with `u` unique neighbors and `flops` total
+/// floating-point work (2 × MACs from the simulator counters).
+pub fn gpu_latency_us(model: GnnModel, u: usize, flops: f64) -> f64 {
+    GpuModel::for_model(model).latency_us(u, flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcn_in_table3_band() {
+        // Paper: GCN GPU 813–1388 µs.
+        let t = gpu_latency_us(GnnModel::Gcn, 167, 20e6);
+        assert!(t > 700.0 && t < 1600.0, "{t}");
+    }
+
+    #[test]
+    fn transfer_share_matches_paper() {
+        // Sec. VIII-A: transfer is 25–50% of GCN total.
+        let m = GpuModel::for_model(GnnModel::Gcn);
+        let u = 167;
+        let total = m.latency_us(u, 20e6);
+        let transfer = m.transfer_base_us + m.transfer_per_vertex_us * u as f64;
+        let share = transfer / total;
+        assert!(share > 0.2 && share < 0.55, "share {share}");
+    }
+
+    #[test]
+    fn more_kernels_more_latency() {
+        let t_gcn = gpu_latency_us(GnnModel::Gcn, 100, 20e6);
+        let t_ggcn = gpu_latency_us(GnnModel::Ggcn, 100, 200e6);
+        assert!(t_ggcn > t_gcn);
+    }
+}

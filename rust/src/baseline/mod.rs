@@ -1,0 +1,24 @@
+//! Baseline performance models (paper Sec. VII "Baseline", VIII-B,
+//! VIII-F).
+//!
+//! * [`cpu`] — the Xeon E5-2690v4 + TF/MKL baseline. The paper measured
+//!   real hardware; we fit a documented analytic model to the paper's own
+//!   published measurements (Table III + Fig. 12's cache cliff), so our
+//!   speedup tables inherit the authors' hardware truth.
+//! * [`gpu`] — the P100 baseline: host→device transfer + per-op launch
+//!   overhead + low-utilization compute, the three terms the paper's own
+//!   analysis attributes GPU latency to (Sec. VIII-A).
+//! * [`prior`] — GRIP-simulator reconfigurations for the Sec. VIII-B
+//!   breakdown ladder and the Sec. VIII-F prior-work comparisons
+//!   (HyGCN-like, TPU+, Graphicionado-like), exactly the paper's method.
+//! * [`roofline`] — the Fig. 2 CPU roofline/measured-performance model.
+
+mod cpu;
+mod gpu;
+mod prior;
+mod roofline;
+
+pub use cpu::{cpu_latency_us, CpuModel};
+pub use gpu::{gpu_latency_us, GpuModel};
+pub use prior::{baseline_ladder, breakdown_step, prior_work_configs, PriorWork};
+pub use roofline::{cpu_roofline_point, RooflinePoint};

@@ -1,0 +1,197 @@
+//! Prior-work and breakdown configurations (paper Sec. VIII-B, VIII-F).
+//!
+//! The paper evaluates every alternative architecture by reconfiguring
+//! its own cycle simulator; each function here returns the corresponding
+//! [`GripConfig`] perturbation.
+
+use crate::config::GripConfig;
+
+/// The Sec. VIII-B "baseline configuration": GRIP degraded until it
+/// emulates the CPU's structure — 14 cores as small matmul units, merged
+//  SRAM, no inter-unit pipelining.
+pub fn cpu_like_baseline() -> GripConfig {
+    let mut c = GripConfig::paper();
+    c.freq_ghz = 2.6; // CPU clock
+    // 14 × (8-wide × 2 SIMD) ≈ one 8×28 MAC array in aggregate.
+    c.pe_rows = 8;
+    c.pe_cols = 28;
+    c.pe_fill_cycles = 12;
+    // 14 fetch/gather units, 32-byte crossbar (L2 bandwidth).
+    c.prefetch_lanes = 14;
+    c.reduce_lanes = 14;
+    c.xbar_width_elems = 16; // 32 B / 2 B elements
+    // Merged weight + nodeflow SRAM behind a single L3-like stream port
+    // (16 B/cycle at 2.6 GHz ≈ 41.6 GB/s). Weights are re-streamed per
+    // vertex (no tiling), which is what makes this configuration ~230 µs
+    // for GCN — matching the paper's statement that its baseline sim is
+    // 2.07× faster than the measured 477 µs CPU.
+    c.split_srams = false;
+    c.weight_bw_bytes_per_cycle = 16.0;
+    // No dedicated units: no phase overlap, no partition pipelining.
+    c.overlap_phases = false;
+    c.pipeline_partitions = false;
+    c.pipeline_update = false;
+    c.preload_weights = false;
+    c.cache_features = true;
+    // CPU-style full-vector accumulation (no vertex-tiling).
+    c.vertex_tiling = false;
+    c
+}
+
+/// One step of the Fig. 9a ladder, cumulative from the baseline:
+/// 0 = baseline, 1 = +split SRAMs, 2 = +edge unit, 3 = +vertex unit,
+/// 4 = +pipelined update unit (= full GRIP).
+pub fn breakdown_step(step: usize) -> GripConfig {
+    let paper = GripConfig::paper();
+    let mut c = cpu_like_baseline();
+    if step >= 1 {
+        // Split weight/nodeflow SRAMs: removes contention (the /2 in the
+        // vertex-unit model) and doubles the dedicated weight bandwidth
+        // (paper: 2.0× and 1.4× components of the 2.8× step).
+        c.split_srams = true;
+        c.weight_bw_bytes_per_cycle = 32.0;
+    }
+    if step >= 2 {
+        // Dedicated edge unit: restore lanes/crossbar and let load,
+        // edge-accumulate and vertex-accumulate overlap.
+        c.prefetch_lanes = paper.prefetch_lanes;
+        c.reduce_lanes = paper.reduce_lanes;
+        c.xbar_width_elems = paper.xbar_width_elems;
+        c.overlap_phases = true;
+        c.pipeline_partitions = true;
+        c.cache_features = true;
+        c.preload_weights = true;
+    }
+    if step >= 3 {
+        // Single 16×32 vertex unit at 1 GHz with vertex-tiling and the
+        // full on-chip weight path.
+        c.weight_bw_bytes_per_cycle = paper.weight_bw_bytes_per_cycle;
+        c.freq_ghz = paper.freq_ghz;
+        c.pe_rows = paper.pe_rows;
+        c.pe_cols = paper.pe_cols;
+        c.pe_fill_cycles = paper.pe_fill_cycles;
+        c.vertex_tiling = true;
+        c.tile_m = paper.tile_m;
+        c.tile_f = paper.tile_f;
+    }
+    if step >= 4 {
+        // Separate, pipelined update unit.
+        c.pipeline_update = true;
+    }
+    c
+}
+
+/// Number of steps in the Fig. 9a ladder (including the baseline).
+pub fn baseline_ladder() -> Vec<(&'static str, GripConfig)> {
+    vec![
+        ("baseline", breakdown_step(0)),
+        ("+split srams", breakdown_step(1)),
+        ("+edge unit", breakdown_step(2)),
+        ("+vertex unit", breakdown_step(3)),
+        ("+update unit", breakdown_step(4)),
+    ]
+}
+
+/// Prior-work architectures as simulator configurations (Sec. VIII-F).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriorWork {
+    /// HyGCN-like: single-issue edge engine (1 fetch/gather unit, 256-
+    /// lane SIMD crossbar), full feature vectors accumulated before
+    /// vertex ops (no vertex-tiling).
+    HyGcn,
+    /// TPU-like + GRIP edge unit: 16×32 systolic array (48-cycle fill),
+    /// weights streamed from off-chip at a dedicated 30 GiB/s.
+    TpuPlus,
+    /// Graphicionado-like: per-lane vertex units sharing one tile-buffer
+    /// port, no tiling.
+    Graphicionado,
+}
+
+pub fn prior_work_configs(which: PriorWork) -> GripConfig {
+    let mut c = GripConfig::paper();
+    match which {
+        PriorWork::HyGcn => {
+            c.prefetch_lanes = 1;
+            c.reduce_lanes = 1;
+            c.xbar_width_elems = 256;
+            c.vertex_tiling = false;
+        }
+        PriorWork::TpuPlus => {
+            c.prefetch_lanes = 1;
+            c.reduce_lanes = 1;
+            // Systolic data setup: input skew + drain (paper Sec. V-C:
+            // 16 + 32 = 48 cycles vs GRIP's 6).
+            c.pe_fill_cycles = 48;
+            // Weights off-chip at 30 GiB/s dedicated (original TPU).
+            c.weight_bw_bytes_per_cycle = 30.0;
+        }
+        PriorWork::Graphicionado => {
+            c.vertex_tiling = false;
+            // Two half-size vertex lanes sharing a single tile-buffer
+            // port: same MACs, half the effective weight bandwidth.
+            c.weight_bw_bytes_per_cycle /= 2.0;
+            c.reduce_lanes = 2;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::graph::Dataset;
+    use crate::greta::{compile, GnnModel};
+    use crate::nodeflow::{Nodeflow, Sampler};
+    use crate::sim::simulate;
+
+    fn cycles(cfg: &GripConfig) -> f64 {
+        let mc = ModelConfig::paper();
+        let g = Dataset::Pokec.generate(0.002, 3);
+        let nf = Nodeflow::build(&g, &Sampler::new(5), &[42], &mc);
+        let plan = compile(GnnModel::Gcn, &mc);
+        simulate(cfg, &plan, &nf).cycles / cfg.freq_ghz // normalize to ns
+    }
+
+    #[test]
+    fn ladder_monotonically_improves() {
+        let ladder = baseline_ladder();
+        let times: Vec<f64> = ladder.iter().map(|(_, c)| cycles(c)).collect();
+        for w in times.windows(2) {
+            assert!(w[1] <= w[0] * 1.02, "ladder regressed: {times:?}");
+        }
+        // Full ladder speedup should be large (paper: 2.8×3.4×1.87×1.02
+        // ≈ 18×).
+        let speedup = times[0] / times[times.len() - 1];
+        assert!(speedup > 4.0, "total ladder speedup {speedup}");
+    }
+
+    #[test]
+    fn grip_beats_all_prior_work() {
+        let grip = cycles(&GripConfig::paper());
+        for pw in [PriorWork::HyGcn, PriorWork::TpuPlus, PriorWork::Graphicionado] {
+            let t = cycles(&prior_work_configs(pw));
+            assert!(t > grip, "{pw:?}: {t} vs grip {grip}");
+        }
+    }
+
+    #[test]
+    fn prior_work_still_beats_cpu_baseline() {
+        // Fig. 9b: HyGCN-like 4.4×, TPU+ 11.3×, Graphicionado-like 2.4×
+        // over the baseline — all should improve on the baseline config.
+        let base = cycles(&cpu_like_baseline());
+        for pw in [PriorWork::HyGcn, PriorWork::TpuPlus, PriorWork::Graphicionado] {
+            let t = cycles(&prior_work_configs(pw));
+            assert!(t < base, "{pw:?}: {t} vs baseline {base}");
+        }
+    }
+
+    #[test]
+    fn step4_is_paper_config_shape() {
+        let c = breakdown_step(4);
+        let p = GripConfig::paper();
+        assert_eq!(c.pe_rows, p.pe_rows);
+        assert_eq!(c.pe_cols, p.pe_cols);
+        assert!(c.vertex_tiling && c.pipeline_update && c.split_srams);
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal benchmarking harness (criterion is unavailable in the
+//! offline vendored crate set). Measures wall time over warmup +
+//! measured iterations and prints mean / min / p99-style max, which is
+//! what the perf pass (EXPERIMENTS.md §Perf) records.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10.2} µs/iter (min {:>9.2}, max {:>9.2}, n={})",
+            self.name, self.mean_us, self.min_us, self.max_us, self.iters
+        );
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and report per-iteration
+/// wall time. `f` should return something observable to prevent the
+/// optimizer from deleting the work (its result is black-boxed).
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    let r = BenchResult { name: name.to_string(), iters, mean_us: mean, min_us: min, max_us: max };
+    r.print();
+    r
+}
+
+/// Optimizer barrier (std::hint::black_box re-export for stable use).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 10, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_us >= 0.0);
+        assert!(r.min_us <= r.mean_us && r.mean_us <= r.max_us + 1e-9);
+        assert_eq!(r.iters, 10);
+    }
+}

@@ -1,0 +1,250 @@
+//! Architectural and model configuration (paper Table II + Sec. VII).
+//!
+//! `GripConfig::paper()` is the 28 nm implementation evaluated in the paper;
+//! every repro experiment perturbs one or more of these fields. All
+//! bandwidth/latency fields are expressed in hardware-native units (bytes
+//! per cycle, cycles) at `freq_ghz` so sweeps stay self-consistent.
+
+
+/// Architectural parameters of the GRIP accelerator (Table II).
+#[derive(Debug, Clone)]
+pub struct GripConfig {
+    /// Core clock, GHz (paper: 1.0).
+    pub freq_ghz: f64,
+
+    // ------------------------------------------------------------- DRAM
+    /// Number of DDR4-2400 channels (paper: 4, 76.8 GiB/s total).
+    pub dram_channels: usize,
+    /// Per-channel bandwidth in bytes/cycle at `freq_ghz`
+    /// (DDR4-2400 = 19.2 GB/s = 19.2 B/cycle at 1 GHz).
+    pub dram_ch_bytes_per_cycle: f64,
+    /// Fixed cycles of latency for a random row activation — charged per
+    /// non-contiguous feature-vector fetch (Sec. VIII-D: small features
+    /// underutilize DRAM).
+    pub dram_random_penalty_cycles: f64,
+    /// Burst granularity of one channel-pair interface in bytes (paper
+    /// Sec. VIII-D: two dual-channel controllers, 64 × 2-byte elements).
+    pub dram_interface_bytes: usize,
+
+    // ---------------------------------------------------------- datapath
+    /// Element width (16-bit fixed point).
+    pub elem_bytes: usize,
+    /// Prefetch lanes in the edge unit (paper sets = DRAM channels).
+    pub prefetch_lanes: usize,
+    /// Reduce lanes in the edge unit.
+    pub reduce_lanes: usize,
+    /// Crossbar port width, in elements per cycle per gather unit.
+    pub xbar_width_elems: usize,
+    /// PE array rows (feature/contraction dimension; paper: 16).
+    pub pe_rows: usize,
+    /// PE array columns (output dimension; paper: 32).
+    pub pe_cols: usize,
+    /// Pipeline fill latency of one matrix-vector op through the
+    /// broadcast/reduce-tree array (paper Sec. V-C: 6 cycles, vs 48 for a
+    /// systolic array of the same shape).
+    pub pe_fill_cycles: u64,
+    /// Update unit throughput, elements per cycle.
+    pub update_elems_per_cycle: usize,
+
+    // ------------------------------------------------------------- SRAM
+    /// Global weight buffer bytes (paper: 2 MiB).
+    pub weight_buf_bytes: usize,
+    /// Bandwidth from the global weight buffer into the tile buffer,
+    /// bytes/cycle (paper Fig. 10b knee: 128 GiB/s = 128 B/cycle).
+    pub weight_bw_bytes_per_cycle: f64,
+    /// Tile buffer bytes (paper: 2 × 64 KiB, double buffered).
+    pub tile_buf_bytes: usize,
+    /// Nodeflow buffer bytes (paper: 4 × 20 KiB).
+    pub nodeflow_buf_bytes: usize,
+
+    // ---------------------------------------------------- vertex tiling
+    /// Vertex-tiling enabled (paper Sec. VI-B).
+    pub vertex_tiling: bool,
+    /// Vertices per tile (paper M; best ≈ max output vertices = 11).
+    pub tile_m: usize,
+    /// Edge-accumulator features per tile (paper F; best ≈ 64).
+    pub tile_f: usize,
+
+    // ----------------------------------------------------- partitioning
+    /// Input vertices per partition chunk (paper N).
+    pub part_inputs: usize,
+    /// Output vertices per partition chunk (paper M).
+    pub part_outputs: usize,
+
+    // ------------------------------------------------- pipelining knobs
+    /// Cache partition feature data in the nodeflow buffer across columns
+    /// (Fig. 13a "caching": 1.3×).
+    pub cache_features: bool,
+    /// Overlap off-chip loads with edge-accumulate across partitions
+    /// (Fig. 13a "pipelining": additional 1.3×).
+    pub pipeline_partitions: bool,
+    /// Preload next layer's weights / tile buffer while processing the
+    /// last column (Fig. 13a "weights": total 2.5×).
+    pub preload_weights: bool,
+    /// Pipeline the update unit with the vertex unit (Fig. 9a: 1.02×).
+    pub pipeline_update: bool,
+    /// Separate weight and nodeflow SRAMs (Fig. 9a: merged SRAM is the
+    /// CPU-like baseline; splitting gives 2.8×).
+    pub split_srams: bool,
+    /// Dedicated units allow load/edge/vertex phase overlap (Fig. 9a
+    /// edge-unit step, 2.97× component). Disabled in the CPU-like
+    /// baseline where one core does everything.
+    pub overlap_phases: bool,
+}
+
+impl GripConfig {
+    /// The paper's 28 nm implementation (Table II).
+    pub fn paper() -> Self {
+        Self {
+            freq_ghz: 1.0,
+            dram_channels: 4,
+            dram_ch_bytes_per_cycle: 19.2,
+            dram_random_penalty_cycles: 30.0,
+            dram_interface_bytes: 128,
+            elem_bytes: 2,
+            prefetch_lanes: 4,
+            reduce_lanes: 8,
+            xbar_width_elems: 16,
+            pe_rows: 16,
+            pe_cols: 32,
+            pe_fill_cycles: 6,
+            update_elems_per_cycle: 32,
+            weight_buf_bytes: 2 << 20,
+            weight_bw_bytes_per_cycle: 128.0,
+            tile_buf_bytes: 2 * 64 << 10,
+            nodeflow_buf_bytes: 4 * 20 << 10,
+            vertex_tiling: true,
+            tile_m: 11,
+            tile_f: 64,
+            part_inputs: 256,
+            part_outputs: 11,
+            cache_features: true,
+            pipeline_partitions: true,
+            preload_weights: true,
+            pipeline_update: true,
+            split_srams: true,
+            overlap_phases: true,
+        }
+    }
+
+    /// Total off-chip bandwidth in bytes/cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_channels as f64 * self.dram_ch_bytes_per_cycle
+    }
+
+    /// Total off-chip bandwidth in GiB/s.
+    pub fn dram_gib_s(&self) -> f64 {
+        self.dram_bytes_per_cycle() * self.freq_ghz * 1e9 / (1u64 << 30) as f64
+    }
+
+    /// Peak MACs per cycle of the PE array.
+    pub fn macs_per_cycle(&self) -> u64 {
+        (self.pe_rows * self.pe_cols) as u64
+    }
+
+    /// Peak arithmetic throughput in TOP/s (1 MAC = 2 ops; paper reports
+    /// 1.088 TOP/s for the 16×32 array plus edge/update ALUs).
+    pub fn peak_tops(&self) -> f64 {
+        2.0 * self.macs_per_cycle() as f64 * self.freq_ghz / 1e3
+    }
+
+    /// Convert a cycle count to microseconds at this clock.
+    pub fn cycles_to_us(&self, cycles: f64) -> f64 {
+        cycles / (self.freq_ghz * 1e3)
+    }
+
+    /// Effective vertex-tiling parameters: with tiling disabled the edge
+    /// accumulator must hold full feature vectors for every output vertex
+    /// of a chunk (HyGCN-style), i.e. m = 1 weight-reuse and f = full.
+    pub fn effective_tile(&self, full_f: usize) -> (usize, usize) {
+        if self.vertex_tiling {
+            (self.tile_m.max(1), self.tile_f.min(full_f).max(1))
+        } else {
+            (1, full_f.max(1))
+        }
+    }
+
+    /// Edge-accumulator tile bytes (paper: 1.5 KiB at m=11, f=64 16-bit).
+    pub fn edge_acc_tile_bytes(&self, full_f: usize) -> usize {
+        let (m, f) = self.effective_tile(full_f);
+        m * f * self.elem_bytes
+    }
+}
+
+impl Default for GripConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+/// GNN model hyper-parameters shared by the whole evaluation
+/// (paper Sec. VII: 2 layers, samples 25/10, dims 602 → 512 → 256).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelConfig {
+    pub sample1: usize,
+    pub sample2: usize,
+    pub f_in: usize,
+    pub f_hid: usize,
+    pub f_out: usize,
+}
+
+impl ModelConfig {
+    pub fn paper() -> Self {
+        Self { sample1: 25, sample2: 10, f_in: 602, f_hid: 512, f_out: 256 }
+    }
+
+    /// Per-layer (fan-in sample, input dim, output dim), outermost first.
+    pub fn layers(&self) -> [(usize, usize, usize); 2] {
+        [
+            (self.sample1, self.f_in, self.f_hid),
+            (self.sample2, self.f_hid, self.f_out),
+        ]
+    }
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_table2() {
+        let c = GripConfig::paper();
+        // 4× DDR4-2400 = 76.8 GB/s ≈ 71.5 GiB/s
+        assert!((c.dram_bytes_per_cycle() - 76.8).abs() < 1e-9);
+        // 16×32 MACs at 1 GHz ≈ 1.02 TMAC/s → ~1.05 TOP/s (paper: 1.088
+        // including edge/update ALUs).
+        assert!((c.peak_tops() - 1.024).abs() < 1e-9);
+        assert_eq!(c.weight_buf_bytes, 2 * 1024 * 1024);
+        assert_eq!(c.nodeflow_buf_bytes, 80 * 1024);
+        assert_eq!(c.tile_buf_bytes, 128 * 1024);
+    }
+
+    #[test]
+    fn edge_acc_tile_is_small_with_tiling() {
+        let c = GripConfig::paper();
+        // Paper Sec. VIII-F: ~1.5 KiB vs HyGCN's 16 MB buffer.
+        assert_eq!(c.edge_acc_tile_bytes(512), 11 * 64 * 2);
+        let mut no_tile = c.clone();
+        no_tile.vertex_tiling = false;
+        assert!(no_tile.edge_acc_tile_bytes(512) > c.edge_acc_tile_bytes(512) / 11);
+    }
+
+    #[test]
+    fn cycles_to_us_roundtrip() {
+        let c = GripConfig::paper();
+        assert!((c.cycles_to_us(1000.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_config_layers() {
+        let m = ModelConfig::paper();
+        assert_eq!(m.layers()[0], (25, 602, 512));
+        assert_eq!(m.layers()[1], (10, 512, 256));
+    }
+}

@@ -1,0 +1,98 @@
+//! Latency/throughput metrics for the serving loop (the paper reports
+//! 99th-percentile latency, per MLPerf inference practice [38]).
+
+/// Online latency recorder with percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    /// Percentile by nearest-rank on a sorted copy (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_us.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples_us.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::new();
+        for i in 1..=1000 {
+            s.record(i as f64);
+        }
+        assert!(s.p50() <= s.p99());
+        assert!((s.p50() - 500.0).abs() < 2.0);
+        assert!((s.p99() - 990.0).abs() < 2.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 1000.0);
+    }
+
+    #[test]
+    fn mean_correct() {
+        let mut s = LatencyStats::new();
+        s.record(1.0);
+        s.record(3.0);
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = LatencyStats::new();
+        s.record(7.5);
+        assert_eq!(s.p50(), 7.5);
+        assert_eq!(s.p99(), 7.5);
+    }
+}

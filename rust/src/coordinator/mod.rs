@@ -1,0 +1,12 @@
+//! L3 serving coordinator — the production wrapper around the GRIP
+//! stack: bounded request queue with backpressure, a worker owning the
+//! PJRT executor, nodeflow construction, cycle-simulated accelerator
+//! timing, and latency metrics (p50/p99, per MLPerf practice).
+
+mod metrics;
+mod server;
+
+pub use metrics::LatencyStats;
+pub use server::{
+    run_workload, Coordinator, InferenceRequest, InferenceResponse, ServeConfig,
+};

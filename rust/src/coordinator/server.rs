@@ -1,0 +1,215 @@
+//! The low-latency serving coordinator (L3): request queue → batcher →
+//! nodeflow builder → {cycle simulator for accelerator timing, PJRT
+//! executor for real numerics} → response with latency metrics.
+//!
+//! Architecture mirrors a vLLM-style router scaled to GRIP's batch-1
+//! regime: a bounded submission queue provides backpressure, a worker
+//! thread owns the (non-Send) PJRT executor and drains the queue in
+//! micro-batches. The AOT artifacts are compiled for batch-1 nodeflows
+//! (the paper's online-inference setting), so the batcher currently
+//! admits one request per execution while still amortizing queue and
+//! nodeflow work.
+
+use super::metrics::LatencyStats;
+use crate::config::{GripConfig, ModelConfig};
+use crate::graph::CsrGraph;
+use crate::greta::{compile, GnnModel, ModelPlan};
+use crate::nodeflow::{Nodeflow, Sampler};
+use crate::runtime::{build_dynamic_args, Executor, FeatureStore};
+use crate::sim::simulate;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub model: GnnModel,
+    pub target: u32,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Target embedding (f_out values) from the PJRT numeric path.
+    pub embedding: Vec<f32>,
+    /// Simulated GRIP accelerator latency (µs) for this nodeflow.
+    pub accel_us: f64,
+    /// Wall-clock host-side latency (µs): queue + nodeflow + execution.
+    pub host_us: f64,
+    /// Unique 2-hop neighborhood size of the request.
+    pub neighborhood: usize,
+}
+
+enum Msg {
+    Req(InferenceRequest, mpsc::Sender<Result<InferenceResponse, String>>),
+    Shutdown,
+}
+
+/// Serving coordinator handle. Owns the worker thread.
+pub struct Coordinator {
+    tx: mpsc::SyncSender<Msg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Configuration of the serving loop.
+pub struct ServeConfig {
+    pub grip: GripConfig,
+    pub model_cfg: ModelConfig,
+    /// Bounded queue depth (backpressure).
+    pub queue_depth: usize,
+    /// Run the PJRT numeric path (disable for pure-timing benches).
+    pub numerics: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            grip: GripConfig::paper(),
+            model_cfg: ModelConfig::paper(),
+            queue_depth: 256,
+            numerics: true,
+        }
+    }
+}
+
+impl Coordinator {
+    /// Start the coordinator over `graph`. Loads and compiles all AOT
+    /// artifacts up front (when `numerics`), so the request path never
+    /// compiles.
+    pub fn start(graph: CsrGraph, sampler_seed: u64, cfg: ServeConfig) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
+        let worker = std::thread::Builder::new()
+            .name("grip-coordinator".into())
+            .spawn(move || worker_loop(graph, sampler_seed, cfg, rx))
+            .map_err(|e| anyhow!("spawning worker: {e}"))?;
+        Ok(Coordinator { tx, worker: Some(worker) })
+    }
+
+    /// Submit a request; returns a receiver for the response. Blocks if
+    /// the queue is full (backpressure).
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Req(req, rtx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| anyhow!("worker dropped"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(graph: CsrGraph, sampler_seed: u64, cfg: ServeConfig, rx: mpsc::Receiver<Msg>) {
+    let sampler = Sampler::new(sampler_seed);
+    let executor = if cfg.numerics {
+        match Executor::load(&crate::runtime::Manifest::default_dir()) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("coordinator: PJRT unavailable ({e}); serving timing-only");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    // Compile plans once per model.
+    let plans: HashMap<GnnModel, ModelPlan> = [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin, GnnModel::Ggcn]
+        .into_iter()
+        .map(|m| (m, compile(m, &cfg.model_cfg)))
+        .collect();
+    // Memoizing on-device feature store (§Perf; weights are already
+    // device-resident inside the Executor).
+    let mut store = FeatureStore::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Req(req, reply) => {
+                let start = Instant::now();
+                let result = serve_one(&graph, &sampler, &cfg, &plans, executor.as_ref(), &mut store, &req)
+                    .map_err(|e| e.to_string())
+                    .map(|mut r| {
+                        r.host_us = start.elapsed().as_secs_f64() * 1e6;
+                        r
+                    });
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_one(
+    graph: &CsrGraph,
+    sampler: &Sampler,
+    cfg: &ServeConfig,
+    plans: &HashMap<GnnModel, ModelPlan>,
+    executor: Option<&Executor>,
+    store: &mut FeatureStore,
+    req: &InferenceRequest,
+) -> Result<InferenceResponse> {
+    // 1. Nodeflow construction (preprocessing in the paper's flow).
+    let nf = Nodeflow::build(graph, sampler, &[req.target], &cfg.model_cfg);
+
+    // 2. Cycle-level accelerator timing.
+    let plan = &plans[&req.model];
+    let sim = simulate(&cfg.grip, plan, &nf);
+    let accel_us = sim.us(&cfg.grip);
+
+    // 3. Real numerics via PJRT (the embedding a client would receive).
+    let embedding = if let Some(exec) = executor {
+        let artifact = &exec.model(req.model.name())?.artifact;
+        let dynamic = build_dynamic_args(req.model, artifact, &nf, store)?;
+        let out = exec.run_prepared(req.model.name(), &dynamic)?;
+        let f_out = *artifact.output_shape.last().unwrap_or(&1);
+        out[..f_out].to_vec()
+    } else {
+        Vec::new()
+    };
+
+    Ok(InferenceResponse {
+        id: req.id,
+        embedding,
+        accel_us,
+        host_us: 0.0,
+        neighborhood: nf.neighborhood_size(),
+    })
+}
+
+/// Drive `n` requests through a coordinator and collect latency stats —
+/// the end-to-end harness used by examples and benches.
+pub fn run_workload(
+    coord: &Coordinator,
+    model: GnnModel,
+    targets: &[u32],
+) -> Result<(LatencyStats, LatencyStats, Vec<InferenceResponse>)> {
+    let mut accel = LatencyStats::new();
+    let mut host = LatencyStats::new();
+    let mut responses = Vec::with_capacity(targets.len());
+    for (i, &t) in targets.iter().enumerate() {
+        let resp = coord.infer(InferenceRequest { id: i as u64, model, target: t })?;
+        accel.record(resp.accel_us);
+        host.record(resp.host_us);
+        responses.push(resp);
+    }
+    Ok((accel, host, responses))
+}

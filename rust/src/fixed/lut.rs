@@ -1,0 +1,210 @@
+//! The activate PE's two-level configurable lookup table (paper Sec. V-D).
+//!
+//! Level 1 has 33 entries covering [-2^a, 2^a]; level 2 has 9 entries
+//! covering the wider [-2^b, 2^b]. An input inside level 1's range is
+//! linearly interpolated between its two nearest entries; otherwise level
+//! 2 is checked; otherwise the configured overflow behaviour applies —
+//! clamp to the closest level-2 value or evaluate a user linear function —
+//! independently for positive and negative inputs (enabling asymmetric
+//! activations).
+
+use super::q412::Fx16;
+
+pub const L1_ENTRIES: usize = 33;
+pub const L2_ENTRIES: usize = 9;
+
+/// Overflow behaviour beyond level 2's range, configured per sign.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OverflowMode {
+    /// Clamp to the closest (outermost) level-2 entry.
+    Clamp,
+    /// Evaluate `y = slope * x + offset` in fixed point.
+    Linear { slope: Fx16, offset: Fx16 },
+}
+
+/// Host-side LUT programming (what the control unit writes into the PE).
+#[derive(Debug, Clone)]
+pub struct LutConfig {
+    /// Level-1 half-range exponent: covers [-2^a, 2^a].
+    pub a: i32,
+    /// Level-2 half-range exponent: covers [-2^b, 2^b]; b >= a.
+    pub b: i32,
+    pub level1: [Fx16; L1_ENTRIES],
+    pub level2: [Fx16; L2_ENTRIES],
+    pub pos_overflow: OverflowMode,
+    pub neg_overflow: OverflowMode,
+}
+
+impl LutConfig {
+    /// Program the LUT by sampling `f` on both levels' grids — how the
+    /// host driver fills the tables for an arbitrary activation.
+    pub fn from_fn(a: i32, b: i32, f: impl Fn(f32) -> f32, pos: OverflowMode, neg: OverflowMode) -> Self {
+        assert!(b >= a, "level 2 must cover level 1");
+        let mut level1 = [Fx16::ZERO; L1_ENTRIES];
+        let mut level2 = [Fx16::ZERO; L2_ENTRIES];
+        let r1 = 2f32.powi(a);
+        let r2 = 2f32.powi(b);
+        for (i, e) in level1.iter_mut().enumerate() {
+            let x = -r1 + 2.0 * r1 * i as f32 / (L1_ENTRIES - 1) as f32;
+            *e = Fx16::from_f32(f(x));
+        }
+        for (i, e) in level2.iter_mut().enumerate() {
+            let x = -r2 + 2.0 * r2 * i as f32 / (L2_ENTRIES - 1) as f32;
+            *e = Fx16::from_f32(f(x));
+        }
+        Self { a, b, level1, level2, pos_overflow: pos, neg_overflow: neg }
+    }
+
+    /// Sigmoid programming used by G-GCN (paper: "including sigmoid,
+    /// which is required for models such as G-GCN"). Saturates to 1/0
+    /// outside ±8.
+    pub fn sigmoid() -> Self {
+        Self::from_fn(
+            1,
+            3,
+            |x| 1.0 / (1.0 + (-x).exp()),
+            OverflowMode::Clamp,
+            OverflowMode::Clamp,
+        )
+    }
+
+    /// Tanh programming (symmetric clamp).
+    pub fn tanh() -> Self {
+        Self::from_fn(0, 2, |x| x.tanh(), OverflowMode::Clamp, OverflowMode::Clamp)
+    }
+
+    /// Leaky-ReLU programming — exercises the asymmetric linear overflow
+    /// path (positive side is identity-like, negative side a small slope).
+    pub fn leaky_relu(alpha: f32) -> Self {
+        Self::from_fn(
+            1,
+            2,
+            move |x| if x >= 0.0 { x } else { alpha * x },
+            OverflowMode::Linear { slope: Fx16::from_f32(1.0), offset: Fx16::ZERO },
+            OverflowMode::Linear { slope: Fx16::from_f32(alpha), offset: Fx16::ZERO },
+        )
+    }
+}
+
+/// The hardware unit: evaluates a programmed `LutConfig` on Q4.12 inputs.
+#[derive(Debug, Clone)]
+pub struct TwoLevelLut {
+    cfg: LutConfig,
+}
+
+impl TwoLevelLut {
+    pub fn new(cfg: LutConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Interpolate within one level's table. `half_range` is 2^exp.
+    fn interp(table: &[Fx16], half_range: f32, x: f32) -> Fx16 {
+        let n = table.len() - 1;
+        // map x in [-r, r] to [0, n]
+        let t = (x + half_range) / (2.0 * half_range) * n as f32;
+        let i = (t.floor() as usize).min(n - 1);
+        let frac = Fx16::from_f32(t - i as f32);
+        let lo = table[i];
+        let hi = table[i + 1];
+        // lo + frac * (hi - lo), all in the datapath format
+        lo.sat_add(frac.sat_mul(hi.sat_sub(lo)))
+    }
+
+    /// Evaluate one input (already quantized, as the datapath receives it).
+    pub fn eval(&self, x: Fx16) -> Fx16 {
+        let xf = x.to_f32();
+        let r1 = 2f32.powi(self.cfg.a);
+        let r2 = 2f32.powi(self.cfg.b);
+        if xf.abs() <= r1 {
+            Self::interp(&self.cfg.level1, r1, xf)
+        } else if xf.abs() <= r2 {
+            Self::interp(&self.cfg.level2, r2, xf)
+        } else {
+            let mode = if xf > 0.0 { self.cfg.pos_overflow } else { self.cfg.neg_overflow };
+            match mode {
+                OverflowMode::Clamp => {
+                    if xf > 0.0 {
+                        self.cfg.level2[L2_ENTRIES - 1]
+                    } else {
+                        self.cfg.level2[0]
+                    }
+                }
+                OverflowMode::Linear { slope, offset } => slope.sat_mul(x).sat_add(offset),
+            }
+        }
+    }
+
+    pub fn eval_f32(&self, x: f32) -> f32 {
+        self.eval(Fx16::from_f32(x)).to_f32()
+    }
+
+    pub fn eval_vec(&self, xs: &mut [Fx16]) {
+        for x in xs.iter_mut() {
+            *x = self.eval(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn max_err(lut: &TwoLevelLut, f: impl Fn(f32) -> f32, lo: f32, hi: f32) -> f32 {
+        let mut worst = 0f32;
+        let n = 400;
+        for i in 0..=n {
+            let x = lo + (hi - lo) * i as f32 / n as f32;
+            let err = (lut.eval_f32(x) - f(x)).abs();
+            worst = worst.max(err);
+        }
+        worst
+    }
+
+    #[test]
+    fn sigmoid_accuracy_level1() {
+        let lut = TwoLevelLut::new(LutConfig::sigmoid());
+        let e = max_err(&lut, |x| 1.0 / (1.0 + (-x).exp()), -2.0, 2.0);
+        assert!(e < 0.01, "level-1 sigmoid err {e}");
+    }
+
+    #[test]
+    fn sigmoid_accuracy_level2_coarser() {
+        let lut = TwoLevelLut::new(LutConfig::sigmoid());
+        let e = max_err(&lut, |x| 1.0 / (1.0 + (-x).exp()), -8.0, 8.0);
+        assert!(e < 0.05, "level-2 sigmoid err {e}");
+    }
+
+    #[test]
+    fn sigmoid_saturates_beyond_level2() {
+        let lut = TwoLevelLut::new(LutConfig::sigmoid());
+        assert!((lut.eval_f32(7.99) - 1.0).abs() < 0.01);
+        assert!(lut.eval_f32(-7.99).abs() < 0.01);
+    }
+
+    #[test]
+    fn tanh_accuracy() {
+        let lut = TwoLevelLut::new(LutConfig::tanh());
+        let e = max_err(&lut, |x| x.tanh(), -1.0, 1.0);
+        assert!(e < 0.01, "tanh err {e}");
+    }
+
+    #[test]
+    fn leaky_relu_asymmetric_overflow() {
+        let lut = TwoLevelLut::new(LutConfig::leaky_relu(0.1));
+        // Beyond level-2 range (±4): linear overflow, different per sign.
+        assert!((lut.eval_f32(6.0) - 6.0).abs() < 0.02);
+        assert!((lut.eval_f32(-6.0) + 0.6).abs() < 0.02);
+    }
+
+    #[test]
+    fn interpolation_hits_table_points() {
+        // At exact grid points the output equals the sampled function.
+        let lut = TwoLevelLut::new(LutConfig::sigmoid());
+        let r1 = 2.0f32;
+        for i in 0..L1_ENTRIES {
+            let x = -r1 + 2.0 * r1 * i as f32 / (L1_ENTRIES - 1) as f32;
+            let want = 1.0 / (1.0 + (-x).exp());
+            assert!((lut.eval_f32(x) - want).abs() < 3e-3, "i={i}");
+        }
+    }
+}

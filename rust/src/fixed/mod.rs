@@ -1,0 +1,61 @@
+//! GRIP's 16-bit fixed-point datapath (paper Sec. V-D, Sec. VII).
+//!
+//! The ASIC computes in 16-bit fixed point with 4 bits of integer
+//! precision (Q4.12: 1 sign, 3 integer, 12 fractional bits). This module
+//! is the *bit-exact functional* model of that datapath — saturating
+//! arithmetic, the programmable activate PE (ReLU + two-level LUT), and
+//! vector helpers used by the functional simulator. Validated against the
+//! float path (PJRT execution of the JAX models) in integration tests.
+
+mod lut;
+mod q412;
+
+pub use lut::{LutConfig, OverflowMode, TwoLevelLut};
+pub use q412::{dot, Fx16};
+
+/// Element-wise ReLU over a fixed-point vector (the activate PE's cheap
+/// mode).
+pub fn relu_vec(xs: &mut [Fx16]) {
+    for x in xs.iter_mut() {
+        *x = x.relu();
+    }
+}
+
+/// Quantize an f32 slice into the datapath format.
+pub fn quantize(xs: &[f32]) -> Vec<Fx16> {
+    xs.iter().map(|&x| Fx16::from_f32(x)).collect()
+}
+
+/// Dequantize back to f32 (for comparisons against the PJRT path).
+pub fn dequantize(xs: &[Fx16]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+/// Worst-case quantization error of the format (half a ULP for values in
+/// range).
+pub const QUANT_EPS: f32 = 1.0 / 4096.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_small_values() {
+        let xs = [0.0f32, 0.5, -0.5, 1.25, -3.999, 7.9, -8.0];
+        let q = quantize(&xs);
+        let back = dequantize(&q);
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= QUANT_EPS, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn relu_vec_zeroes_negatives() {
+        let mut q = quantize(&[-1.0, 2.0, -0.25, 0.0]);
+        relu_vec(&mut q);
+        let back = dequantize(&q);
+        assert_eq!(back[0], 0.0);
+        assert!(back[1] > 1.99);
+        assert_eq!(back[2], 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Q4.12 saturating fixed-point scalar (paper Sec. V-D: "the input is
+//! first converted to a 16-bit fixed point representation with 4-bits of
+//! integer precision").
+
+/// A 16-bit fixed-point value: 1 sign + 3 integer + 12 fractional bits,
+/// range [-8.0, 8.0), resolution 2^-12. All arithmetic saturates, as the
+/// ASIC datapath does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fx16(pub i16);
+
+pub const FRAC_BITS: u32 = 12;
+const ONE: i32 = 1 << FRAC_BITS;
+
+impl Fx16 {
+    pub const MAX: Fx16 = Fx16(i16::MAX);
+    pub const MIN: Fx16 = Fx16(i16::MIN);
+    pub const ZERO: Fx16 = Fx16(0);
+
+    /// Convert from f32 with round-to-nearest and saturation.
+    pub fn from_f32(x: f32) -> Self {
+        if x.is_nan() {
+            return Fx16::ZERO;
+        }
+        let scaled = (x as f64 * ONE as f64).round();
+        Fx16(scaled.clamp(i16::MIN as f64, i16::MAX as f64) as i16)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / ONE as f32
+    }
+
+    pub fn from_raw(raw: i16) -> Self {
+        Fx16(raw)
+    }
+
+    /// Saturating addition (the reduce lanes' adder).
+    pub fn sat_add(self, other: Fx16) -> Fx16 {
+        Fx16(self.0.saturating_add(other.0))
+    }
+
+    /// Saturating subtraction.
+    pub fn sat_sub(self, other: Fx16) -> Fx16 {
+        Fx16(self.0.saturating_sub(other.0))
+    }
+
+    /// Saturating multiply: 16×16 → 32-bit product, rounded arithmetic
+    /// shift back to Q4.12, saturate (the PE array's multiplier).
+    pub fn sat_mul(self, other: Fx16) -> Fx16 {
+        let prod = self.0 as i32 * other.0 as i32;
+        // round-to-nearest on the truncated fraction
+        let rounded = (prod + (1 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        Fx16(rounded.clamp(i16::MIN as i32, i16::MAX as i32) as i16)
+    }
+
+    /// Fused multiply into a 32-bit accumulator (the PE column reduction
+    /// tree accumulates wider than the storage format).
+    pub fn mac_into(self, other: Fx16, acc: i64) -> i64 {
+        acc + (self.0 as i64 * other.0 as i64)
+    }
+
+    /// Collapse a 32/64-bit accumulator back to Q4.12 with saturation.
+    pub fn from_acc(acc: i64) -> Fx16 {
+        let rounded = (acc + (1 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        Fx16(rounded.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+    }
+
+    pub fn relu(self) -> Fx16 {
+        if self.0 < 0 {
+            Fx16::ZERO
+        } else {
+            self
+        }
+    }
+
+    pub fn max(self, other: Fx16) -> Fx16 {
+        if self.0 >= other.0 {
+            self
+        } else {
+            other
+        }
+    }
+
+    pub fn is_negative(self) -> bool {
+        self.0 < 0
+    }
+}
+
+/// Dot product through the PE array model: wide accumulate, one collapse.
+pub fn dot(a: &[Fx16], b: &[Fx16]) -> Fx16 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc: i64 = 0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc = x.mac_into(*y, acc);
+    }
+    Fx16::from_acc(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants() {
+        assert_eq!(Fx16::from_f32(1.0).0, 4096);
+        assert_eq!(Fx16::from_f32(-1.0).0, -4096);
+        assert_eq!(Fx16::from_f32(0.0).0, 0);
+    }
+
+    #[test]
+    fn saturation_bounds() {
+        assert_eq!(Fx16::from_f32(100.0), Fx16::MAX);
+        assert_eq!(Fx16::from_f32(-100.0), Fx16::MIN);
+        assert_eq!(Fx16::MAX.sat_add(Fx16::from_f32(1.0)), Fx16::MAX);
+        assert_eq!(Fx16::MIN.sat_sub(Fx16::from_f32(1.0)), Fx16::MIN);
+    }
+
+    #[test]
+    fn mul_identity_and_sign() {
+        let x = Fx16::from_f32(2.5);
+        let one = Fx16::from_f32(1.0);
+        assert_eq!(x.sat_mul(one), x);
+        let y = Fx16::from_f32(-2.0);
+        assert!((x.sat_mul(y).to_f32() + 5.0).abs() < 2e-3);
+    }
+
+    #[test]
+    fn mul_saturates() {
+        let big = Fx16::from_f32(7.9);
+        assert_eq!(big.sat_mul(big), Fx16::MAX);
+        let neg = Fx16::from_f32(-7.9);
+        assert_eq!(big.sat_mul(neg), Fx16::MIN);
+    }
+
+    #[test]
+    fn dot_matches_float_within_quantization() {
+        let a: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 40.0).collect();
+        let b: Vec<f32> = (0..64).map(|i| ((i * 7 % 13) as f32 - 6.0) / 10.0).collect();
+        let fa: Vec<Fx16> = a.iter().map(|&x| Fx16::from_f32(x)).collect();
+        let fb: Vec<Fx16> = b.iter().map(|&x| Fx16::from_f32(x)).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let got = dot(&fa, &fb).to_f32();
+        // error bound: n * eps * max|b| + collapse rounding
+        assert!((want - got).abs() < 0.02, "{want} vs {got}");
+    }
+
+    #[test]
+    fn nan_maps_to_zero() {
+        assert_eq!(Fx16::from_f32(f32::NAN), Fx16::ZERO);
+    }
+
+    #[test]
+    fn relu_and_max() {
+        assert_eq!(Fx16::from_f32(-3.0).relu(), Fx16::ZERO);
+        let a = Fx16::from_f32(1.0);
+        let b = Fx16::from_f32(2.0);
+        assert_eq!(a.max(b), b);
+    }
+}

@@ -1,0 +1,119 @@
+//! Compressed sparse row graph storage — the substrate under the sampler
+//! and nodeflow builder. Vertices are `u32`; edges are directed (an
+//! undirected input is stored with both arcs).
+
+/// A directed graph in CSR form.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    /// offsets[v]..offsets[v+1] indexes `targets` for v's out-neighbors.
+    offsets: Vec<u64>,
+    targets: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an adjacency-list iterator. Neighbor lists are kept in
+    /// given order (samplers use index-based selection, so order matters
+    /// only for determinism).
+    pub fn from_adjacency(adj: Vec<Vec<u32>>) -> Self {
+        let mut offsets = Vec::with_capacity(adj.len() + 1);
+        let mut targets = Vec::new();
+        offsets.push(0u64);
+        for neigh in &adj {
+            targets.extend_from_slice(neigh);
+            offsets.push(targets.len() as u64);
+        }
+        Self { offsets, targets }
+    }
+
+    /// Build from an edge list (u -> v), grouping by source.
+    pub fn from_edges(num_vertices: usize, edges: &[(u32, u32)]) -> Self {
+        let mut degree = vec![0u64; num_vertices];
+        for &(u, _) in edges {
+            degree[u as usize] += 1;
+        }
+        let mut offsets = vec![0u64; num_vertices + 1];
+        for v in 0..num_vertices {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut targets = vec![0u32; edges.len()];
+        for &(u, v) in edges {
+            let c = &mut cursor[u as usize];
+            targets[*c as usize] = v;
+            *c += 1;
+        }
+        Self { offsets, targets }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        let v = v as usize;
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let v = v as usize;
+        &self.targets[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Mean out-degree.
+    pub fn mean_degree(&self) -> f64 {
+        self.num_edges() as f64 / self.num_vertices().max(1) as f64
+    }
+
+    /// Maximum out-degree (used by partition sizing heuristics).
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0 -> 1,2 ; 1 -> 3 ; 2 -> 3 ; 3 -> (none)
+        CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn from_edges_basic() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        assert_eq!(g.degree(1), 1);
+    }
+
+    #[test]
+    fn from_adjacency_matches_from_edges() {
+        let a = CsrGraph::from_adjacency(vec![vec![1, 2], vec![3], vec![3], vec![]]);
+        let b = diamond();
+        for v in 0..4u32 {
+            assert_eq!(a.neighbors(v), b.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_allowed() {
+        let g = CsrGraph::from_edges(5, &[(0, 4)]);
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn mean_degree() {
+        let g = diamond();
+        assert!((g.mean_degree() - 1.0).abs() < 1e-12);
+        assert_eq!(g.max_degree(), 2);
+    }
+}

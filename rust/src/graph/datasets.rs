@@ -1,0 +1,157 @@
+//! Dataset registry calibrated to the paper's Table I.
+//!
+//! | Dataset          | Nodes     | Edges      | 2-Hop |
+//! |------------------|-----------|------------|-------|
+//! | Youtube (YT)     | 1,134,890 | 2,987,624  | 25    |
+//! | Livejournal (LJ) | 3,997,962 | 34,681,189 | 65    |
+//! | Pokec (PO)       | 1,632,803 | 30,622,564 | 167   |
+//! | Reddit (RD)      | 232,383   | 47,396,905 | 239   |
+//!
+//! `pool_size`/`zipf_s` were calibrated (rust/tests/integration.rs
+//! asserts it) so that the *sampled* 2-hop median under the paper's
+//! 25/10 GraphSAGE sampling lands near the table.
+
+use super::csr::CsrGraph;
+use super::generator::{generate, GeneratorParams};
+
+/// The four evaluation datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Youtube,
+    Livejournal,
+    Pokec,
+    Reddit,
+}
+
+pub const TABLE1: [Dataset; 4] =
+    [Dataset::Youtube, Dataset::Livejournal, Dataset::Pokec, Dataset::Reddit];
+
+/// Static calibration record for one dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub short: &'static str,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Paper Table I "2-Hop" median (under 25/10 sampling).
+    pub two_hop_median: usize,
+    /// Generator calibration.
+    pub pool_size: usize,
+    pub zipf_s: f64,
+    pub rewire: f64,
+}
+
+impl Dataset {
+    pub fn spec(&self) -> DatasetSpec {
+        match self {
+            Dataset::Youtube => DatasetSpec {
+                name: "youtube",
+                short: "YT",
+                nodes: 1_134_890,
+                edges: 2_987_624,
+                two_hop_median: 25,
+                pool_size: 150,
+                zipf_s: 1.6,
+                rewire: 0.03,
+            },
+            Dataset::Livejournal => DatasetSpec {
+                name: "livejournal",
+                short: "LJ",
+                nodes: 3_997_962,
+                edges: 34_681_189,
+                two_hop_median: 65,
+                pool_size: 75,
+                zipf_s: 1.8,
+                rewire: 0.08,
+            },
+            Dataset::Pokec => DatasetSpec {
+                name: "pokec",
+                short: "PO",
+                nodes: 1_632_803,
+                edges: 30_622_564,
+                two_hop_median: 167,
+                pool_size: 600,
+                zipf_s: 2.0,
+                rewire: 0.05,
+            },
+            Dataset::Reddit => DatasetSpec {
+                name: "reddit",
+                short: "RD",
+                nodes: 232_383,
+                edges: 47_396_905,
+                two_hop_median: 239,
+                pool_size: 2000,
+                zipf_s: 2.2,
+                rewire: 0.05,
+            },
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Dataset> {
+        match name.to_ascii_lowercase().as_str() {
+            "youtube" | "yt" => Some(Dataset::Youtube),
+            "livejournal" | "lj" => Some(Dataset::Livejournal),
+            "pokec" | "po" => Some(Dataset::Pokec),
+            "reddit" | "rd" => Some(Dataset::Reddit),
+            _ => None,
+        }
+    }
+
+    /// Generate the synthetic equivalent at `scale` of the full node
+    /// count (scale = 1.0 is the paper-size graph). Local statistics
+    /// (degree distribution, pool locality, hence sampled 2-hop size)
+    /// are scale-invariant, so experiments default to a smaller scale.
+    pub fn generate(&self, scale: f64, seed: u64) -> CsrGraph {
+        let spec = self.spec();
+        let nodes = ((spec.nodes as f64 * scale) as usize).max(2 * spec.pool_size).max(1000);
+        // GraphSAGE preprocessing treats edges as undirected: each edge
+        // contributes a neighbor to both endpoints, so the sampler sees
+        // twice the directed mean degree.
+        let mean_degree = 2.0 * spec.edges as f64 / spec.nodes as f64;
+        generate(&GeneratorParams {
+            nodes,
+            mean_degree,
+            pool_size: spec.pool_size,
+            zipf_s: spec.zipf_s,
+            rewire: spec.rewire,
+            seed: seed ^ (spec.nodes as u64),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table1() {
+        let yt = Dataset::Youtube.spec();
+        assert_eq!(yt.nodes, 1_134_890);
+        assert_eq!(yt.edges, 2_987_624);
+        assert_eq!(yt.two_hop_median, 25);
+        let rd = Dataset::Reddit.spec();
+        assert_eq!(rd.edges, 47_396_905);
+    }
+
+    #[test]
+    fn from_name_aliases() {
+        assert_eq!(Dataset::from_name("LJ"), Some(Dataset::Livejournal));
+        assert_eq!(Dataset::from_name("pokec"), Some(Dataset::Pokec));
+        assert_eq!(Dataset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn scaled_generation_preserves_mean_degree() {
+        let g = Dataset::Youtube.generate(0.01, 7);
+        let want = 2.0 * 2_987_624.0 / 1_134_890.0;
+        let got = g.mean_degree();
+        assert!((got - want).abs() / want < 0.3, "mean degree {got} vs {want}");
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let a = Dataset::Pokec.generate(0.005, 9);
+        let b = Dataset::Pokec.generate(0.005, 9);
+        assert_eq!(a.num_edges(), b.num_edges());
+    }
+}

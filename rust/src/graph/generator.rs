@@ -1,0 +1,156 @@
+//! Seeded synthetic graph generator with controllable locality.
+//!
+//! The model: each vertex draws a power-law out-degree (zipf exponent
+//! `zipf_s`, scaled to hit `mean_degree`), and picks neighbors mostly
+//! from a local *community pool* of `pool_size` consecutive vertex ids,
+//! with probability `rewire` of a uniform long-range endpoint instead.
+//!
+//! The pool size directly controls how much 2-hop neighborhoods dedup
+//! (draws from a pool of P vertices have expected unique count
+//! P·(1−(1−1/P)^k)), which is what Table I's "2-Hop" column measures;
+//! the degree distribution controls how many draws there are. Those are
+//! the only graph statistics the paper's evaluation consumes, so
+//! calibrating them reproduces the workload (DESIGN.md §Substitutions).
+
+use super::csr::CsrGraph;
+use crate::rng::SplitMix64;
+
+/// Parameters for [`generate`].
+#[derive(Debug, Clone)]
+pub struct GeneratorParams {
+    pub nodes: usize,
+    /// Target mean out-degree (edges ≈ nodes × mean_degree).
+    pub mean_degree: f64,
+    /// Community pool size (locality → 2-hop dedup).
+    pub pool_size: usize,
+    /// Degree-distribution skew (zipf exponent, >1; higher = more even).
+    pub zipf_s: f64,
+    /// Probability an edge endpoint is uniform over all vertices.
+    pub rewire: f64,
+    pub seed: u64,
+}
+
+impl Default for GeneratorParams {
+    fn default() -> Self {
+        Self { nodes: 10_000, mean_degree: 8.0, pool_size: 150, zipf_s: 2.0, rewire: 0.05, seed: 1 }
+    }
+}
+
+/// Generate a seeded synthetic graph. Deterministic per parameters.
+pub fn generate(p: &GeneratorParams) -> CsrGraph {
+    assert!(p.nodes > 1, "need at least 2 vertices");
+    let mut rng = SplitMix64::new(p.seed);
+    let pool = p.pool_size.clamp(2, p.nodes);
+
+    // Degree model: most vertices sit near the mean (real social graphs
+    // post-GraphSAGE preprocessing have a compressed body: the sampler
+    // caps the useful degree anyway), with a zipf-distributed hub tail
+    // (15%). This keeps the *median* degree ≈ mean (what the sampled
+    // 2-hop statistic depends on) while preserving a heavy tail (what
+    // the Fig. 12 neighborhood spread depends on).
+    const HUB_FRACTION: f64 = 0.15;
+    let probe = 4096.min(p.nodes * 4).max(1024);
+    let mut probe_rng = SplitMix64::new(p.seed ^ 0x5eed);
+    let mean_w: f64 = (0..probe).map(|_| probe_rng.gen_zipf(64, p.zipf_s) as f64).sum::<f64>() / probe as f64;
+
+    let mut adj: Vec<Vec<u32>> = Vec::with_capacity(p.nodes);
+    for v in 0..p.nodes {
+        let d = if rng.gen_f64() < HUB_FRACTION {
+            let w = rng.gen_zipf(64, p.zipf_s) as f64 / mean_w;
+            ((p.mean_degree * w * 1.5).round() as usize).max(1)
+        } else {
+            // body: uniform in [0.75, 1.25] x mean
+            let u = 0.75 + 0.5 * rng.gen_f64();
+            ((p.mean_degree * u).round() as usize).max(1)
+        };
+        // Community base: centered window, clamped at the id range ends.
+        let half = pool / 2;
+        let base = (v.saturating_sub(half)).min(p.nodes - pool);
+        let mut neigh = Vec::with_capacity(d);
+        for _ in 0..d {
+            let t = if rng.gen_f64() < p.rewire {
+                rng.gen_range(p.nodes)
+            } else {
+                base + rng.gen_range(pool)
+            };
+            if t != v {
+                neigh.push(t as u32);
+            }
+        }
+        if neigh.is_empty() {
+            // Guarantee no isolated vertex (the sampler needs 1+ neighbor).
+            let t = if v + 1 < p.nodes { v + 1 } else { v - 1 };
+            neigh.push(t as u32);
+        }
+        adj.push(neigh);
+    }
+    CsrGraph::from_adjacency(adj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = GeneratorParams { nodes: 500, ..Default::default() };
+        let a = generate(&p);
+        let b = generate(&p);
+        assert_eq!(a.num_edges(), b.num_edges());
+        for v in 0..500u32 {
+            assert_eq!(a.neighbors(v), b.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p = GeneratorParams { nodes: 500, ..Default::default() };
+        let q = GeneratorParams { seed: 2, ..p.clone() };
+        let a = generate(&p);
+        let b = generate(&q);
+        let same = (0..500u32).all(|v| a.neighbors(v) == b.neighbors(v));
+        assert!(!same);
+    }
+
+    #[test]
+    fn mean_degree_close_to_target() {
+        let p = GeneratorParams { nodes: 20_000, mean_degree: 10.0, ..Default::default() };
+        let g = generate(&p);
+        let md = g.mean_degree();
+        assert!((md - 10.0).abs() / 10.0 < 0.25, "mean degree {md}");
+    }
+
+    #[test]
+    fn no_isolated_vertices() {
+        let p = GeneratorParams { nodes: 2_000, mean_degree: 1.2, ..Default::default() };
+        let g = generate(&p);
+        for v in 0..g.num_vertices() as u32 {
+            assert!(g.degree(v) >= 1, "vertex {v} isolated");
+        }
+    }
+
+    #[test]
+    fn locality_pool_respected() {
+        // With rewire = 0 every neighbor lies within the pool window.
+        let p = GeneratorParams {
+            nodes: 5_000,
+            pool_size: 100,
+            rewire: 0.0,
+            ..Default::default()
+        };
+        let g = generate(&p);
+        for v in 0..g.num_vertices() as u32 {
+            for &t in g.neighbors(v) {
+                assert!((t as i64 - v as i64).unsigned_abs() <= 100, "edge {v}->{t} too long");
+            }
+        }
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let g = generate(&GeneratorParams { nodes: 3_000, ..Default::default() });
+        for v in 0..g.num_vertices() as u32 {
+            assert!(!g.neighbors(v).contains(&v));
+        }
+    }
+}

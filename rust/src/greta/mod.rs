@@ -1,0 +1,24 @@
+//! The GReTA programming model (paper Sec. IV) and the GRIP "compiler".
+//!
+//! GReTA decomposes a GNN layer into four stateless UDFs — gather,
+//! reduce, transform, activate — invoked across three phases
+//! (edge-accumulate, vertex-accumulate, vertex-update). Complex layers
+//! are split into multiple *programs* whose outputs feed later programs'
+//! features or accumulators (paper Fig. 3/4).
+//!
+//! * [`ops`] — the UDF vocabulary our PE implementation supports
+//!   (paper Sec. V-A "PE Implementation").
+//! * [`program`] — programs, layer plans, and model compilation
+//!   ([`compile`]): GCN, GraphSAGE-max, GIN, G-GCN → program sequences
+//!   exactly mirroring Fig. 4.
+//! * [`exec`] — the bit-accurate functional executor: runs a compiled
+//!   plan over a nodeflow on the 16-bit fixed-point datapath ([`crate::fixed`]),
+//!   validated against the float PJRT path in integration tests.
+
+mod exec;
+mod ops;
+mod program;
+
+pub use exec::{exec_test_args, execute_model, Args as ExecArgs, ExecError};
+pub use ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
+pub use program::{compile, GnnModel, LayerPlan, MatMul, ModelPlan, Program, Src, ALL_MODELS};

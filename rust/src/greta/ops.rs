@@ -1,0 +1,73 @@
+//! The UDF vocabulary of our PE implementation (paper Sec. V-A):
+//! gather ∈ {identity, element-wise sum/product, scale-by-constant};
+//! reduce ∈ {sum, max, mean}; transform = matmul (+ element-wise sum);
+//! activate ∈ {ReLU, two-level LUT}.
+
+
+/// What a program iterates over, determining its nodeflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    /// The layer's bipartite nodeflow edges (edge-accumulate is real
+    /// gather/reduce work).
+    Edges,
+    /// An identity nodeflow over all U input vertices (paper Fig. 3a:
+    /// per-vertex programs such as G-GCN's gate computation).
+    AllInputs,
+    /// An identity nodeflow over the V output vertices (e.g. the self
+    /// term of GraphSAGE's update).
+    Outputs,
+}
+
+/// Gather UDF: forms the per-edge message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GatherOp {
+    /// Pass the source feature through (most models).
+    Identity,
+    /// Element-wise product of the source feature with another program's
+    /// output for the same source vertex (G-GCN's gate ⊙ message).
+    ProductWith(usize),
+    /// Element-wise sum with another program's output.
+    SumWith(usize),
+    /// Scale the source feature by a constant.
+    Scale(f32),
+}
+
+/// Reduce UDF: accumulates messages per output vertex.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Mean,
+}
+
+/// Optional self-contribution folded into the edge accumulator before
+/// transform (GIN's `(1 + eps) · h_v`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SelfScale {
+    /// `1 + eps` with eps supplied as a runtime scalar argument.
+    OnePlusArg(&'static str),
+    /// Fixed constant.
+    Const(f32),
+}
+
+/// Activate UDF (vertex-update phase).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activate {
+    None,
+    Relu,
+    /// Two-level LUT programmed with sigmoid (G-GCN).
+    Sigmoid,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_are_copy_and_comparable() {
+        let g = GatherOp::ProductWith(0);
+        assert_eq!(g, GatherOp::ProductWith(0));
+        assert_ne!(g, GatherOp::Identity);
+        assert_eq!(ReduceOp::Max, ReduceOp::Max);
+    }
+}

@@ -1,0 +1,346 @@
+//! GRIP programs and the model compiler (paper Sec. IV-A, Fig. 3/4).
+//!
+//! Each [`Program`] is one pass of the three GReTA phases over a domain;
+//! a [`LayerPlan`] is the program sequence implementing one
+//! message-passing layer; a [`ModelPlan`] is the full 2-layer model. The
+//! compiler output feeds both the functional executor (`exec.rs`) and
+//! the cycle simulator (`crate::sim`), so the cost model and the
+//! numerics always agree on program structure.
+
+use super::ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
+use crate::config::ModelConfig;
+
+/// The four GNN models evaluated by the paper (Sec. VII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GnnModel {
+    Gcn,
+    Sage,
+    Gin,
+    Ggcn,
+}
+
+pub const ALL_MODELS: [GnnModel; 4] = [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin, GnnModel::Ggcn];
+
+impl GnnModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GnnModel::Gcn => "gcn",
+            GnnModel::Sage => "sage",
+            GnnModel::Gin => "gin",
+            GnnModel::Ggcn => "ggcn",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" => Some(GnnModel::Gcn),
+            "sage" | "gs" | "graphsage" => Some(GnnModel::Sage),
+            "gin" => Some(GnnModel::Gin),
+            "ggcn" | "g-gcn" => Some(GnnModel::Ggcn),
+            _ => None,
+        }
+    }
+}
+
+/// Transform UDF: matrix multiply with a named weight (paper: transform
+/// is the only UDF with weight access).
+#[derive(Debug, Clone)]
+pub struct MatMul {
+    /// Manifest parameter name (resolved by the runtime/executor).
+    pub weight: &'static str,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+/// One GRIP program (paper Alg. 2 semantics).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: &'static str,
+    pub domain: Domain,
+    /// Feature source: the layer's input features or a previous
+    /// program's output (program composition, Fig. 4 plus-boxes).
+    pub source: Src,
+    pub gather: GatherOp,
+    pub reduce: ReduceOp,
+    /// Self-contribution folded into the edge accumulator (GIN).
+    pub self_scale: Option<SelfScale>,
+    /// Vertex-accumulate transform; `None` for pure edge programs.
+    pub transform: Option<MatMul>,
+    /// Accumulate another program's output into the vertex accumulator
+    /// before activation (rows must match this program's domain rows).
+    pub add_program: Option<usize>,
+    pub activate: Activate,
+}
+
+/// Feature source of a program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    /// The layer's input feature matrix H (U rows).
+    LayerInput,
+    /// Output of a previous program in the same layer plan.
+    Program(usize),
+}
+
+/// Program sequence for one message-passing layer. `output_program`
+/// names which program's result is the layer output Z.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub programs: Vec<Program>,
+    pub output_program: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+/// Compiled model: one plan per layer, outermost (largest U) first.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub model: GnnModel,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl ModelPlan {
+    /// Total weight bytes across all transforms (drives weight-load time
+    /// and the Table II global-weight-buffer sizing).
+    pub fn weight_bytes(&self, elem_bytes: usize) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.programs.iter())
+            .filter_map(|p| p.transform.as_ref())
+            .map(|t| t.in_dim * t.out_dim * elem_bytes)
+            .sum()
+    }
+
+    /// Names of all weight parameters in execution order.
+    pub fn weight_names(&self) -> Vec<&'static str> {
+        self.layers
+            .iter()
+            .flat_map(|l| l.programs.iter())
+            .filter_map(|p| p.transform.as_ref().map(|t| t.weight))
+            .collect()
+    }
+}
+
+/// Compile a model to its GRIP program sequence (Fig. 4).
+pub fn compile(model: GnnModel, mc: &ModelConfig) -> ModelPlan {
+    let dims = mc.layers();
+    let layers = dims
+        .iter()
+        .enumerate()
+        .map(|(i, &(_, in_dim, out_dim))| compile_layer(model, i, in_dim, mc.f_hid, out_dim))
+        .collect();
+    ModelPlan { model, layers }
+}
+
+fn compile_layer(model: GnnModel, layer: usize, in_dim: usize, mid: usize, out_dim: usize) -> LayerPlan {
+    // Weight names match python/compile/model.py::param_names.
+    macro_rules! w {
+        ($a:expr, $b:expr) => {
+            if layer == 0 {
+                $a
+            } else {
+                $b
+            }
+        };
+    }
+    let programs = match model {
+        // Z = relu((Â_mean H) W) — single program, the canonical case.
+        GnnModel::Gcn => vec![Program {
+            name: "gcn",
+            domain: Domain::Edges,
+            source: Src::LayerInput,
+            gather: GatherOp::Identity,
+            reduce: ReduceOp::Mean,
+            self_scale: None,
+            transform: Some(MatMul { weight: w!("w1", "w2"), in_dim, out_dim }),
+            add_program: None,
+            activate: Activate::Relu,
+        }],
+
+        // a_v = max_u relu(h_u W_pool); z = relu(h_v W_s + a_v W_n).
+        GnnModel::Sage => vec![
+            Program {
+                name: "sage-pool",
+                domain: Domain::AllInputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wp1", "wp2"), in_dim, out_dim: mid }),
+                add_program: None,
+                activate: Activate::Relu,
+            },
+            Program {
+                name: "sage-agg",
+                domain: Domain::Edges,
+                source: Src::Program(0),
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Max,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wn1", "wn2"), in_dim: mid, out_dim }),
+                add_program: None,
+                activate: Activate::None,
+            },
+            Program {
+                name: "sage-update",
+                domain: Domain::Outputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("ws1", "ws2"), in_dim, out_dim }),
+                add_program: Some(1),
+                activate: Activate::Relu,
+            },
+        ],
+
+        // z = relu(W2 relu(W1 ((1+eps) h_v + Σ h_u))).
+        GnnModel::Gin => vec![
+            Program {
+                name: "gin-agg",
+                domain: Domain::Edges,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: Some(SelfScale::OnePlusArg(w!("eps1", "eps2"))),
+                transform: Some(MatMul { weight: w!("w1a", "w2a"), in_dim, out_dim: mid }),
+                add_program: None,
+                activate: Activate::Relu,
+            },
+            Program {
+                name: "gin-mlp2",
+                domain: Domain::Outputs,
+                source: Src::Program(0),
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("w1b", "w2b"), in_dim: mid, out_dim }),
+                add_program: None,
+                activate: Activate::Relu,
+            },
+        ],
+
+        // gate = σ(H wg) (scalar per source, Marcheggiani & Titov);
+        // msg = H Wm; z = relu(Σ (gate ⊙ msg) + h_v Ws).
+        GnnModel::Ggcn => vec![
+            Program {
+                name: "ggcn-gate",
+                domain: Domain::AllInputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wg1", "wg2"), in_dim, out_dim: 1 }),
+                add_program: None,
+                activate: Activate::Sigmoid,
+            },
+            Program {
+                name: "ggcn-msg",
+                domain: Domain::AllInputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wm1", "wm2"), in_dim, out_dim }),
+                add_program: None,
+                activate: Activate::None,
+            },
+            Program {
+                name: "ggcn-reduce",
+                domain: Domain::Edges,
+                source: Src::Program(1),
+                gather: GatherOp::ProductWith(0),
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: None,
+                add_program: None,
+                activate: Activate::None,
+            },
+            Program {
+                name: "ggcn-update",
+                domain: Domain::Outputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("ws1", "ws2"), in_dim, out_dim }),
+                add_program: Some(2),
+                activate: Activate::Relu,
+            },
+        ],
+    };
+    let output_program = programs.len() - 1;
+    LayerPlan { programs, output_program, in_dim, out_dim }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc() -> ModelConfig {
+        ModelConfig::paper()
+    }
+
+    #[test]
+    fn gcn_is_single_program() {
+        let plan = compile(GnnModel::Gcn, &mc());
+        assert_eq!(plan.layers.len(), 2);
+        assert_eq!(plan.layers[0].programs.len(), 1);
+        assert_eq!(plan.layers[0].programs[0].reduce, ReduceOp::Mean);
+        assert_eq!(plan.weight_names(), vec!["w1", "w2"]);
+    }
+
+    #[test]
+    fn ggcn_splits_into_four_programs() {
+        // Fig. 3: weighted send ops must split into identity-nodeflow
+        // programs because gather/reduce have no weight access.
+        let plan = compile(GnnModel::Ggcn, &mc());
+        let l0 = &plan.layers[0];
+        assert_eq!(l0.programs.len(), 4);
+        assert_eq!(l0.programs[0].domain, Domain::AllInputs);
+        assert_eq!(l0.programs[2].gather, GatherOp::ProductWith(0));
+        assert!(l0.programs[2].transform.is_none());
+        assert_eq!(l0.programs[3].add_program, Some(2));
+    }
+
+    #[test]
+    fn sage_uses_max_reduce() {
+        let plan = compile(GnnModel::Sage, &mc());
+        assert_eq!(plan.layers[0].programs[1].reduce, ReduceOp::Max);
+        assert_eq!(plan.layers[0].programs[1].source, Src::Program(0));
+    }
+
+    #[test]
+    fn gin_self_scale() {
+        let plan = compile(GnnModel::Gin, &mc());
+        assert!(matches!(
+            plan.layers[0].programs[0].self_scale,
+            Some(SelfScale::OnePlusArg("eps1"))
+        ));
+        assert_eq!(plan.weight_names(), vec!["w1a", "w1b", "w2a", "w2b"]);
+    }
+
+    #[test]
+    fn weight_bytes_match_dims() {
+        let plan = compile(GnnModel::Gcn, &mc());
+        // (602*512 + 512*256) * 2 bytes
+        assert_eq!(plan.weight_bytes(2), (602 * 512 + 512 * 256) * 2);
+    }
+
+    #[test]
+    fn layer_dims_follow_model_config() {
+        for m in ALL_MODELS {
+            let plan = compile(m, &mc());
+            assert_eq!(plan.layers[0].in_dim, 602);
+            assert_eq!(plan.layers[0].out_dim, 512);
+            assert_eq!(plan.layers[1].out_dim, 256);
+        }
+    }
+
+    #[test]
+    fn model_name_roundtrip() {
+        for m in ALL_MODELS {
+            assert_eq!(GnnModel::from_name(m.name()), Some(m));
+        }
+        assert_eq!(GnnModel::from_name("GS"), Some(GnnModel::Sage));
+    }
+}

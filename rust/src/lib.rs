@@ -1,0 +1,45 @@
+//! # GRIP — Graph Neural Network Accelerator Architecture (reproduction)
+//!
+//! A full-system reproduction of *GRIP: A Graph Neural Network Accelerator
+//! Architecture* (Kiningham, Ré, Levis; 2020). The paper evaluates a 28 nm
+//! ASIC through a cycle-accurate simulator; this crate rebuilds that entire
+//! evaluation substrate plus a production serving stack around it:
+//!
+//! * [`graph`] — CSR graphs and synthetic dataset generators calibrated to
+//!   the paper's Table I (Youtube / LiveJournal / Pokec / Reddit).
+//! * [`nodeflow`] — GraphSAGE-style sampling, per-layer bipartite nodeflows,
+//!   and execution partitioning (paper Sec. VI-A).
+//! * [`greta`] — the GReTA programming model: UDFs, programs, and the
+//!   compiler from GNN models (GCN, GraphSAGE-max, GIN, G-GCN) to GRIP
+//!   program sequences (paper Sec. IV, Fig. 3/4).
+//! * [`sim`] — the cycle-level GRIP microarchitecture simulator: edge unit
+//!   (prefetch lanes, crossbar, reduce lanes), vertex unit (16×32 PE array,
+//!   tile buffer, weight sequencer), update unit (ReLU + two-level LUT),
+//!   DDR4 memory controller, double buffering, partition pipelining, and
+//!   vertex-tiling (paper Sec. V/VI).
+//! * [`fixed`] — GRIP's bit-exact 16-bit fixed-point datapath including the
+//!   configurable two-level LUT activation unit (paper Sec. V-D).
+//! * [`energy`] — activity-counter energy model reproducing Table IV.
+//! * [`baseline`] — CPU (Sec. VIII-B), GPU, and prior-work (HyGCN-like,
+//!   TPU+, Graphicionado-like; Sec. VIII-F) performance models.
+//! * [`runtime`] — PJRT executor loading the AOT-compiled JAX/Pallas HLO
+//!   artifacts; Python never runs on the request path.
+//! * [`coordinator`] — the low-latency serving loop: request queue, batcher,
+//!   nodeflow builder, scheduler, and latency metrics (p50/p99).
+//! * [`repro`] — one generator per paper table and figure.
+
+pub mod baseline;
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod fixed;
+pub mod graph;
+pub mod greta;
+pub mod nodeflow;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+
+pub use config::{GripConfig, ModelConfig};

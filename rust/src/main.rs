@@ -1,0 +1,218 @@
+//! `grip` — CLI for the GRIP reproduction.
+//!
+//! Subcommands:
+//!   repro  --exp <id>|--all [--scale S] [--targets N]   regenerate paper tables/figures
+//!   serve  --model M --dataset D [--requests N]          end-to-end serving (timing + PJRT numerics)
+//!   sim    --model M --dataset D                         one simulated inference, unit breakdown
+//!   verify                                               golden-vector check of every HLO artifact
+//!   info                                                 Table II configuration dump
+//!
+//! (Hand-rolled argument parsing: the build environment is offline and
+//! the vendored crate set has no clap.)
+
+use grip::config::{GripConfig, ModelConfig};
+use grip::coordinator::{run_workload, Coordinator, ServeConfig};
+use grip::graph::Dataset;
+use grip::greta::{compile, GnnModel};
+use grip::nodeflow::{Nodeflow, Sampler};
+use grip::repro::ReproCtx;
+use grip::rng::SplitMix64;
+use grip::runtime::{Executor, Manifest};
+use grip::sim::simulate;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: grip <cmd> [options]\n\
+         \n\
+         commands:\n\
+           repro   --exp <table1|table2|table3|table4|fig2|fig9a|fig9b|fig10a..d|fig11a|fig11b|fig12|fig13a|fig13b|all>\n\
+                   [--scale S=0.01] [--targets N=128] [--seed K=17]\n\
+           serve   [--model gcn|sage|gin|ggcn] [--dataset yt|lj|po|rd] [--requests N=256]\n\
+                   [--scale S=0.01] [--no-numerics]\n\
+           sim     [--model M] [--dataset D] [--scale S]\n\
+           verify\n\
+           info"
+    );
+    std::process::exit(2);
+}
+
+/// Tiny flag parser: --key value pairs plus boolean flags.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                eprintln!("unexpected argument: {a}");
+                usage();
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn model(&self) -> GnnModel {
+        self.get("model")
+            .map(|s| GnnModel::from_name(s).unwrap_or_else(|| usage()))
+            .unwrap_or(GnnModel::Gcn)
+    }
+
+    fn dataset(&self) -> Dataset {
+        self.get("dataset")
+            .map(|s| Dataset::from_name(s).unwrap_or_else(|| usage()))
+            .unwrap_or(Dataset::Pokec)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..]);
+
+    match cmd.as_str() {
+        "repro" => cmd_repro(&args),
+        "serve" => cmd_serve(&args),
+        "sim" => cmd_sim(&args),
+        "verify" => cmd_verify(),
+        "info" => cmd_info(&args),
+        _ => usage(),
+    }
+}
+
+fn ctx_from(args: &Args) -> ReproCtx {
+    ReproCtx {
+        scale: args.get_f64("scale", 0.01),
+        targets_per_dataset: args.get_usize("targets", 128),
+        seed: args.get_usize("seed", 17) as u64,
+        grip: GripConfig::paper(),
+        mc: ModelConfig::paper(),
+    }
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let exp = if args.has("all") { "all" } else { args.get("exp").unwrap_or("all") };
+    let ctx = ctx_from(args);
+    let mut out = std::io::stdout().lock();
+    grip::repro::run(exp, &ctx, &mut out)
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model = args.model();
+    let dataset = args.dataset();
+    let n = args.get_usize("requests", 256);
+    let scale = args.get_f64("scale", 0.01);
+    let numerics = !args.has("no-numerics");
+
+    eprintln!("generating {dataset:?} graph (scale {scale}) ...");
+    let graph = dataset.generate(scale, 17);
+    let num_v = graph.num_vertices();
+    let cfg = ServeConfig { numerics, ..Default::default() };
+    let coord = Coordinator::start(graph, 17, cfg)?;
+
+    let mut rng = SplitMix64::new(99);
+    let targets: Vec<u32> = (0..n).map(|_| rng.gen_range(num_v) as u32).collect();
+    let t0 = std::time::Instant::now();
+    let (accel, host, responses) = run_workload(&coord, model, &targets)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("== serve: {} on {:?}, {} requests ==", model.name(), dataset, n);
+    println!(
+        "accelerator latency (simulated): p50 {:.1} µs  p99 {:.1} µs  mean {:.1} µs",
+        accel.p50(),
+        accel.p99(),
+        accel.mean()
+    );
+    println!(
+        "host path (nodeflow+PJRT+queue): p50 {:.1} µs  p99 {:.1} µs",
+        host.p50(),
+        host.p99()
+    );
+    println!("throughput: {:.0} req/s (host wall clock)", n as f64 / wall);
+    if let Some(r) = responses.first() {
+        if !r.embedding.is_empty() {
+            let norm: f32 = r.embedding.iter().map(|x| x * x).sum::<f32>().sqrt();
+            println!(
+                "first embedding: dim {} l2 {:.4} (PJRT numeric path live)",
+                r.embedding.len(),
+                norm
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let model = args.model();
+    let dataset = args.dataset();
+    let ctx = ctx_from(args);
+    let g = dataset.generate(ctx.scale, ctx.seed);
+    let sampler = Sampler::new(ctx.seed);
+    let mut rng = SplitMix64::new(1);
+    let target = rng.gen_range(g.num_vertices()) as u32;
+    let nf = Nodeflow::build(&g, &sampler, &[target], &ctx.mc);
+    let plan = compile(model, &ctx.mc);
+    let r = simulate(&ctx.grip, &plan, &nf);
+    println!("== sim: {} on {:?}, target {target} ==", model.name(), dataset);
+    println!("neighborhood: {} unique vertices, {} edges", nf.neighborhood_size(), nf.total_edges());
+    println!("latency: {:.2} µs ({:.0} cycles)", r.us(&ctx.grip), r.cycles);
+    for (i, l) in r.layers.iter().enumerate() {
+        println!(
+            "  layer {i}: span {:>9.0}cy  dram-feat {:>8.0}  dram-w {:>8.0}  edge {:>8.0}  vertex {:>9.0}  update {:>7.0}",
+            l.span, l.dram_feature, l.dram_weight, l.edge, l.vertex, l.update
+        );
+    }
+    let c = &r.counters;
+    println!(
+        "counters: dram {} B, weight-sram {} B, nodeflow-sram {} B, {} MACs",
+        c.dram_bytes, c.weight_sram_bytes, c.nodeflow_sram_bytes, c.macs
+    );
+    Ok(())
+}
+
+fn cmd_verify() -> anyhow::Result<()> {
+    println!("loading artifacts from {:?}", Manifest::default_dir());
+    let exec = Executor::load(&Manifest::default_dir())?;
+    let mut worst = 0f32;
+    for name in exec.model_names() {
+        let err = exec.verify_golden(name)?;
+        println!("{name:<6} golden max|err| = {err:.3e}");
+        worst = worst.max(err);
+    }
+    anyhow::ensure!(worst < 1e-3, "golden verification failed: {worst}");
+    println!("all artifacts verified against python golden vectors");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let mut out = std::io::stdout().lock();
+    grip::repro::run("table2", &ctx, &mut out)
+}

@@ -1,0 +1,274 @@
+//! Nodeflow construction from a graph + sampler, and conversion to the
+//! padded dense matrices the AOT'd models consume.
+
+use super::sampler::Sampler;
+use crate::config::ModelConfig;
+use crate::graph::CsrGraph;
+use std::collections::HashMap;
+
+/// One message-passing layer's bipartite structure.
+///
+/// Invariants (asserted by tests and relied on by the runtime):
+/// * `inputs[..num_outputs]` are exactly this layer's output vertices.
+/// * every edge is `(src_idx < inputs.len(), dst_idx < num_outputs)`.
+/// * edges form a multiset (the sampler draws with replacement); the
+///   multiplicity is the sample weight.
+#[derive(Debug, Clone)]
+pub struct NodeflowLayer {
+    /// Global vertex ids of U; the first `num_outputs` are V.
+    pub inputs: Vec<u32>,
+    pub num_outputs: usize,
+    /// Edges as (index into `inputs`, index into V).
+    pub edges: Vec<(u32, u32)>,
+}
+
+impl NodeflowLayer {
+    pub fn num_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// In-degree (with multiplicity) per output vertex.
+    pub fn in_degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.num_outputs];
+        for &(_, v) in &self.edges {
+            d[v as usize] += 1;
+        }
+        d
+    }
+
+    /// An identity nodeflow over n vertices (paper Fig. 3a: per-vertex
+    /// programs iterate over self-edges only).
+    pub fn identity(n: usize) -> Self {
+        Self {
+            inputs: (0..n as u32).collect(),
+            num_outputs: n,
+            edges: (0..n as u32).map(|i| (i, i)).collect(),
+        }
+    }
+}
+
+/// How the dense nodeflow matrix encodes edge multiplicity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    /// Rows normalized to sum 1 (GCN's mean aggregation).
+    Mean,
+    /// Raw multiplicities (GIN / G-GCN sum aggregation).
+    Sum,
+    /// 0/1 incidence mask (GraphSAGE max aggregation).
+    Mask,
+}
+
+/// A complete K-layer nodeflow for one inference request.
+#[derive(Debug, Clone)]
+pub struct Nodeflow {
+    /// layers[0] is the *input* layer (largest U), matching the order the
+    /// accelerator executes them.
+    pub layers: Vec<NodeflowLayer>,
+    /// The target vertices this nodeflow updates.
+    pub targets: Vec<u32>,
+}
+
+impl Nodeflow {
+    /// Build the 2-layer nodeflow for a batch of target vertices with the
+    /// paper's sampling scheme: `s2` neighbors at the top layer, `s1` at
+    /// the input layer, samples independent between layers.
+    pub fn build(g: &CsrGraph, sampler: &Sampler, targets: &[u32], mc: &ModelConfig) -> Self {
+        // ---- top layer (layer index 1): V = targets, U = V ∪ samples
+        let mut u2: Vec<u32> = targets.to_vec();
+        let mut u2_index: HashMap<u32, u32> = HashMap::new();
+        for (i, &t) in targets.iter().enumerate() {
+            u2_index.insert(t, i as u32);
+        }
+        let mut e2: Vec<(u32, u32)> = Vec::new();
+        for (vi, &t) in targets.iter().enumerate() {
+            for u in sampler.sample(g, t, mc.sample2, 1) {
+                let idx = *u2_index.entry(u).or_insert_with(|| {
+                    u2.push(u);
+                    (u2.len() - 1) as u32
+                });
+                e2.push((idx, vi as u32));
+            }
+        }
+        let layer2 = NodeflowLayer { inputs: u2, num_outputs: targets.len(), edges: e2 };
+
+        // ---- input layer (layer index 0): V = U2, U = V ∪ samples
+        let v1 = layer2.inputs.clone();
+        let mut u1 = v1.clone();
+        let mut u1_index: HashMap<u32, u32> = HashMap::new();
+        for (i, &t) in u1.iter().enumerate() {
+            u1_index.insert(t, i as u32);
+        }
+        let mut e1: Vec<(u32, u32)> = Vec::new();
+        for (vi, &t) in v1.iter().enumerate() {
+            for u in sampler.sample(g, t, mc.sample1, 0) {
+                let idx = *u1_index.entry(u).or_insert_with(|| {
+                    u1.push(u);
+                    (u1.len() - 1) as u32
+                });
+                e1.push((idx, vi as u32));
+            }
+        }
+        let layer1 = NodeflowLayer { inputs: u1, num_outputs: v1.len(), edges: e1 };
+
+        Nodeflow { layers: vec![layer1, layer2], targets: targets.to_vec() }
+    }
+
+    /// Unique vertices read at the input layer — the "neighborhood size"
+    /// of Fig. 12 and Table I's 2-hop statistic.
+    pub fn neighborhood_size(&self) -> usize {
+        self.layers[0].num_inputs()
+    }
+
+    /// Total edges across layers (with multiplicity).
+    pub fn total_edges(&self) -> usize {
+        self.layers.iter().map(|l| l.edges.len()).sum()
+    }
+
+    /// Render one layer as a padded row-major dense matrix
+    /// `[pad_v × pad_u]` with the given normalization. Panics if the
+    /// layer exceeds the padded shape (the AOT contract).
+    pub fn to_dense(&self, layer: usize, pad_v: usize, pad_u: usize, norm: NormKind) -> Vec<f32> {
+        let l = &self.layers[layer];
+        assert!(
+            l.num_outputs <= pad_v && l.num_inputs() <= pad_u,
+            "nodeflow layer {layer} ({}x{}) exceeds padded shape ({pad_v}x{pad_u})",
+            l.num_outputs,
+            l.num_inputs()
+        );
+        let mut m = vec![0f32; pad_v * pad_u];
+        for &(u, v) in &l.edges {
+            let cell = &mut m[v as usize * pad_u + u as usize];
+            match norm {
+                NormKind::Mask => *cell = 1.0,
+                _ => *cell += 1.0,
+            }
+        }
+        if norm == NormKind::Mean {
+            for v in 0..l.num_outputs {
+                let row = &mut m[v * pad_u..(v + 1) * pad_u];
+                let s: f32 = row.iter().sum();
+                if s > 0.0 {
+                    for x in row.iter_mut() {
+                        *x /= s;
+                    }
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, GeneratorParams};
+
+    fn setup() -> (CsrGraph, Sampler, ModelConfig) {
+        let g = generate(&GeneratorParams { nodes: 3_000, mean_degree: 8.0, ..Default::default() });
+        (g, Sampler::new(5), ModelConfig::paper())
+    }
+
+    #[test]
+    fn v_prefix_of_u_convention() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[100], &mc);
+        // layer2: first input is the target itself
+        assert_eq!(nf.layers[1].inputs[0], 100);
+        assert_eq!(nf.layers[1].num_outputs, 1);
+        // layer1: V = U2
+        let v1: Vec<u32> = nf.layers[0].inputs[..nf.layers[0].num_outputs].to_vec();
+        assert_eq!(v1, nf.layers[1].inputs);
+    }
+
+    #[test]
+    fn edge_indices_in_bounds() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[7, 21], &mc);
+        for l in &nf.layers {
+            for &(u, v) in &l.edges {
+                assert!((u as usize) < l.num_inputs());
+                assert!((v as usize) < l.num_outputs);
+            }
+        }
+    }
+
+    #[test]
+    fn inputs_unique() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[55], &mc);
+        for l in &nf.layers {
+            let mut sorted = l.inputs.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), l.inputs.len(), "duplicate inputs");
+        }
+    }
+
+    #[test]
+    fn edge_counts_match_samples() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[55], &mc);
+        // top layer: exactly sample2 edges per (non-isolated) target
+        assert_eq!(nf.layers[1].edges.len(), mc.sample2);
+        // input layer: sample1 per layer-1 output vertex
+        assert_eq!(nf.layers[0].edges.len(), nf.layers[0].num_outputs * mc.sample1);
+    }
+
+    #[test]
+    fn dense_mean_rows_sum_to_one() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[3], &mc);
+        let l = &nf.layers[0];
+        let d = nf.to_dense(0, 16, 288, NormKind::Mean);
+        for v in 0..l.num_outputs {
+            let s: f32 = d[v * 288..(v + 1) * 288].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {v} sums to {s}");
+        }
+        // padded rows are all zero
+        let s_pad: f32 = d[l.num_outputs * 288..].iter().sum();
+        assert_eq!(s_pad, 0.0);
+    }
+
+    #[test]
+    fn dense_sum_preserves_multiplicity() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[3], &mc);
+        let d = nf.to_dense(1, 8, 16, NormKind::Sum);
+        let total: f32 = d.iter().sum();
+        assert_eq!(total as usize, nf.layers[1].edges.len());
+    }
+
+    #[test]
+    fn dense_mask_is_binary() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[3], &mc);
+        let d = nf.to_dense(0, 16, 288, NormKind::Mask);
+        assert!(d.iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn identity_nodeflow() {
+        let l = NodeflowLayer::identity(5);
+        assert_eq!(l.num_inputs(), 5);
+        assert_eq!(l.num_outputs, 5);
+        assert_eq!(l.edges.len(), 5);
+        assert!(l.edges.iter().all(|&(u, v)| u == v));
+    }
+
+    #[test]
+    fn batch_builds_share_structure() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[1, 2, 3], &mc);
+        assert_eq!(nf.layers[1].num_outputs, 3);
+        assert_eq!(nf.targets, vec![1, 2, 3]);
+        assert!(nf.neighborhood_size() >= 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds padded shape")]
+    fn to_dense_panics_on_overflow() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[3], &mc);
+        let _ = nf.to_dense(0, 1, 2, NormKind::Sum);
+    }
+}

@@ -1,0 +1,18 @@
+//! Nodeflow substrate (paper Sec. II-A "Nodeflow", Sec. VI-A).
+//!
+//! A nodeflow is the bipartite structure describing feature propagation
+//! for one message-passing layer: `(U, V, E)` with U the vertices read, V
+//! the vertices updated, and E ⊆ U×V. It is built during preprocessing
+//! from the graph + the deterministic GraphSAGE sampler, then partitioned
+//! into N×M blocks for execution (paper Fig. 7).
+//!
+//! Conventions shared with the L2 JAX models and the AOT manifest:
+//! the first |V| entries of U *are* V (self-features at `h[:V]`).
+
+mod build;
+mod partition;
+mod sampler;
+
+pub use build::{Nodeflow, NodeflowLayer, NormKind};
+pub use partition::{PartitionedLayer, Block};
+pub use sampler::Sampler;

@@ -1,0 +1,160 @@
+//! Execution partitioning (paper Sec. VI-A, Fig. 7).
+//!
+//! The nodeflow's input vertices are split into chunks of size N and the
+//! output vertices into chunks of size M; edges land in the (i, j) block
+//! connecting input chunk i to output chunk j. GRIP processes blocks
+//! column-wise — all incoming edges of an output chunk are accumulated
+//! (skipping empty blocks) before vertex-accumulate runs once for the
+//! column.
+
+use super::build::NodeflowLayer;
+
+/// One N×M edge block.
+#[derive(Debug, Clone, Default)]
+pub struct Block {
+    /// Edges as (input index *local to chunk i*, output index *local to
+    /// chunk j*).
+    pub edges: Vec<(u32, u32)>,
+}
+
+/// A partitioned nodeflow layer.
+#[derive(Debug, Clone)]
+pub struct PartitionedLayer {
+    pub chunk_inputs: usize,
+    pub chunk_outputs: usize,
+    pub num_input_chunks: usize,
+    pub num_output_chunks: usize,
+    /// blocks[j * num_input_chunks + i] = block (i, j); column-major so a
+    /// column's blocks are contiguous in execution order.
+    pub blocks: Vec<Block>,
+    /// Unique input vertices (global nodeflow indices) touched per input
+    /// chunk — what the memory controller must load for that chunk.
+    pub chunk_input_sizes: Vec<usize>,
+    /// Output vertices per output chunk.
+    pub chunk_output_sizes: Vec<usize>,
+}
+
+impl PartitionedLayer {
+    /// Partition `layer` into N×M blocks.
+    pub fn new(layer: &NodeflowLayer, n: usize, m: usize) -> Self {
+        assert!(n > 0 && m > 0);
+        let num_input_chunks = layer.num_inputs().div_ceil(n).max(1);
+        let num_output_chunks = layer.num_outputs.div_ceil(m).max(1);
+        let mut blocks = vec![Block::default(); num_input_chunks * num_output_chunks];
+        for &(u, v) in &layer.edges {
+            let (i, j) = (u as usize / n, v as usize / m);
+            blocks[j * num_input_chunks + i]
+                .edges
+                .push((u % n as u32, v % m as u32));
+        }
+        let mut chunk_input_sizes = vec![0usize; num_input_chunks];
+        for i in 0..num_input_chunks {
+            chunk_input_sizes[i] = (layer.num_inputs() - i * n).min(n);
+        }
+        let mut chunk_output_sizes = vec![0usize; num_output_chunks];
+        for j in 0..num_output_chunks {
+            chunk_output_sizes[j] = (layer.num_outputs - j * m).min(m);
+        }
+        Self {
+            chunk_inputs: n,
+            chunk_outputs: m,
+            num_input_chunks,
+            num_output_chunks,
+            blocks,
+            chunk_input_sizes,
+            chunk_output_sizes,
+        }
+    }
+
+    pub fn block(&self, i: usize, j: usize) -> &Block {
+        &self.blocks[j * self.num_input_chunks + i]
+    }
+
+    /// Blocks of column j in execution order.
+    pub fn column(&self, j: usize) -> &[Block] {
+        &self.blocks[j * self.num_input_chunks..(j + 1) * self.num_input_chunks]
+    }
+
+    /// Non-empty blocks in column j (GRIP skips empty blocks).
+    pub fn column_nonempty(&self, j: usize) -> usize {
+        self.column(j).iter().filter(|b| !b.edges.is_empty()).count()
+    }
+
+    pub fn total_edges(&self) -> usize {
+        self.blocks.iter().map(|b| b.edges.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> NodeflowLayer {
+        // 10 inputs, 4 outputs, a spread of edges
+        NodeflowLayer {
+            inputs: (0..10).collect(),
+            num_outputs: 4,
+            edges: vec![(0, 0), (9, 0), (3, 1), (4, 1), (4, 1), (7, 2), (2, 3), (8, 3)],
+        }
+    }
+
+    #[test]
+    fn all_edges_exactly_once() {
+        let l = layer();
+        let p = PartitionedLayer::new(&l, 4, 2);
+        assert_eq!(p.total_edges(), l.edges.len());
+    }
+
+    #[test]
+    fn block_locals_in_bounds() {
+        let l = layer();
+        let p = PartitionedLayer::new(&l, 4, 2);
+        for j in 0..p.num_output_chunks {
+            for i in 0..p.num_input_chunks {
+                for &(u, v) in &p.block(i, j).edges {
+                    assert!((u as usize) < p.chunk_inputs);
+                    assert!((v as usize) < p.chunk_outputs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_counts() {
+        let l = layer();
+        let p = PartitionedLayer::new(&l, 4, 2);
+        assert_eq!(p.num_input_chunks, 3); // ceil(10/4)
+        assert_eq!(p.num_output_chunks, 2); // ceil(4/2)
+        assert_eq!(p.chunk_input_sizes, vec![4, 4, 2]);
+        assert_eq!(p.chunk_output_sizes, vec![2, 2]);
+    }
+
+    #[test]
+    fn edge_block_assignment() {
+        let l = layer();
+        let p = PartitionedLayer::new(&l, 4, 2);
+        // edge (9, 0): input chunk 2, output chunk 0, locals (1, 0)
+        assert!(p.block(2, 0).edges.contains(&(1, 0)));
+        // multi-edge (4,1) retained twice
+        let c = p.block(1, 0).edges.iter().filter(|&&e| e == (0, 1)).count();
+        assert_eq!(c, 2);
+    }
+
+    #[test]
+    fn single_chunk_degenerate() {
+        let l = layer();
+        let p = PartitionedLayer::new(&l, 100, 100);
+        assert_eq!(p.num_input_chunks, 1);
+        assert_eq!(p.num_output_chunks, 1);
+        assert_eq!(p.block(0, 0).edges.len(), l.edges.len());
+    }
+
+    #[test]
+    fn empty_block_skipping() {
+        let l = layer();
+        let p = PartitionedLayer::new(&l, 2, 1);
+        // column 0 (output 0) has edges from inputs 0 and 9 only ->
+        // chunks 0 and 4 non-empty out of 5.
+        assert_eq!(p.column_nonempty(0), 2);
+    }
+}

@@ -1,0 +1,117 @@
+//! Deterministic GraphSAGE-style neighborhood sampler (paper Sec. VII:
+//! "we deterministically map a given vertex to a fixed-sized, uniform
+//! sample of its neighbors", samples independent between layers).
+
+use crate::graph::CsrGraph;
+use crate::rng::SplitMix64;
+
+/// Deterministic uniform neighbor sampler. The same (vertex, layer)
+/// always yields the same sample — precomputing the neighborhood
+/// function into the nodeflow, as the paper describes.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    seed: u64,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// Sample up to `k` neighbors of `v` uniformly **with replacement**
+    /// (GraphSAGE's sampler), independently per `layer`.
+    /// Degree-0 vertices yield an empty sample.
+    pub fn sample(&self, g: &CsrGraph, v: u32, k: usize, layer: usize) -> Vec<u32> {
+        let neigh = g.neighbors(v);
+        if neigh.is_empty() {
+            return Vec::new();
+        }
+        let mut rng = SplitMix64::new(
+            self.seed ^ (v as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ ((layer as u64) << 56),
+        );
+        (0..k).map(|_| neigh[rng.gen_range(neigh.len())]).collect()
+    }
+
+    /// The number of *unique* vertices in v's sampled 2-hop neighborhood
+    /// under (s1, s2) sampling — Table I's "2-Hop" statistic.
+    pub fn two_hop_unique(&self, g: &CsrGraph, v: u32, s1: usize, s2: usize) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(v);
+        let hop1 = self.sample(g, v, s2, 1);
+        for &u in &hop1 {
+            seen.insert(u);
+        }
+        // Unique hop-1 vertices fan out independently at layer 0.
+        let hop1_unique: std::collections::HashSet<u32> = hop1.into_iter().collect();
+        for u in hop1_unique {
+            for w in self.sample(g, u, s1, 0) {
+                seen.insert(w);
+            }
+        }
+        seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, GeneratorParams};
+
+    fn small_graph() -> CsrGraph {
+        generate(&GeneratorParams { nodes: 2_000, mean_degree: 6.0, ..Default::default() })
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let g = small_graph();
+        let s = Sampler::new(3);
+        assert_eq!(s.sample(&g, 42, 25, 0), s.sample(&g, 42, 25, 0));
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let g = small_graph();
+        let s = Sampler::new(3);
+        // Find a vertex with enough neighbors that identical samples
+        // across layers would be a (vanishingly unlikely) coincidence.
+        let v = (0..g.num_vertices() as u32).find(|&v| g.degree(v) >= 4).unwrap();
+        assert_ne!(s.sample(&g, v, 25, 0), s.sample(&g, v, 25, 1));
+    }
+
+    #[test]
+    fn samples_are_neighbors() {
+        let g = small_graph();
+        let s = Sampler::new(9);
+        for v in (0..200u32).step_by(7) {
+            let neigh = g.neighbors(v);
+            for u in s.sample(&g, v, 10, 0) {
+                assert!(neigh.contains(&u));
+            }
+        }
+    }
+
+    #[test]
+    fn sample_size_fixed() {
+        let g = small_graph();
+        let s = Sampler::new(1);
+        assert_eq!(s.sample(&g, 5, 25, 0).len(), 25);
+    }
+
+    #[test]
+    fn two_hop_unique_bounds() {
+        let g = small_graph();
+        let s = Sampler::new(1);
+        for v in 0..50u32 {
+            let n = s.two_hop_unique(&g, v, 25, 10);
+            assert!(n >= 1);
+            assert!(n <= 1 + 10 + 10 * 25, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn degree_zero_yields_empty() {
+        let g = CsrGraph::from_edges(3, &[(0, 1)]);
+        let s = Sampler::new(1);
+        assert!(s.sample(&g, 2, 25, 0).is_empty());
+    }
+}

@@ -1,0 +1,336 @@
+//! Figure generators: Figs. 2 and 9–13 of the paper, as text series.
+
+use super::workload::{geomean, ReproCtx};
+use crate::baseline::{
+    baseline_ladder, cpu_latency_us, cpu_roofline_point, prior_work_configs, PriorWork,
+};
+use crate::config::{GripConfig, ModelConfig};
+use crate::coordinator::LatencyStats;
+use crate::graph::Dataset;
+use crate::greta::{compile, GnnModel};
+use crate::sim::simulate;
+use std::io::Write;
+
+/// Fig. 2: CPU performance vs arithmetic intensity for GCN on Pokec,
+/// with the roofline bound and the LLC gap.
+pub fn fig2(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    let wl = ctx.workload(Dataset::Pokec);
+    writeln!(out, "== Fig 2: CPU roofline, GCN on Pokec ==")?;
+    writeln!(out, "{:>6} {:>8} {:>12} {:>12} {:>7}", "nbhd", "AI", "GFLOP/s", "roofline", "gap")?;
+    let mut sizes: Vec<usize> = wl.nodeflows.iter().map(|n| n.neighborhood_size()).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    for (i, &u) in sizes.iter().enumerate() {
+        if i % (sizes.len() / 12 + 1) != 0 && i != sizes.len() - 1 {
+            continue; // print ~12 representative points
+        }
+        let p = cpu_roofline_point(u, &ctx.mc);
+        writeln!(
+            out,
+            "{:>6} {:>8.3} {:>12.1} {:>12.1} {:>6.1}x",
+            u,
+            p.ai,
+            p.gflops,
+            p.roofline,
+            p.roofline / p.gflops
+        )?;
+    }
+    writeln!(out, "(paper: measured points sit well below the roofline; the gap")?;
+    writeln!(out, " grows with AI due to LLC bandwidth — same shape here)")?;
+    Ok(())
+}
+
+fn gcn_largest_nbhd_cycles(ctx: &ReproCtx, cfg: &GripConfig) -> f64 {
+    // Paper Sec. VIII-B: "geometric mean speedup of GCN for the largest
+    // neighborhood in each dataset", in *time* (normalize cycles by clock).
+    let mut times = Vec::new();
+    for ds in crate::graph::TABLE1 {
+        let wl = ctx.workload(ds);
+        let nf = wl
+            .nodeflows
+            .iter()
+            .max_by_key(|n| n.neighborhood_size())
+            .unwrap();
+        let plan = compile(GnnModel::Gcn, &ctx.mc);
+        let r = simulate(cfg, &plan, nf);
+        times.push(r.us(cfg));
+    }
+    geomean(&times)
+}
+
+/// Fig. 9a: speedup breakdown per architectural feature.
+pub fn fig9a(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Fig 9a: speedup breakdown vs CPU-like baseline ==")?;
+    let ladder = baseline_ladder();
+    let base = gcn_largest_nbhd_cycles(ctx, &ladder[0].1);
+    writeln!(out, "{:<16} {:>12} {:>10} {:>12}", "config", "geomean µs", "cum. x", "paper step")?;
+    let paper_steps = ["1.0x", "2.8x", "x3.4", "x1.87", "x1.02"];
+    let mut prev = base;
+    for ((name, cfg), paper) in ladder.iter().zip(paper_steps) {
+        let t = gcn_largest_nbhd_cycles(ctx, cfg);
+        writeln!(
+            out,
+            "{:<16} {:>12.1} {:>9.1}x {:>12} (step {:.2}x)",
+            name,
+            t,
+            base / t,
+            paper,
+            prev / t
+        )?;
+        prev = t;
+    }
+    Ok(())
+}
+
+/// Fig. 9b: prior-work comparison.
+pub fn fig9b(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Fig 9b: estimated speedup of prior work vs baseline ==")?;
+    let ladder = baseline_ladder();
+    let base = gcn_largest_nbhd_cycles(ctx, &ladder[0].1);
+    let grip = gcn_largest_nbhd_cycles(ctx, &ctx.grip);
+    writeln!(out, "{:<16} {:>10} {:>12} {:>12}", "arch", "µs", "vs baseline", "paper")?;
+    writeln!(out, "{:<16} {:>10.1} {:>11.1}x {:>12}", "baseline", base, 1.0, "1x")?;
+    for (pw, paper) in [
+        (PriorWork::Graphicionado, "2.4x"),
+        (PriorWork::HyGcn, "4.4x"),
+        (PriorWork::TpuPlus, "11.3x"),
+    ] {
+        let t = gcn_largest_nbhd_cycles(ctx, &prior_work_configs(pw));
+        writeln!(out, "{:<16} {:>10.1} {:>11.1}x {:>12}", format!("{pw:?}"), t, base / t, paper)?;
+    }
+    writeln!(out, "{:<16} {:>10.1} {:>11.1}x {:>12}", "GRIP", grip, base / grip, "~20x")?;
+    Ok(())
+}
+
+/// Fig. 10: architectural parameter sweeps (a: DRAM channels, b: weight
+/// bandwidth, c: crossbar width, d: matmul TOP/s).
+pub fn fig10(ctx: &ReproCtx, out: &mut dyn Write, which: char) -> anyhow::Result<()> {
+    let wl = ctx.workload(Dataset::Pokec);
+    let plan = compile(GnnModel::Gcn, &ctx.mc);
+    let nf = &wl.nodeflows[wl.nodeflows.len() / 2];
+    let run = |cfg: &GripConfig| simulate(cfg, &plan, nf).us(cfg);
+    let base = run(&ctx.grip);
+
+    match which {
+        'a' => {
+            writeln!(out, "== Fig 10a: DRAM channels (lanes = channels) ==")?;
+            writeln!(out, "{:>9} {:>10} {:>9}", "channels", "µs", "speedup")?;
+            for ch in [1usize, 2, 4, 8, 12, 16] {
+                let mut c = ctx.grip.clone();
+                c.dram_channels = ch;
+                c.prefetch_lanes = ch;
+                let t = run(&c);
+                let marker = if ch == 4 { "  <- paper config" } else { "" };
+                writeln!(out, "{:>9} {:>10.1} {:>8.2}x{}", ch, t, base / t, marker)?;
+            }
+            writeln!(out, "(paper: strong scaling until ~8 channels / 150 GiB/s)")?;
+        }
+        'b' => {
+            writeln!(out, "== Fig 10b: weight bandwidth (GiB/s at 1 GHz) ==")?;
+            writeln!(out, "{:>9} {:>10} {:>9}", "GiB/s", "µs", "speedup")?;
+            for bw in [16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0] {
+                let mut c = ctx.grip.clone();
+                c.weight_bw_bytes_per_cycle = bw;
+                let t = run(&c);
+                let marker = if bw == 128.0 { "  <- paper knee" } else { "" };
+                writeln!(out, "{:>9.0} {:>10.1} {:>8.2}x{}", bw, t, base / t, marker)?;
+            }
+            writeln!(out, "(paper: bottleneck below 128 GiB/s = 64 values/cycle)")?;
+        }
+        'c' => {
+            writeln!(out, "== Fig 10c: crossbar port width (elements) ==")?;
+            writeln!(out, "{:>9} {:>10} {:>9}", "width", "µs", "speedup")?;
+            for w in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+                let mut c = ctx.grip.clone();
+                c.xbar_width_elems = w;
+                let t = run(&c);
+                let marker = if w == 16 { "  <- paper config" } else { "" };
+                writeln!(out, "{:>9} {:>10.1} {:>8.2}x{}", w, t, base / t, marker)?;
+            }
+            writeln!(out, "(paper: limited impact — edge-accumulate is not the bottleneck)")?;
+        }
+        'd' => {
+            writeln!(out, "== Fig 10d: matmul size (TOP/s) ==")?;
+            writeln!(out, "{:>9} {:>10} {:>10} {:>9}", "PE", "TOP/s", "µs", "speedup")?;
+            for scale in [1usize, 2, 4, 8, 16] {
+                let mut c = ctx.grip.clone();
+                c.pe_cols = 8 * scale; // 16x8 .. 16x128
+                let t = run(&c);
+                let marker = if scale == 4 { "  <- paper config" } else { "" };
+                writeln!(
+                    out,
+                    "{:>6}x{:<3} {:>9.2} {:>10.1} {:>8.2}x{}",
+                    c.pe_rows,
+                    c.pe_cols,
+                    c.peak_tops(),
+                    t,
+                    base / t,
+                    marker
+                )?;
+            }
+            writeln!(out, "(paper: saturates ~2 TOP/s; 4x larger unit only 1.14x)")?;
+        }
+        _ => anyhow::bail!("fig10 variant must be a-d"),
+    }
+    Ok(())
+}
+
+/// Fig. 11a: % of time in vertex-accumulate vs feature dimensions.
+pub fn fig11a(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Fig 11a: %% time in matmul vs feature dims (GCN) ==")?;
+    writeln!(out, "{:>9} {:>12} | {:>9} {:>12}", "f_in", "% matmul", "f_out", "% matmul")?;
+    let wl = ctx.workload(Dataset::Pokec);
+    let nf = &wl.nodeflows[wl.nodeflows.len() / 2];
+    for i in 0..8 {
+        let dim = 8 << i; // 8..1024
+        let mc_in = ModelConfig { f_in: dim, ..ctx.mc };
+        let r_in = simulate(&ctx.grip, &compile(GnnModel::Gcn, &mc_in), nf);
+        let mc_out = ModelConfig { f_out: dim, f_hid: dim.max(64), ..ctx.mc };
+        let r_out = simulate(&ctx.grip, &compile(GnnModel::Gcn, &mc_out), nf);
+        writeln!(
+            out,
+            "{:>9} {:>11.1}% | {:>9} {:>11.1}%",
+            dim,
+            100.0 * r_in.pct_vertex(),
+            dim,
+            100.0 * r_out.pct_vertex()
+        )?;
+    }
+    writeln!(out, "(paper: rises until ~32-64 input features — DRAM burst underuse")?;
+    writeln!(out, " below the 64-element interface — then flat; output dims always raise it)")?;
+    Ok(())
+}
+
+/// Fig. 11b: % of time in edge-accumulate vs sampled edges per vertex.
+pub fn fig11b(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Fig 11b: %% time in edge phase vs sampled edges (GCN) ==")?;
+    writeln!(out, "{:>9} {:>12} {:>10}", "edges/v", "% edge", "µs")?;
+    let wl = ctx.workload(Dataset::Pokec);
+    for s in [2usize, 4, 8, 16, 25, 32, 48, 64] {
+        let mc = ModelConfig { sample1: s, sample2: s.min(10), ..ctx.mc };
+        // rebuild the nodeflow with this sampling
+        let sampler = crate::nodeflow::Sampler::new(ctx.seed ^ 0xA5);
+        let t = wl.nodeflows[0].targets[0];
+        let nf = crate::nodeflow::Nodeflow::build(&wl.graph, &sampler, &[t], &mc);
+        let r = simulate(&ctx.grip, &compile(GnnModel::Gcn, &mc), &nf);
+        writeln!(out, "{:>9} {:>11.1}% {:>10.1}", s, 100.0 * r.pct_edge(), r.us(&ctx.grip))?;
+    }
+    writeln!(out, "(paper: compute-bound below ~8 edges/vertex, memory above)")?;
+    Ok(())
+}
+
+/// Fig. 12: latency and speedup vs neighborhood size (GCN, LiveJournal).
+pub fn fig12(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Fig 12: neighborhood size impact (GCN, LiveJournal) ==")?;
+    let wl = ctx.workload(Dataset::Livejournal);
+    let plan = compile(GnnModel::Gcn, &ctx.mc);
+    // bin nodeflows by neighborhood size
+    let mut by_bin: std::collections::BTreeMap<usize, LatencyStats> = Default::default();
+    for nf in &wl.nodeflows {
+        let bin = (nf.neighborhood_size() / 25) * 25;
+        let r = simulate(&ctx.grip, &plan, nf);
+        by_bin.entry(bin).or_insert_with(LatencyStats::new).record(r.us(&ctx.grip));
+    }
+    writeln!(
+        out,
+        "{:>9} {:>8} {:>8} {:>8} {:>8} {:>10}",
+        "nbhd bin", "min µs", "med µs", "p99 µs", "CPU µs", "speedup"
+    )?;
+    for (bin, stats) in &by_bin {
+        let cpu = cpu_latency_us(GnnModel::Gcn, bin + 12);
+        writeln!(
+            out,
+            "{:>9} {:>8.1} {:>8.1} {:>8.1} {:>8.0} {:>9.1}x",
+            format!("{}-{}", bin, bin + 24),
+            stats.min(),
+            stats.p50(),
+            stats.p99(),
+            cpu,
+            cpu / stats.p50()
+        )?;
+    }
+    writeln!(out, "(paper: latency linear in neighborhood; speedup 12-18x below ~95,")?;
+    writeln!(out, " rising past the CPU L2 cliff)")?;
+    Ok(())
+}
+
+/// Fig. 13a: cumulative partitioning/pipelining optimization speedups.
+pub fn fig13a(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Fig 13a: partition pipelining optimizations (GCN) ==")?;
+    // Partitioning only matters when the nodeflow spans multiple
+    // partition columns; use a batched (48-target) nodeflow, the
+    // offline/batched regime the paper's partitioning targets.
+    let wl = ctx.workload(Dataset::Reddit);
+    let sampler = crate::nodeflow::Sampler::new(ctx.seed ^ 0xA5);
+    let mut rng = crate::rng::SplitMix64::new(ctx.seed ^ 0x1313);
+    let targets: Vec<u32> =
+        (0..48).map(|_| rng.gen_range(wl.graph.num_vertices()) as u32).collect();
+    let batched = crate::nodeflow::Nodeflow::build(&wl.graph, &sampler, &targets, &ctx.mc);
+    let nf = &batched;
+    let plan = compile(GnnModel::Gcn, &ctx.mc);
+    let mut unopt = ctx.grip.clone();
+    unopt.cache_features = false;
+    unopt.pipeline_partitions = false;
+    unopt.preload_weights = false;
+    let steps: [(&str, Box<dyn Fn(&mut GripConfig)>, &str); 4] = [
+        ("unoptimized", Box::new(|_c: &mut GripConfig| {}), "1.0x"),
+        ("+caching", Box::new(|c: &mut GripConfig| c.cache_features = true), "1.3x"),
+        ("+pipelining", Box::new(|c: &mut GripConfig| {
+            c.cache_features = true;
+            c.pipeline_partitions = true;
+        }), "1.7x"),
+        ("+weights", Box::new(|c: &mut GripConfig| {
+            c.cache_features = true;
+            c.pipeline_partitions = true;
+            c.preload_weights = true;
+        }), "2.5x"),
+    ];
+    let base = simulate(&unopt, &plan, nf).us(&unopt);
+    writeln!(out, "{:<14} {:>10} {:>9} {:>9}", "config", "µs", "cum. x", "paper")?;
+    for (name, apply, paper) in steps {
+        let mut c = unopt.clone();
+        apply(&mut c);
+        let t = simulate(&c, &plan, nf).us(&c);
+        writeln!(out, "{:<14} {:>10.1} {:>8.2}x {:>9}", name, t, base / t, paper)?;
+    }
+    Ok(())
+}
+
+/// Fig. 13b: vertex-tiling parameter sweep (M vertices × F features).
+pub fn fig13b(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Fig 13b: vertex-tiling sweep (speedup vs no tiling, GCN) ==")?;
+    let wl = ctx.workload(Dataset::Pokec);
+    // The paper's sweep uses the canonical nodeflow with the maximum 11
+    // output vertices (1 target + 10 sampled); pick one so the M axis
+    // shows the paper's knee at M ≈ 11-12.
+    let nf = wl
+        .nodeflows
+        .iter()
+        .max_by_key(|n| (n.layers[0].num_outputs, n.neighborhood_size()))
+        .unwrap();
+    let plan = compile(GnnModel::Gcn, &ctx.mc);
+    let mut no_tile = ctx.grip.clone();
+    no_tile.vertex_tiling = false;
+    let base = simulate(&no_tile, &plan, nf).us(&no_tile);
+    write!(out, "{:>6}", "M\\F")?;
+    let fs = [16usize, 32, 64, 128, 256];
+    for f in fs {
+        write!(out, " {:>7}", f)?;
+    }
+    writeln!(out)?;
+    for m in [1usize, 2, 4, 8, 11, 12, 16] {
+        write!(out, "{:>6}", m)?;
+        for f in fs {
+            let mut c = ctx.grip.clone();
+            c.vertex_tiling = true;
+            c.tile_m = m;
+            c.tile_f = f;
+            let t = simulate(&c, &plan, nf).us(&c);
+            write!(out, " {:>6.2}x", base / t)?;
+        }
+        writeln!(out)?;
+    }
+    writeln!(out, "(paper: peak near F=64; M helps until ~12 — 11 is the max")?;
+    writeln!(out, " output vertices, beyond which dummy vertices add latency)")?;
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Experiment harness: one generator per table and figure of the
+//! paper's evaluation (Sec. VIII). Each experiment prints the same
+//! rows/series the paper reports, with the paper's published value
+//! alongside ours where applicable. `grip repro --all` regenerates
+//! everything (EXPERIMENTS.md records a run).
+
+mod figures;
+mod tables;
+mod workload;
+
+pub use workload::ReproCtx;
+
+use std::io::Write;
+
+/// All experiment ids in paper order.
+pub const ALL_EXPERIMENTS: [&str; 14] = [
+    "table1", "fig2", "table2", "table3", "fig9a", "fig9b", "fig10a", "fig10b", "fig10c",
+    "fig10d", "fig11a", "fig11b", "fig12", "fig13a",
+];
+// fig13b and table4 are included in run() below; kept out of the const
+// only to keep the array literal stable for CLI help text.
+
+/// Run one experiment (or "all") and write its report.
+pub fn run(exp: &str, ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    match exp {
+        "all" => {
+            for e in [
+                "table1", "fig2", "table2", "table3", "fig9a", "fig9b", "fig10a", "fig10b",
+                "fig10c", "fig10d", "fig11a", "fig11b", "fig12", "fig13a", "fig13b", "table4",
+            ] {
+                run(e, ctx, out)?;
+                writeln!(out)?;
+            }
+            Ok(())
+        }
+        "table1" => tables::table1(ctx, out),
+        "table2" => tables::table2(ctx, out),
+        "table3" => tables::table3(ctx, out),
+        "table4" => tables::table4(ctx, out),
+        "fig2" => figures::fig2(ctx, out),
+        "fig9a" => figures::fig9a(ctx, out),
+        "fig9b" => figures::fig9b(ctx, out),
+        "fig10a" => figures::fig10(ctx, out, 'a'),
+        "fig10b" => figures::fig10(ctx, out, 'b'),
+        "fig10c" => figures::fig10(ctx, out, 'c'),
+        "fig10d" => figures::fig10(ctx, out, 'd'),
+        "fig11a" => figures::fig11a(ctx, out),
+        "fig11b" => figures::fig11b(ctx, out),
+        "fig12" => figures::fig12(ctx, out),
+        "fig13a" => figures::fig13a(ctx, out),
+        "fig13b" => figures::fig13b(ctx, out),
+        other => anyhow::bail!("unknown experiment {other}; see `grip repro --list`"),
+    }
+}

@@ -1,0 +1,164 @@
+//! Table generators: Tables I–IV of the paper.
+
+use super::workload::{geomean, ReproCtx};
+use crate::baseline::{cpu_latency_us, gpu_latency_us};
+use crate::energy::{power_breakdown, EnergyParams};
+use crate::graph::{Dataset, TABLE1};
+use crate::greta::GnnModel;
+use std::io::Write;
+
+const MODELS: [GnnModel; 4] = [GnnModel::Gcn, GnnModel::Ggcn, GnnModel::Sage, GnnModel::Gin];
+
+/// Table I: dataset statistics (paper values vs our synthetic
+/// equivalents, including the measured sampled-2-hop median).
+pub fn table1(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Table I: datasets (paper vs synthetic @ scale {}) ==", ctx.scale)?;
+    writeln!(
+        out,
+        "{:<14} {:>10} {:>10} {:>11} {:>11} {:>9} {:>9}",
+        "dataset", "nodes", "edges", "paper-2hop", "ours-2hop", "mean-deg", "paper-deg"
+    )?;
+    for ds in TABLE1 {
+        let spec = ds.spec();
+        let wl = ctx.workload(ds);
+        let two_hop = ctx.median_two_hop(&wl);
+        writeln!(
+            out,
+            "{:<14} {:>10} {:>10} {:>11} {:>11} {:>9.2} {:>9.2}",
+            spec.name,
+            wl.graph.num_vertices(),
+            wl.graph.num_edges(),
+            spec.two_hop_median,
+            two_hop,
+            wl.graph.mean_degree(),
+            spec.edges as f64 / spec.nodes as f64,
+        )?;
+    }
+    Ok(())
+}
+
+/// Table II: architectural characteristics (static configuration dump).
+pub fn table2(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    let c = &ctx.grip;
+    writeln!(out, "== Table II: architectural characteristics ==")?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "", "paper", "ours")?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "compute (TOP/s)", "1.088", format!("{:.3}", c.peak_tops()))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "clock (GHz)", "1.0", format!("{:.1}", c.freq_ghz))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "nodeflow SRAM (KiB)", "4x20", format!("{}", c.nodeflow_buf_bytes / 1024))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "tile SRAM (KiB)", "2x64", format!("{}", c.tile_buf_bytes / 1024))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "weight SRAM (MiB)", "2", format!("{}", c.weight_buf_bytes >> 20))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "off-chip (GiB/s)", "76.8", format!("{:.1}", c.dram_bytes_per_cycle() * c.freq_ghz))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "DRAM channels", "4", format!("{}", c.dram_channels))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "PE array", "16x32", format!("{}x{}", c.pe_rows, c.pe_cols))?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "area (mm^2)", "11.27", "n/a (sim)")?;
+    writeln!(out, "{:<22} {:>14} {:>14}", "power (W)", "4.9", "see table4")?;
+    Ok(())
+}
+
+/// Paper Table III reference values (µs): (model, dataset, grip, cpu, gpu).
+pub const PAPER_TABLE3: [(&str, &str, f64, f64, f64); 16] = [
+    ("gcn", "youtube", 15.4, 309.2, 1082.4),
+    ("gcn", "livejournal", 15.8, 466.8, 1313.6),
+    ("gcn", "pokec", 16.0, 477.1, 1085.6),
+    ("gcn", "reddit", 16.3, 407.1, 813.2),
+    ("ggcn", "youtube", 134.1, 2315.9, 1332.5),
+    ("ggcn", "livejournal", 146.3, 2493.2, 1837.6),
+    ("ggcn", "pokec", 146.7, 2637.9, 1409.2),
+    ("ggcn", "reddit", 147.0, 2864.2, 1133.9),
+    ("sage", "youtube", 113.7, 1545.1, 1309.0),
+    ("sage", "livejournal", 124.4, 1947.4, 2193.8),
+    ("sage", "pokec", 124.9, 2075.7, 1759.1),
+    ("sage", "reddit", 125.3, 2099.0, 1252.8),
+    ("gin", "youtube", 30.5, 344.7, 1387.6),
+    ("gin", "livejournal", 30.9, 416.1, 1221.5),
+    ("gin", "pokec", 31.1, 340.7, 855.5),
+    ("gin", "reddit", 31.4, 354.8, 1009.4),
+];
+
+/// Table III: 99th-percentile inference latency, GRIP vs CPU vs GPU.
+pub fn table3(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "== Table III: p99 inference latency (µs) ==")?;
+    writeln!(
+        out,
+        "{:<6} {:<13} {:>8} {:>9} {:>8} {:>7} {:>8} {:>7}  {:>18}",
+        "model", "dataset", "GRIP", "CPU", "(x)", "GPU", "(x)", "", "paper GRIP/CPUx/GPUx"
+    )?;
+    let mut cpu_speedups = Vec::new();
+    let mut gpu_speedups = Vec::new();
+    for model in MODELS {
+        for ds in TABLE1 {
+            let wl = ctx.workload(ds);
+            let (lat, nbhd, rep) = ctx.sim_stats(&ctx.grip, model, &wl);
+            let grip_us = lat.p99();
+            let p99_nbhd = nbhd.p99() as usize;
+            let cpu_us = cpu_latency_us(model, p99_nbhd);
+            let flops = 2.0 * rep.counters.macs as f64;
+            let gpu_us = gpu_latency_us(model, p99_nbhd, flops);
+            let (cx, gx) = (cpu_us / grip_us, gpu_us / grip_us);
+            cpu_speedups.push(cx);
+            gpu_speedups.push(gx);
+            let paper = PAPER_TABLE3
+                .iter()
+                .find(|(m, d, ..)| *m == model.name() && *d == ds.spec().name)
+                .unwrap();
+            writeln!(
+                out,
+                "{:<6} {:<13} {:>8.1} {:>9.1} {:>7.1}x {:>7.0} {:>7.1}x {:>7}  {:>5.1}/{:>4.1}x/{:>4.1}x",
+                model.name(),
+                ds.spec().name,
+                grip_us,
+                cpu_us,
+                cx,
+                gpu_us,
+                gx,
+                "",
+                paper.2,
+                paper.3 / paper.2,
+                paper.4 / paper.2,
+            )?;
+        }
+    }
+    writeln!(
+        out,
+        "geomean speedup: CPU {:.1}x (paper 17.0x), GPU {:.1}x (paper 23.4x)",
+        geomean(&cpu_speedups),
+        geomean(&gpu_speedups)
+    )?;
+    Ok(())
+}
+
+/// Paper Table IV reference (mW).
+pub const PAPER_TABLE4: [(&str, f64, f64); 6] = [
+    ("edge", 4.1, 0.1),
+    ("vertex", 656.6, 12.6),
+    ("update", 0.4, 0.1),
+    ("weight-sram", 1476.7, 28.3),
+    ("nodeflow-sram", 269.5, 5.1),
+    ("dram", 2794.7, 53.7),
+];
+
+/// Table IV: power breakdown for GCN inference.
+pub fn table4(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
+    let wl = ctx.workload(Dataset::Pokec);
+    let (_, _, rep) = ctx.sim_stats(&ctx.grip, GnnModel::Gcn, &wl);
+    let b = power_breakdown(&ctx.grip, &EnergyParams::paper(), &rep);
+    writeln!(out, "== Table IV: power breakdown, GCN inference ==")?;
+    writeln!(
+        out,
+        "{:<15} {:>9} {:>7} {:>12} {:>10}",
+        "module", "ours mW", "ours %", "paper mW", "paper %"
+    )?;
+    for (module, paper_mw, paper_pct) in PAPER_TABLE4 {
+        writeln!(
+            out,
+            "{:<15} {:>9.1} {:>6.1}% {:>12.1} {:>9.1}%",
+            module,
+            b.mw(module),
+            b.pct(module),
+            paper_mw,
+            paper_pct
+        )?;
+    }
+    writeln!(out, "{:<15} {:>9.1} {:>7} {:>12.1}", "total", b.total_mw, "", 4932.4)?;
+    Ok(())
+}

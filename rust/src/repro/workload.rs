@@ -1,0 +1,137 @@
+//! Shared workload machinery for the repro experiments: dataset
+//! generation, target sampling, nodeflow batches, and percentile
+//! summaries over simulated latency.
+
+use crate::config::{GripConfig, ModelConfig};
+use crate::coordinator::LatencyStats;
+use crate::graph::{CsrGraph, Dataset};
+use crate::greta::{compile, GnnModel};
+use crate::nodeflow::{Nodeflow, Sampler};
+use crate::rng::SplitMix64;
+use crate::sim::{simulate, SimResult};
+
+/// Shared experiment context: graph scale, number of sampled targets,
+/// and base configurations. Latency statistics depend only on *local*
+/// graph structure, which the generator preserves at any scale, so
+/// experiments default to a small scale for speed (`--scale` overrides).
+#[derive(Debug, Clone)]
+pub struct ReproCtx {
+    pub scale: f64,
+    pub targets_per_dataset: usize,
+    pub seed: u64,
+    pub grip: GripConfig,
+    pub mc: ModelConfig,
+}
+
+impl Default for ReproCtx {
+    fn default() -> Self {
+        Self {
+            scale: 0.01,
+            targets_per_dataset: 128,
+            seed: 17,
+            grip: GripConfig::paper(),
+            mc: ModelConfig::paper(),
+        }
+    }
+}
+
+/// A dataset's sampled workload: nodeflows for randomly chosen targets.
+pub struct DatasetWorkload {
+    pub dataset: Dataset,
+    pub graph: CsrGraph,
+    pub nodeflows: Vec<Nodeflow>,
+}
+
+impl ReproCtx {
+    /// Build the workload for one dataset (deterministic).
+    pub fn workload(&self, ds: Dataset) -> DatasetWorkload {
+        let graph = ds.generate(self.scale, self.seed);
+        let sampler = Sampler::new(self.seed ^ 0xA5);
+        let mut rng = SplitMix64::new(self.seed ^ 0x7777);
+        let nodeflows = (0..self.targets_per_dataset)
+            .map(|_| {
+                let t = rng.gen_range(graph.num_vertices()) as u32;
+                Nodeflow::build(&graph, &sampler, &[t], &self.mc)
+            })
+            .collect();
+        DatasetWorkload { dataset: ds, graph, nodeflows }
+    }
+
+    /// Simulate a model over a workload with a given config; returns
+    /// (latency stats µs, neighborhood stats, a representative SimResult
+    /// for counters — the one at the p99 neighborhood).
+    pub fn sim_stats(
+        &self,
+        cfg: &GripConfig,
+        model: GnnModel,
+        wl: &DatasetWorkload,
+    ) -> (LatencyStats, LatencyStats, SimResult) {
+        let plan = compile(model, &self.mc);
+        let mut lat = LatencyStats::new();
+        let mut nbhd = LatencyStats::new();
+        let mut best: Option<(usize, SimResult)> = None;
+        for nf in &wl.nodeflows {
+            let r = simulate(cfg, plan_ref(&plan), nf);
+            lat.record(r.us(cfg));
+            nbhd.record(nf.neighborhood_size() as f64);
+            let n = nf.neighborhood_size();
+            if best.as_ref().map(|(bn, _)| n > *bn).unwrap_or(true) {
+                best = Some((n, r));
+            }
+        }
+        (lat, nbhd, best.unwrap().1)
+    }
+
+    /// Median unique 2-hop neighborhood over the workload (Table I).
+    pub fn median_two_hop(&self, wl: &DatasetWorkload) -> usize {
+        let mut sizes: Vec<usize> =
+            wl.nodeflows.iter().map(|nf| nf.neighborhood_size()).collect();
+        sizes.sort_unstable();
+        sizes[sizes.len() / 2]
+    }
+}
+
+// Tiny helper so `plan` isn't moved into the loop.
+fn plan_ref(p: &crate::greta::ModelPlan) -> &crate::greta::ModelPlan {
+    p
+}
+
+/// Geometric mean of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn workload_deterministic() {
+        let ctx = ReproCtx { targets_per_dataset: 4, scale: 0.003, ..Default::default() };
+        let a = ctx.workload(Dataset::Youtube);
+        let b = ctx.workload(Dataset::Youtube);
+        let sizes = |w: &DatasetWorkload| -> Vec<usize> {
+            w.nodeflows.iter().map(|n| n.neighborhood_size()).collect()
+        };
+        assert_eq!(sizes(&a), sizes(&b));
+    }
+
+    #[test]
+    fn sim_stats_populated() {
+        let ctx = ReproCtx { targets_per_dataset: 4, scale: 0.003, ..Default::default() };
+        let wl = ctx.workload(Dataset::Youtube);
+        let (lat, nbhd, rep) = ctx.sim_stats(&ctx.grip, GnnModel::Gcn, &wl);
+        assert_eq!(lat.count(), 4);
+        assert!(nbhd.p50() >= 1.0);
+        assert!(rep.counters.macs > 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Nodeflow → padded dense argument marshalling for the AOT'd models.
+//!
+//! Builds the `(a1, a2, h, *weights)` argument vector the executor
+//! feeds a model: the nodeflow rendered with the model's normalization
+//! (mean for GCN, sum for GIN/G-GCN, mask for GraphSAGE), features
+//! gathered from the feature store, and the deterministic serving
+//! weights.
+
+use super::golden::serving_weights;
+use super::manifest::ModelArtifact;
+use crate::greta::GnnModel;
+use crate::nodeflow::{Nodeflow, NormKind};
+use crate::rng::GoldenLcg;
+use anyhow::{ensure, Result};
+
+/// Normalization each model expects in its dense nodeflow matrices
+/// (must match python/compile/model.py's conventions).
+pub fn norm_for(model: GnnModel) -> NormKind {
+    match model {
+        GnnModel::Gcn => NormKind::Mean,
+        GnnModel::Sage => NormKind::Mask,
+        GnnModel::Gin | GnnModel::Ggcn => NormKind::Sum,
+    }
+}
+
+/// Deterministic per-vertex feature row — the "embedding table" stand-in
+/// (real deployments read these from device DRAM; we synthesize them
+/// seeded by vertex id so every layer of the stack agrees). Scaled to
+/// ±0.1 so GIN's 25-way multiset edge sums stay inside the Q4.12
+/// accumulator range (the input-scaling step of fixed-point deployment).
+pub fn feature_rows(vertices: &[u32], f_in: usize, pad_u: usize) -> Vec<f32> {
+    let mut h = vec![0f32; pad_u * f_in];
+    for (i, &v) in vertices.iter().enumerate() {
+        let mut lcg = GoldenLcg::new(0x5EED_0000_0000 + v as u64);
+        for (j, x) in lcg.fill(f_in).into_iter().enumerate() {
+            h[i * f_in + j] = x * 0.2;
+        }
+    }
+    h
+}
+
+/// Memoizing feature store — the on-device "embedding table". Real
+/// deployments keep features resident in accelerator DRAM; regenerating
+/// a row per request cost ~40% of the marshalling path before this
+/// cache existed (EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct FeatureStore {
+    cache: std::collections::HashMap<u32, Vec<f32>>,
+}
+
+impl FeatureStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn row(&mut self, v: u32, f_in: usize) -> &[f32] {
+        self.cache.entry(v).or_insert_with(|| {
+            let mut lcg = GoldenLcg::new(0x5EED_0000_0000 + v as u64);
+            lcg.fill(f_in).into_iter().map(|x| x * 0.2).collect()
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
+/// Build only the per-request dynamic args (a1, a2, h) for
+/// [`crate::runtime::Executor::run_prepared`] — weights stay
+/// device-resident. Feature rows come from the memoizing
+/// [`FeatureStore`].
+pub fn build_dynamic_args(
+    model: GnnModel,
+    artifact: &ModelArtifact,
+    nf: &Nodeflow,
+    store: &mut FeatureStore,
+) -> Result<Vec<Vec<f32>>> {
+    ensure!(nf.layers.len() == 2, "AOT artifacts are 2-layer");
+    let a1_shape = &artifact.args[0].shape;
+    let a2_shape = &artifact.args[1].shape;
+    let h_shape = &artifact.args[2].shape;
+    let (pad_v1, pad_u1) = (a1_shape[0], a1_shape[1]);
+    let (pad_v2, pad_u2) = (a2_shape[0], a2_shape[1]);
+    let f_in = h_shape[1];
+
+    let norm = norm_for(model);
+    let a1 = nf.to_dense(0, pad_v1, pad_u1, norm);
+    let a2 = nf.to_dense(1, pad_v2, pad_u2, norm);
+    let mut h = vec![0f32; pad_u1 * f_in];
+    for (i, &v) in nf.layers[0].inputs.iter().enumerate() {
+        h[i * f_in..(i + 1) * f_in].copy_from_slice(store.row(v, f_in));
+    }
+    Ok(vec![a1, a2, h])
+}
+
+/// Hot-path variant of [`build_args`]: weights are pre-generated once
+/// per model and feature rows come from the memoizing [`FeatureStore`].
+pub fn build_args_cached(
+    model: GnnModel,
+    artifact: &ModelArtifact,
+    nf: &Nodeflow,
+    weights: &[Vec<f32>],
+    store: &mut FeatureStore,
+) -> Result<Vec<Vec<f32>>> {
+    let mut args = build_dynamic_args(model, artifact, nf, store)?;
+    args.extend(weights.iter().cloned());
+    Ok(args)
+}
+
+/// Build the full argument vector for one inference over `nf`
+/// (uncached convenience path; the coordinator uses
+/// [`build_args_cached`]).
+pub fn build_args(
+    model: GnnModel,
+    artifact: &ModelArtifact,
+    nf: &Nodeflow,
+) -> Result<Vec<Vec<f32>>> {
+    ensure!(nf.layers.len() == 2, "AOT artifacts are 2-layer");
+    let a1_shape = &artifact.args[0].shape;
+    let a2_shape = &artifact.args[1].shape;
+    let h_shape = &artifact.args[2].shape;
+    let (pad_v1, pad_u1) = (a1_shape[0], a1_shape[1]);
+    let (pad_v2, pad_u2) = (a2_shape[0], a2_shape[1]);
+    let f_in = h_shape[1];
+
+    let norm = norm_for(model);
+    let a1 = nf.to_dense(0, pad_v1, pad_u1, norm);
+    let a2 = nf.to_dense(1, pad_v2, pad_u2, norm);
+    let h = feature_rows(&nf.layers[0].inputs, f_in, pad_u1);
+
+    let mut args = vec![a1, a2, h];
+    args.extend(serving_weights(artifact));
+    Ok(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_match_python_conventions() {
+        assert_eq!(norm_for(GnnModel::Gcn), NormKind::Mean);
+        assert_eq!(norm_for(GnnModel::Sage), NormKind::Mask);
+        assert_eq!(norm_for(GnnModel::Gin), NormKind::Sum);
+        assert_eq!(norm_for(GnnModel::Ggcn), NormKind::Sum);
+    }
+
+    #[test]
+    fn feature_rows_deterministic_per_vertex() {
+        let a = feature_rows(&[5, 9], 8, 4);
+        let b = feature_rows(&[9, 5], 8, 4);
+        // vertex 9's row is the same wherever it lands
+        assert_eq!(&a[8..16], &b[0..8]);
+        // padding rows are zero
+        assert!(a[16..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn feature_values_bounded() {
+        let h = feature_rows(&[1, 2, 3], 16, 3);
+        assert!(h.iter().all(|x| x.abs() <= 0.1));
+    }
+}

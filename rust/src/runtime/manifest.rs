@@ -1,0 +1,198 @@
+//! AOT manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Describes, per model, the HLO artifact path, the
+//! ordered argument list with shapes, the output shape, and the golden
+//! test vector pinning numerics.
+
+use super::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One argument of a lowered model, in call order.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    /// Empty = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One model's artifact record.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    /// The Pallas-bodied (hardware-structural) variant of the same
+    /// model, if the AOT bundle includes it.
+    pub hlo_pallas_path: Option<PathBuf>,
+    pub args: Vec<ArgSpec>,
+    pub output_shape: Vec<usize>,
+    /// Golden seed + expected first output row (from aot.py).
+    pub golden_seed: u64,
+    pub golden_row0: Vec<f32>,
+}
+
+/// Padded nodeflow shapes shared by all artifacts.
+#[derive(Debug, Clone, Copy)]
+pub struct PadShapes {
+    pub u1: usize,
+    pub v1: usize,
+    pub u2: usize,
+    pub v2: usize,
+    pub f_in: usize,
+    pub f_hid: usize,
+    pub f_out: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub pad: PadShapes,
+    pub models: HashMap<String, ModelArtifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let root = parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let ps = root.get("pad_shapes").ok_or_else(|| anyhow!("missing pad_shapes"))?;
+        let dim = |k: &str| -> Result<usize> {
+            ps.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("pad_shapes.{k}"))
+        };
+        let pad = PadShapes {
+            u1: dim("u1")?,
+            v1: dim("v1")?,
+            u2: dim("u2")?,
+            v2: dim("v2")?,
+            f_in: dim("f_in")?,
+            f_hid: dim("f_hid")?,
+            f_out: dim("f_out")?,
+        };
+
+        let mut models = HashMap::new();
+        let mobj = root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing models"))?;
+        for (name, m) in mobj {
+            let hlo = m
+                .get("hlo")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing hlo"))?;
+            let hlo_pallas = m.get("hlo_pallas").and_then(Json::as_str);
+            let mut args = Vec::new();
+            for a in m.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
+                let aname = a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: arg name"))?;
+                let shape: Vec<usize> = a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                args.push(ArgSpec { name: aname.to_string(), shape });
+            }
+            if args.len() < 3 {
+                bail!("{name}: expected at least (a1, a2, h) args");
+            }
+            let output_shape: Vec<usize> = m
+                .get("output")
+                .and_then(|o| o.get("shape"))
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let golden = m.get("golden");
+            let golden_seed = golden
+                .and_then(|g| g.get("seed"))
+                .and_then(Json::as_f64)
+                .unwrap_or(42.0) as u64;
+            let golden_row0: Vec<f32> = golden
+                .and_then(|g| g.get("row0"))
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_f64().map(|x| x as f32))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelArtifact {
+                    name: name.clone(),
+                    hlo_path: dir.join(hlo),
+                    hlo_pallas_path: hlo_pallas.map(|h| dir.join(h)),
+                    args,
+                    output_shape,
+                    golden_seed,
+                    golden_row0,
+                },
+            );
+        }
+        Ok(Manifest { pad, models })
+    }
+
+    /// Default artifact directory (repo-root `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load(&Manifest::default_dir()).ok()
+    }
+
+    #[test]
+    fn loads_all_four_models() {
+        let Some(m) = manifest() else { return };
+        for name in ["gcn", "sage", "gin", "ggcn"] {
+            assert!(m.models.contains_key(name), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn arg_order_contract() {
+        let Some(m) = manifest() else { return };
+        for a in m.models.values() {
+            assert_eq!(a.args[0].name, "a1");
+            assert_eq!(a.args[1].name, "a2");
+            assert_eq!(a.args[2].name, "h");
+            // nodeflow shapes match pad_shapes
+            assert_eq!(a.args[0].shape, vec![m.pad.v1, m.pad.u1]);
+            assert_eq!(a.args[1].shape, vec![m.pad.v2, m.pad.u2]);
+            assert_eq!(a.args[2].shape, vec![m.pad.u1, m.pad.f_in]);
+        }
+    }
+
+    #[test]
+    fn golden_vectors_present() {
+        let Some(m) = manifest() else { return };
+        for a in m.models.values() {
+            assert_eq!(a.golden_row0.len(), m.pad.f_out, "{}", a.name);
+            assert_eq!(a.golden_seed, 42);
+        }
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let Some(m) = manifest() else { return };
+        for a in m.models.values() {
+            assert!(a.hlo_path.exists(), "{:?}", a.hlo_path);
+        }
+    }
+}

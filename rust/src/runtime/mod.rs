@@ -1,0 +1,20 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from the L3 coordinator. Python runs only at build time (`make
+//! artifacts`); this module is the entire request-path numeric stack.
+//!
+//! * [`json`] — minimal JSON parser (offline build: no serde).
+//! * [`manifest`] — the aot.py ↔ runtime contract.
+//! * [`golden`] — shared-LCG golden vectors and serving weights.
+//! * [`executor`] — PJRT CPU client, one compiled executable per model.
+//! * [`inputs`] — nodeflow → padded dense argument marshalling.
+
+pub mod executor;
+pub mod golden;
+pub mod inputs;
+pub mod json;
+pub mod manifest;
+
+pub use executor::{Executor, LoadedModel};
+pub use golden::{golden_args, serving_weights};
+pub use inputs::{build_args, build_args_cached, build_dynamic_args, feature_rows, FeatureStore};
+pub use manifest::{ArgSpec, Manifest, ModelArtifact, PadShapes};

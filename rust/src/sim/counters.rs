@@ -1,0 +1,55 @@
+//! Activity counters collected during simulation — the inputs to the
+//! energy model (paper Sec. VII: "Power estimates of each unit was
+//! performed by generating activity factors from a cycle accurate
+//! simulation").
+
+/// Event counts for one simulated inference.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ActivityCounters {
+    /// Bytes moved over the DRAM interface (features + weights,
+    /// including burst waste).
+    pub dram_bytes: u64,
+    /// Bytes read from the global weight buffer into the tile buffer.
+    pub weight_sram_bytes: u64,
+    /// Bytes read/written in the nodeflow (feature) SRAMs by the edge
+    /// unit and DMA.
+    pub nodeflow_sram_bytes: u64,
+    /// Multiply-accumulate operations in the vertex unit PE array.
+    pub macs: u64,
+    /// ALU operations in the edge unit (gather + reduce element ops).
+    pub edge_alu_ops: u64,
+    /// Elements processed by the update unit (ReLU / LUT evaluations).
+    pub update_elems: u64,
+}
+
+impl ActivityCounters {
+    pub fn add(&mut self, other: &ActivityCounters) {
+        self.dram_bytes += other.dram_bytes;
+        self.weight_sram_bytes += other.weight_sram_bytes;
+        self.nodeflow_sram_bytes += other.nodeflow_sram_bytes;
+        self.macs += other.macs;
+        self.edge_alu_ops += other.edge_alu_ops;
+        self.update_elems += other.update_elems;
+    }
+
+    /// Total arithmetic operations (1 MAC = 2 ops) — for roofline plots.
+    pub fn total_ops(&self) -> u64 {
+        2 * self.macs + self.edge_alu_ops + self.update_elems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = ActivityCounters { dram_bytes: 10, macs: 5, ..Default::default() };
+        let b = ActivityCounters { dram_bytes: 1, macs: 2, update_elems: 3, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.dram_bytes, 11);
+        assert_eq!(a.macs, 7);
+        assert_eq!(a.update_elems, 3);
+        assert_eq!(a.total_ops(), 17);
+    }
+}

@@ -1,0 +1,147 @@
+//! DDR4 memory-controller timing model (paper Sec. V-A "Memory
+//! Controller", Sec. VIII-C/D).
+//!
+//! The host statically schedules bulk transfers from the nodeflow, so
+//! feature loads are channel-parallel streams of per-vertex rows. The
+//! two efficiency effects the paper analyzes are modeled explicitly:
+//!
+//! * a feature row smaller than the DRAM interface wastes the remainder
+//!   of the burst (Fig. 11a: below 64×2-byte elements "DRAM bandwidth is
+//!   poorly utilized due to many random accesses");
+//! * each non-contiguous row costs a row-activation penalty, amortized
+//!   across channel parallelism for scheduled bulk transfers and paid
+//!   serially for on-demand accesses (the unoptimized baseline of
+//!   Fig. 13a).
+
+use crate::config::GripConfig;
+
+/// Timing model for the memory controller + channels.
+#[derive(Debug, Clone)]
+pub struct DramModel {
+    channels: usize,
+    bytes_per_cycle_per_ch: f64,
+    interface_bytes: usize,
+    random_penalty: f64,
+}
+
+impl DramModel {
+    pub fn new(cfg: &GripConfig) -> Self {
+        Self {
+            channels: cfg.dram_channels.max(1),
+            bytes_per_cycle_per_ch: cfg.dram_ch_bytes_per_cycle,
+            interface_bytes: cfg.dram_interface_bytes.max(1),
+            random_penalty: cfg.dram_random_penalty_cycles,
+        }
+    }
+
+    /// Cycles to transfer `rows` feature rows of `row_bytes` each as a
+    /// statically-scheduled bulk transfer (vertices pre-partitioned
+    /// across channels, one prefetch lane per channel).
+    ///
+    /// Returns (cycles, bytes_transferred_incl_waste).
+    pub fn bulk_rows(&self, rows: usize, row_bytes: usize) -> (f64, u64) {
+        if rows == 0 || row_bytes == 0 {
+            return (0.0, 0);
+        }
+        // Each row occupies whole bursts on its channel.
+        let bursts_per_row = row_bytes.div_ceil(self.interface_bytes);
+        let burst_bytes = bursts_per_row * self.interface_bytes;
+        let rows_per_ch = rows.div_ceil(self.channels);
+        // Bulk scheduling overlaps activation with streaming: the
+        // penalty is paid once per channel queue, not per row.
+        let cycles = rows_per_ch as f64 * burst_bytes as f64 / self.bytes_per_cycle_per_ch
+            + self.random_penalty;
+        (cycles, (rows * burst_bytes) as u64)
+    }
+
+    /// Cycles for *on-demand* row fetches (no static schedule): the
+    /// activation penalty serializes per row on its channel.
+    pub fn on_demand_rows(&self, rows: usize, row_bytes: usize) -> (f64, u64) {
+        if rows == 0 || row_bytes == 0 {
+            return (0.0, 0);
+        }
+        let bursts_per_row = row_bytes.div_ceil(self.interface_bytes);
+        let burst_bytes = bursts_per_row * self.interface_bytes;
+        let rows_per_ch = rows.div_ceil(self.channels);
+        let per_row = burst_bytes as f64 / self.bytes_per_cycle_per_ch + self.random_penalty;
+        (rows_per_ch as f64 * per_row, (rows * burst_bytes) as u64)
+    }
+
+    /// Cycles to stream `bytes` contiguously (weight loads): full
+    /// bandwidth, one activation.
+    pub fn stream(&self, bytes: usize) -> (f64, u64) {
+        if bytes == 0 {
+            return (0.0, 0);
+        }
+        let cycles = bytes as f64 / (self.bytes_per_cycle_per_ch * self.channels as f64)
+            + self.random_penalty;
+        (cycles, bytes as u64)
+    }
+
+    /// Peak bytes/cycle across all channels.
+    pub fn peak_bytes_per_cycle(&self) -> f64 {
+        self.bytes_per_cycle_per_ch * self.channels as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> DramModel {
+        DramModel::new(&GripConfig::paper())
+    }
+
+    #[test]
+    fn bulk_scales_with_rows() {
+        let d = model();
+        let (t1, _) = d.bulk_rows(100, 1204);
+        let (t2, _) = d.bulk_rows(200, 1204);
+        assert!(t2 > t1 * 1.7, "{t1} {t2}");
+    }
+
+    #[test]
+    fn small_rows_waste_bandwidth() {
+        let d = model();
+        // 16-byte rows burn a full 128-byte burst each: 8× waste.
+        let (t_small, b_small) = d.bulk_rows(1000, 16);
+        let (t_big, b_big) = d.bulk_rows(1000, 128);
+        assert_eq!(b_small, b_big);
+        assert!((t_small - t_big).abs() < 1e-9);
+    }
+
+    #[test]
+    fn on_demand_slower_than_bulk() {
+        let d = model();
+        let (bulk, _) = d.bulk_rows(500, 256);
+        let (demand, _) = d.on_demand_rows(500, 256);
+        assert!(demand > 2.0 * bulk, "bulk {bulk} vs demand {demand}");
+    }
+
+    #[test]
+    fn stream_hits_peak_bandwidth() {
+        let d = model();
+        let (t, _) = d.stream(768_000);
+        // 768 KB at 76.8 B/cycle = 10_000 cycles + penalty
+        assert!((t - 10_030.0).abs() < 1.0, "{t}");
+    }
+
+    #[test]
+    fn more_channels_faster() {
+        let mut cfg = GripConfig::paper();
+        let d4 = DramModel::new(&cfg);
+        cfg.dram_channels = 8;
+        cfg.prefetch_lanes = 8;
+        let d8 = DramModel::new(&cfg);
+        let (t4, _) = d4.bulk_rows(1000, 1204);
+        let (t8, _) = d8.bulk_rows(1000, 1204);
+        assert!(t8 < t4 * 0.6);
+    }
+
+    #[test]
+    fn zero_work_is_free() {
+        let d = model();
+        assert_eq!(d.bulk_rows(0, 128).0, 0.0);
+        assert_eq!(d.stream(0).0, 0.0);
+    }
+}

@@ -1,0 +1,431 @@
+//! Whole-accelerator composition: the control unit's command schedule
+//! over partitioned nodeflows with double buffering and pipelining
+//! (paper Sec. V-A "Control", Sec. VI-A).
+//!
+//! Execution of one layer:
+//!   1. stream the layer's weights from DRAM into the global weight
+//!      buffer (overlapped with the previous layer when
+//!      `preload_weights`, paper "inter-layer pipelining");
+//!   2. per partition column: bulk-load the column's new feature rows
+//!      (overlapped across columns when `pipeline_partitions`; skipped
+//!      for already-resident rows when `cache_features`), run per-input
+//!      programs (identity nodeflows) on the vertex unit, run
+//!      edge-accumulate on the edge unit, vertex-accumulate on the PE
+//!      array (tile-interleaved with the edge unit when vertex-tiling is
+//!      on), and vertex-update (overlapped when `pipeline_update`).
+
+use super::counters::ActivityCounters;
+use super::dram::DramModel;
+use super::phases::{edge_accumulate_cycles, update_cycles, vertex_accumulate_cycles};
+use crate::config::GripConfig;
+use crate::greta::{Activate, Domain, ModelPlan, Src};
+use crate::nodeflow::{Nodeflow, PartitionedLayer};
+
+/// Timing of one simulated layer (busy cycles per unit + exposed span).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerTiming {
+    /// Exposed (wall-clock) cycles of the layer.
+    pub span: f64,
+    /// Busy cycles per unit.
+    pub dram_feature: f64,
+    pub dram_weight: f64,
+    pub edge: f64,
+    pub vertex: f64,
+    pub update: f64,
+}
+
+/// Result of simulating one inference.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// End-to-end latency in cycles.
+    pub cycles: f64,
+    pub layers: Vec<LayerTiming>,
+    pub counters: ActivityCounters,
+}
+
+impl SimResult {
+    pub fn us(&self, cfg: &GripConfig) -> f64 {
+        cfg.cycles_to_us(self.cycles)
+    }
+
+    /// Fraction of wall-clock time the vertex unit (matmul) is busy —
+    /// Fig. 11a's y-axis.
+    pub fn pct_vertex(&self) -> f64 {
+        let v: f64 = self.layers.iter().map(|l| l.vertex).sum();
+        if self.cycles > 0.0 {
+            (v / self.cycles).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of wall-clock time spent in edge-accumulate + feature
+    /// loads — Fig. 11b's y-axis.
+    pub fn pct_edge(&self) -> f64 {
+        let e: f64 = self.layers.iter().map(|l| l.edge + l.dram_feature).sum();
+        if self.cycles > 0.0 {
+            (e / self.cycles).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-column work extracted from the partitioned nodeflow.
+struct ColumnWork {
+    /// New feature rows first touched in this column (loaded from DRAM).
+    new_rows: usize,
+    /// Rows touched in this column (reloaded when caching is off).
+    touched_rows: usize,
+    /// Output vertices in this column's chunk.
+    out_rows: usize,
+    /// Edges in this column (all blocks).
+    edges: usize,
+}
+
+fn column_work(part: &PartitionedLayer, cache: bool) -> Vec<ColumnWork> {
+    let n = part.chunk_inputs;
+    let mut seen = vec![false; part.num_input_chunks * n];
+    let mut cols = Vec::with_capacity(part.num_output_chunks);
+    for j in 0..part.num_output_chunks {
+        let mut touched = std::collections::HashSet::new();
+        let mut edges = 0usize;
+        for (i, block) in part.column(j).iter().enumerate() {
+            edges += block.edges.len();
+            for &(u_local, _) in &block.edges {
+                touched.insert(i * n + u_local as usize);
+            }
+        }
+        let mut new_rows = 0usize;
+        for &g in &touched {
+            if !seen[g] {
+                new_rows += 1;
+                if cache {
+                    seen[g] = true;
+                }
+            }
+        }
+        cols.push(ColumnWork {
+            new_rows,
+            touched_rows: touched.len(),
+            out_rows: part.chunk_output_sizes[j],
+            edges,
+        });
+    }
+    cols
+}
+
+/// Simulate one inference of `plan` over `nf` on the configuration
+/// `cfg`. Deterministic; returns cycle-level timing plus activity
+/// counters for the energy model.
+pub fn simulate(cfg: &GripConfig, plan: &ModelPlan, nf: &Nodeflow) -> SimResult {
+    assert_eq!(plan.layers.len(), nf.layers.len());
+    let dram = DramModel::new(cfg);
+    let mut counters = ActivityCounters::default();
+    let mut layers = Vec::with_capacity(plan.layers.len());
+    let mut total = 0.0f64;
+    // DRAM idle cycles of the previous layer, available for preloading
+    // this layer's weights (paper's inter-layer pipelining).
+    let mut prev_idle_dram = 0.0f64;
+
+    for (li, (lp, nl)) in plan.layers.iter().zip(nf.layers.iter()).enumerate() {
+        let part = PartitionedLayer::new(nl, cfg.part_inputs, cfg.part_outputs);
+        let cols = column_work(&part, cfg.cache_features);
+        let mut t = LayerTiming::default();
+
+        // ---------------- layer weight load (DRAM -> global weight buf)
+        let weight_bytes: usize = lp
+            .programs
+            .iter()
+            .filter_map(|p| p.transform.as_ref())
+            .map(|tr| tr.in_dim * tr.out_dim * cfg.elem_bytes)
+            .sum();
+        let (w_cycles, w_bytes) = dram.stream(weight_bytes);
+        counters.dram_bytes += w_bytes;
+        t.dram_weight = w_cycles;
+        let exposed_weight = if cfg.preload_weights && li > 0 {
+            // Preloaded during the previous layer's DRAM idle time; only
+            // the remainder that did not fit is exposed.
+            (w_cycles - prev_idle_dram).max(0.0)
+        } else {
+            w_cycles
+        };
+
+        // Only layer 0 reads features from DRAM; later layers consume the
+        // previous layer's outputs from the nodeflow buffer.
+        let feature_rows_from_dram = li == 0;
+        let row_bytes = lp.in_dim * cfg.elem_bytes;
+
+        // ---------------- per-column phase durations
+        let mut load_c = Vec::with_capacity(cols.len());
+        let mut core_c = Vec::with_capacity(cols.len());
+        let mut update_tail = 0.0f64;
+        for cw in &cols {
+            // Feature load for this column.
+            let rows = if cfg.cache_features { cw.new_rows } else { cw.touched_rows };
+            // With vertex-tiling the edge unit consumes features in
+            // f-element slices, so DRAM serves each row as ceil(in_dim/f)
+            // chunks of f*elem bytes — below the 128 B interface a chunk
+            // wastes its burst (paper Fig. 13b: performance degrades for
+            // F < 64 because "more random DRAM accesses are required").
+            let (load_rows, chunk_bytes) = if cfg.vertex_tiling {
+                let (_, f_t) = cfg.effective_tile(lp.in_dim);
+                (rows * lp.in_dim.div_ceil(f_t), f_t * cfg.elem_bytes)
+            } else {
+                (rows, row_bytes)
+            };
+            let (lc, lb) = if feature_rows_from_dram && rows > 0 {
+                if cfg.pipeline_partitions {
+                    dram.bulk_rows(load_rows, chunk_bytes)
+                } else {
+                    // Unoptimized baseline: on-demand loads.
+                    dram.on_demand_rows(load_rows, chunk_bytes)
+                }
+            } else {
+                (0.0, 0)
+            };
+            counters.dram_bytes += lb;
+            // DMA writes the rows into the nodeflow buffer.
+            counters.nodeflow_sram_bytes += (rows * row_bytes) as u64;
+            t.dram_feature += lc;
+            load_c.push(lc);
+
+            // Per-input (identity-nodeflow) programs: run once per
+            // first-touched input row, scheduled with the column that
+            // brings the row on-chip.
+            let mut vpre = 0.0f64;
+            let mut edge = 0.0f64;
+            let mut vpost = 0.0f64;
+            let mut upd = 0.0f64;
+            for prog in &lp.programs {
+                let src_dim = match prog.source {
+                    Src::LayerInput => lp.in_dim,
+                    Src::Program(k) => lp.programs[k]
+                        .transform
+                        .as_ref()
+                        .map(|tr| tr.out_dim)
+                        .unwrap_or(lp.in_dim),
+                };
+                match prog.domain {
+                    Domain::AllInputs => {
+                        // Per-input programs stream one transform per
+                        // *edge source occurrence* (the hardware does not
+                        // dedup across edges), so their cost follows the
+                        // fixed sampled edge count — which is why Table
+                        // III's GS/G-GCN latencies barely vary across
+                        // datasets while GCN's loads do.
+                        let rows_here = cw.edges;
+                        if let Some(tr) = &prog.transform {
+                            let vc = vertex_accumulate_cycles(cfg, rows_here, tr.in_dim, tr.out_dim, &mut counters);
+                            vpre += vc.cycles;
+                        }
+                        if prog.activate != Activate::None {
+                            let d = prog.transform.as_ref().map(|tr| tr.out_dim).unwrap_or(src_dim);
+                            upd += update_cycles(cfg, rows_here, d, &mut counters);
+                        }
+                    }
+                    Domain::Edges => {
+                        edge += edge_accumulate_cycles(cfg, cw.edges, src_dim, cw.out_rows, &mut counters);
+                        if let Some(tr) = &prog.transform {
+                            let vc = vertex_accumulate_cycles(cfg, cw.out_rows, tr.in_dim, tr.out_dim, &mut counters);
+                            vpost += vc.cycles;
+                        }
+                        if prog.activate != Activate::None {
+                            let d = prog.transform.as_ref().map(|tr| tr.out_dim).unwrap_or(src_dim);
+                            upd += update_cycles(cfg, cw.out_rows, d, &mut counters);
+                        }
+                    }
+                    Domain::Outputs => {
+                        if let Some(tr) = &prog.transform {
+                            let vc = vertex_accumulate_cycles(cfg, cw.out_rows, tr.in_dim, tr.out_dim, &mut counters);
+                            vpost += vc.cycles;
+                        }
+                        if prog.activate != Activate::None {
+                            let d = prog.transform.as_ref().map(|tr| tr.out_dim).unwrap_or(src_dim);
+                            upd += update_cycles(cfg, cw.out_rows, d, &mut counters);
+                        }
+                    }
+                }
+            }
+            t.edge += edge;
+            t.vertex += vpre + vpost;
+            t.update += upd;
+
+            // Edge/vertex composition within the column.
+            let ev = if cfg.overlap_phases && cfg.vertex_tiling && edge > 0.0 {
+                // Vertex-tiling interleaves tile production/consumption;
+                // the slower unit dominates, plus one tile of fill.
+                let f_tiles = lp.in_dim.div_ceil(cfg.tile_f.max(1)).max(1) as f64;
+                edge.max(vpost) + edge / f_tiles
+            } else if cfg.overlap_phases {
+                // Without tiling the vertex unit waits for full feature
+                // vectors (HyGCN-style serialization).
+                edge + vpost
+            } else {
+                edge + vpost
+            };
+            let mut core = vpre + ev;
+            if cfg.pipeline_update {
+                // Update streams behind the vertex unit; only the last
+                // column's tail is exposed.
+                update_tail = upd * 0.1;
+            } else {
+                core += upd;
+            }
+            core_c.push(core);
+        }
+
+        // ---------------- compose columns (partition pipelining)
+        let span = if cfg.overlap_phases && cfg.pipeline_partitions {
+            // Loads stream on DRAM while compute runs: 2-stage pipeline.
+            // DRAM is serialized: exposed weight load first, then column
+            // feature loads in order.
+            let mut dram_cum = exposed_weight;
+            let mut finish = 0.0f64;
+            for (lc, cc) in load_c.iter().zip(core_c.iter()) {
+                dram_cum += lc;
+                // Compute for a column starts when its data is resident
+                // and the units are free.
+                finish = dram_cum.max(finish) + cc;
+            }
+            finish + update_tail
+        } else {
+            // Fully serial: every phase back to back.
+            exposed_weight + load_c.iter().sum::<f64>() + core_c.iter().sum::<f64>() + update_tail
+        };
+
+        // DRAM idle time of this layer = span minus its own DRAM busy
+        // time; available for preloading the next layer's weights.
+        let dram_busy: f64 = load_c.iter().sum::<f64>() + exposed_weight;
+        prev_idle_dram = (span - dram_busy).max(0.0);
+
+        t.span = span;
+        total += span;
+        layers.push(t);
+    }
+
+    SimResult { cycles: total, layers, counters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::graph::Dataset;
+    use crate::greta::{compile, GnnModel};
+    use crate::nodeflow::Sampler;
+
+    fn sim_for(model: GnnModel, ds: Dataset, cfg: &GripConfig) -> SimResult {
+        let mc = ModelConfig::paper();
+        let g = ds.generate(0.002, 11);
+        let nf = Nodeflow::build(&g, &Sampler::new(7), &[123], &mc);
+        let plan = compile(model, &mc);
+        simulate(cfg, &plan, &nf)
+    }
+
+    #[test]
+    fn gcn_latency_in_paper_range() {
+        // Paper Table III: GCN 15.4–16.3 µs. Accept the right decade and
+        // shape; exact constants are calibrated in the repro harness.
+        let cfg = GripConfig::paper();
+        let r = sim_for(GnnModel::Gcn, Dataset::Pokec, &cfg);
+        let us = r.us(&cfg);
+        assert!(us > 4.0 && us < 60.0, "GCN latency {us} µs");
+    }
+
+    #[test]
+    fn model_ordering_matches_paper() {
+        // Table III: GCN < GIN < {SAGE, G-GCN}. The paper puts G-GCN 18%
+        // above GraphSAGE-max; our cost model places them within ~5% of
+        // each other (documented deviation, EXPERIMENTS.md): both are
+        // dominated by the same per-edge transform stream.
+        let cfg = GripConfig::paper();
+        let gcn = sim_for(GnnModel::Gcn, Dataset::Pokec, &cfg).cycles;
+        let gin = sim_for(GnnModel::Gin, Dataset::Pokec, &cfg).cycles;
+        let sage = sim_for(GnnModel::Sage, Dataset::Pokec, &cfg).cycles;
+        let ggcn = sim_for(GnnModel::Ggcn, Dataset::Pokec, &cfg).cycles;
+        assert!(gcn < gin, "gcn {gcn} gin {gin}");
+        assert!(gin < sage, "gin {gin} sage {sage}");
+        assert!(gin < ggcn, "gin {gin} ggcn {ggcn}");
+        assert!(ggcn > 0.85 * sage, "sage {sage} ggcn {ggcn}");
+    }
+
+    #[test]
+    fn vertex_tiling_speeds_up() {
+        let on = GripConfig::paper();
+        let mut off = GripConfig::paper();
+        off.vertex_tiling = false;
+        let t_on = sim_for(GnnModel::Gcn, Dataset::Pokec, &on).cycles;
+        let t_off = sim_for(GnnModel::Gcn, Dataset::Pokec, &off).cycles;
+        assert!(t_off > 1.5 * t_on, "on {t_on} off {t_off}");
+    }
+
+    #[test]
+    fn pipelining_speeds_up() {
+        let on = GripConfig::paper();
+        let mut off = GripConfig::paper();
+        off.pipeline_partitions = false;
+        off.cache_features = false;
+        off.preload_weights = false;
+        let t_on = sim_for(GnnModel::Gcn, Dataset::Reddit, &on).cycles;
+        let t_off = sim_for(GnnModel::Gcn, Dataset::Reddit, &off).cycles;
+        assert!(t_off > 1.2 * t_on, "on {t_on} off {t_off}");
+    }
+
+    #[test]
+    fn more_channels_help_until_knee() {
+        // Fig. 10a: strong scaling to ~8 channels, then flat.
+        let mk = |ch: usize| {
+            let mut c = GripConfig::paper();
+            c.dram_channels = ch;
+            c.prefetch_lanes = ch;
+            c
+        };
+        let t1 = sim_for(GnnModel::Gcn, Dataset::Pokec, &mk(1)).cycles;
+        let t4 = sim_for(GnnModel::Gcn, Dataset::Pokec, &mk(4)).cycles;
+        let t16 = sim_for(GnnModel::Gcn, Dataset::Pokec, &mk(16)).cycles;
+        assert!(t1 > 2.0 * t4, "1ch {t1} 4ch {t4}");
+        assert!(t16 > 0.3 * t4, "16ch {t16} should saturate");
+    }
+
+    #[test]
+    fn larger_neighborhood_larger_latency() {
+        let cfg = GripConfig::paper();
+        let mc = ModelConfig::paper();
+        let g = Dataset::Livejournal.generate(0.002, 11);
+        let s = Sampler::new(7);
+        let plan = compile(GnnModel::Gcn, &mc);
+        // find a small and a large neighborhood target
+        let mut sizes: Vec<(usize, u32)> = (0..200u32)
+            .map(|v| (Nodeflow::build(&g, &s, &[v], &mc).neighborhood_size(), v))
+            .collect();
+        sizes.sort();
+        let small = sizes[5].1;
+        let large = sizes[sizes.len() - 5].1;
+        let t_small = simulate(&cfg, &plan, &Nodeflow::build(&g, &s, &[small], &mc)).cycles;
+        let t_large = simulate(&cfg, &plan, &Nodeflow::build(&g, &s, &[large], &mc)).cycles;
+        assert!(t_large > t_small, "{t_small} !< {t_large}");
+    }
+
+    #[test]
+    fn counters_populated() {
+        let cfg = GripConfig::paper();
+        let r = sim_for(GnnModel::Gcn, Dataset::Youtube, &cfg);
+        assert!(r.counters.dram_bytes > 0);
+        assert!(r.counters.macs > 0);
+        assert!(r.counters.weight_sram_bytes > 0);
+        assert!(r.counters.update_elems > 0);
+        // DRAM bytes should be dominated by weights + features ~ 1-2 MB.
+        assert!(r.counters.dram_bytes > 500_000, "{}", r.counters.dram_bytes);
+        assert!(r.counters.dram_bytes < 20_000_000);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = GripConfig::paper();
+        let a = sim_for(GnnModel::Ggcn, Dataset::Youtube, &cfg);
+        let b = sim_for(GnnModel::Ggcn, Dataset::Youtube, &cfg);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.counters, b.counters);
+    }
+}

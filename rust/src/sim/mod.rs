@@ -1,0 +1,31 @@
+//! Cycle-level simulator of the GRIP microarchitecture (paper Sec. V/VI).
+//!
+//! This is the paper's own evaluation vehicle: the authors report all
+//! performance numbers from a cycle-accurate simulator of their RTL, and
+//! derive every comparison (CPU baseline, HyGCN, TPU+, Graphicionado) by
+//! *reconfiguring that simulator* (Sec. VIII-B, VIII-F). We reproduce
+//! that methodology: [`simulate`] models each hardware unit's occupancy
+//! at cycle granularity and composes them with the pipeline/double-
+//! buffering semantics of the control unit, and every baseline is a
+//! [`crate::config::GripConfig`] perturbation.
+//!
+//! Units modeled (Fig. 5/6):
+//! * memory controller + DDR4 channels — [`dram`]
+//! * edge unit: prefetch lanes → N×M crossbar → reduce lanes — [`phases`]
+//! * vertex unit: 16×32 broadcast/reduction-tree PE array, tile buffer,
+//!   weight sequencer, vertex-tiling — [`phases`]
+//! * update unit: ReLU / two-level LUT pipeline — [`phases`]
+//! * control: command issue, barriers, partition pipelining — [`machine`]
+//!
+//! Activity counters for the energy model (Table IV) are collected in
+//! [`counters`].
+
+mod counters;
+mod dram;
+mod machine;
+mod phases;
+
+pub use counters::ActivityCounters;
+pub use dram::DramModel;
+pub use machine::{simulate, LayerTiming, SimResult};
+pub use phases::{edge_accumulate_cycles, update_cycles, vertex_accumulate_cycles, VertexCost};

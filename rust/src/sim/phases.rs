@@ -1,0 +1,202 @@
+//! Per-unit cost models (paper Sec. V-B/C/D).
+//!
+//! Each function returns the busy cycles of one unit for one piece of
+//! work plus the activity counters it generates; `machine.rs` composes
+//! them with the control unit's pipelining semantics.
+
+use super::counters::ActivityCounters;
+use crate::config::GripConfig;
+
+/// Edge unit: prefetch lanes feed an N×M crossbar feeding reduce lanes
+/// (Fig. 6). Each edge moves `dim` elements; a gather unit accumulates
+/// `xbar_width_elems` per cycle. Edges are spread across reduce lanes by
+/// destination vertex, so parallelism is capped by the number of
+/// *distinct destinations* as well as the lane count.
+pub fn edge_accumulate_cycles(
+    cfg: &GripConfig,
+    edges: usize,
+    dim: usize,
+    active_outputs: usize,
+    counters: &mut ActivityCounters,
+) -> f64 {
+    if edges == 0 || dim == 0 {
+        return 0.0;
+    }
+    let lanes = cfg
+        .reduce_lanes
+        .min(active_outputs.max(1))
+        .min(cfg.prefetch_lanes.max(1) * 4) // crossbar fan-out limit
+        .max(1);
+    let slices = dim.div_ceil(cfg.xbar_width_elems.max(1));
+    let edges_per_lane = edges.div_ceil(lanes);
+    // SRAM contention when the nodeflow buffer shares the weight SRAM
+    // (the merged-SRAM baseline of Fig. 9a) halves effective bandwidth.
+    let contention = if cfg.split_srams { 1.0 } else { 2.0 };
+
+    counters.edge_alu_ops += (edges * dim) as u64;
+    counters.nodeflow_sram_bytes += (edges * dim * cfg.elem_bytes) as u64 * 2; // read msg + r/m/w acc
+
+    edges_per_lane as f64 * slices as f64 * contention
+}
+
+/// Vertex unit cost for one batch of `rows` output vertices through a
+/// `in_dim → out_dim` transform (paper Sec. V-C + vertex-tiling VI-B).
+#[derive(Debug, Clone, Copy)]
+pub struct VertexCost {
+    /// Busy cycles of the PE array (compute-bound component).
+    pub cycles: f64,
+    /// Cycles the weight sequencer needs to stream tiles from the global
+    /// weight buffer; the tile buffer is double-buffered so the exposed
+    /// time is max(compute, weights) per tile.
+    pub weight_stream_cycles: f64,
+}
+
+pub fn vertex_accumulate_cycles(
+    cfg: &GripConfig,
+    rows: usize,
+    in_dim: usize,
+    out_dim: usize,
+    counters: &mut ActivityCounters,
+) -> VertexCost {
+    if rows == 0 || in_dim == 0 || out_dim == 0 {
+        return VertexCost { cycles: 0.0, weight_stream_cycles: 0.0 };
+    }
+    let (m_t, f_t) = cfg.effective_tile(in_dim);
+    let o_t = cfg.pe_cols.max(1);
+
+    let v_tiles = rows.div_ceil(m_t);
+    let f_tiles = in_dim.div_ceil(f_t);
+    let o_tiles = out_dim.div_ceil(o_t);
+
+    // Compute: m vertices × ceil(f/16) PE-row passes per (f,o) tile; the
+    // broadcast/reduction-tree array retires one (16 × 32) slab per
+    // cycle, fully pipelined (6-cycle fill per column of tiles).
+    let compute_per_tile = m_t as f64 * f_t.div_ceil(cfg.pe_rows.max(1)) as f64;
+    // Weight streaming: each (f, o) tile is f_t × o_t values, fetched
+    // once and reused across the m_t vertices of the tile (the 1/m
+    // bandwidth saving of vertex-tiling).
+    let weight_bytes_per_tile = (f_t * o_t * cfg.elem_bytes) as f64;
+    let wbw = if cfg.split_srams {
+        cfg.weight_bw_bytes_per_cycle
+    } else {
+        // Merged SRAM: weights contend with feature traffic (Fig. 9a:
+        // splitting doubles available weight bandwidth).
+        cfg.weight_bw_bytes_per_cycle / 2.0
+    };
+    let weights_per_tile = weight_bytes_per_tile / wbw.max(1e-9);
+
+    let tiles = (v_tiles * f_tiles * o_tiles) as f64;
+    let per_tile = compute_per_tile.max(weights_per_tile);
+    let cycles = tiles * per_tile + cfg.pe_fill_cycles as f64 * o_tiles as f64;
+
+    counters.macs += (rows * in_dim * out_dim) as u64;
+    counters.weight_sram_bytes += (v_tiles * f_tiles * o_tiles) as u64
+        * (f_t * o_t * cfg.elem_bytes) as u64;
+
+    VertexCost { cycles, weight_stream_cycles: tiles * weights_per_tile }
+}
+
+/// Update unit: activate over `rows × dim` elements (paper Sec. V-D).
+pub fn update_cycles(
+    cfg: &GripConfig,
+    rows: usize,
+    dim: usize,
+    counters: &mut ActivityCounters,
+) -> f64 {
+    let elems = rows * dim;
+    counters.update_elems += elems as u64;
+    elems as f64 / cfg.update_elems_per_cycle.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GripConfig {
+        GripConfig::paper()
+    }
+
+    #[test]
+    fn edge_zero_is_free() {
+        let mut c = ActivityCounters::default();
+        assert_eq!(edge_accumulate_cycles(&cfg(), 0, 512, 4, &mut c), 0.0);
+    }
+
+    #[test]
+    fn edge_scales_with_edges_and_dim() {
+        let mut c = ActivityCounters::default();
+        let t1 = edge_accumulate_cycles(&cfg(), 100, 128, 8, &mut c);
+        let t2 = edge_accumulate_cycles(&cfg(), 200, 128, 8, &mut c);
+        let t3 = edge_accumulate_cycles(&cfg(), 100, 256, 8, &mut c);
+        assert!(t2 > 1.9 * t1);
+        assert!(t3 > 1.9 * t1);
+    }
+
+    #[test]
+    fn edge_single_output_serializes() {
+        let mut c = ActivityCounters::default();
+        let t1 = edge_accumulate_cycles(&cfg(), 64, 64, 1, &mut c);
+        let t8 = edge_accumulate_cycles(&cfg(), 64, 64, 8, &mut c);
+        assert!(t1 > 7.0 * t8, "{t1} vs {t8}");
+    }
+
+    #[test]
+    fn wider_crossbar_fewer_cycles() {
+        let mut cfg2 = cfg();
+        cfg2.xbar_width_elems = 64;
+        let mut c = ActivityCounters::default();
+        let narrow = edge_accumulate_cycles(&cfg(), 100, 256, 8, &mut c);
+        let wide = edge_accumulate_cycles(&cfg2, 100, 256, 8, &mut c);
+        assert!(wide < narrow / 3.0);
+    }
+
+    #[test]
+    fn vertex_tiling_removes_weight_bottleneck() {
+        // Paper Sec. VI-B: with tiling the PE array is compute-bound;
+        // without it, weight streaming dominates.
+        let c_on = cfg();
+        let mut c_off = cfg();
+        c_off.vertex_tiling = false;
+        let mut a = ActivityCounters::default();
+        let mut b = ActivityCounters::default();
+        let on = vertex_accumulate_cycles(&c_on, 11, 602, 512, &mut a);
+        let off = vertex_accumulate_cycles(&c_off, 11, 602, 512, &mut b);
+        assert!(off.cycles > 2.0 * on.cycles, "on {} off {}", on.cycles, off.cycles);
+        // Tiling reduces weight-SRAM traffic by ~m.
+        assert!(b.weight_sram_bytes > 5 * a.weight_sram_bytes);
+    }
+
+    #[test]
+    fn vertex_mac_count_exact() {
+        let mut c = ActivityCounters::default();
+        vertex_accumulate_cycles(&cfg(), 11, 602, 512, &mut c);
+        assert_eq!(c.macs, 11 * 602 * 512);
+    }
+
+    #[test]
+    fn vertex_compute_bound_at_paper_point() {
+        // At (m=11, f=64) the PE array should not stall on weights.
+        let mut c = ActivityCounters::default();
+        let v = vertex_accumulate_cycles(&cfg(), 11, 602, 512, &mut c);
+        assert!(v.weight_stream_cycles < v.cycles);
+    }
+
+    #[test]
+    fn low_weight_bw_becomes_bottleneck() {
+        // Fig. 10b: below ~128 GiB/s weight loading dominates.
+        let mut slow = cfg();
+        slow.weight_bw_bytes_per_cycle = 16.0;
+        let mut c = ActivityCounters::default();
+        let v_fast = vertex_accumulate_cycles(&cfg(), 11, 602, 512, &mut c);
+        let v_slow = vertex_accumulate_cycles(&slow, 11, 602, 512, &mut c);
+        assert!(v_slow.cycles > 1.5 * v_fast.cycles);
+    }
+
+    #[test]
+    fn update_throughput() {
+        let mut c = ActivityCounters::default();
+        let t = update_cycles(&cfg(), 11, 512, &mut c);
+        assert!((t - (11.0 * 512.0 / 32.0)).abs() < 1e-9);
+        assert_eq!(c.update_elems, 11 * 512);
+    }
+}

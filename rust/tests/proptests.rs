@@ -1,0 +1,235 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The offline vendored crate set has no `proptest`, so this is a
+//! lightweight hand-rolled harness: each property runs over a few
+//! hundred seeded random cases from `SplitMix64` (deterministic; a
+//! failing seed is printed for reproduction).
+
+use grip::config::{GripConfig, ModelConfig};
+use grip::fixed::{Fx16, LutConfig, TwoLevelLut};
+use grip::graph::{generate, GeneratorParams};
+use grip::greta::{compile, GnnModel};
+use grip::nodeflow::{Nodeflow, NodeflowLayer, PartitionedLayer, Sampler};
+use grip::rng::SplitMix64;
+use grip::sim::simulate;
+
+/// Run `f` over `n` seeded cases.
+fn for_cases(n: u64, mut f: impl FnMut(u64, &mut SplitMix64)) {
+    for case in 0..n {
+        let mut rng = SplitMix64::new(0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        f(case, &mut rng);
+    }
+}
+
+fn random_layer(rng: &mut SplitMix64) -> NodeflowLayer {
+    let num_outputs = 1 + rng.gen_range(30);
+    let extra_inputs = rng.gen_range(200);
+    let num_inputs = num_outputs + extra_inputs;
+    let num_edges = rng.gen_range(400);
+    let edges = (0..num_edges)
+        .map(|_| (rng.gen_range(num_inputs) as u32, rng.gen_range(num_outputs) as u32))
+        .collect();
+    NodeflowLayer { inputs: (0..num_inputs as u32).collect(), num_outputs, edges }
+}
+
+// ---------------------------------------------------------- partitioning
+#[test]
+fn prop_partition_preserves_every_edge_exactly_once() {
+    for_cases(300, |case, rng| {
+        let layer = random_layer(rng);
+        let n = 1 + rng.gen_range(64);
+        let m = 1 + rng.gen_range(16);
+        let part = PartitionedLayer::new(&layer, n, m);
+        // total count preserved
+        assert_eq!(part.total_edges(), layer.edges.len(), "case {case}");
+        // every edge recoverable at its global coordinates
+        let mut reconstructed = Vec::new();
+        for j in 0..part.num_output_chunks {
+            for i in 0..part.num_input_chunks {
+                for &(ul, vl) in &part.block(i, j).edges {
+                    reconstructed.push(((i * n) as u32 + ul, (j * m) as u32 + vl));
+                }
+            }
+        }
+        let mut want = layer.edges.clone();
+        want.sort_unstable();
+        reconstructed.sort_unstable();
+        assert_eq!(reconstructed, want, "case {case} (n={n}, m={m})");
+    });
+}
+
+#[test]
+fn prop_partition_chunk_sizes_cover_exactly() {
+    for_cases(200, |case, rng| {
+        let layer = random_layer(rng);
+        let n = 1 + rng.gen_range(64);
+        let m = 1 + rng.gen_range(16);
+        let part = PartitionedLayer::new(&layer, n, m);
+        assert_eq!(
+            part.chunk_input_sizes.iter().sum::<usize>(),
+            layer.num_inputs(),
+            "case {case}"
+        );
+        assert_eq!(
+            part.chunk_output_sizes.iter().sum::<usize>(),
+            layer.num_outputs,
+            "case {case}"
+        );
+        assert!(part.chunk_input_sizes.iter().all(|&s| s <= n));
+        assert!(part.chunk_output_sizes.iter().all(|&s| s <= m));
+    });
+}
+
+// -------------------------------------------------------------- nodeflow
+#[test]
+fn prop_nodeflow_invariants() {
+    let g = generate(&GeneratorParams { nodes: 3_000, mean_degree: 7.0, ..Default::default() });
+    let mc = ModelConfig { sample1: 5, sample2: 4, f_in: 8, f_hid: 8, f_out: 4 };
+    for_cases(200, |case, rng| {
+        let s = Sampler::new(rng.next_u64());
+        let t = rng.gen_range(3_000) as u32;
+        let nf = Nodeflow::build(&g, &s, &[t], &mc);
+        // V-prefix-of-U convention at every layer.
+        let v1: Vec<u32> = nf.layers[0].inputs[..nf.layers[0].num_outputs].to_vec();
+        assert_eq!(v1, nf.layers[1].inputs, "case {case}");
+        assert_eq!(nf.layers[1].inputs[0], t, "case {case}");
+        // Inputs unique.
+        for l in &nf.layers {
+            let mut u = l.inputs.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), l.inputs.len(), "case {case}");
+            for &(us, vd) in &l.edges {
+                assert!((us as usize) < l.num_inputs());
+                assert!((vd as usize) < l.num_outputs);
+            }
+        }
+        // Edge sources really are sampled neighbors.
+        for &(us, vd) in &nf.layers[1].edges {
+            let src = nf.layers[1].inputs[us as usize];
+            let dst = nf.layers[1].inputs[vd as usize];
+            assert!(g.neighbors(dst).contains(&src), "case {case}");
+        }
+    });
+}
+
+// ----------------------------------------------------------- fixed point
+#[test]
+fn prop_fx16_roundtrip_error_bounded() {
+    for_cases(2_000, |case, rng| {
+        let x = (rng.gen_f64() * 16.0 - 8.0) as f32;
+        let q = Fx16::from_f32(x).to_f32();
+        if (-8.0..7.999).contains(&x) {
+            assert!((q - x).abs() <= 1.0 / 4096.0 + 1e-6, "case {case}: {x} -> {q}");
+        }
+    });
+}
+
+#[test]
+fn prop_fx16_add_commutative_and_monotone() {
+    for_cases(2_000, |case, rng| {
+        let a = Fx16::from_raw((rng.next_u64() & 0xFFFF) as u16 as i16);
+        let b = Fx16::from_raw((rng.next_u64() & 0xFFFF) as u16 as i16);
+        assert_eq!(a.sat_add(b), b.sat_add(a), "case {case}");
+        // saturating add never wraps sign against the operand direction
+        if b.0 >= 0 {
+            assert!(a.sat_add(b).0 >= a.0.saturating_add(0).min(a.0), "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_fx16_mul_sign_and_bounds() {
+    for_cases(2_000, |case, rng| {
+        let a = Fx16::from_f32((rng.gen_f64() * 4.0 - 2.0) as f32);
+        let b = Fx16::from_f32((rng.gen_f64() * 4.0 - 2.0) as f32);
+        let p = a.sat_mul(b);
+        let want = a.to_f32() * b.to_f32();
+        assert!((p.to_f32() - want).abs() < 0.002, "case {case}: {want} vs {}", p.to_f32());
+    });
+}
+
+#[test]
+fn prop_lut_sigmoid_bounded_and_monotone() {
+    let lut = TwoLevelLut::new(LutConfig::sigmoid());
+    for_cases(500, |case, rng| {
+        let x = (rng.gen_f64() * 16.0 - 8.0) as f32;
+        let y = lut.eval_f32(x);
+        assert!((-0.01..=1.01).contains(&y), "case {case}: sigmoid({x}) = {y}");
+        // monotone within quantization slack
+        let y2 = lut.eval_f32(x + 0.5);
+        assert!(y2 >= y - 0.02, "case {case}: non-monotone at {x}");
+    });
+}
+
+// -------------------------------------------------------------- simulator
+#[test]
+fn prop_sim_latency_positive_and_monotone_in_work() {
+    let g = generate(&GeneratorParams { nodes: 3_000, mean_degree: 10.0, ..Default::default() });
+    let cfg = GripConfig::paper();
+    for_cases(40, |case, rng| {
+        let s1 = 2 + rng.gen_range(20);
+        let mc_small = ModelConfig { sample1: s1, sample2: 4, ..ModelConfig::paper() };
+        let mc_big = ModelConfig { sample1: s1 + 8, sample2: 4, ..ModelConfig::paper() };
+        let s = Sampler::new(rng.next_u64());
+        let t = rng.gen_range(3_000) as u32;
+        let nf_s = Nodeflow::build(&g, &s, &[t], &mc_small);
+        let nf_b = Nodeflow::build(&g, &s, &[t], &mc_big);
+        let r_s = simulate(&cfg, &compile(GnnModel::Gcn, &mc_small), &nf_s);
+        let r_b = simulate(&cfg, &compile(GnnModel::Gcn, &mc_big), &nf_b);
+        assert!(r_s.cycles > 0.0, "case {case}");
+        // more samples => at least as much work (within 2% model noise)
+        assert!(r_b.cycles >= r_s.cycles * 0.98, "case {case}: {} vs {}", r_s.cycles, r_b.cycles);
+    });
+}
+
+#[test]
+fn prop_sim_counters_scale_with_edges() {
+    let g = generate(&GeneratorParams { nodes: 3_000, mean_degree: 10.0, ..Default::default() });
+    let cfg = GripConfig::paper();
+    let mc = ModelConfig::paper();
+    let plan = compile(GnnModel::Gcn, &mc);
+    for_cases(40, |case, rng| {
+        let s = Sampler::new(rng.next_u64());
+        let t = rng.gen_range(3_000) as u32;
+        let nf = Nodeflow::build(&g, &s, &[t], &mc);
+        let r = simulate(&cfg, &plan, &nf);
+        // edge ALU ops = edges x dims exactly (GCN single edge program)
+        let want: u64 = nf
+            .layers
+            .iter()
+            .zip([mc.f_in, mc.f_hid])
+            .map(|(l, d)| (l.edges.len() * d) as u64)
+            .sum();
+        assert_eq!(r.counters.edge_alu_ops, want, "case {case}");
+    });
+}
+
+#[test]
+fn prop_disabled_optimizations_never_help() {
+    // Turning an optimization OFF must never make the simulator faster.
+    let g = generate(&GeneratorParams { nodes: 3_000, mean_degree: 10.0, ..Default::default() });
+    let mc = ModelConfig::paper();
+    let plan = compile(GnnModel::Gcn, &mc);
+    for_cases(25, |case, rng| {
+        let s = Sampler::new(rng.next_u64());
+        let t = rng.gen_range(3_000) as u32;
+        let nf = Nodeflow::build(&g, &s, &[t], &mc);
+        let on = GripConfig::paper();
+        let base = simulate(&on, &plan, &nf).cycles;
+        for knob in 0..4 {
+            let mut off = on.clone();
+            match knob {
+                0 => off.pipeline_partitions = false,
+                1 => off.preload_weights = false,
+                2 => off.pipeline_update = false,
+                _ => off.cache_features = false,
+            }
+            let t_off = simulate(&off, &plan, &nf).cycles;
+            assert!(
+                t_off >= base * 0.999,
+                "case {case} knob {knob}: off {t_off} < on {base}"
+            );
+        }
+    });
+}

@@ -1,0 +1,180 @@
+//! End-to-end runtime tests: HLO artifacts on PJRT vs (a) the Python
+//! golden vectors and (b) the Rust fixed-point functional executor —
+//! the full numeric loop: Pallas kernel ≍ jnp ref ≍ HLO-on-PJRT ≍ Q4.12
+//! datapath.
+//!
+//! These tests are skipped (pass vacuously) when `make artifacts` has
+//! not been run, so `cargo test` works from a clean checkout.
+
+use grip::config::ModelConfig;
+use grip::graph::Dataset;
+use grip::greta::{compile, execute_model, ExecArgs, GnnModel, ALL_MODELS};
+use grip::nodeflow::{Nodeflow, Sampler};
+use grip::runtime::{build_args, serving_weights, Executor, Manifest};
+
+fn executor() -> Option<Executor> {
+    Executor::load(&Manifest::default_dir()).ok()
+}
+
+#[test]
+fn golden_vectors_verify_all_models() {
+    let Some(exec) = executor() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for name in exec.model_names() {
+        let err = exec.verify_golden(name).unwrap();
+        assert!(err < 1e-3, "{name}: golden max err {err}");
+    }
+}
+
+#[test]
+fn pjrt_output_shapes_match_manifest() {
+    let Some(exec) = executor() else { return };
+    for name in exec.model_names() {
+        let artifact = exec.model(name).unwrap().artifact.clone();
+        let args = grip::runtime::golden_args(&artifact);
+        let out = exec.run(name, &args).unwrap();
+        assert_eq!(out.len(), artifact.output_shape.iter().product::<usize>(), "{name}");
+    }
+}
+
+#[test]
+fn pjrt_execution_is_deterministic() {
+    let Some(exec) = executor() else { return };
+    let artifact = exec.model("gcn").unwrap().artifact.clone();
+    let args = grip::runtime::golden_args(&artifact);
+    let a = exec.run("gcn", &args).unwrap();
+    let b = exec.run("gcn", &args).unwrap();
+    assert_eq!(a, b);
+}
+
+/// The centerpiece: for a *real sampled nodeflow*, the float PJRT path
+/// (JAX/Pallas AOT) and the Rust Q4.12 functional datapath must agree
+/// within fixed-point error. This pins the Rust GReTA semantics to the
+/// Python model definitions end-to-end.
+#[test]
+fn fixed_point_datapath_matches_pjrt_on_real_nodeflows() {
+    let Some(exec) = executor() else { return };
+    let mc = ModelConfig::paper();
+    let g = Dataset::Youtube.generate(0.002, 5);
+    let s = Sampler::new(3);
+    let nf = Nodeflow::build(&g, &s, &[42], &mc);
+
+    for model in ALL_MODELS {
+        let artifact = exec.model(model.name()).unwrap().artifact.clone();
+        let args = build_args(model, &artifact, &nf).unwrap();
+        let pjrt_out = exec.run(model.name(), &args).unwrap();
+        let f_out = *artifact.output_shape.last().unwrap();
+
+        // Same inputs through the fixed-point executor.
+        let plan = compile(model, &mc);
+        let h = &args[2]; // padded features; executor wants exact rows
+        let u1 = nf.layers[0].num_inputs();
+        let h_exact: Vec<f32> = h[..u1 * mc.f_in].to_vec();
+        let mut exec_args = ExecArgs::new();
+        let weights = serving_weights(&artifact);
+        for (spec, w) in artifact.args[3..].iter().zip(weights) {
+            exec_args.insert(spec.name.clone(), (spec.shape.clone(), w));
+        }
+        let fx_out = execute_model(&plan, &nf, &h_exact, &exec_args).unwrap();
+
+        // Compare the target row (first output vertex).
+        let mut max_err = 0f32;
+        let mut max_mag = 0f32;
+        for (a, b) in pjrt_out[..f_out].iter().zip(fx_out[..f_out].iter()) {
+            max_err = max_err.max((a - b).abs());
+            max_mag = max_mag.max(a.abs());
+        }
+        // Q4.12 quantization + LUT sigmoid error accumulate over two
+        // 512-deep layers; allow a small absolute + relative budget.
+        let budget = 0.05 + 0.05 * max_mag;
+        assert!(
+            max_err < budget,
+            "{model:?}: PJRT vs fixed-point max err {max_err} (mag {max_mag})"
+        );
+    }
+}
+
+/// The weight-resident hot path (`run_prepared` / `execute_b`) must be
+/// numerically identical to the general literal path (`run`).
+#[test]
+fn run_prepared_matches_run() {
+    let Some(exec) = executor() else { return };
+    let mc = ModelConfig::paper();
+    let g = Dataset::Youtube.generate(0.002, 5);
+    let s = Sampler::new(3);
+    let nf = Nodeflow::build(&g, &s, &[42], &mc);
+    for model in ALL_MODELS {
+        let artifact = exec.model(model.name()).unwrap().artifact.clone();
+        let full = build_args(model, &artifact, &nf).unwrap();
+        let via_run = exec.run(model.name(), &full).unwrap();
+        let via_prepared = exec.run_prepared(model.name(), &full[..3]).unwrap();
+        assert_eq!(via_run, via_prepared, "{model:?}");
+    }
+}
+
+/// The Pallas-bodied HLO (the hardware-structural lowering of the L1
+/// vertex-tiling kernel) must compute the same numbers as the fused
+/// serving artifact — on-PJRT proof that the kernel is correct, not
+/// just correct-under-jnp-interpretation.
+#[test]
+fn pallas_variant_matches_serving_artifact() {
+    let Some(exec) = executor() else { return };
+    // gcn exercises vertex_tiled_matmul twice; sage exercises masked_max.
+    for name in ["gcn", "sage"] {
+        let artifact = exec.model(name).unwrap().artifact.clone();
+        if artifact.hlo_pallas_path.is_none() {
+            eprintln!("skipping: no pallas artifact for {name}");
+            continue;
+        }
+        let args = grip::runtime::golden_args(&artifact);
+        let serving = exec.run(name, &args).unwrap();
+        let pallas = exec.run_pallas_variant(name, &args).unwrap();
+        let mut max_err = 0f32;
+        for (a, b) in serving.iter().zip(pallas.iter()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 2e-3, "{name}: serving vs pallas max err {max_err}");
+    }
+}
+
+#[test]
+fn serving_coordinator_with_numerics() {
+    if executor().is_none() {
+        return;
+    }
+    use grip::coordinator::{Coordinator, InferenceRequest, ServeConfig};
+    let g = Dataset::Youtube.generate(0.002, 5);
+    let coord = Coordinator::start(g, 7, ServeConfig::default()).unwrap();
+    let resp = coord
+        .infer(InferenceRequest { id: 1, model: GnnModel::Gcn, target: 9 })
+        .unwrap();
+    assert_eq!(resp.embedding.len(), 256);
+    assert!(resp.embedding.iter().all(|x| x.is_finite()));
+    assert!(resp.accel_us > 1.0);
+    // GCN ends in ReLU: embeddings nonnegative.
+    assert!(resp.embedding.iter().all(|&x| x >= 0.0));
+}
+
+#[test]
+fn different_targets_different_embeddings() {
+    if executor().is_none() {
+        return;
+    }
+    use grip::coordinator::{Coordinator, InferenceRequest, ServeConfig};
+    let g = Dataset::Youtube.generate(0.002, 5);
+    let coord = Coordinator::start(g, 7, ServeConfig::default()).unwrap();
+    let a = coord
+        .infer(InferenceRequest { id: 1, model: GnnModel::Gcn, target: 9 })
+        .unwrap();
+    let b = coord
+        .infer(InferenceRequest { id: 2, model: GnnModel::Gcn, target: 1009 })
+        .unwrap();
+    assert_ne!(a.embedding, b.embedding);
+    // Determinism: same target twice gives the same embedding.
+    let a2 = coord
+        .infer(InferenceRequest { id: 3, model: GnnModel::Gcn, target: 9 })
+        .unwrap();
+    assert_eq!(a.embedding, a2.embedding);
+}
