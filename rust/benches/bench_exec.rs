@@ -1,0 +1,164 @@
+//! Fixed-point executor microbenchmark: seed edge-list path vs the
+//! destination-sorted CSR + vertex-tiled + scratch-arena hot path, on a
+//! 10k-node generated graph — plus a 500-request serving-pipeline run.
+//! Emits `BENCH_serve.json` at the repo root so the perf trajectory is
+//! tracked from PR 1 onward.
+//!
+//! Run: `cargo bench --bench bench_exec` (or the produced binary).
+
+use grip::benchutil::{bench, black_box, write_bench_json};
+use grip::config::ModelConfig;
+use grip::coordinator::{run_workload, Coordinator, LatencyStats, ServeConfig};
+use grip::graph::{generate, GeneratorParams};
+use grip::greta::{
+    compile, exec_test_args, execute_model_into, execute_model_ref, ExecScratch, GnnModel,
+    PlanArgs,
+};
+use grip::nodeflow::{Nodeflow, Sampler};
+use grip::rng::SplitMix64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting allocator: proves the prepared executor path is
+/// allocation-free in steady state (the PR 1 acceptance criterion).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn main() {
+    println!("== bench_exec: edge-list (seed) vs CSR executor, 10k-node graph ==");
+    let g = generate(&GeneratorParams { nodes: 10_000, mean_degree: 12.0, ..Default::default() });
+    let s = Sampler::new(3);
+    // Paper feature dims: the 602→512 transform is where the seed path's
+    // column-strided MAC walk and per-call weight re-quantization hurt.
+    let mc = ModelConfig::paper();
+    let nf = Nodeflow::build(&g, &s, &[4242], &mc);
+    println!(
+        "nodeflow: {} unique inputs, {} edges",
+        nf.neighborhood_size(),
+        nf.total_edges()
+    );
+
+    let mut sections: Vec<(&str, Vec<(&str, f64)>)> = Vec::new();
+    let mut micro: Vec<(&str, f64)> = Vec::new();
+
+    let plan = compile(GnnModel::Gcn, &mc);
+    let mut args = exec_test_args(&plan, 9);
+    args.insert("eps1".into(), (vec![], vec![0.1]));
+    args.insert("eps2".into(), (vec![], vec![0.2]));
+    let h: Vec<f32> = (0..nf.layers[0].num_inputs() * mc.f_in)
+        .map(|i| ((i % 17) as f32 - 8.0) / 40.0)
+        .collect();
+
+    // Seed reference: unsorted edge list, per-call HashMap + weight
+    // re-quantization, fresh matrices every call.
+    let ref_r = bench("exec_ref/gcn@paper-dims", 1, 8, || {
+        execute_model_ref(&plan, &nf, &h, &args).unwrap().len()
+    });
+
+    // Hot path: resolved PlanArgs + reusable scratch + CSR streaming +
+    // vertex-tiled matmul.
+    let pargs = PlanArgs::resolve(&plan, &args).unwrap();
+    let mut scratch = ExecScratch::new();
+    let mut out = Vec::new();
+    let csr_r = bench("exec_csr/gcn@paper-dims", 2, 24, || {
+        execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
+        out.len()
+    });
+
+    // Bit-identity sanity: the two paths must agree exactly.
+    let want = execute_model_ref(&plan, &nf, &h, &args).unwrap();
+    execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
+    assert_eq!(out, want, "CSR path diverged from the reference path");
+
+    // Steady-state allocation count per request (expected: 0).
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let iters = 50u64;
+    for _ in 0..iters {
+        execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
+        black_box(out.len());
+    }
+    let allocs_per_req = (ALLOCS.load(Ordering::Relaxed) - before) as f64 / iters as f64;
+    let speedup = ref_r.mean_us / csr_r.mean_us;
+    println!("speedup: {speedup:.2}x  steady-state allocs/request: {allocs_per_req}");
+
+    micro.push(("graph_nodes", 10_000.0));
+    micro.push(("edge_list_mean_us", ref_r.mean_us));
+    micro.push(("csr_mean_us", csr_r.mean_us));
+    micro.push(("speedup", speedup));
+    micro.push(("steady_state_allocs_per_request", allocs_per_req));
+    sections.push(("exec_microbench", micro));
+
+    // ---------------- serving pipeline: 500 requests, timing path ----------
+    println!("\n== serving pipeline: 500 requests over the 10k-node graph ==");
+    let cfg = ServeConfig { numerics: false, ..Default::default() };
+    let builders = cfg.builders;
+    let coord = Coordinator::start(g, 17, cfg).expect("coordinator start");
+    let mut rng = SplitMix64::new(99);
+    let requests = 500usize;
+    let targets: Vec<u32> = (0..requests).map(|_| rng.gen_range(10_000) as u32).collect();
+    let t0 = std::time::Instant::now();
+    let (accel, host, responses) =
+        run_workload(&coord, GnnModel::Gcn, &targets).expect("workload");
+    let wall = t0.elapsed().as_secs_f64();
+    drop(coord);
+    let throughput = requests as f64 / wall;
+    // Per-request service time (build + handoff + execute), excluding
+    // queue wait: the closed-loop workload saturates the queue, so
+    // host_us percentiles track backlog rather than serving cost.
+    let mut service = LatencyStats::new();
+    for r in &responses {
+        service.record(r.service_us);
+    }
+    println!(
+        "throughput {throughput:.0} req/s | service p50 {:.1} µs p99 {:.1} µs | accel p50 {:.1} µs p99 {:.1} µs",
+        service.p50(),
+        service.p99(),
+        accel.p50(),
+        accel.p99()
+    );
+    assert_eq!(responses.len(), requests);
+
+    sections.push((
+        "serve",
+        vec![
+            ("requests", requests as f64),
+            ("builder_threads", builders as f64),
+            ("throughput_rps", throughput),
+            ("service_p50_us", service.p50()),
+            ("service_p99_us", service.p99()),
+            ("service_mean_us", service.mean()),
+            ("host_e2e_p50_us", host.p50()),
+            ("host_e2e_p99_us", host.p99()),
+            ("accel_p50_us", accel.p50()),
+            ("accel_p99_us", accel.p99()),
+        ],
+    ));
+
+    let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let out_path = repo_root.join("BENCH_serve.json");
+    write_bench_json(&out_path, &sections).expect("writing BENCH_serve.json");
+    println!("\nwrote {}", out_path.display());
+}

@@ -50,9 +50,65 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Serialize benchmark sections to a JSON file so perf trajectories are
+/// tracked in-repo (`BENCH_serve.json` at the repo root; no serde in
+/// the offline vendored crate set, so the emitter is hand-rolled).
+///
+/// Output shape: `{"section": {"metric": 1.23, ...}, ...}` with keys in
+/// the given order. Non-finite values are written as `null`.
+pub fn write_bench_json(
+    path: &std::path::Path,
+    sections: &[(&str, Vec<(&str, f64)>)],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    for (si, (section, metrics)) in sections.iter().enumerate() {
+        writeln!(f, "  {:?}: {{", section)?;
+        for (mi, (name, value)) in metrics.iter().enumerate() {
+            let comma = if mi + 1 < metrics.len() { "," } else { "" };
+            if value.is_finite() {
+                writeln!(f, "    {:?}: {:.3}{}", name, value, comma)?;
+            } else {
+                writeln!(f, "    {:?}: null{}", name, comma)?;
+            }
+        }
+        let comma = if si + 1 < sections.len() { "," } else { "" };
+        writeln!(f, "  }}{}", comma)?;
+    }
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn write_bench_json_parses_back() {
+        let dir = std::env::temp_dir().join("grip_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        write_bench_json(
+            &path,
+            &[
+                ("serve", vec![("throughput_rps", 123.456), ("p99_us", 7.0)]),
+                ("exec", vec![("speedup", f64::NAN)]),
+            ],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::parse(&text).unwrap();
+        let serve = json.get("serve").unwrap();
+        let tput = serve.get("throughput_rps").unwrap().as_f64().unwrap();
+        assert!((tput - 123.456).abs() < 1e-9);
+        assert_eq!(serve.get("p99_us").unwrap().as_f64(), Some(7.0));
+        assert_eq!(
+            json.get("exec").unwrap().get("speedup"),
+            Some(&crate::runtime::json::Json::Null)
+        );
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn bench_measures_something() {

@@ -1,6 +1,8 @@
 //! L3 serving coordinator — the production wrapper around the GRIP
-//! stack: bounded request queue with backpressure, a worker owning the
-//! PJRT executor, nodeflow construction, cycle-simulated accelerator
+//! stack, structured as a parallel pipeline: bounded request queue with
+//! backpressure → nodeflow-builder thread pool (read-only graph +
+//! deterministic sampler, so builds parallelize) → bounded channel →
+//! executor thread owning the PJRT runtime, cycle-simulated accelerator
 //! timing, and latency metrics (p50/p99, per MLPerf practice).
 
 mod metrics;
@@ -8,5 +10,6 @@ mod server;
 
 pub use metrics::LatencyStats;
 pub use server::{
-    run_workload, Coordinator, InferenceRequest, InferenceResponse, ServeConfig,
+    run_workload, run_workload_batched, Coordinator, InferenceRequest, InferenceResponse,
+    ServeConfig,
 };

@@ -8,9 +8,18 @@ pub struct CsrGraph {
     /// offsets[v]..offsets[v+1] indexes `targets` for v's out-neighbors.
     offsets: Vec<u64>,
     targets: Vec<u32>,
+    /// Maximum out-degree, computed once at construction (partition
+    /// sizing heuristics query it on the request path).
+    max_degree: usize,
 }
 
 impl CsrGraph {
+    fn from_parts(offsets: Vec<u64>, targets: Vec<u32>) -> Self {
+        let max_degree =
+            offsets.windows(2).map(|w| (w[1] - w[0]) as usize).max().unwrap_or(0);
+        Self { offsets, targets, max_degree }
+    }
+
     /// Build from an adjacency-list iterator. Neighbor lists are kept in
     /// given order (samplers use index-based selection, so order matters
     /// only for determinism).
@@ -22,7 +31,7 @@ impl CsrGraph {
             targets.extend_from_slice(neigh);
             offsets.push(targets.len() as u64);
         }
-        Self { offsets, targets }
+        Self::from_parts(offsets, targets)
     }
 
     /// Build from an edge list (u -> v), grouping by source.
@@ -42,7 +51,7 @@ impl CsrGraph {
             targets[*c as usize] = v;
             *c += 1;
         }
-        Self { offsets, targets }
+        Self::from_parts(offsets, targets)
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -69,8 +78,9 @@ impl CsrGraph {
     }
 
     /// Maximum out-degree (used by partition sizing heuristics).
+    /// Precomputed at construction; O(1).
     pub fn max_degree(&self) -> usize {
-        (0..self.num_vertices() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+        self.max_degree
     }
 }
 
@@ -115,5 +125,15 @@ mod tests {
         let g = diamond();
         assert!((g.mean_degree() - 1.0).abs() < 1e-12);
         assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn max_degree_cached_in_both_constructors() {
+        let g = CsrGraph::from_edges(6, &[(0, 1), (0, 2), (0, 3), (2, 1), (4, 5)]);
+        assert_eq!(g.max_degree(), 3);
+        let a = CsrGraph::from_adjacency(vec![vec![], vec![0, 2, 3, 4], vec![1]]);
+        assert_eq!(a.max_degree(), 4);
+        let empty = CsrGraph::from_edges(0, &[]);
+        assert_eq!(empty.max_degree(), 0);
     }
 }

@@ -6,18 +6,39 @@
 //! against the float PJRT path executing the AOT'd JAX models, closing
 //! the loop: Pallas kernel ≍ jnp reference ≍ HLO-on-PJRT ≍ this
 //! fixed-point datapath (within quantization error).
+//!
+//! # Hot path (PR 1)
+//!
+//! The serving-path entry point is [`execute_model_into`]: weights are
+//! pre-quantized once into a resolved [`PlanArgs`] (no per-call
+//! `HashMap` lookup or `Fx16::from_f32` re-quantization), all working
+//! matrices live in a reusable [`ExecScratch`] arena (zero heap
+//! allocations per request once buffer capacities have warmed up), edges
+//! stream per output vertex from the nodeflow's destination-sorted CSR
+//! view, and the transform matmul is vertex-tiled: the `out_dim` loop is
+//! blocked into tiles of `Vt` outputs (matching the PE-array column
+//! count, [`crate::config::GripConfig::pe_cols`]) with a contiguous,
+//! autovectorizable inner MAC loop — the software mirror of the paper's
+//! vertex-tiling optimization.
+//!
+//! [`execute_model_ref`] keeps the seed edge-list implementation as the
+//! bit-identical reference for property tests and the `bench_exec`
+//! before/after microbenchmark.
 
 use std::collections::HashMap;
 
 use super::ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
 use super::program::{ModelPlan, Program, Src};
+use crate::config::GripConfig;
 use crate::fixed::{Fx16, LutConfig, TwoLevelLut};
-use crate::nodeflow::Nodeflow;
+use crate::nodeflow::{Nodeflow, NodeflowLayer};
 
 /// Execution errors (argument resolution / shape mismatches).
 #[derive(Debug)]
 pub enum ExecError {
     MissingArg(String),
+    /// An argument was present but not matrix-shaped.
+    BadShape { name: String, shape: Vec<usize> },
     DimMismatch { program: &'static str, expected: usize, got: usize },
 }
 
@@ -25,6 +46,9 @@ impl std::fmt::Display for ExecError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ExecError::MissingArg(a) => write!(f, "missing argument {a}"),
+            ExecError::BadShape { name, shape } => {
+                write!(f, "{name}: not a matrix (shape {shape:?})")
+            }
             ExecError::DimMismatch { program, expected, got } => {
                 write!(f, "{program}: expected dim {expected}, got {got}")
             }
@@ -79,7 +103,7 @@ fn get_matrix(args: &Args, name: &str) -> Result<Matrix, ExecError> {
     let (shape, data) = args.get(name).ok_or_else(|| ExecError::MissingArg(name.into()))?;
     let (rows, cols) = match shape.as_slice() {
         [r, c] => (*r, *c),
-        _ => return Err(ExecError::MissingArg(format!("{name}: not a matrix"))),
+        _ => return Err(ExecError::BadShape { name: name.into(), shape: shape.clone() }),
     };
     Ok(Matrix { rows, cols, data: data.iter().map(|&x| Fx16::from_f32(x)).collect() })
 }
@@ -89,7 +113,142 @@ fn get_scalar(args: &Args, name: &str) -> Result<f32, ExecError> {
     Ok(data[0])
 }
 
-/// Execute the full model over the nodeflow.
+/// A [`ModelPlan`]'s runtime arguments resolved once: every transform
+/// weight quantized to Q4.12 and shape-checked, every self-scale scalar
+/// folded to its fixed-point multiplier. Indexed by (layer, program) —
+/// the request path never touches the `Args` `HashMap` again.
+pub struct PlanArgs {
+    weights: Vec<Vec<Option<Matrix>>>,
+    self_scales: Vec<Vec<Option<Fx16>>>,
+}
+
+impl PlanArgs {
+    /// Resolve and validate `args` against `plan`. Shape errors surface
+    /// here instead of mid-execution.
+    pub fn resolve(plan: &ModelPlan, args: &Args) -> Result<PlanArgs, ExecError> {
+        let mut weights = Vec::with_capacity(plan.layers.len());
+        let mut self_scales = Vec::with_capacity(plan.layers.len());
+        for lp in &plan.layers {
+            let mut wrow = Vec::with_capacity(lp.programs.len());
+            let mut srow = Vec::with_capacity(lp.programs.len());
+            for prog in &lp.programs {
+                let w = match &prog.transform {
+                    Some(t) => {
+                        let m = get_matrix(args, t.weight)?;
+                        if m.rows != t.in_dim || m.cols != t.out_dim {
+                            return Err(ExecError::DimMismatch {
+                                program: prog.name,
+                                expected: t.in_dim * t.out_dim,
+                                got: m.rows * m.cols,
+                            });
+                        }
+                        Some(m)
+                    }
+                    None => None,
+                };
+                let s = match prog.self_scale {
+                    Some(SelfScale::OnePlusArg(name)) => {
+                        Some(Fx16::from_f32(1.0 + get_scalar(args, name)?))
+                    }
+                    Some(SelfScale::Const(c)) => Some(Fx16::from_f32(c)),
+                    None => None,
+                };
+                wrow.push(w);
+                srow.push(s);
+            }
+            weights.push(wrow);
+            self_scales.push(srow);
+        }
+        Ok(PlanArgs { weights, self_scales })
+    }
+
+    fn weight(&self, layer: usize, prog: usize) -> Option<&Matrix> {
+        self.weights[layer][prog].as_ref()
+    }
+
+    fn self_scale(&self, layer: usize, prog: usize) -> Option<Fx16> {
+        self.self_scales[layer][prog]
+    }
+}
+
+/// Reusable working memory for [`execute_model_into`]. Holds the
+/// activation LUT, a buffer pool for the per-program matrices, and the
+/// vertex-tile accumulators. After the first few requests every buffer
+/// has reached its steady-state capacity and the executor performs no
+/// heap allocation per request.
+pub struct ExecScratch {
+    sigmoid: TwoLevelLut,
+    pool: Vec<Vec<Fx16>>,
+    outputs: Vec<Matrix>,
+    msg: Vec<Fx16>,
+    tile: Vec<i64>,
+    vt: usize,
+}
+
+impl ExecScratch {
+    /// Default vertex-tile width = the paper PE array's 32 columns.
+    pub fn new() -> Self {
+        Self::with_tile(GripConfig::paper().pe_cols)
+    }
+
+    /// Tile width from an explicit architecture configuration.
+    pub fn for_config(cfg: &GripConfig) -> Self {
+        Self::with_tile(cfg.pe_cols)
+    }
+
+    /// Explicit vertex-tile width (`vt >= 1`).
+    pub fn with_tile(vt: usize) -> Self {
+        Self {
+            sigmoid: TwoLevelLut::new(LutConfig::sigmoid()),
+            pool: Vec::new(),
+            outputs: Vec::new(),
+            msg: Vec::new(),
+            tile: Vec::new(),
+            vt: vt.max(1),
+        }
+    }
+
+    /// Take a zero-filled matrix buffer from the pool (no allocation
+    /// once the pooled capacity covers `rows * cols`).
+    fn matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        let mut m = self.matrix_empty(rows, cols);
+        m.data.resize(rows * cols, Fx16::ZERO);
+        m
+    }
+
+    /// Take an *empty* (len 0) buffer with capacity for `rows * cols`
+    /// elements — for callers that write every element sequentially,
+    /// skipping the zero-fill pass. The caller must fill it completely
+    /// before `row()` is usable.
+    fn matrix_empty(&mut self, rows: usize, cols: usize) -> Matrix {
+        let mut data = self.pool.pop().unwrap_or_default();
+        data.clear();
+        data.reserve(rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Take a buffer initialized as a copy of `src` (one copy pass, no
+    /// zero-fill).
+    fn matrix_from_slice(&mut self, rows: usize, cols: usize, src: &[Fx16]) -> Matrix {
+        debug_assert_eq!(src.len(), rows * cols);
+        let mut m = self.matrix_empty(rows, cols);
+        m.data.extend_from_slice(src);
+        m
+    }
+
+    fn give(&mut self, data: Vec<Fx16>) {
+        self.pool.push(data);
+    }
+}
+
+impl Default for ExecScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Execute the full model over the nodeflow (convenience wrapper: one
+/// fresh [`PlanArgs`] + [`ExecScratch`] per call).
 ///
 /// * `h` — input features, row-major `[U_layer0 × in_dim]` f32
 ///   (quantized to Q4.12 on entry, as the DMA engine does).
@@ -97,6 +256,297 @@ fn get_scalar(args: &Args, name: &str) -> Result<f32, ExecError> {
 ///
 /// Returns the target embeddings, `[targets × out_dim]` f32.
 pub fn execute_model(
+    plan: &ModelPlan,
+    nf: &Nodeflow,
+    h: &[f32],
+    args: &Args,
+) -> Result<Vec<f32>, ExecError> {
+    let pargs = PlanArgs::resolve(plan, args)?;
+    let mut scratch = ExecScratch::new();
+    let mut out = Vec::new();
+    execute_model_into(plan, nf, h, &pargs, &mut scratch, &mut out)?;
+    Ok(out)
+}
+
+/// Steady-state-zero-allocation executor: resolved weights, reusable
+/// scratch arena, CSR edge streaming, vertex-tiled matmul. Writes the
+/// target embeddings into `out` (cleared first). Bit-identical to
+/// [`execute_model_ref`].
+pub fn execute_model_into(
+    plan: &ModelPlan,
+    nf: &Nodeflow,
+    h: &[f32],
+    pargs: &PlanArgs,
+    scratch: &mut ExecScratch,
+    out: &mut Vec<f32>,
+) -> Result<(), ExecError> {
+    assert_eq!(plan.layers.len(), nf.layers.len(), "plan/nodeflow layer count");
+    let l0 = &nf.layers[0];
+    let in_dim = plan.layers[0].in_dim;
+    assert_eq!(h.len(), l0.num_inputs() * in_dim, "feature matrix shape");
+
+    let mut features = scratch.matrix_empty(l0.num_inputs(), in_dim);
+    features.data.extend(h.iter().map(|&x| Fx16::from_f32(x)));
+
+    let mut outputs = std::mem::take(&mut scratch.outputs);
+    for (li, (lp, nl)) in plan.layers.iter().zip(nf.layers.iter()).enumerate() {
+        // Guard against a desynced CSR view (layers must be built via
+        // NodeflowLayer::new, not mutated through the pub fields).
+        debug_assert_eq!(nl.edge_srcs.len(), nl.edges.len(), "stale CSR edge view");
+        for (pi, prog) in lp.programs.iter().enumerate() {
+            let result = run_program(
+                prog,
+                nl,
+                &features,
+                &outputs,
+                pargs.weight(li, pi),
+                pargs.self_scale(li, pi),
+                scratch,
+            )?;
+            outputs.push(result);
+        }
+        let next = outputs.swap_remove(lp.output_program);
+        // The layer output has V rows = next layer's U rows.
+        debug_assert_eq!(next.rows, nl.num_outputs);
+        for m in outputs.drain(..) {
+            scratch.give(m.data);
+        }
+        scratch.give(std::mem::replace(&mut features, next).data);
+    }
+
+    out.clear();
+    out.extend(features.data.iter().map(|x| x.to_f32()));
+    scratch.give(features.data);
+    scratch.outputs = outputs;
+    Ok(())
+}
+
+fn run_program(
+    prog: &Program,
+    nl: &NodeflowLayer,
+    features: &Matrix,
+    outputs: &[Matrix],
+    weight: Option<&Matrix>,
+    self_scale: Option<Fx16>,
+    scratch: &mut ExecScratch,
+) -> Result<Matrix, ExecError> {
+    let src: &Matrix = match prog.source {
+        Src::LayerInput => features,
+        Src::Program(k) => &outputs[k],
+    };
+    let dim = src.cols;
+    let v = nl.num_outputs;
+
+    // ---------------------------------------------- edge-accumulate phase
+    let mut acc = match prog.domain {
+        Domain::AllInputs => scratch.matrix_from_slice(src.rows, dim, &src.data),
+        Domain::Outputs => scratch.matrix_from_slice(v, dim, &src.data[..v * dim]),
+        Domain::Edges => {
+            let mut acc = scratch.matrix(v, dim);
+            if prog.gather == GatherOp::Identity {
+                // Fast path: the message is the source row itself; stream
+                // each output vertex's sources straight out of the CSR
+                // view with no per-edge staging copy.
+                for dst in 0..v {
+                    let row = acc.row_mut(dst);
+                    match prog.reduce {
+                        ReduceOp::Sum | ReduceOp::Mean => {
+                            for &u in nl.edge_srcs_of(dst) {
+                                for (r, m) in row.iter_mut().zip(src.row(u as usize)) {
+                                    *r = r.sat_add(*m);
+                                }
+                            }
+                        }
+                        ReduceOp::Max => {
+                            for (ei, &u) in nl.edge_srcs_of(dst).iter().enumerate() {
+                                let s = src.row(u as usize);
+                                if ei == 0 {
+                                    row.copy_from_slice(s);
+                                } else {
+                                    for (r, m) in row.iter_mut().zip(s) {
+                                        *r = (*r).max(*m);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            } else {
+                // General gather UDFs stage the per-edge message once.
+                scratch.msg.clear();
+                scratch.msg.resize(dim, Fx16::ZERO);
+                let msg = &mut scratch.msg;
+                for dst in 0..v {
+                    let row = acc.row_mut(dst);
+                    for (ei, &u) in nl.edge_srcs_of(dst).iter().enumerate() {
+                        let u = u as usize;
+                        match prog.gather {
+                            GatherOp::Identity => {
+                                unreachable!("identity gather takes the staging-free fast path")
+                            }
+                            GatherOp::ProductWith(k) => {
+                                let other = outputs[k].row(u);
+                                if other.len() == 1 {
+                                    // Scalar gate broadcast (G-GCN).
+                                    let gmul = other[0];
+                                    for (m, a) in msg.iter_mut().zip(src.row(u).iter()) {
+                                        *m = a.sat_mul(gmul);
+                                    }
+                                } else {
+                                    for (m, (a, b)) in
+                                        msg.iter_mut().zip(src.row(u).iter().zip(other))
+                                    {
+                                        *m = a.sat_mul(*b);
+                                    }
+                                }
+                            }
+                            GatherOp::SumWith(k) => {
+                                let other = outputs[k].row(u);
+                                for (m, (a, b)) in msg.iter_mut().zip(src.row(u).iter().zip(other))
+                                {
+                                    *m = a.sat_add(*b);
+                                }
+                            }
+                            GatherOp::Scale(c) => {
+                                let c = Fx16::from_f32(c);
+                                for (m, a) in msg.iter_mut().zip(src.row(u).iter()) {
+                                    *m = a.sat_mul(c);
+                                }
+                            }
+                        }
+                        match prog.reduce {
+                            ReduceOp::Sum | ReduceOp::Mean => {
+                                for (r, m) in row.iter_mut().zip(msg.iter()) {
+                                    *r = r.sat_add(*m);
+                                }
+                            }
+                            ReduceOp::Max => {
+                                if ei == 0 {
+                                    row.copy_from_slice(msg);
+                                } else {
+                                    for (r, m) in row.iter_mut().zip(msg.iter()) {
+                                        *r = (*r).max(*m);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if prog.reduce == ReduceOp::Mean {
+                // The reduce PE divides by the in-degree (computed as a
+                // reciprocal multiply in hardware); the CSR view gives
+                // the degree in O(1).
+                for dst in 0..v {
+                    let deg = nl.in_degree(dst);
+                    if deg > 1 {
+                        let inv = Fx16::from_f32(1.0 / deg as f32);
+                        for r in acc.row_mut(dst) {
+                            *r = r.sat_mul(inv);
+                        }
+                    }
+                }
+            }
+            acc
+        }
+    };
+
+    // Self contribution (GIN): acc[v] += (1+eps) * src[v].
+    if let Some(scale) = self_scale {
+        for r in 0..acc.rows {
+            let s_row = src.row(r);
+            for (a, s) in acc.row_mut(r).iter_mut().zip(s_row) {
+                *a = a.sat_add(s.sat_mul(scale));
+            }
+        }
+    }
+
+    // -------------------------------------------- vertex-accumulate phase
+    let mut result = if let Some(t) = &prog.transform {
+        if t.in_dim != dim {
+            return Err(ExecError::DimMismatch { program: prog.name, expected: t.in_dim, got: dim });
+        }
+        let w = weight.expect("resolved PlanArgs carries every transform weight");
+        let out_dim = w.cols;
+        // Vertex-tiled matmul: block the output dimension into Vt-wide
+        // tiles (the PE array column count) and run the contraction with
+        // the weight row contiguous in the inner loop — cache-friendly
+        // and autovectorizable, vs the seed's column-strided walk. The
+        // accumulator is the PE column reduction tree's wide (i64)
+        // accumulate; integer adds reassociate freely, so tiling cannot
+        // change the collapsed Q4.12 result.
+        let mut y = scratch.matrix_empty(acc.rows, out_dim);
+        let vt = scratch.vt;
+        scratch.tile.clear();
+        scratch.tile.resize(vt, 0i64);
+        for r in 0..acc.rows {
+            let a_row = acc.row(r);
+            let mut o0 = 0usize;
+            while o0 < out_dim {
+                let tw = vt.min(out_dim - o0);
+                let tile = &mut scratch.tile[..tw];
+                tile.fill(0);
+                for (i, &a) in a_row.iter().enumerate() {
+                    if a.0 == 0 {
+                        continue;
+                    }
+                    let a64 = a.0 as i64;
+                    let w_row = &w.data[i * out_dim + o0..i * out_dim + o0 + tw];
+                    for (t_acc, &wv) in tile.iter_mut().zip(w_row) {
+                        *t_acc += a64 * wv.0 as i64;
+                    }
+                }
+                // Tiles collapse left-to-right, rows top-to-bottom: the
+                // append order is exactly row-major.
+                y.data.extend(tile.iter().map(|&t_acc| Fx16::from_acc(t_acc)));
+                o0 += tw;
+            }
+        }
+        debug_assert_eq!(y.data.len(), y.rows * y.cols);
+        scratch.give(acc.data);
+        y
+    } else {
+        acc
+    };
+
+    // Vertex-accumulator chaining (Fig. 4 plus-boxes).
+    if let Some(k) = prog.add_program {
+        let other = &outputs[k];
+        assert_eq!(other.cols, result.cols, "add_program dim");
+        for r in 0..result.rows {
+            for (a, b) in result.row_mut(r).iter_mut().zip(other.row(r)) {
+                *a = a.sat_add(*b);
+            }
+        }
+    }
+
+    // ------------------------------------------------ vertex-update phase
+    match prog.activate {
+        Activate::None => {}
+        Activate::Relu => {
+            for x in result.data.iter_mut() {
+                *x = x.relu();
+            }
+        }
+        Activate::Sigmoid => {
+            for x in result.data.iter_mut() {
+                *x = scratch.sigmoid.eval(*x);
+            }
+        }
+    }
+
+    Ok(result)
+}
+
+// ---------------------------------------------------------------------------
+// Reference (seed) implementation: unsorted edge-list walk
+// ---------------------------------------------------------------------------
+
+/// The seed executor, preserved verbatim as the bit-identical reference:
+/// walks the unsorted `(u, v)` edge multiset with per-edge staging and
+/// per-call weight quantization. Property tests pin the CSR hot path to
+/// this, and `bench_exec` measures the speedup against it.
+pub fn execute_model_ref(
     plan: &ModelPlan,
     nf: &Nodeflow,
     h: &[f32],
@@ -117,20 +567,19 @@ pub fn execute_model(
     for (lp, nl) in plan.layers.iter().zip(nf.layers.iter()) {
         let mut outputs: Vec<Matrix> = Vec::with_capacity(lp.programs.len());
         for prog in &lp.programs {
-            let out = run_program(prog, nl, &features, &outputs, args, &sigmoid)?;
+            let out = run_program_ref(prog, nl, &features, &outputs, args, &sigmoid)?;
             outputs.push(out);
         }
         features = outputs.swap_remove(lp.output_program);
-        // The layer output has V rows = next layer's U rows.
         debug_assert_eq!(features.rows, nl.num_outputs);
     }
 
     Ok(features.data.iter().map(|x| x.to_f32()).collect())
 }
 
-fn run_program(
+fn run_program_ref(
     prog: &Program,
-    nl: &crate::nodeflow::NodeflowLayer,
+    nl: &NodeflowLayer,
     features: &Matrix,
     outputs: &[Matrix],
     args: &Args,
@@ -204,8 +653,6 @@ fn run_program(
                 counts[dst] += 1;
             }
             if prog.reduce == ReduceOp::Mean {
-                // The reduce PE divides by the in-degree (computed as a
-                // reciprocal multiply in hardware).
                 for dst in 0..v {
                     if counts[dst] > 1 {
                         let inv = Fx16::from_f32(1.0 / counts[dst] as f32);
@@ -240,7 +687,11 @@ fn run_program(
         }
         let w = get_matrix(args, t.weight)?;
         if w.rows != t.in_dim || w.cols != t.out_dim {
-            return Err(ExecError::DimMismatch { program: prog.name, expected: t.in_dim * t.out_dim, got: w.rows * w.cols });
+            return Err(ExecError::DimMismatch {
+                program: prog.name,
+                expected: t.in_dim * t.out_dim,
+                got: w.rows * w.cols,
+            });
         }
         let mut y = Matrix::zeros(acc.rows, t.out_dim);
         for r in 0..acc.rows {
@@ -307,7 +758,8 @@ mod tests {
         let g = generate(&GeneratorParams { nodes: 500, mean_degree: 6.0, ..Default::default() });
         let nf = Nodeflow::build(&g, &Sampler::new(3), &[17], mc);
         let mut lcg = GoldenLcg::new(7);
-        let h: Vec<f32> = lcg.fill(nf.layers[0].num_inputs() * mc.f_in).iter().map(|x| x * 0.5).collect();
+        let h: Vec<f32> =
+            lcg.fill(nf.layers[0].num_inputs() * mc.f_in).iter().map(|x| x * 0.5).collect();
         (nf, h)
     }
 
@@ -396,12 +848,85 @@ mod tests {
     }
 
     #[test]
+    fn csr_path_matches_reference_path() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        for model in [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin, GnnModel::Ggcn] {
+            let args = weights_for(model, &mc);
+            let plan = compile(model, &mc);
+            let fast = execute_model(&plan, &nf, &h, &args).unwrap();
+            let slow = execute_model_ref(&plan, &nf, &h, &args).unwrap();
+            assert_eq!(fast, slow, "{model:?}");
+        }
+    }
+
+    #[test]
+    fn tile_width_does_not_change_numerics() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        let args = weights_for(GnnModel::Sage, &mc);
+        let plan = compile(GnnModel::Sage, &mc);
+        let pargs = PlanArgs::resolve(&plan, &args).unwrap();
+        let mut want: Option<Vec<f32>> = None;
+        for vt in [1usize, 3, 7, 32, 1024] {
+            let mut scratch = ExecScratch::with_tile(vt);
+            let mut out = Vec::new();
+            execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
+            match &want {
+                None => want = Some(out),
+                Some(w) => assert_eq!(&out, w, "vt={vt}"),
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        let args = weights_for(GnnModel::Ggcn, &mc);
+        let plan = compile(GnnModel::Ggcn, &mc);
+        let pargs = PlanArgs::resolve(&plan, &args).unwrap();
+        let mut scratch = ExecScratch::new();
+        let mut first = Vec::new();
+        execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut first).unwrap();
+        let mut again = Vec::new();
+        for _ in 0..3 {
+            execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut again).unwrap();
+            assert_eq!(again, first);
+        }
+    }
+
+    #[test]
     fn missing_weight_errors() {
         let mc = small_mc();
         let (nf, h) = setup(&mc);
         let plan = compile(GnnModel::Gcn, &mc);
         let err = execute_model(&plan, &nf, &h, &Args::new());
         assert!(matches!(err, Err(ExecError::MissingArg(_))));
+    }
+
+    #[test]
+    fn non_matrix_weight_is_bad_shape() {
+        let mc = small_mc();
+        let (nf, h) = setup(&mc);
+        let plan = compile(GnnModel::Gcn, &mc);
+        let mut args = Args::new();
+        // 1-D shape: present but not a matrix.
+        args.insert("w1".into(), (vec![mc.f_in * mc.f_hid], vec![0.0; mc.f_in * mc.f_hid]));
+        args.insert("w2".into(), (vec![mc.f_hid, mc.f_out], vec![0.0; mc.f_hid * mc.f_out]));
+        let err = execute_model(&plan, &nf, &h, &args);
+        match err {
+            Err(ExecError::BadShape { name, shape }) => {
+                assert_eq!(name, "w1");
+                assert_eq!(shape, vec![mc.f_in * mc.f_hid]);
+            }
+            other => panic!("expected BadShape, got {other:?}"),
+        }
+        // And the message names the argument.
+        let mut args3 = args.clone();
+        args3.insert("w1".into(), (vec![2, 3, 4], vec![0.0; 24]));
+        let msg = execute_model(&plan, &nf, &h, &args3).unwrap_err().to_string();
+        assert!(msg.contains("w1") && msg.contains("not a matrix"), "{msg}");
     }
 
     #[test]

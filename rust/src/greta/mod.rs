@@ -19,6 +19,9 @@ mod exec;
 mod ops;
 mod program;
 
-pub use exec::{exec_test_args, execute_model, Args as ExecArgs, ExecError};
+pub use exec::{
+    exec_test_args, execute_model, execute_model_into, execute_model_ref, Args as ExecArgs,
+    ExecError, ExecScratch, PlanArgs,
+};
 pub use ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
 pub use program::{compile, GnnModel, LayerPlan, MatMul, ModelPlan, Program, Src, ALL_MODELS};

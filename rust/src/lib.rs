@@ -24,8 +24,9 @@
 //!   TPU+, Graphicionado-like; Sec. VIII-F) performance models.
 //! * [`runtime`] — PJRT executor loading the AOT-compiled JAX/Pallas HLO
 //!   artifacts; Python never runs on the request path.
-//! * [`coordinator`] — the low-latency serving loop: request queue, batcher,
-//!   nodeflow builder, scheduler, and latency metrics (p50/p99).
+//! * [`coordinator`] — the low-latency serving pipeline: bounded request
+//!   queue, parallel nodeflow-builder pool, executor thread, batched
+//!   multi-target requests, and latency metrics (p50/p99).
 //! * [`repro`] — one generator per paper table and figure.
 
 pub mod baseline;

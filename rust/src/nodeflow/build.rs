@@ -1,5 +1,12 @@
 //! Nodeflow construction from a graph + sampler, and conversion to the
 //! padded dense matrices the AOT'd models consume.
+//!
+//! Since PR 1 every layer also carries a **destination-sorted CSR** view
+//! of its edge multiset (`edge_offsets` + `edge_srcs`), built once here
+//! by a stable counting sort. The functional executor and the cycle
+//! simulator stream edges per output vertex from this view instead of
+//! re-walking the unsorted `(u, v)` list with per-edge bookkeeping —
+//! the software analogue of the paper's edge-unit specialization.
 
 use super::sampler::Sampler;
 use crate::config::ModelConfig;
@@ -13,38 +20,81 @@ use std::collections::HashMap;
 /// * every edge is `(src_idx < inputs.len(), dst_idx < num_outputs)`.
 /// * edges form a multiset (the sampler draws with replacement); the
 ///   multiplicity is the sample weight.
+/// * `edge_offsets`/`edge_srcs` are the destination-sorted CSR view of
+///   `edges`, stable within each destination (so per-destination edge
+///   order matches the original list — first-touch reduce semantics and
+///   saturating-sum order are preserved bit-for-bit). Construct layers
+///   through [`NodeflowLayer::new`] to keep the two views consistent.
 #[derive(Debug, Clone)]
 pub struct NodeflowLayer {
     /// Global vertex ids of U; the first `num_outputs` are V.
     pub inputs: Vec<u32>,
     pub num_outputs: usize,
-    /// Edges as (index into `inputs`, index into V).
+    /// Edges as (index into `inputs`, index into V), in sample order.
     pub edges: Vec<(u32, u32)>,
+    /// CSR row pointers: `edge_srcs[edge_offsets[v]..edge_offsets[v+1]]`
+    /// are the source indices of output vertex `v`'s incoming edges.
+    pub edge_offsets: Vec<u32>,
+    /// Edge sources, grouped by destination (destination-sorted CSR).
+    pub edge_srcs: Vec<u32>,
 }
 
 impl NodeflowLayer {
+    /// Build a layer, deriving the destination-sorted CSR edge view.
+    pub fn new(inputs: Vec<u32>, num_outputs: usize, edges: Vec<(u32, u32)>) -> Self {
+        let (edge_offsets, edge_srcs) = dest_sorted_csr(num_outputs, &edges);
+        Self { inputs, num_outputs, edges, edge_offsets, edge_srcs }
+    }
+
     pub fn num_inputs(&self) -> usize {
         self.inputs.len()
     }
 
+    /// Incoming edge sources (with multiplicity, original sample order)
+    /// of output vertex `v` — the CSR fast path.
+    pub fn edge_srcs_of(&self, v: usize) -> &[u32] {
+        &self.edge_srcs[self.edge_offsets[v] as usize..self.edge_offsets[v + 1] as usize]
+    }
+
+    /// In-degree (with multiplicity) of output vertex `v`, O(1).
+    pub fn in_degree(&self, v: usize) -> usize {
+        (self.edge_offsets[v + 1] - self.edge_offsets[v]) as usize
+    }
+
     /// In-degree (with multiplicity) per output vertex.
     pub fn in_degrees(&self) -> Vec<usize> {
-        let mut d = vec![0usize; self.num_outputs];
-        for &(_, v) in &self.edges {
-            d[v as usize] += 1;
-        }
-        d
+        (0..self.num_outputs).map(|v| self.in_degree(v)).collect()
     }
 
     /// An identity nodeflow over n vertices (paper Fig. 3a: per-vertex
     /// programs iterate over self-edges only).
     pub fn identity(n: usize) -> Self {
-        Self {
-            inputs: (0..n as u32).collect(),
-            num_outputs: n,
-            edges: (0..n as u32).map(|i| (i, i)).collect(),
-        }
+        Self::new(
+            (0..n as u32).collect(),
+            n,
+            (0..n as u32).map(|i| (i, i)).collect(),
+        )
     }
+}
+
+/// Stable counting sort of the edge multiset by destination. Returns
+/// `(offsets, srcs)` with `offsets.len() == num_outputs + 1`.
+fn dest_sorted_csr(num_outputs: usize, edges: &[(u32, u32)]) -> (Vec<u32>, Vec<u32>) {
+    let mut offsets = vec![0u32; num_outputs + 1];
+    for &(_, v) in edges {
+        offsets[v as usize + 1] += 1;
+    }
+    for i in 1..offsets.len() {
+        offsets[i] += offsets[i - 1];
+    }
+    let mut cursor: Vec<u32> = offsets[..num_outputs].to_vec();
+    let mut srcs = vec![0u32; edges.len()];
+    for &(u, v) in edges {
+        let c = &mut cursor[v as usize];
+        srcs[*c as usize] = u;
+        *c += 1;
+    }
+    (offsets, srcs)
 }
 
 /// How the dense nodeflow matrix encodes edge multiplicity.
@@ -89,7 +139,7 @@ impl Nodeflow {
                 e2.push((idx, vi as u32));
             }
         }
-        let layer2 = NodeflowLayer { inputs: u2, num_outputs: targets.len(), edges: e2 };
+        let layer2 = NodeflowLayer::new(u2, targets.len(), e2);
 
         // ---- input layer (layer index 0): V = U2, U = V ∪ samples
         let v1 = layer2.inputs.clone();
@@ -108,7 +158,7 @@ impl Nodeflow {
                 e1.push((idx, vi as u32));
             }
         }
-        let layer1 = NodeflowLayer { inputs: u1, num_outputs: v1.len(), edges: e1 };
+        let layer1 = NodeflowLayer::new(u1, v1.len(), e1);
 
         Nodeflow { layers: vec![layer1, layer2], targets: targets.to_vec() }
     }
@@ -215,6 +265,40 @@ mod tests {
     }
 
     #[test]
+    fn csr_view_is_stable_destination_sort() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[7, 21, 90], &mc);
+        for l in &nf.layers {
+            // offsets cover the edge multiset exactly
+            assert_eq!(l.edge_offsets.len(), l.num_outputs + 1);
+            assert_eq!(l.edge_offsets[0], 0);
+            assert_eq!(*l.edge_offsets.last().unwrap() as usize, l.edges.len());
+            assert_eq!(l.edge_srcs.len(), l.edges.len());
+            // per destination: same sources, same relative order as the
+            // unsorted list (stability)
+            for v in 0..l.num_outputs {
+                let want: Vec<u32> =
+                    l.edges.iter().filter(|&&(_, d)| d as usize == v).map(|&(u, _)| u).collect();
+                assert_eq!(l.edge_srcs_of(v), &want[..], "dst {v}");
+                assert_eq!(l.in_degree(v), want.len());
+            }
+        }
+    }
+
+    #[test]
+    fn in_degrees_match_edge_list() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[13, 44], &mc);
+        for l in &nf.layers {
+            let mut want = vec![0usize; l.num_outputs];
+            for &(_, v) in &l.edges {
+                want[v as usize] += 1;
+            }
+            assert_eq!(l.in_degrees(), want);
+        }
+    }
+
+    #[test]
     fn dense_mean_rows_sum_to_one() {
         let (g, s, mc) = setup();
         let nf = Nodeflow::build(&g, &s, &[3], &mc);
@@ -253,6 +337,9 @@ mod tests {
         assert_eq!(l.num_outputs, 5);
         assert_eq!(l.edges.len(), 5);
         assert!(l.edges.iter().all(|&(u, v)| u == v));
+        for v in 0..5 {
+            assert_eq!(l.edge_srcs_of(v), &[v as u32]);
+        }
     }
 
     #[test]

@@ -35,17 +35,21 @@ pub struct PartitionedLayer {
 }
 
 impl PartitionedLayer {
-    /// Partition `layer` into N×M blocks.
+    /// Partition `layer` into N×M blocks, streaming the layer's
+    /// destination-sorted CSR edge view so each output chunk's blocks
+    /// fill contiguously (edges within a block are grouped by
+    /// destination; no consumer depends on intra-block order).
     pub fn new(layer: &NodeflowLayer, n: usize, m: usize) -> Self {
         assert!(n > 0 && m > 0);
         let num_input_chunks = layer.num_inputs().div_ceil(n).max(1);
         let num_output_chunks = layer.num_outputs.div_ceil(m).max(1);
         let mut blocks = vec![Block::default(); num_input_chunks * num_output_chunks];
-        for &(u, v) in &layer.edges {
-            let (i, j) = (u as usize / n, v as usize / m);
-            blocks[j * num_input_chunks + i]
-                .edges
-                .push((u % n as u32, v % m as u32));
+        for v in 0..layer.num_outputs {
+            let (j, v_local) = (v / m, (v % m) as u32);
+            for &u in layer.edge_srcs_of(v) {
+                let i = u as usize / n;
+                blocks[j * num_input_chunks + i].edges.push((u % n as u32, v_local));
+            }
         }
         let mut chunk_input_sizes = vec![0usize; num_input_chunks];
         for i in 0..num_input_chunks {
@@ -91,11 +95,11 @@ mod tests {
 
     fn layer() -> NodeflowLayer {
         // 10 inputs, 4 outputs, a spread of edges
-        NodeflowLayer {
-            inputs: (0..10).collect(),
-            num_outputs: 4,
-            edges: vec![(0, 0), (9, 0), (3, 1), (4, 1), (4, 1), (7, 2), (2, 3), (8, 3)],
-        }
+        NodeflowLayer::new(
+            (0..10).collect(),
+            4,
+            vec![(0, 0), (9, 0), (3, 1), (4, 1), (4, 1), (7, 2), (2, 3), (8, 3)],
+        )
     }
 
     #[test]

@@ -69,6 +69,22 @@ impl FeatureStore {
     }
 }
 
+/// Does `nf` fit the artifact's padded dense shapes? The single home
+/// of the padding contract (`args[0]`/`args[1]` are the `[pad_v ×
+/// pad_u]` layer matrices) — the coordinator pre-checks with this to
+/// degrade gracefully instead of tripping `to_dense`'s panic.
+pub fn fits_padding(artifact: &ModelArtifact, nf: &Nodeflow) -> bool {
+    if nf.layers.len() != 2 {
+        return false;
+    }
+    let a1 = &artifact.args[0].shape;
+    let a2 = &artifact.args[1].shape;
+    nf.layers[0].num_outputs <= a1[0]
+        && nf.layers[0].num_inputs() <= a1[1]
+        && nf.layers[1].num_outputs <= a2[0]
+        && nf.layers[1].num_inputs() <= a2[1]
+}
+
 /// Build only the per-request dynamic args (a1, a2, h) for
 /// [`crate::runtime::Executor::run_prepared`] — weights stay
 /// device-resident. Feature rows come from the memoizing
@@ -80,6 +96,7 @@ pub fn build_dynamic_args(
     store: &mut FeatureStore,
 ) -> Result<Vec<Vec<f32>>> {
     ensure!(nf.layers.len() == 2, "AOT artifacts are 2-layer");
+    ensure!(fits_padding(artifact, nf), "nodeflow exceeds the artifact's padded shapes");
     let a1_shape = &artifact.args[0].shape;
     let a2_shape = &artifact.args[1].shape;
     let h_shape = &artifact.args[2].shape;

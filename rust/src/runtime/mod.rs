@@ -16,5 +16,7 @@ pub mod manifest;
 
 pub use executor::{Executor, LoadedModel};
 pub use golden::{golden_args, serving_weights};
-pub use inputs::{build_args, build_args_cached, build_dynamic_args, feature_rows, FeatureStore};
+pub use inputs::{
+    build_args, build_args_cached, build_dynamic_args, feature_rows, fits_padding, FeatureStore,
+};
 pub use manifest::{ArgSpec, Manifest, ModelArtifact, PadShapes};

@@ -85,29 +85,38 @@ struct ColumnWork {
 
 fn column_work(part: &PartitionedLayer, cache: bool) -> Vec<ColumnWork> {
     let n = part.chunk_inputs;
-    let mut seen = vec![false; part.num_input_chunks * n];
+    let total_rows = part.num_input_chunks * n;
+    let mut seen = vec![false; total_rows];
+    // Epoch-stamped touch marks: `touched[g] == epoch` ⇔ row g was
+    // touched in the current column. One flat Vec reused across columns
+    // (epoch = column index + 1) replaces the seed's per-column HashSet
+    // — no hashing, no per-column allocation, no clearing pass.
+    let mut touched = vec![0u32; total_rows];
     let mut cols = Vec::with_capacity(part.num_output_chunks);
     for j in 0..part.num_output_chunks {
-        let mut touched = std::collections::HashSet::new();
+        let epoch = j as u32 + 1;
+        let mut touched_rows = 0usize;
+        let mut new_rows = 0usize;
         let mut edges = 0usize;
         for (i, block) in part.column(j).iter().enumerate() {
             edges += block.edges.len();
             for &(u_local, _) in &block.edges {
-                touched.insert(i * n + u_local as usize);
-            }
-        }
-        let mut new_rows = 0usize;
-        for &g in &touched {
-            if !seen[g] {
-                new_rows += 1;
-                if cache {
-                    seen[g] = true;
+                let g = i * n + u_local as usize;
+                if touched[g] != epoch {
+                    touched[g] = epoch;
+                    touched_rows += 1;
+                    if !seen[g] {
+                        new_rows += 1;
+                        if cache {
+                            seen[g] = true;
+                        }
+                    }
                 }
             }
         }
         cols.push(ColumnWork {
             new_rows,
-            touched_rows: touched.len(),
+            touched_rows,
             out_rows: part.chunk_output_sizes[j],
             edges,
         });

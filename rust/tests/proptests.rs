@@ -8,7 +8,7 @@
 use grip::config::{GripConfig, ModelConfig};
 use grip::fixed::{Fx16, LutConfig, TwoLevelLut};
 use grip::graph::{generate, GeneratorParams};
-use grip::greta::{compile, GnnModel};
+use grip::greta::{compile, exec_test_args, execute_model, execute_model_ref, GnnModel, ALL_MODELS};
 use grip::nodeflow::{Nodeflow, NodeflowLayer, PartitionedLayer, Sampler};
 use grip::rng::SplitMix64;
 use grip::sim::simulate;
@@ -29,7 +29,27 @@ fn random_layer(rng: &mut SplitMix64) -> NodeflowLayer {
     let edges = (0..num_edges)
         .map(|_| (rng.gen_range(num_inputs) as u32, rng.gen_range(num_outputs) as u32))
         .collect();
-    NodeflowLayer { inputs: (0..num_inputs as u32).collect(), num_outputs, edges }
+    NodeflowLayer::new((0..num_inputs as u32).collect(), num_outputs, edges)
+}
+
+// ------------------------------------------------------ CSR edge view
+#[test]
+fn prop_csr_view_matches_edge_list() {
+    for_cases(300, |case, rng| {
+        let layer = random_layer(rng);
+        assert_eq!(layer.edge_offsets.len(), layer.num_outputs + 1, "case {case}");
+        assert_eq!(layer.edge_srcs.len(), layer.edges.len(), "case {case}");
+        for v in 0..layer.num_outputs {
+            // Same sources, same relative order (stable counting sort).
+            let want: Vec<u32> = layer
+                .edges
+                .iter()
+                .filter(|&&(_, d)| d as usize == v)
+                .map(|&(u, _)| u)
+                .collect();
+            assert_eq!(layer.edge_srcs_of(v), &want[..], "case {case} dst {v}");
+        }
+    });
 }
 
 // ---------------------------------------------------------- partitioning
@@ -109,6 +129,45 @@ fn prop_nodeflow_invariants() {
             let src = nf.layers[1].inputs[us as usize];
             let dst = nf.layers[1].inputs[vd as usize];
             assert!(g.neighbors(dst).contains(&src), "case {case}");
+        }
+    });
+}
+
+// ------------------------------------------------------------- executor
+/// PR 1 acceptance: the destination-sorted CSR executor must be
+/// bit-identical to the seed edge-list executor for all four models —
+/// including GraphSAGE's `ReduceOp::Max` first-touch semantics and
+/// order-sensitive saturating sums, which only survive because the CSR
+/// sort is stable within each destination.
+#[test]
+fn prop_csr_executor_bit_identical_to_edge_list() {
+    let g = generate(&GeneratorParams { nodes: 2_000, mean_degree: 9.0, ..Default::default() });
+    for_cases(30, |case, rng| {
+        let mc = ModelConfig {
+            sample1: 2 + rng.gen_range(8),
+            sample2: 1 + rng.gen_range(6),
+            f_in: 4 + rng.gen_range(12),
+            f_hid: 4 + rng.gen_range(10),
+            f_out: 2 + rng.gen_range(8),
+        };
+        let s = Sampler::new(rng.next_u64());
+        let mut targets: Vec<u32> =
+            (0..1 + rng.gen_range(3)).map(|_| rng.gen_range(2_000) as u32).collect();
+        targets.sort_unstable();
+        targets.dedup();
+        let nf = Nodeflow::build(&g, &s, &targets, &mc);
+        let h: Vec<f32> = (0..nf.layers[0].num_inputs() * mc.f_in)
+            .map(|_| (rng.gen_f64() - 0.5) as f32)
+            .collect();
+        for model in ALL_MODELS {
+            let plan = compile(model, &mc);
+            let mut args = exec_test_args(&plan, rng.next_u64());
+            args.insert("eps1".into(), (vec![], vec![0.15]));
+            args.insert("eps2".into(), (vec![], vec![0.25]));
+            let fast = execute_model(&plan, &nf, &h, &args).unwrap();
+            let slow = execute_model_ref(&plan, &nf, &h, &args).unwrap();
+            assert_eq!(fast, slow, "case {case} model {model:?}");
+            assert_eq!(fast.len(), targets.len() * mc.f_out, "case {case} {model:?}");
         }
     });
 }

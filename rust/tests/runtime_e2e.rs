@@ -148,7 +148,7 @@ fn serving_coordinator_with_numerics() {
     let g = Dataset::Youtube.generate(0.002, 5);
     let coord = Coordinator::start(g, 7, ServeConfig::default()).unwrap();
     let resp = coord
-        .infer(InferenceRequest { id: 1, model: GnnModel::Gcn, target: 9 })
+        .infer(InferenceRequest::single(1, GnnModel::Gcn, 9))
         .unwrap();
     assert_eq!(resp.embedding.len(), 256);
     assert!(resp.embedding.iter().all(|x| x.is_finite()));
@@ -166,15 +166,15 @@ fn different_targets_different_embeddings() {
     let g = Dataset::Youtube.generate(0.002, 5);
     let coord = Coordinator::start(g, 7, ServeConfig::default()).unwrap();
     let a = coord
-        .infer(InferenceRequest { id: 1, model: GnnModel::Gcn, target: 9 })
+        .infer(InferenceRequest::single(1, GnnModel::Gcn, 9))
         .unwrap();
     let b = coord
-        .infer(InferenceRequest { id: 2, model: GnnModel::Gcn, target: 1009 })
+        .infer(InferenceRequest::single(2, GnnModel::Gcn, 1009))
         .unwrap();
     assert_ne!(a.embedding, b.embedding);
     // Determinism: same target twice gives the same embedding.
     let a2 = coord
-        .infer(InferenceRequest { id: 3, model: GnnModel::Gcn, target: 9 })
+        .infer(InferenceRequest::single(3, GnnModel::Gcn, 9))
         .unwrap();
     assert_eq!(a.embedding, a2.embedding);
 }

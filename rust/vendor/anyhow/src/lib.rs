@@ -1,0 +1,229 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so the subset of the
+//! anyhow API this workspace uses is reimplemented here behind the same
+//! crate name: [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, and the [`Context`] extension trait. Swapping the
+//! real crate back in is a one-line change in `Cargo.toml`.
+//!
+//! Semantics match anyhow where it matters for callers: `Error` wraps
+//! any `std::error::Error + Send + Sync + 'static`, converts from such
+//! errors via `?`, and deliberately does **not** implement
+//! `std::error::Error` itself (so the blanket `From` impl does not
+//! collide with the reflexive one).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error, convertible from any standard error.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` produces).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow renders the message (plus a cause chain); keep the
+        // message so `main() -> Result<()>` failures read well.
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        while let Some(cause) = source {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` defaulted to [`Error`], as in anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Message-only error payload backing [`Error::msg`].
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display> StdError for MessageError<M> {}
+
+/// Attach context to errors, as in anyhow (message-flattening variant:
+/// the context string and the underlying error are joined into one
+/// message rather than kept as a cause chain).
+pub trait Context<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or an error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 3 bad");
+        let e2 = anyhow!("{}: {}", "ctx", 7);
+        assert_eq!(e2.to_string(), "ctx: 7");
+        let io = std::io::Error::other("boom");
+        let e3 = anyhow!(io);
+        assert_eq!(e3.to_string(), "boom");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", true);
+            Ok(1)
+        }
+        fn g() -> Result<u32> {
+            bail!("nope")
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "wanted true");
+        assert_eq!(g().unwrap_err().to_string(), "nope");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::other("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        let e2 = o.with_context(|| format!("missing {}", 9)).unwrap_err();
+        assert_eq!(e2.to_string(), "missing 9");
+    }
+}
