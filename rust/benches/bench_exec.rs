@@ -1,14 +1,16 @@
 //! Fixed-point executor microbenchmark: seed edge-list path vs the
 //! destination-sorted CSR + vertex-tiled + scratch-arena hot path, on a
-//! 10k-node generated graph — plus a 500-request serving-pipeline run.
-//! Emits `BENCH_serve.json` at the repo root so the perf trajectory is
-//! tracked from PR 1 onward.
+//! 10k-node generated graph — plus a 500-request closed-loop
+//! serving-pipeline run and an open-loop serve-under-load sweep
+//! (arrival rate × shard count, SLO batching, degree-aware feature
+//! cache). Emits `BENCH_serve.json` at the repo root so the perf
+//! trajectory is tracked from PR 1 onward.
 //!
 //! Run: `cargo bench --bench bench_exec` (or the produced binary).
 
 use grip::benchutil::{bench, black_box, write_bench_json};
 use grip::config::ModelConfig;
-use grip::coordinator::{run_workload, Coordinator, LatencyStats, ServeConfig};
+use grip::coordinator::{run_workload, BatchConfig, Coordinator, LatencyStats, ServeConfig};
 use grip::graph::{generate, GeneratorParams};
 use grip::greta::{
     compile, exec_test_args, execute_model_into, execute_model_ref, ExecScratch, GnnModel,
@@ -16,6 +18,7 @@ use grip::greta::{
 };
 use grip::nodeflow::{Nodeflow, Sampler};
 use grip::rng::SplitMix64;
+use grip::serve::{poisson, run_sweep, ModelMix, OpenLoopConfig};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -110,6 +113,7 @@ fn main() {
 
     // ---------------- serving pipeline: 500 requests, timing path ----------
     println!("\n== serving pipeline: 500 requests over the 10k-node graph ==");
+    let g_sweep = g.clone();
     let cfg = ServeConfig { numerics: false, ..Default::default() };
     let builders = cfg.builders;
     let coord = Coordinator::start(g, 17, cfg).expect("coordinator start");
@@ -154,11 +158,40 @@ fn main() {
         ],
     ));
 
+    // ------------- open-loop serve-under-load: rate x shards (PR 2) --------
+    // Fixed-point numerics with SLO batching and the shared degree-aware
+    // feature cache; feature dims shrunk (sampling unchanged) so the
+    // sweep finishes in seconds — `grip serve-bench --paper-dims` runs
+    // the full-size version.
+    println!("\n== open-loop serving sweep: arrival rate x shard count ==");
+    let base = OpenLoopConfig {
+        requests: 120,
+        mix: ModelMix::default(),
+        model_cfg: ModelConfig { f_in: 64, f_hid: 48, f_out: 16, ..ModelConfig::paper() },
+        batch: Some(BatchConfig::default()),
+        seed: 17,
+        ..Default::default()
+    };
+    let sweep = run_sweep(&g_sweep, &[50.0, 100.0, 200.0], &[1, 4], &base, poisson).expect("sweep");
+    for (label, r) in &sweep {
+        println!(
+            "{label:<32} e2e p50 {:>9.0} µs p99 {:>9.0} µs | cache hit {:>5.1}% (sim {:>5.1}%)",
+            r.e2e.p50(),
+            r.e2e.p99(),
+            r.stats.cache_hit_rate * 100.0,
+            r.stats.sim_feature_hit_rate * 100.0
+        );
+    }
+
+    let mut all = sections;
+    for (label, r) in &sweep {
+        all.push((label.as_str(), r.metrics()));
+    }
     let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("rust/ has a parent")
         .to_path_buf();
     let out_path = repo_root.join("BENCH_serve.json");
-    write_bench_json(&out_path, &sections).expect("writing BENCH_serve.json");
+    write_bench_json(&out_path, &all).expect("writing BENCH_serve.json");
     println!("\nwrote {}", out_path.display());
 }

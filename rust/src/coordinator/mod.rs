@@ -1,9 +1,12 @@
 //! L3 serving coordinator — the production wrapper around the GRIP
-//! stack, structured as a parallel pipeline: bounded request queue with
-//! backpressure → nodeflow-builder thread pool (read-only graph +
-//! deterministic sampler, so builds parallelize) → bounded channel →
-//! executor thread owning the PJRT runtime, cycle-simulated accelerator
-//! timing, and latency metrics (p50/p99, per MLPerf practice).
+//! stack, structured as a batched, sharded parallel pipeline:
+//! optional SLO-aware dynamic batcher ([`crate::serve::Batcher`]) →
+//! bounded request queue with backpressure → nodeflow-builder thread
+//! pool (read-only graph + deterministic sampler, so builds
+//! parallelize) → bounded channel → executor shard pool
+//! ([`crate::serve::ShardPool`]: fixed-point executors behind a shared
+//! degree-aware feature cache; PJRT pinned to shard 0) — with latency
+//! metrics (p50/p99, per MLPerf practice).
 
 mod metrics;
 mod server;
@@ -13,3 +16,6 @@ pub use server::{
     run_workload, run_workload_batched, Coordinator, InferenceRequest, InferenceResponse,
     ServeConfig,
 };
+// Re-exported so serving callers configure batching without importing
+// the serve module separately.
+pub use crate::serve::{BatchConfig, ServeStats};

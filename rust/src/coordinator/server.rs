@@ -1,8 +1,14 @@
-//! The low-latency serving coordinator (L3), organized as a parallel
-//! pipeline since PR 1:
+//! The low-latency serving coordinator (L3), organized since PR 2 as a
+//! batched, sharded parallel pipeline:
 //!
 //! ```text
-//!   submit() ──▶ bounded job queue ──▶ N nodeflow-builder threads
+//!   submit() ──▶ [SLO-aware dynamic batcher]          (optional stage:
+//!                 coalesces compatible single-target   serve::Batcher,
+//!                 requests into multi-target batches   batch-by-deadline)
+//!                 under the latency budget
+//!                       │
+//!                       ▼
+//!                bounded job queue ──▶ N nodeflow-builder threads
 //!                (backpressure)        (sampling + CSR build; the
 //!                                       graph and sampler are
 //!                                       read-only, so builds for
@@ -13,38 +19,50 @@
 //!                                      bounded built-nodeflow channel
 //!                                             │
 //!                                             ▼
-//!                                      executor thread (owns the
-//!                                      non-Send PJRT executor +
-//!                                      feature store; cycle-sims the
-//!                                      accelerator and runs the real
-//!                                      numerics) ──▶ per-request reply
+//!                                  sharded executor pool (serve::ShardPool):
+//!                                  K fixed-point executors, each owning
+//!                                  its own PlanArgs + ExecScratch, all
+//!                                  fronted by one shared degree-aware
+//!                                  feature cache; the non-Send PJRT
+//!                                  executor stays pinned to shard 0
+//!                                  (PJRT numerics force K = 1)
+//!                                             │
+//!                                             ▼
+//!                                      per-request replies (a coalesced
+//!                                      batch fans back out: each caller
+//!                                      gets its own embedding slice)
 //! ```
 //!
 //! Nodeflow construction — the dominant host-side cost — overlaps with
-//! execution of earlier requests instead of serializing in front of it.
-//! Requests may complete out of submission order; each reply travels on
-//! its own channel, so callers are unaffected. The deterministic
-//! sampler keys samples by (vertex, layer), so moving builds across
-//! threads cannot change any request's nodeflow.
+//! execution of earlier requests, and execution itself now scales
+//! across cores for the fixed-point path. Requests may complete out of
+//! submission order; each reply travels on its own channel, so callers
+//! are unaffected. The deterministic sampler keys samples by (vertex,
+//! layer) and the serving weights/features are synthesized from vertex
+//! ids, so neither moving builds across threads, nor moving execution
+//! across shards, nor coalescing requests into batches can change any
+//! request's numeric reply (pinned by `tests/serve_props.rs`).
 //!
 //! Requests carry a batch of target vertices: a multi-target request
 //! shares one nodeflow build and one simulated accelerator pass
 //! ([`run_workload_batched`] drives this). The AOT artifacts are padded
-//! for the paper's batch-1 online-inference regime, so batched requests
-//! fall back to timing-only responses when their nodeflow exceeds the
-//! artifact padding.
+//! for the paper's batch-1 online-inference regime, so on the PJRT path
+//! batched requests degrade to replies with
+//! [`InferenceResponse::timing_only`] set when their nodeflow exceeds
+//! the artifact padding.
 
 use super::metrics::LatencyStats;
 use crate::config::{GripConfig, ModelConfig};
 use crate::graph::CsrGraph;
-use crate::greta::{compile, GnnModel, ModelPlan, ALL_MODELS};
+use crate::greta::GnnModel;
 use crate::nodeflow::{Nodeflow, Sampler};
-use crate::runtime::{build_dynamic_args, fits_padding, Executor, FeatureStore};
-use crate::sim::simulate;
+use crate::serve::{
+    BatchConfig, Batcher, ExecJob, Pending, ReplySlot, ServeStats, ShardPool, ShardSpec,
+};
 use anyhow::{anyhow, ensure, Result};
-use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One inference request: a batch of target vertices served from one
 /// shared nodeflow (single-target is the common online case).
@@ -66,17 +84,18 @@ impl InferenceRequest {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
-    /// Target embeddings (`targets.len() × f_out` values, row-major)
-    /// from the PJRT numeric path; empty when numerics are off or the
-    /// batched nodeflow exceeds the AOT padding.
+    /// Target embeddings (`targets.len() × f_out` values, row-major):
+    /// PJRT float numerics on shard 0, or the Q4.12 fixed-point
+    /// datapath when serving with `fixed_numerics`. Empty iff
+    /// `timing_only`.
     pub embedding: Vec<f32>,
     /// Simulated GRIP accelerator latency (µs) for this nodeflow.
     pub accel_us: f64,
     /// Wall-clock host-side latency (µs) from submission to response:
-    /// queue wait + nodeflow build + execution. Under a closed-loop
-    /// workload that submits everything up front this is dominated by
-    /// queue backlog; use [`InferenceResponse::service_us`] for the
-    /// per-request serving cost.
+    /// batching delay + queue wait + nodeflow build + execution. Under
+    /// a closed-loop workload that submits everything up front this is
+    /// dominated by queue backlog; use [`InferenceResponse::service_us`]
+    /// for the per-request serving cost.
     pub host_us: f64,
     /// Wall-clock service time (µs) excluding queue wait: measured from
     /// the moment a builder thread dequeues the request (nodeflow build
@@ -84,29 +103,67 @@ pub struct InferenceResponse {
     pub service_us: f64,
     /// Unique 2-hop neighborhood size of the request.
     pub neighborhood: usize,
+    /// True when no numeric path produced an embedding: numerics are
+    /// disabled, PJRT is unavailable, or the (batched) nodeflow
+    /// exceeded the AOT artifact padding. Previously such replies were
+    /// indistinguishable from numeric ones except by `embedding.len()`.
+    pub timing_only: bool,
 }
 
-/// A submitted request travelling through the pipeline.
-struct Job {
+/// A submission travelling to the batcher stage.
+struct Submission {
     req: InferenceRequest,
     reply: mpsc::Sender<Result<InferenceResponse, String>>,
     t_submit: Instant,
 }
 
-/// A job with its nodeflow built, ready for the executor stage.
-struct Built {
-    job: Job,
-    nf: Nodeflow,
-    /// When a builder dequeued the job (start of service time).
-    t_dequeue: Instant,
+/// A (possibly coalesced) unit of builder work.
+struct Job {
+    model: GnnModel,
+    targets: Vec<u32>,
+    members: Vec<ReplySlot>,
 }
 
-/// Serving coordinator handle. Owns the builder pool and the executor
-/// thread; dropping it drains and joins the pipeline.
+impl Job {
+    /// A job carrying exactly one caller's request (the direct-submit
+    /// and batcher-passthrough shape).
+    fn single(
+        req: InferenceRequest,
+        reply: mpsc::Sender<Result<InferenceResponse, String>>,
+        t_submit: Instant,
+    ) -> Job {
+        Job {
+            model: req.model,
+            members: vec![ReplySlot {
+                id: req.id,
+                n_targets: req.targets.len(),
+                t_submit,
+                reply,
+            }],
+            targets: req.targets,
+        }
+    }
+}
+
+/// The coordinator's front door: straight to the job queue, or through
+/// the dynamic batcher.
+enum Front {
+    Direct(mpsc::SyncSender<Job>),
+    Batched(mpsc::Sender<Submission>),
+}
+
+/// Serving coordinator handle. Owns the batcher, builder pool, and
+/// executor shard pool; dropping it drains and joins the pipeline
+/// front to back.
 pub struct Coordinator {
-    tx: Option<mpsc::SyncSender<Job>>,
+    front: Option<Front>,
+    batcher: Option<std::thread::JoinHandle<()>>,
     builders: Vec<std::thread::JoinHandle<()>>,
-    executor: Option<std::thread::JoinHandle<()>>,
+    pool: Option<ShardPool>,
+    /// Jobs currently inside the pipeline (enqueued, building, or
+    /// executing). The batcher flushes immediately while this is 0 —
+    /// batching can only add latency to an idle pipeline.
+    inflight: Arc<AtomicU64>,
 }
 
 /// Configuration of the serving loop.
@@ -115,18 +172,32 @@ pub struct ServeConfig {
     pub model_cfg: ModelConfig,
     /// Bounded submission-queue depth (backpressure).
     pub queue_depth: usize,
-    /// Run the PJRT numeric path (disable for pure-timing benches).
+    /// Run the PJRT numeric path (pins execution to shard 0; disable
+    /// for pure-timing benches or fixed-point scale-out serving).
     pub numerics: bool,
     /// Nodeflow-builder threads (sampling + CSR build are read-only
     /// over the graph, so they scale near-linearly).
     pub builders: usize,
     /// Bounded depth of the built-nodeflow channel between the builder
-    /// pool and the executor thread.
+    /// pool and the executor shards.
     pub built_depth: usize,
+    /// Executor shards for the fixed-point path (PJRT numerics force 1).
+    pub shards: usize,
+    /// Serve Q4.12 fixed-point embeddings when PJRT numerics are off —
+    /// the scale-out serving mode. Off by default: timing-only benches
+    /// expect empty embeddings.
+    pub fixed_numerics: bool,
+    /// Enable the SLO-aware dynamic batcher with this policy.
+    pub batch: Option<BatchConfig>,
+    /// Shared degree-aware feature-cache capacity, in rows (0 disables).
+    pub cache_rows: usize,
+    /// Seed of the deterministic fixed-point serving weights.
+    pub weight_seed: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
+        let spec = ShardSpec::default();
         Self {
             grip: GripConfig::paper(),
             model_cfg: ModelConfig::paper(),
@@ -134,19 +205,38 @@ impl Default for ServeConfig {
             numerics: true,
             builders: 4,
             built_depth: 64,
+            shards: 1,
+            fixed_numerics: false,
+            batch: None,
+            cache_rows: spec.cache_rows,
+            weight_seed: spec.weight_seed,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn shard_spec(&self) -> ShardSpec {
+        ShardSpec {
+            shards: self.shards,
+            grip: self.grip.clone(),
+            model_cfg: self.model_cfg,
+            pjrt: self.numerics,
+            fixed_numerics: self.fixed_numerics,
+            cache_rows: self.cache_rows,
+            weight_seed: self.weight_seed,
         }
     }
 }
 
 impl Coordinator {
-    /// Start the coordinator over `graph`. Loads and compiles all AOT
-    /// artifacts up front (when `numerics`), so the request path never
+    /// Start the coordinator over `graph`. Plans are compiled and
+    /// weights resolved per shard up front, so the request path never
     /// compiles.
     pub fn start(graph: CsrGraph, sampler_seed: u64, cfg: ServeConfig) -> Result<Coordinator> {
         let graph = Arc::new(graph);
-        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
-        let (built_tx, built_rx) = mpsc::sync_channel::<Built>(cfg.built_depth.max(1));
-        let jobs = Arc::new(Mutex::new(rx));
+        let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
+        let (built_tx, built_rx) = mpsc::sync_channel::<ExecJob>(cfg.built_depth.max(1));
+        let jobs = Arc::new(Mutex::new(job_rx));
 
         let mut builders = Vec::new();
         for i in 0..cfg.builders.max(1) {
@@ -161,30 +251,51 @@ impl Coordinator {
                 .map_err(|e| anyhow!("spawning builder {i}: {e}"))?;
             builders.push(handle);
         }
-        // The executor's channel closes when the last builder exits.
+        // The shard pool's channel closes when the last builder exits.
         drop(built_tx);
 
-        let executor = std::thread::Builder::new()
-            .name("grip-executor".into())
-            .spawn(move || executor_loop(cfg, built_rx))
-            .map_err(|e| anyhow!("spawning executor: {e}"))?;
+        let inflight = Arc::new(AtomicU64::new(0));
+        let pool = ShardPool::start(&cfg.shard_spec(), graph, built_rx, inflight.clone())?;
 
-        Ok(Coordinator { tx: Some(tx), builders, executor: Some(executor) })
+        let (front, batcher) = match cfg.batch {
+            None => (Front::Direct(job_tx), None),
+            Some(bc) => {
+                let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
+                let gauge = inflight.clone();
+                let handle = std::thread::Builder::new()
+                    .name("grip-batcher".into())
+                    .spawn(move || batcher_loop(bc, sub_rx, job_tx, &gauge))
+                    .map_err(|e| anyhow!("spawning batcher: {e}"))?;
+                (Front::Batched(sub_tx), Some(handle))
+            }
+        };
+
+        Ok(Coordinator { front: Some(front), batcher, builders, pool: Some(pool), inflight })
     }
 
-    /// Submit a request; returns a receiver for the response. Blocks if
-    /// the submission queue is full (backpressure).
+    /// Submit a request; returns a receiver for the response. In direct
+    /// mode this blocks when the submission queue is full
+    /// (backpressure); with batching enabled the batcher absorbs the
+    /// burst and applies backpressure downstream instead.
     pub fn submit(
         &self,
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
         ensure!(!req.targets.is_empty(), "request {} has no targets", req.id);
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("coordinator stopped"))?
-            .send(Job { req, reply: rtx, t_submit: Instant::now() })
-            .map_err(|_| anyhow!("coordinator stopped"))?;
+        let t_submit = Instant::now();
+        match self.front.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))? {
+            Front::Direct(tx) => {
+                self.inflight.fetch_add(1, Ordering::Relaxed);
+                tx.send(Job::single(req, rtx, t_submit)).map_err(|_| {
+                    self.inflight.fetch_sub(1, Ordering::Relaxed);
+                    anyhow!("coordinator stopped")
+                })?
+            }
+            Front::Batched(tx) => tx
+                .send(Submission { req, reply: rtx, t_submit })
+                .map_err(|_| anyhow!("coordinator stopped"))?,
+        }
         Ok(rrx)
     }
 
@@ -193,30 +304,138 @@ impl Coordinator {
         let rx = self.submit(req)?;
         rx.recv().map_err(|_| anyhow!("pipeline dropped"))?.map_err(|e| anyhow!(e))
     }
+
+    /// Serving statistics snapshot: jobs, timing-only count, and the
+    /// host/simulated feature-cache hit rates.
+    pub fn serve_stats(&self) -> ServeStats {
+        self.pool.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
+    /// Executor shards actually running (1 when PJRT is pinned).
+    pub fn shards(&self) -> usize {
+        self.pool.as_ref().map(|p| p.shards()).unwrap_or(0)
+    }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // Closing the job queue unwinds the pipeline stage by stage:
-        // builders see a closed receiver and exit, which closes the
-        // built channel, which stops the executor.
-        drop(self.tx.take());
+        // Closing the front door unwinds the pipeline stage by stage:
+        // the batcher drains its pending requests and exits, closing
+        // the job queue; builders see a closed receiver and exit, which
+        // closes the built channel; the shard pool drains and joins.
+        drop(self.front.take());
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
         for b in self.builders.drain(..) {
             let _ = b.join();
         }
-        if let Some(e) = self.executor.take() {
-            let _ = e.join();
+        drop(self.pool.take());
+    }
+}
+
+/// The batcher stage: hold single-target submissions until their
+/// dispatch deadline (or a full batch), then emit coalesced jobs.
+/// Multi-target submissions pass through untouched — they already are
+/// batches. Runs the pure [`Batcher`] state machine against the real
+/// clock with `recv_timeout`, with one addition the virtual-time core
+/// can't express: while the pipeline is completely idle (`inflight` 0)
+/// pending requests are flushed immediately — holding work in front of
+/// idle shards can only add latency, so batching engages only under
+/// load.
+fn batcher_loop(
+    bc: BatchConfig,
+    sub_rx: mpsc::Receiver<Submission>,
+    job_tx: mpsc::SyncSender<Job>,
+    inflight: &AtomicU64,
+) {
+    let origin = Instant::now();
+    let now_us = |origin: &Instant| origin.elapsed().as_secs_f64() * 1e6;
+    let mut batcher: Batcher<Submission> = Batcher::new(bc);
+    let mut open = true;
+
+    loop {
+        // Dispatch everything due before sleeping.
+        while let Some((model, batch)) = batcher.pop_due(now_us(&origin)) {
+            if send_coalesced(&job_tx, inflight, model, batch).is_err() {
+                return;
+            }
+        }
+        // Idle fast path: nothing downstream, so coalescing has no
+        // queueing delay to hide behind — release pending work now.
+        while inflight.load(Ordering::Relaxed) == 0 && !batcher.is_empty() {
+            let Some((model, batch)) = batcher.pop_all() else { break };
+            if send_coalesced(&job_tx, inflight, model, batch).is_err() {
+                return;
+            }
+        }
+        if !open {
+            break;
+        }
+        let wait = batcher.next_deadline().map(|d| (d - now_us(&origin)).max(0.0));
+        let received = match wait {
+            None => sub_rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+            Some(us) => sub_rx.recv_timeout(Duration::from_micros(us.ceil() as u64)),
+        };
+        match received {
+            Ok(sub) => {
+                if sub.req.targets.len() == 1 {
+                    // Deadline anchored to the caller's submit time, not
+                    // the batcher's receive time: backpressure upstream
+                    // of this thread must not restart the SLO clock.
+                    let arrival_us =
+                        sub.t_submit.saturating_duration_since(origin).as_secs_f64() * 1e6;
+                    batcher.offer(sub.req.model, sub, arrival_us);
+                } else {
+                    // Already a batch: pass through.
+                    inflight.fetch_add(1, Ordering::Relaxed);
+                    if job_tx.send(Job::single(sub.req, sub.reply, sub.t_submit)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+        }
+    }
+    // Shutdown drain: everything still pending goes out immediately.
+    while let Some((model, batch)) = batcher.pop_all() {
+        if send_coalesced(&job_tx, inflight, model, batch).is_err() {
+            return;
         }
     }
 }
 
-/// Stage 1: pull jobs off the shared queue, build nodeflows in parallel.
+fn send_coalesced(
+    job_tx: &mpsc::SyncSender<Job>,
+    inflight: &AtomicU64,
+    model: GnnModel,
+    batch: Vec<Pending<Submission>>,
+) -> Result<(), ()> {
+    let mut targets = Vec::with_capacity(batch.len());
+    let mut members = Vec::with_capacity(batch.len());
+    for p in batch {
+        let sub = p.item;
+        members.push(ReplySlot {
+            id: sub.req.id,
+            n_targets: sub.req.targets.len(),
+            t_submit: sub.t_submit,
+            reply: sub.reply,
+        });
+        targets.extend_from_slice(&sub.req.targets);
+    }
+    inflight.fetch_add(1, Ordering::Relaxed);
+    job_tx.send(Job { model, targets, members }).map_err(|_| ())
+}
+
+/// Builder stage: pull jobs off the shared queue, build nodeflows in
+/// parallel, hand them to the shard pool.
 fn builder_loop(
     graph: &CsrGraph,
     sampler: &Sampler,
     mc: &ModelConfig,
     jobs: &Mutex<mpsc::Receiver<Job>>,
-    built_tx: &mpsc::SyncSender<Built>,
+    built_tx: &mpsc::SyncSender<ExecJob>,
 ) {
     loop {
         // Hold the lock only while waiting for a job; the build itself
@@ -232,91 +451,19 @@ fn builder_loop(
             }
         };
         let t_dequeue = Instant::now();
-        let nf = Nodeflow::build(graph, sampler, &job.req.targets, mc);
-        if built_tx.send(Built { job, nf, t_dequeue }).is_err() {
+        let nf = Nodeflow::build(graph, sampler, &job.targets, mc);
+        let exec = ExecJob { model: job.model, nf, members: job.members, t_dequeue };
+        if built_tx.send(exec).is_err() {
             break;
         }
     }
 }
 
-/// Stage 2: cycle-sim + numerics on the single executor thread (the
-/// PJRT executor is not Send; weights stay device-resident).
-fn executor_loop(cfg: ServeConfig, built_rx: mpsc::Receiver<Built>) {
-    let executor = if cfg.numerics {
-        match Executor::load(&crate::runtime::Manifest::default_dir()) {
-            Ok(e) => Some(e),
-            Err(e) => {
-                eprintln!("coordinator: PJRT unavailable ({e}); serving timing-only");
-                None
-            }
-        }
-    } else {
-        None
-    };
-    // Compile plans once per model.
-    let plans: HashMap<GnnModel, ModelPlan> =
-        ALL_MODELS.into_iter().map(|m| (m, compile(m, &cfg.model_cfg))).collect();
-    // Memoizing on-device feature store (§Perf; weights are already
-    // device-resident inside the Executor).
-    let mut store = FeatureStore::new();
-
-    while let Ok(Built { job, nf, t_dequeue }) = built_rx.recv() {
-        let result = execute_built(&cfg, &plans, executor.as_ref(), &mut store, &job.req, &nf)
-            .map_err(|e| e.to_string())
-            .map(|mut r| {
-                r.host_us = job.t_submit.elapsed().as_secs_f64() * 1e6;
-                r.service_us = t_dequeue.elapsed().as_secs_f64() * 1e6;
-                r
-            });
-        let _ = job.reply.send(result);
-    }
-}
-
-fn execute_built(
-    cfg: &ServeConfig,
-    plans: &HashMap<GnnModel, ModelPlan>,
-    executor: Option<&Executor>,
-    store: &mut FeatureStore,
-    req: &InferenceRequest,
-    nf: &Nodeflow,
-) -> Result<InferenceResponse> {
-    // 1. Cycle-level accelerator timing over the prebuilt nodeflow.
-    let plan = &plans[&req.model];
-    let sim = simulate(&cfg.grip, plan, nf);
-    let accel_us = sim.us(&cfg.grip);
-
-    // 2. Real numerics via PJRT (the embeddings a client would receive).
-    let embedding = match executor {
-        Some(exec) => {
-            let artifact = &exec.model(req.model.name())?.artifact;
-            if fits_padding(artifact, nf) {
-                let dynamic = build_dynamic_args(req.model, artifact, nf, store)?;
-                let out = exec.run_prepared(req.model.name(), &dynamic)?;
-                let f_out = *artifact.output_shape.last().unwrap_or(&1);
-                out[..f_out * nf.targets.len()].to_vec()
-            } else {
-                // A batched nodeflow can exceed the batch-1 AOT padding;
-                // serve the timing result rather than failing.
-                Vec::new()
-            }
-        }
-        None => Vec::new(),
-    };
-
-    Ok(InferenceResponse {
-        id: req.id,
-        embedding,
-        accel_us,
-        host_us: 0.0,
-        service_us: 0.0,
-        neighborhood: nf.neighborhood_size(),
-    })
-}
-
 /// Drive a workload of single-target requests through a coordinator and
 /// collect latency stats — the end-to-end harness used by examples and
 /// benches. All requests are submitted up front so the builder pool and
-/// executor stay saturated; responses are collected afterwards.
+/// executor stay saturated; responses are collected afterwards. (For
+/// open-loop load at a fixed arrival rate, see `serve::run_open_loop`.)
 pub fn run_workload(
     coord: &Coordinator,
     model: GnnModel,
@@ -367,6 +514,22 @@ mod tests {
         ServeConfig { numerics: false, builders: 3, ..Default::default() }
     }
 
+    /// Small feature dims keep the fixed-point matmuls test-sized.
+    fn small_mc() -> ModelConfig {
+        ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+    }
+
+    fn fixed_cfg(shards: usize) -> ServeConfig {
+        ServeConfig {
+            numerics: false,
+            fixed_numerics: true,
+            shards,
+            builders: 3,
+            model_cfg: small_mc(),
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn pipeline_serves_and_shuts_down() {
         let coord = Coordinator::start(graph(), 7, timing_cfg()).unwrap();
@@ -379,6 +542,7 @@ mod tests {
         assert!(resp.service_us <= resp.host_us);
         assert!(resp.neighborhood >= 1);
         assert!(resp.embedding.is_empty(), "numerics disabled");
+        assert!(resp.timing_only, "no numeric path ran");
         // Drop joins the pipeline without hanging.
     }
 
@@ -435,5 +599,71 @@ mod tests {
         let targets: Vec<u32> = (0..32).collect();
         let (accel, _, _) = run_workload(&coord, GnnModel::Gin, &targets).unwrap();
         assert_eq!(accel.count(), 32);
+    }
+
+    #[test]
+    fn fixed_point_serving_produces_embeddings() {
+        let coord = Coordinator::start(graph(), 7, fixed_cfg(2)).unwrap();
+        let resp = coord.infer(InferenceRequest::single(1, GnnModel::Gcn, 42)).unwrap();
+        assert!(!resp.timing_only);
+        assert_eq!(resp.embedding.len(), small_mc().f_out);
+        assert!(resp.embedding.iter().all(|x| x.is_finite()));
+        assert_eq!(coord.shards(), 2);
+        let s = coord.serve_stats();
+        assert_eq!(s.jobs, 1);
+        assert_eq!(s.timing_only_jobs, 0);
+    }
+
+    #[test]
+    fn batching_coalesces_and_preserves_replies() {
+        // Tight SLO so the test stays fast; max_batch 4 over one model
+        // means 16 requests arrive as >= 4 coalesced jobs.
+        let cfg = ServeConfig {
+            batch: Some(BatchConfig { slo_us: 20_000.0, margin_us: 5_000.0, max_batch: 4 }),
+            ..fixed_cfg(2)
+        };
+        let coord = Coordinator::start(graph(), 7, cfg).unwrap();
+        let targets: Vec<u32> = (0..16u32).map(|i| i * 31 % 2000).collect();
+        let (_, _, responses) = run_workload(&coord, GnnModel::Gcn, &targets).unwrap();
+        assert_eq!(responses.len(), 16, "every member gets its own reply");
+        let stats = coord.serve_stats();
+        assert!(
+            stats.jobs < 16,
+            "batcher should coalesce (got {} jobs for 16 requests)",
+            stats.jobs
+        );
+        for r in &responses {
+            assert_eq!(r.embedding.len(), small_mc().f_out);
+            assert!(!r.timing_only);
+        }
+    }
+
+    #[test]
+    fn batched_reply_matches_unbatched_bit_for_bit() {
+        // Coalescing must be numerics-transparent: the sampler keys
+        // samples by (vertex, layer) and reductions run in per-vertex
+        // sample order, so a target's embedding cannot depend on its
+        // batch-mates.
+        let g = graph();
+        let solo = Coordinator::start(g.clone(), 7, fixed_cfg(1)).unwrap();
+        let want = solo.infer(InferenceRequest::single(0, GnnModel::Gcn, 123)).unwrap();
+        drop(solo);
+
+        let cfg = ServeConfig {
+            batch: Some(BatchConfig { slo_us: 20_000.0, margin_us: 0.0, max_batch: 8 }),
+            ..fixed_cfg(2)
+        };
+        let coord = Coordinator::start(g, 7, cfg).unwrap();
+        let pending: Vec<_> = (0..8u32)
+            .map(|i| {
+                coord
+                    .submit(InferenceRequest::single(i as u64, GnnModel::Gcn, 120 + i))
+                    .unwrap()
+            })
+            .collect();
+        let got: Vec<InferenceResponse> =
+            pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        let r123 = got.iter().find(|r| r.id == 3).expect("target 123 is request id 3");
+        assert_eq!(r123.embedding, want.embedding, "coalescing changed numerics");
     }
 }

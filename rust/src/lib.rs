@@ -25,8 +25,12 @@
 //! * [`runtime`] — PJRT executor loading the AOT-compiled JAX/Pallas HLO
 //!   artifacts; Python never runs on the request path.
 //! * [`coordinator`] — the low-latency serving pipeline: bounded request
-//!   queue, parallel nodeflow-builder pool, executor thread, batched
+//!   queue, parallel nodeflow-builder pool, sharded executor pool, batched
 //!   multi-target requests, and latency metrics (p50/p99).
+//! * [`serve`] — the scale-out serving subsystem: open-loop load engine
+//!   (Poisson / bursty MMPP), SLO-aware dynamic batcher, executor shard
+//!   pool with a shared degree-aware feature cache, and the open-loop
+//!   rate × shard sweep behind `grip serve-bench`.
 //! * [`repro`] — one generator per paper table and figure.
 
 pub mod baseline;
@@ -41,6 +45,7 @@ pub mod nodeflow;
 pub mod repro;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 
 pub use config::{GripConfig, ModelConfig};

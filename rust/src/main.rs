@@ -1,11 +1,13 @@
 //! `grip` — CLI for the GRIP reproduction.
 //!
 //! Subcommands:
-//!   repro  --exp <id>|--all [--scale S] [--targets N]   regenerate paper tables/figures
-//!   serve  --model M --dataset D [--requests N]          end-to-end serving (timing + PJRT numerics)
-//!   sim    --model M --dataset D                         one simulated inference, unit breakdown
-//!   verify                                               golden-vector check of every HLO artifact
-//!   info                                                 Table II configuration dump
+//!   repro       --exp <id>|--all [--scale S] [--targets N]  regenerate paper tables/figures
+//!   serve       --model M --dataset D [--requests N]        end-to-end serving (timing + PJRT numerics)
+//!   serve-bench --dataset D [--rates R1,R2,..] [--shards S1,S2,..]
+//!                                                           open-loop rate × shard sweep → BENCH_serve.json
+//!   sim         --model M --dataset D                       one simulated inference, unit breakdown
+//!   verify                                                  golden-vector check of every HLO artifact
+//!   info                                                    Table II configuration dump
 //!
 //! (Hand-rolled argument parsing: the build environment is offline and
 //! the vendored crate set has no clap.)
@@ -29,6 +31,9 @@ fn usage() -> ! {
                    [--scale S=0.01] [--targets N=128] [--seed K=17]\n\
            serve   [--model gcn|sage|gin|ggcn] [--dataset yt|lj|po|rd] [--requests N=256]\n\
                    [--scale S=0.01] [--no-numerics]\n\
+           serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
+                   [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
+                   [--no-batching] [--bursty] [--paper-dims] [--seed K=17] [--out PATH]\n\
            sim     [--model M] [--dataset D] [--scale S]\n\
            verify\n\
            info"
@@ -100,6 +105,7 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "repro" => cmd_repro(&args),
         "serve" => cmd_serve(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "sim" => cmd_sim(&args),
         "verify" => cmd_verify(),
         "info" => cmd_info(&args),
@@ -179,6 +185,108 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Open-loop serving sweep: arrival rate × shard count, fixed-point
+/// numerics, SLO-aware batching — writes per-point p50/p99 latency and
+/// feature-cache hit rates into `BENCH_serve.json`.
+fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
+    use grip::benchutil::write_bench_json;
+    use grip::coordinator::BatchConfig;
+    use grip::serve::{run_sweep, ArrivalProcess, ModelMix, OpenLoopConfig};
+
+    let dataset = args.dataset();
+    let scale = args.get_f64("scale", 0.01);
+    let requests = args.get_usize("requests", 160);
+    let seed = args.get_usize("seed", 17) as u64;
+    let slo_us = args.get_f64("slo-us", 5_000.0);
+    let rates = parse_list(args.get("rates").unwrap_or("25,50,100"))?;
+    let shard_counts: Vec<usize> = parse_list(args.get("shards").unwrap_or("1,4"))?
+        .into_iter()
+        .map(|x| x as usize)
+        .collect();
+
+    // The paper's 602→512→256 dims put one fixed-point inference in the
+    // tens of milliseconds — fine for overnight runs (--paper-dims),
+    // too slow for a CI sweep, so the default shrinks feature dims
+    // while keeping the paper's 25/10 sampling (locality, and thus
+    // cache behavior, depends on sampling, not feature width).
+    let model_cfg = if args.has("paper-dims") {
+        grip::ModelConfig::paper()
+    } else {
+        grip::ModelConfig { f_in: 64, f_hid: 48, f_out: 16, ..grip::ModelConfig::paper() }
+    };
+
+    eprintln!("generating {dataset:?} graph (scale {scale}) ...");
+    let graph = dataset.generate(scale, seed);
+    let base = OpenLoopConfig {
+        requests,
+        mix: ModelMix::default(),
+        model_cfg,
+        batch: if args.has("no-batching") {
+            None
+        } else {
+            Some(BatchConfig { slo_us, ..Default::default() })
+        },
+        seed,
+        ..Default::default()
+    };
+
+    println!(
+        "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts ==",
+        dataset,
+        requests,
+        rates.len(),
+        shard_counts.len()
+    );
+    let bursty = args.has("bursty");
+    let points = run_sweep(&graph, &rates, &shard_counts, &base, |rate| {
+        if bursty {
+            ArrivalProcess::Bursty {
+                base_rps: rate,
+                burst_rps: rate * 4.0,
+                base_dwell_ms: 200.0,
+                burst_dwell_ms: 50.0,
+            }
+        } else {
+            ArrivalProcess::Poisson { rate_rps: rate }
+        }
+    })?;
+    for (label, r) in &points {
+        println!(
+            "{label:<32} offered {:>7.0} rps | e2e p50 {:>9.0} µs p99 {:>9.0} µs | \
+             cache hit {:>5.1}% (sim {:>5.1}%)",
+            r.offered_rps,
+            r.e2e.p50(),
+            r.e2e.p99(),
+            r.stats.cache_hit_rate * 100.0,
+            r.stats.sim_feature_hit_rate * 100.0
+        );
+    }
+    let sections: Vec<(&str, Vec<(&str, f64)>)> =
+        points.iter().map(|(label, r)| (label.as_str(), r.metrics())).collect();
+    let out_path = std::path::PathBuf::from(
+        args.get("out").unwrap_or(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json")),
+    );
+    write_bench_json(&out_path, &sections)?;
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// Parse a comma-separated numeric list ("25,50,100"). Rejects — rather
+/// than silently drops — malformed or non-positive entries, so a typo'd
+/// `--rates` cannot shrink a sweep unnoticed.
+fn parse_list(s: &str) -> anyhow::Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let v: f64 = tok
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad numeric list entry {tok:?} in {s:?}"))?;
+        anyhow::ensure!(v > 0.0, "list entries must be positive, got {v}");
+        out.push(v);
+    }
+    Ok(out)
 }
 
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {

@@ -178,6 +178,24 @@ impl Nodeflow {
     /// `[pad_v × pad_u]` with the given normalization. Panics if the
     /// layer exceeds the padded shape (the AOT contract).
     pub fn to_dense(&self, layer: usize, pad_v: usize, pad_u: usize, norm: NormKind) -> Vec<f32> {
+        let mut m = Vec::new();
+        self.to_dense_into(layer, pad_v, pad_u, norm, &mut m);
+        m
+    }
+
+    /// [`Nodeflow::to_dense`] writing into a caller-owned buffer — the
+    /// marshalling hot path reuses one arena per executor thread
+    /// instead of allocating a padded dense matrix per request
+    /// ([`crate::runtime::MarshalScratch`]). The buffer is cleared and
+    /// zero-filled to `pad_v * pad_u`.
+    pub fn to_dense_into(
+        &self,
+        layer: usize,
+        pad_v: usize,
+        pad_u: usize,
+        norm: NormKind,
+        m: &mut Vec<f32>,
+    ) {
         let l = &self.layers[layer];
         assert!(
             l.num_outputs <= pad_v && l.num_inputs() <= pad_u,
@@ -185,7 +203,8 @@ impl Nodeflow {
             l.num_outputs,
             l.num_inputs()
         );
-        let mut m = vec![0f32; pad_v * pad_u];
+        m.clear();
+        m.resize(pad_v * pad_u, 0f32);
         for &(u, v) in &l.edges {
             let cell = &mut m[v as usize * pad_u + u as usize];
             match norm {
@@ -204,7 +223,6 @@ impl Nodeflow {
                 }
             }
         }
-        m
     }
 }
 
@@ -349,6 +367,20 @@ mod tests {
         assert_eq!(nf.layers[1].num_outputs, 3);
         assert_eq!(nf.targets, vec![1, 2, 3]);
         assert!(nf.neighborhood_size() >= 3);
+    }
+
+    #[test]
+    fn to_dense_into_reuses_buffer_and_matches() {
+        let (g, s, mc) = setup();
+        let nf = Nodeflow::build(&g, &s, &[3], &mc);
+        let want = nf.to_dense(0, 16, 288, NormKind::Mean);
+        // A dirty, differently-sized buffer must come out identical.
+        let mut buf = vec![7.0f32; 10];
+        nf.to_dense_into(0, 16, 288, NormKind::Mean, &mut buf);
+        assert_eq!(buf, want);
+        // Reuse for a different layer/norm also matches the fresh path.
+        nf.to_dense_into(1, 8, 16, NormKind::Sum, &mut buf);
+        assert_eq!(buf, nf.to_dense(1, 8, 16, NormKind::Sum));
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! Shared workload machinery for the repro experiments: dataset
 //! generation, target sampling, nodeflow batches, and percentile
 //! summaries over simulated latency.
+//!
+//! This driver is **closed-loop** (a fixed batch of sampled targets,
+//! simulated back to back), which is what the paper's *tables* need.
+//! Serving experiments — tail latency at a given offered load — use
+//! the open-loop engine in [`crate::serve::loadgen`] instead (PR 2):
+//! closed-loop replay saturates the pipeline and measures backlog, not
+//! the latency a client at that arrival rate would see.
 
 use crate::config::{GripConfig, ModelConfig};
 use crate::coordinator::LatencyStats;

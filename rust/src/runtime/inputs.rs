@@ -23,18 +23,27 @@ pub fn norm_for(model: GnnModel) -> NormKind {
     }
 }
 
-/// Deterministic per-vertex feature row — the "embedding table" stand-in
-/// (real deployments read these from device DRAM; we synthesize them
-/// seeded by vertex id so every layer of the stack agrees). Scaled to
-/// ±0.1 so GIN's 25-way multiset edge sums stay inside the Q4.12
-/// accumulator range (the input-scaling step of fixed-point deployment).
+/// Synthesize vertex `v`'s deterministic feature row into `dst`
+/// (`dst.len()` = `f_in`). The single source of truth for the
+/// "embedding table" stand-in: [`FeatureStore`], the serving
+/// [`crate::serve::FeatureCache`], and [`feature_rows`] all call this,
+/// so every layer of the stack agrees bit-for-bit. Scaled to ±0.1 so
+/// GIN's 25-way multiset edge sums stay inside the Q4.12 accumulator
+/// range (the input-scaling step of fixed-point deployment).
+pub fn fill_feature_row(v: u32, dst: &mut [f32]) {
+    let mut lcg = GoldenLcg::new(0x5EED_0000_0000 + v as u64);
+    for x in dst.iter_mut() {
+        *x = lcg.next_f32() * 0.2;
+    }
+}
+
+/// Deterministic per-vertex feature rows, padded to `pad_u` rows (real
+/// deployments read these from device DRAM; we synthesize them seeded
+/// by vertex id — see [`fill_feature_row`]).
 pub fn feature_rows(vertices: &[u32], f_in: usize, pad_u: usize) -> Vec<f32> {
     let mut h = vec![0f32; pad_u * f_in];
     for (i, &v) in vertices.iter().enumerate() {
-        let mut lcg = GoldenLcg::new(0x5EED_0000_0000 + v as u64);
-        for (j, x) in lcg.fill(f_in).into_iter().enumerate() {
-            h[i * f_in + j] = x * 0.2;
-        }
+        fill_feature_row(v, &mut h[i * f_in..(i + 1) * f_in]);
     }
     h
 }
@@ -55,8 +64,9 @@ impl FeatureStore {
 
     pub fn row(&mut self, v: u32, f_in: usize) -> &[f32] {
         self.cache.entry(v).or_insert_with(|| {
-            let mut lcg = GoldenLcg::new(0x5EED_0000_0000 + v as u64);
-            lcg.fill(f_in).into_iter().map(|x| x * 0.2).collect()
+            let mut row = vec![0f32; f_in];
+            fill_feature_row(v, &mut row);
+            row
         })
     }
 
@@ -66,6 +76,21 @@ impl FeatureStore {
 
     pub fn is_empty(&self) -> bool {
         self.cache.is_empty()
+    }
+}
+
+/// Anything that can materialize a vertex's feature row into a caller
+/// buffer: the unbounded per-thread [`FeatureStore`], or the shared
+/// degree-aware [`crate::serve::FeatureCache`] (via
+/// [`crate::serve::CachedFeatures`]). Lets the marshalling path below
+/// stay agnostic about which tier serves it.
+pub trait FeatureSource {
+    fn fill_row(&mut self, v: u32, dst: &mut [f32]);
+}
+
+impl FeatureSource for FeatureStore {
+    fn fill_row(&mut self, v: u32, dst: &mut [f32]) {
+        dst.copy_from_slice(self.row(v, dst.len()));
     }
 }
 
@@ -85,16 +110,56 @@ pub fn fits_padding(artifact: &ModelArtifact, nf: &Nodeflow) -> bool {
         && nf.layers[1].num_inputs() <= a2[1]
 }
 
+/// Reusable arena for the PJRT marshalling path: the three padded
+/// dense buffers `(a1, a2, h)` that [`build_dynamic_args`] used to
+/// allocate per request (the ROADMAP open item). Buffer capacities
+/// reach the artifact's padded sizes after the first request and are
+/// then only zero-filled and rewritten — zero steady-state allocations,
+/// the same discipline [`crate::greta::ExecScratch`] applies to the
+/// fixed-point executor.
+#[derive(Debug, Default)]
+pub struct MarshalScratch {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl MarshalScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The marshalled `(a1, a2, h)` argument slice from the last
+    /// [`build_dynamic_args_into`] call.
+    pub fn args(&self) -> &[Vec<f32>] {
+        &self.bufs
+    }
+}
+
 /// Build only the per-request dynamic args (a1, a2, h) for
 /// [`crate::runtime::Executor::run_prepared`] — weights stay
 /// device-resident. Feature rows come from the memoizing
-/// [`FeatureStore`].
+/// [`FeatureStore`]. (Convenience wrapper over
+/// [`build_dynamic_args_into`] with a fresh arena.)
 pub fn build_dynamic_args(
     model: GnnModel,
     artifact: &ModelArtifact,
     nf: &Nodeflow,
     store: &mut FeatureStore,
 ) -> Result<Vec<Vec<f32>>> {
+    let mut scratch = MarshalScratch::new();
+    build_dynamic_args_into(model, artifact, nf, store, &mut scratch)?;
+    Ok(scratch.bufs)
+}
+
+/// Allocation-free marshalling: render `(a1, a2, h)` into the reusable
+/// `scratch` arena (available afterwards via [`MarshalScratch::args`]).
+/// `features` is any [`FeatureSource`] tier.
+pub fn build_dynamic_args_into(
+    model: GnnModel,
+    artifact: &ModelArtifact,
+    nf: &Nodeflow,
+    features: &mut impl FeatureSource,
+    scratch: &mut MarshalScratch,
+) -> Result<()> {
     ensure!(nf.layers.len() == 2, "AOT artifacts are 2-layer");
     ensure!(fits_padding(artifact, nf), "nodeflow exceeds the artifact's padded shapes");
     let a1_shape = &artifact.args[0].shape;
@@ -104,14 +169,19 @@ pub fn build_dynamic_args(
     let (pad_v2, pad_u2) = (a2_shape[0], a2_shape[1]);
     let f_in = h_shape[1];
 
+    scratch.bufs.resize_with(3, Vec::new);
     let norm = norm_for(model);
-    let a1 = nf.to_dense(0, pad_v1, pad_u1, norm);
-    let a2 = nf.to_dense(1, pad_v2, pad_u2, norm);
-    let mut h = vec![0f32; pad_u1 * f_in];
+    let [a1, a2, h] = scratch.bufs.as_mut_slice() else {
+        unreachable!("scratch sized to 3 above")
+    };
+    nf.to_dense_into(0, pad_v1, pad_u1, norm, a1);
+    nf.to_dense_into(1, pad_v2, pad_u2, norm, a2);
+    h.clear();
+    h.resize(pad_u1 * f_in, 0f32);
     for (i, &v) in nf.layers[0].inputs.iter().enumerate() {
-        h[i * f_in..(i + 1) * f_in].copy_from_slice(store.row(v, f_in));
+        features.fill_row(v, &mut h[i * f_in..(i + 1) * f_in]);
     }
-    Ok(vec![a1, a2, h])
+    Ok(())
 }
 
 /// Hot-path variant of [`build_args`]: weights are pre-generated once
@@ -157,6 +227,72 @@ pub fn build_args(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ModelConfig;
+    use crate::graph::{generate, GeneratorParams};
+    use crate::nodeflow::Sampler;
+    use crate::runtime::manifest::ArgSpec;
+
+    /// A hand-built 2-layer artifact with the given padded shapes (no
+    /// HLO on disk — marshalling never touches the file).
+    fn test_artifact(pad_v1: usize, pad_u1: usize, pad_v2: usize, pad_u2: usize) -> ModelArtifact {
+        let f_in = 12;
+        ModelArtifact {
+            name: "test".into(),
+            hlo_path: std::path::PathBuf::from("unused.hlo"),
+            hlo_pallas_path: None,
+            args: vec![
+                ArgSpec { name: "a1".into(), shape: vec![pad_v1, pad_u1] },
+                ArgSpec { name: "a2".into(), shape: vec![pad_v2, pad_u2] },
+                ArgSpec { name: "h".into(), shape: vec![pad_u1, f_in] },
+            ],
+            output_shape: vec![pad_v2, 6],
+            golden_seed: 42,
+            golden_row0: Vec::new(),
+        }
+    }
+
+    fn small_nf() -> Nodeflow {
+        let g = generate(&GeneratorParams { nodes: 500, mean_degree: 6.0, ..Default::default() });
+        let mc = ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 };
+        Nodeflow::build(&g, &Sampler::new(3), &[17], &mc)
+    }
+
+    #[test]
+    fn marshal_scratch_reuse_matches_fresh_path() {
+        let nf = small_nf();
+        let art = test_artifact(64, 256, 8, 64);
+        assert!(fits_padding(&art, &nf));
+        let mut store = FeatureStore::new();
+        let fresh = build_dynamic_args(GnnModel::Gcn, &art, &nf, &mut store).unwrap();
+        let mut scratch = MarshalScratch::new();
+        // Marshal twice through the same arena (second pass over dirty
+        // buffers) and once for a different model; every pass must equal
+        // the allocate-fresh result.
+        for model in [GnnModel::Gcn, GnnModel::Gcn, GnnModel::Gin] {
+            build_dynamic_args_into(model, &art, &nf, &mut store, &mut scratch).unwrap();
+            let want = build_dynamic_args(model, &art, &nf, &mut store).unwrap();
+            assert_eq!(scratch.args(), &want[..], "{model:?}");
+        }
+        assert_eq!(scratch.args().len(), 3);
+        assert_eq!(fresh.len(), 3);
+    }
+
+    #[test]
+    fn undersized_artifact_fails_padding() {
+        let nf = small_nf();
+        let art = test_artifact(2, 3, 1, 2);
+        assert!(!fits_padding(&art, &nf));
+        let mut store = FeatureStore::new();
+        assert!(build_dynamic_args(GnnModel::Gcn, &art, &nf, &mut store).is_err());
+    }
+
+    #[test]
+    fn fill_feature_row_matches_feature_rows() {
+        let mut dst = vec![0f32; 8];
+        fill_feature_row(9, &mut dst);
+        let want = feature_rows(&[9], 8, 1);
+        assert_eq!(dst, want);
+    }
 
     #[test]
     fn norms_match_python_conventions() {

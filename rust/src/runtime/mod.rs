@@ -17,6 +17,7 @@ pub mod manifest;
 pub use executor::{Executor, LoadedModel};
 pub use golden::{golden_args, serving_weights};
 pub use inputs::{
-    build_args, build_args_cached, build_dynamic_args, feature_rows, fits_padding, FeatureStore,
+    build_args, build_args_cached, build_dynamic_args, build_dynamic_args_into, feature_rows,
+    fill_feature_row, fits_padding, FeatureSource, FeatureStore, MarshalScratch,
 };
 pub use manifest::{ArgSpec, Manifest, ModelArtifact, PadShapes};

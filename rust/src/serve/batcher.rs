@@ -1,0 +1,231 @@
+//! SLO-aware dynamic batcher: coalesces compatible single-target
+//! requests into multi-target batches **by deadline, not by count**.
+//!
+//! Count-based batching (wait for K requests) has unbounded worst-case
+//! wait at low load; timer-based batching (flush every T) wastes
+//! latency budget at high load. This batcher instead gives every
+//! request a *dispatch deadline* — `arrival + slo_us - margin_us`,
+//! where `margin_us` is the budget reserved for nodeflow build and
+//! execution downstream — and dispatches a batch at the earliest of:
+//!
+//! * a compatible queue reaching `max_batch` (the AOT padding budget), or
+//! * the oldest member's dispatch deadline arriving.
+//!
+//! "Compatible" means *same model*: a coalesced batch shares one
+//! nodeflow build and one accelerator pass, which is only meaningful
+//! within a model's plan. Multi-target requests submitted by callers
+//! bypass the batcher (they are already batches).
+//!
+//! The struct is a pure state machine over an explicit clock (`now_us`)
+//! — no threads, no `Instant` — so its deadline discipline is property-
+//! tested in virtual time (`tests/serve_props.rs`); the coordinator
+//! drives it with a real clock and `recv_timeout`.
+
+use crate::greta::{GnnModel, ALL_MODELS};
+use std::collections::VecDeque;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// End-to-end latency budget per request, µs. The dispatch deadline
+    /// is `arrival + slo_us - margin_us`.
+    pub slo_us: f64,
+    /// Budget reserved for build + execution after dispatch, µs.
+    pub margin_us: f64,
+    /// Maximum coalesced targets per batch (keep within the AOT
+    /// artifact padding so batched numerics don't fall back to
+    /// timing-only).
+    pub max_batch: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { slo_us: 5_000.0, margin_us: 1_500.0, max_batch: 8 }
+    }
+}
+
+/// A queued request with its dispatch deadline.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub item: T,
+    pub arrival_us: f64,
+    pub dispatch_by_us: f64,
+}
+
+/// The batcher state machine. `T` is the caller's per-request payload
+/// (the coordinator stores its reply slot; tests store request ids).
+pub struct Batcher<T> {
+    cfg: BatchConfig,
+    /// One FIFO per model, indexed by [`ALL_MODELS`] position.
+    queues: Vec<VecDeque<Pending<T>>>,
+}
+
+fn model_index(m: GnnModel) -> usize {
+    ALL_MODELS.iter().position(|&x| x == m).expect("model in ALL_MODELS")
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatchConfig) -> Self {
+        let queues = (0..ALL_MODELS.len()).map(|_| VecDeque::new()).collect();
+        Self { cfg, queues }
+    }
+
+    pub fn config(&self) -> BatchConfig {
+        self.cfg
+    }
+
+    /// Queue a single-target request arriving at `now_us`.
+    pub fn offer(&mut self, model: GnnModel, item: T, now_us: f64) {
+        let headroom = (self.cfg.slo_us - self.cfg.margin_us).max(0.0);
+        self.queues[model_index(model)].push_back(Pending {
+            item,
+            arrival_us: now_us,
+            dispatch_by_us: now_us + headroom,
+        });
+    }
+
+    /// Earliest dispatch deadline across all queues (None when idle).
+    /// The driver should wake no later than this time; a full queue is
+    /// dispatchable immediately and is reported as "due now" by
+    /// [`Batcher::pop_due`].
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|p| p.dispatch_by_us))
+            .min_by(|a, b| a.partial_cmp(b).expect("deadlines are finite"))
+    }
+
+    /// Dispatch one due batch: a queue that is full, or whose oldest
+    /// member's deadline has arrived. Queues are drained oldest-
+    /// deadline-first; members leave in FIFO order, at most `max_batch`
+    /// at a time. Returns None when nothing is due at `now_us`.
+    pub fn pop_due(&mut self, now_us: f64) -> Option<(GnnModel, Vec<Pending<T>>)> {
+        let max_batch = self.cfg.max_batch.max(1);
+        // Full queues first (they free padding-bounded capacity).
+        for (i, q) in self.queues.iter_mut().enumerate() {
+            if q.len() >= max_batch {
+                let batch = q.drain(..max_batch).collect();
+                return Some((ALL_MODELS[i], batch));
+            }
+        }
+        // Then the queue with the earliest expired deadline.
+        let due = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(i, q)| q.front().map(|p| (i, p.dispatch_by_us)))
+            .filter(|&(_, d)| d <= now_us)
+            .min_by(|a, b| a.1.partial_cmp(&b.1).expect("deadlines are finite"));
+        let (i, _) = due?;
+        let q = &mut self.queues[i];
+        let take = q.len().min(max_batch);
+        let batch = q.drain(..take).collect();
+        Some((ALL_MODELS[i], batch))
+    }
+
+    /// Drain everything regardless of deadline (shutdown path).
+    pub fn pop_all(&mut self) -> Option<(GnnModel, Vec<Pending<T>>)> {
+        let max_batch = self.cfg.max_batch.max(1);
+        for (i, q) in self.queues.iter_mut().enumerate() {
+            if !q.is_empty() {
+                let take = q.len().min(max_batch);
+                let batch = q.drain(..take).collect();
+                return Some((ALL_MODELS[i], batch));
+            }
+        }
+        None
+    }
+
+    /// Requests currently held.
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(slo: f64, margin: f64, max_batch: usize) -> BatchConfig {
+        BatchConfig { slo_us: slo, margin_us: margin, max_batch }
+    }
+
+    #[test]
+    fn holds_until_deadline_then_dispatches() {
+        let mut b = Batcher::new(cfg(1000.0, 200.0, 8));
+        b.offer(GnnModel::Gcn, 1u64, 0.0);
+        b.offer(GnnModel::Gcn, 2u64, 100.0);
+        // Deadline of the oldest member: 0 + (1000 - 200) = 800.
+        assert_eq!(b.next_deadline(), Some(800.0));
+        assert!(b.pop_due(799.0).is_none(), "not due yet");
+        let (m, batch) = b.pop_due(800.0).expect("due at the deadline");
+        assert_eq!(m, GnnModel::Gcn);
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn full_queue_dispatches_early() {
+        let mut b = Batcher::new(cfg(10_000.0, 0.0, 3));
+        for i in 0..3u64 {
+            b.offer(GnnModel::Sage, i, i as f64);
+        }
+        // Well before any deadline, the full queue goes out.
+        let (m, batch) = b.pop_due(5.0).expect("full batch due immediately");
+        assert_eq!(m, GnnModel::Sage);
+        assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn models_never_mix() {
+        let mut b = Batcher::new(cfg(100.0, 0.0, 8));
+        b.offer(GnnModel::Gcn, 1u64, 0.0);
+        b.offer(GnnModel::Gin, 2u64, 0.0);
+        let mut seen = Vec::new();
+        while let Some((m, batch)) = b.pop_due(1e9) {
+            seen.push((m, batch.len()));
+        }
+        seen.sort_by_key(|&(m, _)| model_index(m));
+        assert_eq!(seen, vec![(GnnModel::Gcn, 1), (GnnModel::Gin, 1)]);
+    }
+
+    #[test]
+    fn oversized_queue_dispatches_in_fifo_chunks() {
+        let mut b = Batcher::new(cfg(100.0, 0.0, 4));
+        for i in 0..10u64 {
+            b.offer(GnnModel::Ggcn, i, 0.0);
+        }
+        let mut out = Vec::new();
+        while let Some((_, batch)) = b.pop_due(1e9) {
+            assert!(batch.len() <= 4);
+            out.extend(batch.into_iter().map(|p| p.item));
+        }
+        assert_eq!(out, (0..10).collect::<Vec<u64>>(), "FIFO across chunks");
+    }
+
+    #[test]
+    fn margin_larger_than_slo_means_dispatch_now() {
+        let mut b = Batcher::new(cfg(100.0, 500.0, 8));
+        b.offer(GnnModel::Gcn, 1u64, 42.0);
+        assert_eq!(b.next_deadline(), Some(42.0), "no headroom left");
+        assert!(b.pop_due(42.0).is_some());
+    }
+
+    #[test]
+    fn pop_all_drains_everything() {
+        let mut b = Batcher::new(cfg(1e6, 0.0, 2));
+        for i in 0..5u64 {
+            b.offer(GnnModel::Gcn, i, 0.0);
+        }
+        let mut n = 0;
+        while let Some((_, batch)) = b.pop_all() {
+            n += batch.len();
+        }
+        assert_eq!(n, 5);
+        assert!(b.is_empty());
+    }
+}

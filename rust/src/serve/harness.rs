@@ -1,0 +1,249 @@
+//! Open-loop serving harness: drive a coordinator with a generated
+//! arrival schedule and measure tail latency at a fixed offered load.
+//!
+//! Unlike `run_workload` (closed-loop: submit everything, measure a
+//! saturated pipeline), requests here are submitted at their scheduled
+//! arrival times regardless of completions — so queueing delay shows up
+//! in the end-to-end percentiles exactly as a client would see it, and
+//! sweeping the arrival rate traces the p50/p99-vs-load curve
+//! (`BENCH_serve.json`, `grip serve-bench`).
+
+use super::batcher::BatchConfig;
+use super::loadgen::{generate_arrivals, ArrivalProcess, ModelMix};
+use super::shards::ServeStats;
+use crate::config::{GripConfig, ModelConfig};
+use crate::coordinator::{
+    Coordinator, InferenceRequest, InferenceResponse, LatencyStats, ServeConfig,
+};
+use crate::graph::CsrGraph;
+use anyhow::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// One open-loop measurement's configuration.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    pub process: ArrivalProcess,
+    pub requests: usize,
+    pub mix: ModelMix,
+    /// Executor shards (fixed-point serving path).
+    pub shards: usize,
+    /// Optional SLO-aware dynamic batching policy.
+    pub batch: Option<BatchConfig>,
+    pub grip: GripConfig,
+    pub model_cfg: ModelConfig,
+    pub cache_rows: usize,
+    pub builders: usize,
+    pub seed: u64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        Self {
+            process: ArrivalProcess::Poisson { rate_rps: 100.0 },
+            requests: 200,
+            mix: ModelMix::default(),
+            shards: 1,
+            batch: None,
+            grip: GripConfig::paper(),
+            model_cfg: ModelConfig::paper(),
+            cache_rows: 4096,
+            builders: 4,
+            seed: 17,
+        }
+    }
+}
+
+/// Results of one open-loop run.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub requests: usize,
+    pub shards: usize,
+    /// Submit-to-response latency (includes batching + queueing).
+    pub e2e: LatencyStats,
+    /// Build + execute time, excluding queue wait.
+    pub service: LatencyStats,
+    /// Simulated accelerator latency.
+    pub accel: LatencyStats,
+    pub stats: ServeStats,
+    pub responses: Vec<InferenceResponse>,
+}
+
+impl OpenLoopReport {
+    /// Flatten to `(metric, value)` pairs for
+    /// [`crate::benchutil::write_bench_json`].
+    pub fn metrics(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("offered_rps", self.offered_rps),
+            ("achieved_rps", self.achieved_rps),
+            ("requests", self.requests as f64),
+            ("shards", self.shards as f64),
+            ("e2e_p50_us", self.e2e.p50()),
+            ("e2e_p99_us", self.e2e.p99()),
+            ("e2e_mean_us", self.e2e.mean()),
+            ("service_p50_us", self.service.p50()),
+            ("service_p99_us", self.service.p99()),
+            ("accel_p50_us", self.accel.p50()),
+            ("accel_p99_us", self.accel.p99()),
+            ("cache_hit_rate", self.stats.cache_hit_rate),
+            ("sim_feature_hit_rate", self.stats.sim_feature_hit_rate),
+            ("jobs", self.stats.jobs as f64),
+            ("timing_only_jobs", self.stats.timing_only_jobs as f64),
+        ]
+    }
+}
+
+/// Sleep-then-spin until `due` past `origin` (plain `sleep` is too
+/// coarse for sub-millisecond interarrival gaps).
+fn pace_until(origin: &Instant, due: Duration) {
+    loop {
+        let elapsed = origin.elapsed();
+        if elapsed >= due {
+            return;
+        }
+        let remaining = due - elapsed;
+        if remaining > Duration::from_millis(1) {
+            std::thread::sleep(remaining - Duration::from_millis(1));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Run one open-loop measurement over (a clone of) `graph`. Serving
+/// uses the fixed-point numeric path so the shard sweep is meaningful
+/// (PJRT would pin execution to shard 0).
+pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
+    let arrivals =
+        generate_arrivals(cfg.process, &cfg.mix, cfg.requests, graph.num_vertices(), cfg.seed);
+    let serve = ServeConfig {
+        numerics: false,
+        fixed_numerics: true,
+        shards: cfg.shards,
+        batch: cfg.batch,
+        grip: cfg.grip.clone(),
+        model_cfg: cfg.model_cfg,
+        cache_rows: cfg.cache_rows,
+        builders: cfg.builders,
+        // Open loop: the submission path must never block, or the
+        // schedule silently degrades to closed-loop under overload.
+        queue_depth: cfg.requests.max(256),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(graph.clone(), cfg.seed, serve)?;
+    let shards = coord.shards();
+
+    let origin = Instant::now();
+    let mut pending = Vec::with_capacity(arrivals.len());
+    for (i, a) in arrivals.iter().enumerate() {
+        pace_until(&origin, Duration::from_secs_f64(a.t_us / 1e6));
+        pending.push(coord.submit(InferenceRequest::single(i as u64, a.model, a.target))?);
+    }
+    let mut e2e = LatencyStats::new();
+    let mut service = LatencyStats::new();
+    let mut accel = LatencyStats::new();
+    let mut responses = Vec::with_capacity(pending.len());
+    for rx in pending {
+        let r = rx.recv().map_err(|_| anyhow!("pipeline dropped"))?.map_err(|e| anyhow!(e))?;
+        e2e.record(r.host_us);
+        service.record(r.service_us);
+        accel.record(r.accel_us);
+        responses.push(r);
+    }
+    let wall_s = origin.elapsed().as_secs_f64();
+    let stats = coord.serve_stats();
+    drop(coord);
+
+    let span_s = arrivals.last().map(|a| a.t_us / 1e6).unwrap_or(0.0);
+    Ok(OpenLoopReport {
+        offered_rps: if span_s > 0.0 { cfg.requests as f64 / span_s } else { 0.0 },
+        achieved_rps: if wall_s > 0.0 { cfg.requests as f64 / wall_s } else { 0.0 },
+        requests: cfg.requests,
+        shards,
+        e2e,
+        service,
+        accel,
+        stats,
+        responses,
+    })
+}
+
+/// Sweep arrival rate × shard count over one graph; returns
+/// `(section_label, report)` per point, ready for
+/// [`crate::benchutil::write_bench_json`]. `process_for` maps each
+/// swept rate to its arrival process (Poisson, bursty MMPP, ...), so
+/// `bench_exec` and `grip serve-bench` share one loop and one label
+/// format — labels look like `serve_load/poisson_r100_s4`.
+pub fn run_sweep(
+    graph: &CsrGraph,
+    rates_rps: &[f64],
+    shard_counts: &[usize],
+    base: &OpenLoopConfig,
+    process_for: impl Fn(f64) -> ArrivalProcess,
+) -> Result<Vec<(String, OpenLoopReport)>> {
+    let mut out = Vec::with_capacity(rates_rps.len() * shard_counts.len());
+    for &shards in shard_counts {
+        for &rate in rates_rps {
+            let process = process_for(rate);
+            let cfg = OpenLoopConfig { process, shards, ..base.clone() };
+            let label = format!("serve_load/{}_r{}_s{}", process.label(), rate.round(), shards);
+            let report = run_open_loop(graph, &cfg)?;
+            out.push((label, report));
+        }
+    }
+    Ok(out)
+}
+
+/// The default sweep shape: plain Poisson arrivals at each rate.
+pub fn poisson(rate_rps: f64) -> ArrivalProcess {
+    ArrivalProcess::Poisson { rate_rps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, GeneratorParams};
+    use crate::greta::GnnModel;
+
+    fn tiny_cfg(rate: f64, requests: usize) -> OpenLoopConfig {
+        OpenLoopConfig {
+            process: ArrivalProcess::Poisson { rate_rps: rate },
+            requests,
+            // Small dims keep the fixed-point matmuls test-sized.
+            model_cfg: ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 },
+            mix: ModelMix::only(GnnModel::Gcn),
+            builders: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn open_loop_serves_all_requests() {
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        let report = run_open_loop(&g, &tiny_cfg(2_000.0, 40)).unwrap();
+        assert_eq!(report.responses.len(), 40);
+        assert_eq!(report.e2e.count(), 40);
+        assert!(report.e2e.p99() >= report.e2e.p50());
+        assert!(report.offered_rps > 0.0);
+        assert!(report.achieved_rps > 0.0);
+        assert_eq!(report.stats.jobs, 40, "no batching configured");
+        assert!(report.responses.iter().all(|r| !r.timing_only));
+    }
+
+    #[test]
+    fn sweep_labels_and_coverage() {
+        let g = generate(&GeneratorParams { nodes: 800, mean_degree: 6.0, ..Default::default() });
+        let base = tiny_cfg(1.0, 12);
+        let points = run_sweep(&g, &[1_000.0, 4_000.0], &[1, 2], &base, poisson).unwrap();
+        assert_eq!(points.len(), 4);
+        assert!(points.iter().any(|(l, _)| l == "serve_load/poisson_r1000_s1"));
+        assert!(points.iter().any(|(l, _)| l == "serve_load/poisson_r4000_s2"));
+        for (label, r) in &points {
+            assert_eq!(r.requests, 12, "{label}");
+            let metrics = r.metrics();
+            assert!(metrics.iter().any(|(k, _)| *k == "e2e_p99_us"));
+            assert!(metrics.iter().any(|(k, _)| *k == "cache_hit_rate"));
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Open-loop load engine: deterministic arrival-process generation for
+//! serving experiments.
+//!
+//! The PR-1 workload driver (`run_workload`) is **closed-loop**: it
+//! submits every request up front and measures a saturated pipeline,
+//! which is the right harness for throughput but says nothing about
+//! tail latency at a given offered load. This module generates
+//! **open-loop** schedules — requests arrive at times drawn from an
+//! arrival process, independent of completions — which is how the
+//! paper's 99th-percentile online-inference claim (and MLPerf server
+//! mode) is actually measured.
+//!
+//! Two processes are provided, both bit-deterministic from a seed:
+//!
+//! * [`ArrivalProcess::Poisson`] — memoryless arrivals at a fixed rate
+//!   (exponential interarrivals by inverse-CDF).
+//! * [`ArrivalProcess::Bursty`] — a two-state Markov-modulated Poisson
+//!   process (MMPP-2): the generator dwells in a *base* state and a
+//!   *burst* state with exponentially distributed dwell times, emitting
+//!   Poisson arrivals at the state's rate. This reproduces the
+//!   bursty/self-similar traffic that makes p99 diverge from p50 long
+//!   before mean utilization saturates.
+//!
+//! Each arrival carries a model drawn from a weighted [`ModelMix`]
+//! (defaults to the paper's four Table-III models, equally weighted)
+//! and a uniformly sampled target vertex.
+
+use crate::greta::{GnnModel, ALL_MODELS};
+use crate::rng::SplitMix64;
+
+/// One scheduled request of the open-loop workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Scheduled submission time, µs from workload start.
+    pub t_us: f64,
+    pub model: GnnModel,
+    /// Target vertex id (uniform over the serving graph).
+    pub target: u32,
+}
+
+/// Arrival process shapes. Rates are requests/second of *virtual* time.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_rps`.
+    Poisson { rate_rps: f64 },
+    /// Two-state MMPP: Poisson at `base_rps`, with bursts at
+    /// `burst_rps`; dwell times in each state are exponential with the
+    /// given means.
+    Bursty {
+        base_rps: f64,
+        burst_rps: f64,
+        base_dwell_ms: f64,
+        burst_dwell_ms: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Long-run offered rate (requests/second).
+    pub fn mean_rps(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            ArrivalProcess::Bursty { base_rps, burst_rps, base_dwell_ms, burst_dwell_ms } => {
+                let total = base_dwell_ms + burst_dwell_ms;
+                (base_rps * base_dwell_ms + burst_rps * burst_dwell_ms) / total.max(1e-12)
+            }
+        }
+    }
+
+    /// Short label for report keys, e.g. `poisson` / `bursty`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+}
+
+/// Weighted model mix for generated requests.
+#[derive(Debug, Clone)]
+pub struct ModelMix {
+    /// (model, weight) — weights need not be normalized.
+    pub weights: Vec<(GnnModel, f64)>,
+}
+
+impl Default for ModelMix {
+    /// All four Table-III models, equally weighted.
+    fn default() -> Self {
+        Self { weights: ALL_MODELS.into_iter().map(|m| (m, 1.0)).collect() }
+    }
+}
+
+impl ModelMix {
+    /// A single-model mix.
+    pub fn only(model: GnnModel) -> Self {
+        Self { weights: vec![(model, 1.0)] }
+    }
+
+    fn pick(&self, rng: &mut SplitMix64) -> GnnModel {
+        let total: f64 = self.weights.iter().map(|(_, w)| w).sum();
+        let mut x = rng.gen_f64() * total;
+        for &(m, w) in &self.weights {
+            if x < w {
+                return m;
+            }
+            x -= w;
+        }
+        self.weights.last().map(|&(m, _)| m).unwrap_or(GnnModel::Gcn)
+    }
+}
+
+/// Exponential variate with the given mean (inverse-CDF; deterministic
+/// from the rng stream).
+fn exp_sample(rng: &mut SplitMix64, mean: f64) -> f64 {
+    // gen_f64 ∈ [0, 1); clamp away from 0 so ln() stays finite.
+    -(1.0 - rng.gen_f64()).max(1e-15).ln() * mean
+}
+
+/// Generate the first `n` arrivals of `process` over a graph with
+/// `num_vertices` vertices. Deterministic in `seed`; arrival times are
+/// strictly increasing.
+pub fn generate_arrivals(
+    process: ArrivalProcess,
+    mix: &ModelMix,
+    n: usize,
+    num_vertices: usize,
+    seed: u64,
+) -> Vec<Arrival> {
+    let mut rng = SplitMix64::new(seed ^ 0x09E4_10AD_0F_F3);
+    let mut out = Vec::with_capacity(n);
+    let mut t_us = 0.0f64;
+    match process {
+        ArrivalProcess::Poisson { rate_rps } => {
+            let mean_gap_us = 1e6 / rate_rps.max(1e-9);
+            while out.len() < n {
+                t_us += exp_sample(&mut rng, mean_gap_us);
+                out.push(Arrival {
+                    t_us,
+                    model: mix.pick(&mut rng),
+                    target: rng.gen_range(num_vertices.max(1)) as u32,
+                });
+            }
+        }
+        ArrivalProcess::Bursty { base_rps, burst_rps, base_dwell_ms, burst_dwell_ms } => {
+            let mut bursting = false;
+            // End of the current dwell period (µs).
+            let mut dwell_end_us = exp_sample(&mut rng, base_dwell_ms * 1e3);
+            while out.len() < n {
+                let rate = if bursting { burst_rps } else { base_rps };
+                let mean_gap_us = 1e6 / rate.max(1e-9);
+                let gap = exp_sample(&mut rng, mean_gap_us);
+                if t_us + gap > dwell_end_us {
+                    // State switch before the next arrival: restart the
+                    // (memoryless) interarrival draw in the new state.
+                    t_us = dwell_end_us;
+                    bursting = !bursting;
+                    let mean_dwell_us =
+                        1e3 * if bursting { burst_dwell_ms } else { base_dwell_ms };
+                    dwell_end_us = t_us + exp_sample(&mut rng, mean_dwell_us);
+                    continue;
+                }
+                t_us += gap;
+                out.push(Arrival {
+                    t_us,
+                    model: mix.pick(&mut rng),
+                    target: rng.gen_range(num_vertices.max(1)) as u32,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(rate: f64) -> ArrivalProcess {
+        ArrivalProcess::Poisson { rate_rps: rate }
+    }
+
+    fn bursty() -> ArrivalProcess {
+        ArrivalProcess::Bursty {
+            base_rps: 100.0,
+            burst_rps: 1000.0,
+            base_dwell_ms: 50.0,
+            burst_dwell_ms: 10.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mix = ModelMix::default();
+        let a = generate_arrivals(poisson(500.0), &mix, 200, 1000, 7);
+        let b = generate_arrivals(poisson(500.0), &mix, 200, 1000, 7);
+        assert_eq!(a, b);
+        let c = generate_arrivals(poisson(500.0), &mix, 200, 1000, 8);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn times_strictly_increasing_and_targets_in_range() {
+        for proc in [poisson(800.0), bursty()] {
+            let a = generate_arrivals(proc, &ModelMix::default(), 500, 123, 3);
+            assert_eq!(a.len(), 500);
+            for w in a.windows(2) {
+                assert!(w[1].t_us > w[0].t_us);
+            }
+            assert!(a.iter().all(|x| (x.target as usize) < 123));
+        }
+    }
+
+    #[test]
+    fn poisson_rate_close_to_nominal() {
+        let n = 4000;
+        let a = generate_arrivals(poisson(1000.0), &ModelMix::default(), n, 10, 11);
+        let measured_rps = (n - 1) as f64 / (a.last().unwrap().t_us - a[0].t_us) * 1e6;
+        assert!(
+            (measured_rps - 1000.0).abs() < 100.0,
+            "measured {measured_rps} rps vs nominal 1000"
+        );
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // Coefficient of variation of interarrival gaps: ~1 for Poisson,
+        // strictly larger for the 10x MMPP.
+        let cov = |a: &[Arrival]| {
+            let gaps: Vec<f64> = a.windows(2).map(|w| w[1].t_us - w[0].t_us).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / mean
+        };
+        let mix = ModelMix::default();
+        let mean_rps = bursty().mean_rps();
+        let p = generate_arrivals(poisson(mean_rps), &mix, 3000, 10, 5);
+        let b = generate_arrivals(bursty(), &mix, 3000, 10, 5);
+        assert!(
+            cov(&b) > cov(&p) * 1.15,
+            "bursty CoV {} should exceed poisson CoV {}",
+            cov(&b),
+            cov(&p)
+        );
+    }
+
+    #[test]
+    fn mmpp_mean_rate_formula() {
+        let m = bursty().mean_rps();
+        // (100*50 + 1000*10) / 60 = 250
+        assert!((m - 250.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn model_mix_respects_weights() {
+        let mix = ModelMix { weights: vec![(GnnModel::Gcn, 3.0), (GnnModel::Gin, 1.0)] };
+        let a = generate_arrivals(poisson(100.0), &mix, 2000, 10, 9);
+        let gcn = a.iter().filter(|x| x.model == GnnModel::Gcn).count();
+        let frac = gcn as f64 / a.len() as f64;
+        assert!((frac - 0.75).abs() < 0.05, "gcn fraction {frac}");
+        assert!(a.iter().all(|x| x.model != GnnModel::Sage));
+    }
+
+    #[test]
+    fn single_model_mix() {
+        let mix = ModelMix::only(GnnModel::Ggcn);
+        let a = generate_arrivals(poisson(100.0), &mix, 50, 10, 1);
+        assert!(a.iter().all(|x| x.model == GnnModel::Ggcn));
+    }
+}

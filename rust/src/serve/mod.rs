@@ -1,0 +1,63 @@
+//! Scale-out serving subsystem (PR 2): open-loop load generation,
+//! SLO-aware dynamic batching, a sharded fixed-point executor pool, and
+//! a shared degree-aware feature cache.
+//!
+//! The paper's headline claim is 99th-percentile latency under *online
+//! inference load*; this module provides the system layer that claim
+//! is actually measured with. It composes with the [`crate::coordinator`]
+//! pipeline like this:
+//!
+//! ```text
+//!  loadgen (open-loop Poisson / bursty MMPP schedule over the
+//!  Table-I dataset + model mix; deterministic from a seed)
+//!      │  submit at scheduled arrival times, never blocking
+//!      ▼
+//!  Coordinator::submit
+//!      │
+//!      ▼
+//!  batcher — SLO-aware dynamic batching: coalesce compatible
+//!  single-target requests into multi-target batches, dispatching
+//!  by *deadline* (arrival + SLO − margin), on a full batch, or
+//!  immediately while the pipeline is idle — never by a fixed
+//!  timer or count alone
+//!      │  coalesced jobs
+//!      ▼
+//!  nodeflow-builder pool (PR 1): parallel sampling + CSR build
+//!      │  built nodeflows
+//!      ▼
+//!  shards — executor pool: K fixed-point executors, each with its
+//!  own PlanArgs + ExecScratch; PJRT pinned to shard 0
+//!      │         │
+//!      │         ▼
+//!      │  feature_cache — one shared degree-aware clock cache of
+//!      │  synthesized feature rows (GNNIE-style: high-degree rows
+//!      │  get more second chances); its hit rate is mirrored by
+//!      │  the cycle sim's `cache_features` accounting so host and
+//!      │  simulated locality are directly comparable
+//!      ▼
+//!  per-request replies → harness percentiles (p50/p99 vs offered
+//!  load, per shard count) → BENCH_serve.json
+//! ```
+//!
+//! * [`loadgen`] — deterministic Poisson and Markov-modulated (bursty)
+//!   arrival processes, weighted model mixes.
+//! * [`batcher`] — the batch-by-deadline state machine (pure virtual
+//!   time; property-tested in `tests/serve_props.rs`).
+//! * [`shards`] — the executor pool and its serving statistics.
+//! * [`feature_cache`] — the shared degree-aware clock cache.
+//! * [`harness`] — open-loop measurement and the rate × shard sweep
+//!   behind `grip serve-bench` and `cargo bench --bench bench_exec`.
+
+pub mod batcher;
+pub mod feature_cache;
+pub mod harness;
+pub mod loadgen;
+pub mod shards;
+
+pub use batcher::{BatchConfig, Batcher, Pending};
+pub use feature_cache::FeatureCache;
+pub use harness::{poisson, run_open_loop, run_sweep, OpenLoopConfig, OpenLoopReport};
+pub use loadgen::{generate_arrivals, Arrival, ArrivalProcess, ModelMix};
+pub use shards::{
+    fixed_serving_args, CachedFeatures, ExecJob, ReplySlot, ServeStats, ShardPool, ShardSpec,
+};

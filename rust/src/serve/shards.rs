@@ -1,0 +1,602 @@
+//! Sharded executor pool: N fixed-point executors behind one work
+//! queue, fronted by the shared degree-aware [`FeatureCache`].
+//!
+//! PR 1 parallelized nodeflow *builds* but left execution on a single
+//! thread (ROADMAP open item). This pool closes that gap for the
+//! fixed-point datapath: each shard owns its own compiled
+//! [`ModelPlan`]s, resolved [`PlanArgs`] (weights pre-quantized once)
+//! and [`ExecScratch`] arena, so shards share **no mutable state**
+//! except the feature cache — execution scales across cores with one
+//! mutex probe per feature row.
+//!
+//! The PJRT float path stays **pinned to shard 0**: the PJRT client is
+//! not `Send`, and replies must not depend on which shard served them,
+//! so when PJRT numerics are requested the pool runs single-shard
+//! (exactly the PR-1 pipeline, plus the marshalling arena and the
+//! explicit `timing_only` fallback). Scale-out applies to the Q4.12
+//! fixed-point serving mode, whose output is bit-identical for any
+//! shard count (`tests/serve_props.rs` pins this): per-request results
+//! depend only on vertex ids — sampled nodeflow, synthesized features,
+//! and the deterministic serving weights — never on scheduling.
+
+use crate::config::{GripConfig, ModelConfig};
+use crate::coordinator::InferenceResponse;
+use crate::graph::CsrGraph;
+use crate::greta::{
+    compile, exec_test_args, execute_model_into, ExecArgs, ExecScratch, GnnModel, ModelPlan,
+    PlanArgs, ALL_MODELS,
+};
+use crate::nodeflow::Nodeflow;
+use crate::runtime::{
+    build_dynamic_args_into, fits_padding, Executor, FeatureSource, Manifest, MarshalScratch,
+};
+use crate::serve::FeatureCache;
+use crate::sim::simulate;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// One original caller's stake in a (possibly coalesced) job: its id,
+/// how many of the job's targets are its, and where to send the reply.
+pub struct ReplySlot {
+    pub id: u64,
+    pub n_targets: usize,
+    pub t_submit: Instant,
+    pub reply: mpsc::Sender<Result<InferenceResponse, String>>,
+}
+
+/// A unit of executor work: a built nodeflow plus the reply slots of
+/// every request coalesced into it (one slot for direct submissions).
+pub struct ExecJob {
+    pub model: GnnModel,
+    pub nf: Nodeflow,
+    pub members: Vec<ReplySlot>,
+    /// When a builder dequeued the job (start of service time).
+    pub t_dequeue: Instant,
+}
+
+/// Pool configuration (a plain-data subset of the coordinator's
+/// `ServeConfig`, cloneable into each shard thread).
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    pub shards: usize,
+    pub grip: GripConfig,
+    pub model_cfg: ModelConfig,
+    /// Attempt to load the PJRT executor (pins the pool to one shard).
+    pub pjrt: bool,
+    /// Serve Q4.12 fixed-point embeddings from every shard when PJRT
+    /// numerics are off/unavailable (otherwise replies are timing-only).
+    pub fixed_numerics: bool,
+    /// Shared feature-cache capacity in rows (0 disables caching).
+    pub cache_rows: usize,
+    /// Seed of the deterministic fixed-point serving weights.
+    pub weight_seed: u64,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            grip: GripConfig::paper(),
+            model_cfg: ModelConfig::paper(),
+            pjrt: false,
+            fixed_numerics: false,
+            cache_rows: 4096,
+            weight_seed: 0x5EED_5E4E,
+        }
+    }
+}
+
+/// Monotonic pool counters (relaxed atomics; snapshot via
+/// [`ShardPool::stats`]).
+#[derive(Debug, Default)]
+struct PoolCounters {
+    jobs: AtomicU64,
+    timing_only: AtomicU64,
+    sim_rows_touched: AtomicU64,
+    sim_rows_loaded: AtomicU64,
+}
+
+/// A point-in-time view of the pool's serving statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    /// Executor shards actually running.
+    pub shards: usize,
+    /// Jobs executed (batches count once).
+    pub jobs: u64,
+    /// Jobs that produced no numeric embedding (see
+    /// `InferenceResponse::timing_only`).
+    pub timing_only_jobs: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Host-side feature-cache hit fraction.
+    pub cache_hit_rate: f64,
+    /// The cycle simulator's on-chip feature hit fraction over the same
+    /// jobs (`cache_features` accounting) — comparable to
+    /// `cache_hit_rate` in `BENCH_serve.json`.
+    pub sim_feature_hit_rate: f64,
+}
+
+/// The executor pool. Threads drain the `ExecJob` receiver until its
+/// sender side closes; dropping the pool joins them.
+pub struct ShardPool {
+    threads: Vec<std::thread::JoinHandle<()>>,
+    cache: Arc<FeatureCache>,
+    counters: Arc<PoolCounters>,
+    shards: usize,
+}
+
+/// Deterministic fixed-point serving weights for `plan` (the Q4.12
+/// analogue of `runtime::serving_weights`): every transform weight from
+/// the shared test-weight generator plus GIN's eps scalars. Identical
+/// on every shard for a given seed — the root of the pool's
+/// bit-identity guarantee.
+pub fn fixed_serving_args(plan: &ModelPlan, seed: u64) -> ExecArgs {
+    let mut args = exec_test_args(plan, seed);
+    args.insert("eps1".into(), (Vec::new(), vec![0.1]));
+    args.insert("eps2".into(), (Vec::new(), vec![0.2]));
+    args
+}
+
+/// [`FeatureSource`] adapter: serve rows from the shared cache, using
+/// the serving graph's out-degree as the admission weight.
+pub struct CachedFeatures<'a> {
+    pub cache: &'a FeatureCache,
+    pub graph: &'a CsrGraph,
+}
+
+impl FeatureSource for CachedFeatures<'_> {
+    fn fill_row(&mut self, v: u32, dst: &mut [f32]) {
+        self.cache.copy_row(v, self.graph.degree(v), dst);
+    }
+}
+
+impl ShardPool {
+    /// Spawn the pool over `rx`. When `spec.pjrt` is set the pool is
+    /// forced to a single shard (shard 0 owns the non-Send PJRT
+    /// client); otherwise `spec.shards` fixed-point shards share the
+    /// queue. `inflight` is decremented once per completed job — the
+    /// gauge the coordinator's batcher uses for idle-aware early
+    /// dispatch (the sender increments it on enqueue).
+    pub fn start(
+        spec: &ShardSpec,
+        graph: Arc<CsrGraph>,
+        rx: mpsc::Receiver<ExecJob>,
+        inflight: Arc<AtomicU64>,
+    ) -> Result<ShardPool> {
+        let shards = if spec.pjrt { 1 } else { spec.shards.max(1) };
+        let cache = Arc::new(FeatureCache::new(spec.cache_rows, spec.model_cfg.f_in));
+        let counters = Arc::new(PoolCounters::default());
+        let rx = Arc::new(Mutex::new(rx));
+        let mut threads = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let spec = spec.clone();
+            let graph = graph.clone();
+            let cache = cache.clone();
+            let counters = counters.clone();
+            let rx = rx.clone();
+            let inflight = inflight.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("grip-shard-{i}"))
+                .spawn(move || shard_loop(i, &spec, &graph, &cache, &counters, &rx, &inflight))
+                .map_err(|e| anyhow!("spawning shard {i}: {e}"))?;
+            threads.push(handle);
+        }
+        Ok(ShardPool { threads, cache, counters, shards })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let touched = self.counters.sim_rows_touched.load(Ordering::Relaxed);
+        let loaded = self.counters.sim_rows_loaded.load(Ordering::Relaxed);
+        ServeStats {
+            shards: self.shards,
+            jobs: self.counters.jobs.load(Ordering::Relaxed),
+            timing_only_jobs: self.counters.timing_only.load(Ordering::Relaxed),
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            cache_hit_rate: self.cache.hit_rate(),
+            sim_feature_hit_rate: if touched > 0 {
+                1.0 - loaded as f64 / touched as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // The job sender must already be gone (the coordinator drops the
+        // pipeline front-to-back); joining here never deadlocks because
+        // each shard exits on the closed channel.
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One shard: compile plans and resolve fixed-point weights once, then
+/// drain the shared queue. Shard 0 additionally owns the PJRT executor
+/// when requested.
+fn shard_loop(
+    shard: usize,
+    spec: &ShardSpec,
+    graph: &CsrGraph,
+    cache: &FeatureCache,
+    counters: &PoolCounters,
+    rx: &Mutex<mpsc::Receiver<ExecJob>>,
+    inflight: &AtomicU64,
+) {
+    let pjrt = if spec.pjrt && shard == 0 {
+        match Executor::load(&Manifest::default_dir()) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("shard 0: PJRT unavailable ({e}); serving without float numerics");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let plans: HashMap<GnnModel, ModelPlan> =
+        ALL_MODELS.into_iter().map(|m| (m, compile(m, &spec.model_cfg))).collect();
+    let pargs: HashMap<GnnModel, PlanArgs> = plans
+        .iter()
+        .map(|(&m, p)| {
+            let args = fixed_serving_args(p, spec.weight_seed);
+            (m, PlanArgs::resolve(p, &args).expect("serving weights match their own plan"))
+        })
+        .collect();
+    let mut scratch = ExecScratch::for_config(&spec.grip);
+    let mut marshal = MarshalScratch::new();
+    let mut h: Vec<f32> = Vec::new();
+    let mut emb: Vec<f32> = Vec::new();
+
+    loop {
+        // Hold the queue lock only while waiting; execution runs
+        // unlocked so shards overlap.
+        let job = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => break,
+            };
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => break,
+            }
+        };
+        execute_job(
+            spec,
+            graph,
+            cache,
+            counters,
+            pjrt.as_ref(),
+            &plans,
+            &pargs,
+            &mut scratch,
+            &mut marshal,
+            &mut h,
+            &mut emb,
+            job,
+        );
+        // Replies are out: this job no longer occupies the pipeline.
+        inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Execute one job and fan replies out to its members. `emb` holds the
+/// job's full embedding (`f_out` values per target, member order).
+#[allow(clippy::too_many_arguments)]
+fn execute_job(
+    spec: &ShardSpec,
+    graph: &CsrGraph,
+    cache: &FeatureCache,
+    counters: &PoolCounters,
+    pjrt: Option<&Executor>,
+    plans: &HashMap<GnnModel, ModelPlan>,
+    pargs: &HashMap<GnnModel, PlanArgs>,
+    scratch: &mut ExecScratch,
+    marshal: &mut MarshalScratch,
+    h: &mut Vec<f32>,
+    emb: &mut Vec<f32>,
+    job: ExecJob,
+) {
+    let ExecJob { model, nf, members, t_dequeue } = job;
+    let plan = &plans[&model];
+
+    // 1. Cycle-level accelerator timing (and the sim-side feature-cache
+    //    accounting mirrored into the pool stats).
+    let sim = simulate(&spec.grip, plan, &nf);
+    let accel_us = sim.us(&spec.grip);
+    counters.jobs.fetch_add(1, Ordering::Relaxed);
+    counters
+        .sim_rows_touched
+        .fetch_add(sim.counters.feature_rows_touched, Ordering::Relaxed);
+    counters
+        .sim_rows_loaded
+        .fetch_add(sim.counters.feature_rows_loaded, Ordering::Relaxed);
+
+    // 2. Numerics: PJRT float path (shard 0), else the fixed-point
+    //    datapath, else timing-only. On success `emb` holds
+    //    f_out * nf.targets.len() values.
+    let outcome: Result<(usize, bool), String> = if let Some(exec) = pjrt {
+        match exec.model(model.name()) {
+            Ok(lm) => {
+                if fits_padding(&lm.artifact, &nf) {
+                    let mut src = CachedFeatures { cache, graph };
+                    build_dynamic_args_into(model, &lm.artifact, &nf, &mut src, marshal)
+                        .map_err(|e| e.to_string())
+                        .and_then(|_| {
+                            exec.run_prepared(model.name(), marshal.args())
+                                .map_err(|e| e.to_string())
+                        })
+                        .map(|out| {
+                            let f_out = *lm.artifact.output_shape.last().unwrap_or(&1);
+                            emb.clear();
+                            emb.extend_from_slice(&out[..f_out * nf.targets.len()]);
+                            (f_out, false)
+                        })
+                } else {
+                    // Batched nodeflow exceeds the batch-1 AOT padding:
+                    // degrade to an explicitly-flagged timing-only reply.
+                    emb.clear();
+                    Ok((0, true))
+                }
+            }
+            Err(e) => Err(e.to_string()),
+        }
+    } else if spec.fixed_numerics {
+        let l0 = &nf.layers[0];
+        h.clear();
+        h.reserve(l0.num_inputs() * spec.model_cfg.f_in);
+        for &v in &l0.inputs {
+            cache.append_row(v, graph.degree(v), h);
+        }
+        match execute_model_into(plan, &nf, h, &pargs[&model], scratch, emb) {
+            Ok(()) => Ok((spec.model_cfg.f_out, false)),
+            Err(e) => Err(e.to_string()),
+        }
+    } else {
+        emb.clear();
+        Ok((0, true))
+    };
+
+    // 3. Fan out per-member replies (a coalesced batch shares one
+    //    nodeflow, one simulated pass, and one embedding buffer).
+    match outcome {
+        Err(e) => {
+            for m in members {
+                let _ = m.reply.send(Err(e.clone()));
+            }
+        }
+        Ok((f_out, timing_only)) => {
+            if timing_only {
+                counters.timing_only.fetch_add(1, Ordering::Relaxed);
+            }
+            let service_us = t_dequeue.elapsed().as_secs_f64() * 1e6;
+            let neighborhood = nf.neighborhood_size();
+            let mut row = 0usize;
+            for m in members {
+                let embedding = if timing_only {
+                    Vec::new()
+                } else {
+                    emb[row * f_out..(row + m.n_targets) * f_out].to_vec()
+                };
+                row += m.n_targets;
+                let resp = InferenceResponse {
+                    id: m.id,
+                    embedding,
+                    accel_us,
+                    host_us: m.t_submit.elapsed().as_secs_f64() * 1e6,
+                    service_us,
+                    neighborhood,
+                    timing_only,
+                };
+                let _ = m.reply.send(Ok(resp));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, GeneratorParams};
+    use crate::nodeflow::Sampler;
+
+    fn graph() -> Arc<CsrGraph> {
+        Arc::new(generate(&GeneratorParams {
+            nodes: 2_000,
+            mean_degree: 8.0,
+            ..Default::default()
+        }))
+    }
+
+    /// An in-flight gauge pre-charged for `jobs` sends (the test
+    /// harness enqueues directly, without the coordinator's increments).
+    fn gauge(jobs: usize) -> Arc<AtomicU64> {
+        Arc::new(AtomicU64::new(jobs as u64))
+    }
+
+    fn small_mc() -> ModelConfig {
+        ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+    }
+
+    fn submit(
+        tx: &mpsc::Sender<ExecJob>,
+        g: &CsrGraph,
+        mc: &ModelConfig,
+        model: GnnModel,
+        id: u64,
+        targets: &[u32],
+    ) -> mpsc::Receiver<Result<InferenceResponse, String>> {
+        let nf = Nodeflow::build(g, &Sampler::new(9), targets, mc);
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(ExecJob {
+            model,
+            nf,
+            members: vec![ReplySlot {
+                id,
+                n_targets: targets.len(),
+                t_submit: Instant::now(),
+                reply: rtx,
+            }],
+            t_dequeue: Instant::now(),
+        })
+        .unwrap();
+        rrx
+    }
+
+    fn run_pool(shards: usize, fixed: bool, ids: &[u32]) -> Vec<InferenceResponse> {
+        let g = graph();
+        let mc = small_mc();
+        let spec = ShardSpec {
+            shards,
+            model_cfg: mc,
+            fixed_numerics: fixed,
+            cache_rows: 256,
+            ..Default::default()
+        };
+        let (tx, rx) = mpsc::channel();
+        let pool = ShardPool::start(&spec, g.clone(), rx, gauge(ids.len())).unwrap();
+        let replies: Vec<_> = ids
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| submit(&tx, &g, &mc, GnnModel::Gcn, i as u64, &[t]))
+            .collect();
+        drop(tx);
+        let out: Vec<InferenceResponse> =
+            replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        drop(pool);
+        out
+    }
+
+    #[test]
+    fn fixed_point_pool_serves_embeddings() {
+        let out = run_pool(2, true, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(out.len(), 8);
+        for r in &out {
+            assert!(!r.timing_only);
+            assert_eq!(r.embedding.len(), 6);
+            assert!(r.accel_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn pool_output_independent_of_shard_count() {
+        let ids: Vec<u32> = (0..24).map(|i| i * 13 % 2000).collect();
+        let one = run_pool(1, true, &ids);
+        let four = run_pool(4, true, &ids);
+        for (a, b) in one.iter().zip(four.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.embedding, b.embedding, "id {}", a.id);
+            assert_eq!(a.accel_us, b.accel_us);
+            assert_eq!(a.neighborhood, b.neighborhood);
+        }
+    }
+
+    #[test]
+    fn without_numerics_replies_are_flagged_timing_only() {
+        let out = run_pool(2, false, &[10, 20]);
+        for r in &out {
+            assert!(r.timing_only);
+            assert!(r.embedding.is_empty());
+            assert!(r.accel_us > 0.0, "timing still served");
+        }
+    }
+
+    #[test]
+    fn timing_only_reply_never_leaks_a_previous_jobs_embedding() {
+        // The timing-only fallbacks (numerics disabled, or the PJRT
+        // padding-exceeded degrade — both run `emb.clear(); (0, true)`)
+        // share one embedding buffer with numeric jobs on the same
+        // shard; a stale buffer must never fan out to members.
+        let g = graph();
+        let mc = small_mc();
+        let spec_fx = ShardSpec { model_cfg: mc, fixed_numerics: true, ..Default::default() };
+        let spec_timing = ShardSpec { model_cfg: mc, fixed_numerics: false, ..Default::default() };
+        let plans: HashMap<GnnModel, ModelPlan> =
+            ALL_MODELS.into_iter().map(|m| (m, compile(m, &mc))).collect();
+        let pargs: HashMap<GnnModel, PlanArgs> = plans
+            .iter()
+            .map(|(&m, p)| {
+                (m, PlanArgs::resolve(p, &fixed_serving_args(p, spec_fx.weight_seed)).unwrap())
+            })
+            .collect();
+        let cache = FeatureCache::new(64, mc.f_in);
+        let counters = PoolCounters::default();
+        let mut scratch = ExecScratch::new();
+        let mut marshal = MarshalScratch::new();
+        let mut h = Vec::new();
+        let mut emb = Vec::new();
+
+        let mk_job = |id: u64| {
+            let nf = Nodeflow::build(&g, &Sampler::new(9), &[7], &mc);
+            let (rtx, rrx) = mpsc::channel();
+            let job = ExecJob {
+                model: GnnModel::Gcn,
+                nf,
+                members: vec![ReplySlot {
+                    id,
+                    n_targets: 1,
+                    t_submit: Instant::now(),
+                    reply: rtx,
+                }],
+                t_dequeue: Instant::now(),
+            };
+            (job, rrx)
+        };
+
+        // 1. A numeric job fills the shared embedding buffer.
+        let (job, rx1) = mk_job(0);
+        execute_job(
+            &spec_fx, &g, &cache, &counters, None, &plans, &pargs, &mut scratch, &mut marshal,
+            &mut h, &mut emb, job,
+        );
+        let r1 = rx1.recv().unwrap().unwrap();
+        assert!(!r1.timing_only && !r1.embedding.is_empty());
+
+        // 2. A timing-only job reusing the same buffers must reply empty.
+        let (job, rx2) = mk_job(1);
+        execute_job(
+            &spec_timing, &g, &cache, &counters, None, &plans, &pargs, &mut scratch,
+            &mut marshal, &mut h, &mut emb, job,
+        );
+        let r2 = rx2.recv().unwrap().unwrap();
+        assert!(r2.timing_only, "no numeric path ran");
+        assert!(r2.embedding.is_empty(), "stale embedding leaked from the previous job");
+    }
+
+    #[test]
+    fn stats_track_cache_and_jobs() {
+        let g = graph();
+        let mc = small_mc();
+        let spec = ShardSpec {
+            shards: 2,
+            model_cfg: mc,
+            fixed_numerics: true,
+            cache_rows: 1024,
+            ..Default::default()
+        };
+        let (tx, rx) = mpsc::channel();
+        let pool = ShardPool::start(&spec, g.clone(), rx, gauge(2)).unwrap();
+        // Same target twice: the second job's rows should mostly hit.
+        let a = submit(&tx, &g, &mc, GnnModel::Gcn, 0, &[42]);
+        a.recv().unwrap().unwrap();
+        let b = submit(&tx, &g, &mc, GnnModel::Gcn, 1, &[42]);
+        b.recv().unwrap().unwrap();
+        drop(tx);
+        let s = pool.stats();
+        assert_eq!(s.jobs, 2);
+        assert_eq!(s.timing_only_jobs, 0);
+        assert!(s.cache_hits > 0, "repeat neighborhood must hit");
+        assert!(s.cache_hit_rate > 0.0 && s.cache_hit_rate < 1.0);
+        assert!(s.sim_feature_hit_rate >= 0.0);
+    }
+}

@@ -20,6 +20,15 @@ pub struct ActivityCounters {
     pub edge_alu_ops: u64,
     /// Elements processed by the update unit (ReLU / LUT evaluations).
     pub update_elems: u64,
+    /// Input-layer feature rows *touched* by partition columns (every
+    /// reference, resident or not) — the on-chip mirror of the serving
+    /// layer's feature-cache accesses.
+    pub feature_rows_touched: u64,
+    /// Input-layer feature rows actually streamed from DRAM (touched
+    /// minus the rows `cache_features` kept resident) — the mirror of
+    /// the serving feature cache's misses, so simulated and host-side
+    /// hit rates are directly comparable (`BENCH_serve.json`).
+    pub feature_rows_loaded: u64,
 }
 
 impl ActivityCounters {
@@ -30,6 +39,18 @@ impl ActivityCounters {
         self.macs += other.macs;
         self.edge_alu_ops += other.edge_alu_ops;
         self.update_elems += other.update_elems;
+        self.feature_rows_touched += other.feature_rows_touched;
+        self.feature_rows_loaded += other.feature_rows_loaded;
+    }
+
+    /// Fraction of feature-row touches served from the on-chip
+    /// nodeflow buffer instead of DRAM (0.0 when nothing was touched).
+    /// With `cache_features` off this is exactly 0.
+    pub fn feature_hit_rate(&self) -> f64 {
+        if self.feature_rows_touched == 0 {
+            return 0.0;
+        }
+        1.0 - self.feature_rows_loaded as f64 / self.feature_rows_touched as f64
     }
 
     /// Total arithmetic operations (1 MAC = 2 ops) — for roofline plots.

@@ -172,6 +172,12 @@ pub fn simulate(cfg: &GripConfig, plan: &ModelPlan, nf: &Nodeflow) -> SimResult 
         for cw in &cols {
             // Feature load for this column.
             let rows = if cfg.cache_features { cw.new_rows } else { cw.touched_rows };
+            if feature_rows_from_dram {
+                // Mirror of the serving feature cache's accounting:
+                // touches vs actual DRAM loads at the input layer.
+                counters.feature_rows_touched += cw.touched_rows as u64;
+                counters.feature_rows_loaded += rows as u64;
+            }
             // With vertex-tiling the edge unit consumes features in
             // f-element slices, so DRAM serves each row as ceil(in_dim/f)
             // chunks of f*elem bytes — below the 128 B interface a chunk
@@ -427,6 +433,27 @@ mod tests {
         // DRAM bytes should be dominated by weights + features ~ 1-2 MB.
         assert!(r.counters.dram_bytes > 500_000, "{}", r.counters.dram_bytes);
         assert!(r.counters.dram_bytes < 20_000_000);
+    }
+
+    #[test]
+    fn feature_cache_accounting_mirrors_policy() {
+        let on = GripConfig::paper();
+        let mut off = GripConfig::paper();
+        off.cache_features = false;
+        let r_on = sim_for(GnnModel::Gcn, Dataset::Pokec, &on);
+        let r_off = sim_for(GnnModel::Gcn, Dataset::Pokec, &off);
+        // Same nodeflow → same touches; caching only changes loads.
+        assert_eq!(
+            r_on.counters.feature_rows_touched,
+            r_off.counters.feature_rows_touched
+        );
+        assert!(r_on.counters.feature_rows_loaded <= r_on.counters.feature_rows_touched);
+        assert!(r_on.counters.feature_rows_touched > 0);
+        // With caching off every touch is a DRAM load: hit rate 0.
+        assert_eq!(r_off.counters.feature_rows_loaded, r_off.counters.feature_rows_touched);
+        assert_eq!(r_off.counters.feature_hit_rate(), 0.0);
+        assert!(r_on.counters.feature_hit_rate() >= 0.0);
+        assert!(r_on.counters.feature_hit_rate() < 1.0);
     }
 
     #[test]

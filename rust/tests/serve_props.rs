@@ -1,0 +1,203 @@
+//! Property tests for the PR-2 serving subsystem (hand-rolled seeded
+//! cases, same style as `proptests.rs`; the offline crate set has no
+//! `proptest`).
+//!
+//! * The SLO-aware batcher never dispatches a request after its
+//!   deadline budget in virtual time, never mixes models, never
+//!   overfills a batch, and loses nothing.
+//! * The sharded executor pool is bit-identical to the single-executor
+//!   path — and to a from-scratch single-threaded execution — for the
+//!   same request set.
+
+use grip::config::ModelConfig;
+use grip::coordinator::{Coordinator, InferenceRequest, InferenceResponse, ServeConfig};
+use grip::graph::{generate, CsrGraph, GeneratorParams};
+use grip::greta::{compile, execute_model_into, ExecScratch, GnnModel, PlanArgs};
+use grip::nodeflow::{Nodeflow, Sampler};
+use grip::rng::SplitMix64;
+use grip::runtime::fill_feature_row;
+use grip::serve::{
+    fixed_serving_args, generate_arrivals, ArrivalProcess, BatchConfig, Batcher, ModelMix,
+};
+
+/// Run `f` over `n` seeded cases.
+fn for_cases(n: u64, mut f: impl FnMut(u64, &mut SplitMix64)) {
+    for case in 0..n {
+        let mut rng = SplitMix64::new(0xBA7C4E5 ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        f(case, &mut rng);
+    }
+}
+
+fn min_opt(a: Option<f64>, b: Option<f64>) -> Option<f64> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+// ------------------------------------------------ batcher deadline SLO
+#[test]
+fn prop_batcher_never_exceeds_deadline_budget() {
+    for_cases(60, |case, rng| {
+        let slo_us = 500.0 + rng.gen_f64() * 20_000.0;
+        let margin_us = rng.gen_f64() * slo_us;
+        let max_batch = 1 + rng.gen_range(15);
+        let cfg = BatchConfig { slo_us, margin_us, max_batch };
+        let budget_us = (slo_us - margin_us).max(0.0);
+
+        let process = if rng.gen_f64() < 0.5 {
+            ArrivalProcess::Poisson { rate_rps: 100.0 + rng.gen_f64() * 5_000.0 }
+        } else {
+            ArrivalProcess::Bursty {
+                base_rps: 100.0 + rng.gen_f64() * 500.0,
+                burst_rps: 1_000.0 + rng.gen_f64() * 5_000.0,
+                base_dwell_ms: 5.0 + rng.gen_f64() * 50.0,
+                burst_dwell_ms: 1.0 + rng.gen_f64() * 20.0,
+            }
+        };
+        let n = 120;
+        let arrivals = generate_arrivals(process, &ModelMix::default(), n, 1_000, case);
+
+        // Event-driven virtual-time driver: advance to the next arrival
+        // or batcher deadline, offering/dispatching at exact times — the
+        // discipline the real-time batcher thread approximates with
+        // recv_timeout.
+        let mut batcher: Batcher<usize> = Batcher::new(cfg);
+        let mut dispatched = vec![false; n];
+        let mut i = 0usize;
+        let mut t = 0.0f64;
+        loop {
+            while let Some((model, batch)) = batcher.pop_due(t) {
+                assert!(!batch.is_empty(), "case {case}: empty batch");
+                assert!(batch.len() <= max_batch, "case {case}: oversized batch");
+                // A partial batch must be due: its head's deadline expired.
+                if batch.len() < max_batch {
+                    assert!(
+                        batch[0].dispatch_by_us <= t + 1e-6,
+                        "case {case}: early partial dispatch at {t} (deadline {})",
+                        batch[0].dispatch_by_us
+                    );
+                }
+                for p in &batch {
+                    let idx = p.item;
+                    // THE property: dispatch never exceeds the deadline
+                    // budget (arrival + slo - margin) in virtual time.
+                    assert!(
+                        t <= p.dispatch_by_us + 1e-6,
+                        "case {case}: req {idx} dispatched at {t}, deadline {}",
+                        p.dispatch_by_us
+                    );
+                    assert!(
+                        p.dispatch_by_us - p.arrival_us <= budget_us + 1e-6,
+                        "case {case}: deadline beyond the budget"
+                    );
+                    assert_eq!(arrivals[idx].model, model, "case {case}: mixed-model batch");
+                    assert!(!dispatched[idx], "case {case}: req {idx} dispatched twice");
+                    dispatched[idx] = true;
+                }
+            }
+            let next_arrival = arrivals.get(i).map(|a| a.t_us);
+            let Some(t_next) = min_opt(next_arrival, batcher.next_deadline()) else {
+                break;
+            };
+            t = t.max(t_next);
+            while i < arrivals.len() && arrivals[i].t_us <= t {
+                batcher.offer(arrivals[i].model, i, arrivals[i].t_us);
+                i += 1;
+            }
+        }
+        assert!(batcher.is_empty(), "case {case}: requests stuck in the batcher");
+        assert!(
+            dispatched.iter().all(|&d| d),
+            "case {case}: not every request dispatched"
+        );
+    });
+}
+
+// ------------------------------------- shard pool numeric bit-identity
+fn serving_graph(seed: u64) -> CsrGraph {
+    generate(&GeneratorParams { nodes: 1_500, mean_degree: 7.0, seed, ..Default::default() })
+}
+
+fn small_mc() -> ModelConfig {
+    ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+}
+
+fn fixed_cfg(shards: usize) -> ServeConfig {
+    ServeConfig {
+        numerics: false,
+        fixed_numerics: true,
+        shards,
+        builders: 3,
+        model_cfg: small_mc(),
+        ..Default::default()
+    }
+}
+
+/// Serve `reqs` through a coordinator with the given shard count and
+/// return responses in request order.
+fn serve_all(
+    graph: &CsrGraph,
+    shards: usize,
+    reqs: &[(GnnModel, u32)],
+) -> Vec<InferenceResponse> {
+    let coord = Coordinator::start(graph.clone(), 11, fixed_cfg(shards)).unwrap();
+    let pending: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, t))| coord.submit(InferenceRequest::single(i as u64, m, t)).unwrap())
+        .collect();
+    pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect()
+}
+
+#[test]
+fn prop_shard_pool_bit_identical_to_single_executor() {
+    let graph = serving_graph(5);
+    let mut rng = SplitMix64::new(77);
+    let models = [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin, GnnModel::Ggcn];
+    let reqs: Vec<(GnnModel, u32)> = (0..48)
+        .map(|_| (models[rng.gen_range(4)], rng.gen_range(1_500) as u32))
+        .collect();
+
+    let single = serve_all(&graph, 1, &reqs);
+    let pooled = serve_all(&graph, 4, &reqs);
+    assert_eq!(single.len(), pooled.len());
+    for (a, b) in single.iter().zip(pooled.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.embedding, b.embedding, "id {}: shard count changed numerics", a.id);
+        assert_eq!(a.accel_us, b.accel_us, "id {}: shard count changed timing", a.id);
+        assert_eq!(a.neighborhood, b.neighborhood);
+        assert!(!a.timing_only && !b.timing_only);
+    }
+}
+
+#[test]
+fn prop_pool_matches_from_scratch_single_threaded_execution() {
+    // The pool's replies must equal a from-scratch single-threaded
+    // execution with the same sampler seed, serving weights, and
+    // synthesized features — no hidden state in the pipeline.
+    let graph = serving_graph(9);
+    let mc = small_mc();
+    let weight_seed = ServeConfig::default().weight_seed;
+    let mut rng = SplitMix64::new(3);
+    let reqs: Vec<(GnnModel, u32)> =
+        (0..12).map(|_| (GnnModel::Gcn, rng.gen_range(1_500) as u32)).collect();
+    let got = serve_all(&graph, 3, &reqs);
+
+    let sampler = Sampler::new(11);
+    let plan = compile(GnnModel::Gcn, &mc);
+    let pargs = PlanArgs::resolve(&plan, &fixed_serving_args(&plan, weight_seed)).unwrap();
+    let mut scratch = ExecScratch::new();
+    let mut out = Vec::new();
+    for (i, &(_, t)) in reqs.iter().enumerate() {
+        let nf = Nodeflow::build(&graph, &sampler, &[t], &mc);
+        let l0 = &nf.layers[0];
+        let mut h = vec![0f32; l0.num_inputs() * mc.f_in];
+        for (r, &v) in l0.inputs.iter().enumerate() {
+            fill_feature_row(v, &mut h[r * mc.f_in..(r + 1) * mc.f_in]);
+        }
+        execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
+        assert_eq!(got[i].embedding, out, "request {i} (target {t})");
+    }
+}
