@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     match Executor::load(&Manifest::default_dir()) {
         Ok(exec) => {
             let artifact = &exec.model(model.name())?.artifact;
-            let args = build_args(model, artifact, &nf)?;
+            let args = build_args(&plan, artifact, &nf)?;
             let out = exec.run(model.name(), &args)?;
             let f_out = *artifact.output_shape.last().unwrap();
             let emb = &out[..f_out];

@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         "model", "acc p50µs", "acc p99µs", "CPU p99µs", "GPU p99µs", "CPUx", "GPUx", "host req/s"
     );
     for model in [GnnModel::Gcn, GnnModel::Gin, GnnModel::Sage, GnnModel::Ggcn] {
+        let plan = grip::greta::compile(model, &grip::ModelConfig::paper());
         let t0 = std::time::Instant::now();
         let (accel, _host, responses) = run_workload(&coord, model, &targets)?;
         let wall = t0.elapsed().as_secs_f64();
@@ -45,9 +46,9 @@ fn main() -> anyhow::Result<()> {
         let mut nbhd: Vec<usize> = responses.iter().map(|r| r.neighborhood).collect();
         nbhd.sort_unstable();
         let p99_n = nbhd[(nbhd.len() * 99 / 100).min(nbhd.len() - 1)];
-        let cpu = cpu_latency_us(model, p99_n);
+        let cpu = cpu_latency_us(&plan, p99_n);
         // flops estimate: embedding dim work via the last response's sim
-        let gpu = gpu_latency_us(model, p99_n, 50e6);
+        let gpu = gpu_latency_us(&plan, p99_n, 50e6);
 
         println!(
             "{:<6} {:>10.1} {:>10.1} {:>10.0} {:>10.0} {:>8.1}x {:>8.1}x {:>10.0}",

@@ -19,18 +19,19 @@ fn main() {
         Ok(exec) => {
             for name in ["gcn", "gin", "sage", "ggcn"] {
                 let model = GnnModel::from_name(name).unwrap();
+                let plan = compile(model, &mc);
                 let artifact = exec.model(name).unwrap().artifact.clone();
-                let args = build_args(model, &artifact, &nf).unwrap();
+                let args = build_args(&plan, &artifact, &nf).unwrap();
                 bench(&format!("pjrt_execute/{name}"), 3, 20, || {
                     exec.run(name, &args).unwrap().len()
                 });
                 bench(&format!("build_args/{name}"), 3, 50, || {
-                    build_args(model, &artifact, &nf).unwrap().len()
+                    build_args(&plan, &artifact, &nf).unwrap().len()
                 });
                 let w = serving_weights(&artifact);
                 let mut store = FeatureStore::new();
                 bench(&format!("build_args_cached/{name}"), 3, 50, || {
-                    build_args_cached(model, &artifact, &nf, &w, &mut store).unwrap().len()
+                    build_args_cached(&plan, &artifact, &nf, &w, &mut store).unwrap().len()
                 });
             }
         }
@@ -48,7 +49,7 @@ fn main() {
         let h: Vec<f32> = (0..nf_s.layers[0].num_inputs() * small.f_in)
             .map(|i| ((i % 17) as f32 - 8.0) / 40.0)
             .collect();
-        bench(&format!("fx16_exec/{}@32dim", plan.model.name()), 3, 30, || {
+        bench(&format!("fx16_exec/{}@32dim", plan.name), 3, 30, || {
             execute_model(&plan, &nf_s, &h, &args).unwrap().len()
         });
     }

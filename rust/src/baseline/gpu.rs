@@ -8,8 +8,13 @@
 //!    size 1 ("the overhead of launching each kernel tends to
 //!    dominate");
 //! 3. low-utilization compute.
+//!
+//! Kernel counts are derived from plan structure (launches ≈ framework
+//! ops ≈ 8 + one per GReTA program), which reproduces the per-model
+//! counts previously hardcoded for the four presets (GCN 10, GIN 12,
+//! SAGE 14, G-GCN 16) and extends to arbitrary specs.
 
-use crate::greta::GnnModel;
+use crate::greta::ModelPlan;
 
 #[derive(Debug, Clone, Copy)]
 pub struct GpuModel {
@@ -26,19 +31,14 @@ pub struct GpuModel {
 }
 
 impl GpuModel {
-    pub fn for_model(m: GnnModel) -> Self {
-        // Kernel counts follow the per-layer op structure of each model
-        // in TF (gather, spmm/segment ops, matmuls, activations, concat).
-        let kernels = match m {
-            GnnModel::Gcn => 10,
-            GnnModel::Gin => 12,
-            GnnModel::Sage => 14,
-            GnnModel::Ggcn => 16,
-        };
+    /// Launch counts follow the plan's program structure: a fixed
+    /// framework floor (gathers, concats, activations) plus one
+    /// launch per GReTA program (the TF op it lowers to).
+    pub fn for_plan(plan: &ModelPlan) -> Self {
         Self {
             transfer_base_us: 200.0,
             transfer_per_vertex_us: 1.0,
-            kernels,
+            kernels: 8 + plan.num_programs(),
             launch_us: 70.0,
             eff_gflops: 500.0,
         }
@@ -52,27 +52,42 @@ impl GpuModel {
     }
 }
 
-/// GPU latency for `model` with `u` unique neighbors and `flops` total
+/// GPU latency for a plan with `u` unique neighbors and `flops` total
 /// floating-point work (2 × MACs from the simulator counters).
-pub fn gpu_latency_us(model: GnnModel, u: usize, flops: f64) -> f64 {
-    GpuModel::for_model(model).latency_us(u, flops)
+pub fn gpu_latency_us(plan: &ModelPlan, u: usize, flops: f64) -> f64 {
+    GpuModel::for_plan(plan).latency_us(u, flops)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ModelConfig;
+    use crate::greta::{compile, GnnModel};
+
+    fn plan(m: GnnModel) -> ModelPlan {
+        compile(m, &ModelConfig::paper())
+    }
+
+    #[test]
+    fn kernel_counts_match_pre_redesign_constants() {
+        // The hardcoded per-model counts, now derived structurally.
+        assert_eq!(GpuModel::for_plan(&plan(GnnModel::Gcn)).kernels, 10);
+        assert_eq!(GpuModel::for_plan(&plan(GnnModel::Gin)).kernels, 12);
+        assert_eq!(GpuModel::for_plan(&plan(GnnModel::Sage)).kernels, 14);
+        assert_eq!(GpuModel::for_plan(&plan(GnnModel::Ggcn)).kernels, 16);
+    }
 
     #[test]
     fn gcn_in_table3_band() {
         // Paper: GCN GPU 813–1388 µs.
-        let t = gpu_latency_us(GnnModel::Gcn, 167, 20e6);
+        let t = gpu_latency_us(&plan(GnnModel::Gcn), 167, 20e6);
         assert!(t > 700.0 && t < 1600.0, "{t}");
     }
 
     #[test]
     fn transfer_share_matches_paper() {
         // Sec. VIII-A: transfer is 25–50% of GCN total.
-        let m = GpuModel::for_model(GnnModel::Gcn);
+        let m = GpuModel::for_plan(&plan(GnnModel::Gcn));
         let u = 167;
         let total = m.latency_us(u, 20e6);
         let transfer = m.transfer_base_us + m.transfer_per_vertex_us * u as f64;
@@ -82,8 +97,8 @@ mod tests {
 
     #[test]
     fn more_kernels_more_latency() {
-        let t_gcn = gpu_latency_us(GnnModel::Gcn, 100, 20e6);
-        let t_ggcn = gpu_latency_us(GnnModel::Ggcn, 100, 200e6);
+        let t_gcn = gpu_latency_us(&plan(GnnModel::Gcn), 100, 20e6);
+        let t_ggcn = gpu_latency_us(&plan(GnnModel::Ggcn), 100, 200e6);
         assert!(t_ggcn > t_gcn);
     }
 }

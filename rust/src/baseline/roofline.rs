@@ -3,7 +3,7 @@
 
 use super::cpu::cpu_latency_us;
 use crate::config::ModelConfig;
-use crate::greta::GnnModel;
+use crate::greta::{compile, GnnModel};
 
 /// One scatter point of Fig. 2.
 #[derive(Debug, Clone, Copy)]
@@ -42,7 +42,7 @@ pub fn gcn_work(u: usize, mc: &ModelConfig) -> (f64, f64) {
 pub fn cpu_roofline_point(u: usize, mc: &ModelConfig) -> RooflinePoint {
     let (flops, bytes) = gcn_work(u, mc);
     let ai = flops / bytes;
-    let t_us = cpu_latency_us(GnnModel::Gcn, u);
+    let t_us = cpu_latency_us(&compile(GnnModel::Gcn, mc), u);
     let gflops = flops / (t_us * 1e3);
     let roofline = CPU_PEAK_GFLOPS.min(ai * CPU_MEM_GIB_S * 1.073_741_824);
     RooflinePoint { neighborhood: u, ai, gflops, roofline }

@@ -54,8 +54,9 @@
 use super::metrics::LatencyStats;
 use crate::config::{GripConfig, ModelConfig};
 use crate::graph::CsrGraph;
-use crate::greta::GnnModel;
+use crate::greta::{ModelKey, ModelLibrary, ModelSpec};
 use crate::nodeflow::{Nodeflow, Sampler};
+use crate::runtime::Manifest;
 use crate::serve::{
     BatchConfig, Batcher, ExecJob, Pending, ReplySlot, ServeStats, ShardPool, ShardSpec,
 };
@@ -66,17 +67,22 @@ use std::time::{Duration, Instant};
 
 /// One inference request: a batch of target vertices served from one
 /// shared nodeflow (single-target is the common online case).
+///
+/// `model` is a [`ModelKey`] — a reference into the coordinator's
+/// [`ModelLibrary`]: one of the four paper presets (`GnnModel::*.key()`
+/// or just the enum via `Into`) or a custom [`ModelSpec`] registered
+/// through [`ServeConfig::custom_specs`].
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
-    pub model: GnnModel,
+    pub model: ModelKey,
     pub targets: Vec<u32>,
 }
 
 impl InferenceRequest {
     /// The common single-target request.
-    pub fn single(id: u64, model: GnnModel, target: u32) -> Self {
-        Self { id, model, targets: vec![target] }
+    pub fn single(id: u64, model: impl Into<ModelKey>, target: u32) -> Self {
+        Self { id, model: model.into(), targets: vec![target] }
     }
 }
 
@@ -119,7 +125,7 @@ struct Submission {
 
 /// A (possibly coalesced) unit of builder work.
 struct Job {
-    model: GnnModel,
+    model: ModelKey,
     targets: Vec<u32>,
     members: Vec<ReplySlot>,
 }
@@ -152,14 +158,17 @@ enum Front {
     Batched(mpsc::Sender<Submission>),
 }
 
-/// Serving coordinator handle. Owns the batcher, builder pool, and
-/// executor shard pool; dropping it drains and joins the pipeline
-/// front to back.
+/// Serving coordinator handle. Owns the model library, batcher, builder
+/// pool, and executor shard pool; dropping it drains and joins the
+/// pipeline front to back.
 pub struct Coordinator {
     front: Option<Front>,
     batcher: Option<std::thread::JoinHandle<()>>,
     builders: Vec<std::thread::JoinHandle<()>>,
     pool: Option<ShardPool>,
+    /// The models this coordinator serves: the four presets plus any
+    /// registered custom specs.
+    library: Arc<ModelLibrary>,
     /// Jobs currently inside the pipeline (enqueued, building, or
     /// executing). The batcher flushes immediately while this is 0 —
     /// batching can only add latency to an idle pipeline.
@@ -187,12 +196,22 @@ pub struct ServeConfig {
     /// the scale-out serving mode. Off by default: timing-only benches
     /// expect empty embeddings.
     pub fixed_numerics: bool,
-    /// Enable the SLO-aware dynamic batcher with this policy.
+    /// Enable the SLO-aware dynamic batcher with this policy. On the
+    /// PJRT path the policy's `max_batch` is clamped to the AOT
+    /// artifacts' padded batch capacity
+    /// ([`crate::runtime::PadShapes::max_coalesced_targets`]) so a
+    /// coalesced batch can never silently degrade to a timing-only
+    /// reply.
     pub batch: Option<BatchConfig>,
     /// Shared degree-aware feature-cache capacity, in rows (0 disables).
     pub cache_rows: usize,
     /// Seed of the deterministic fixed-point serving weights.
     pub weight_seed: u64,
+    /// Custom [`ModelSpec`]s to register alongside the four presets.
+    /// Validated and compiled at [`Coordinator::start`]; requests
+    /// address them by the key order they are listed in (presets first)
+    /// or by name via [`Coordinator::model_key`].
+    pub custom_specs: Vec<ModelSpec>,
 }
 
 impl Default for ServeConfig {
@@ -210,6 +229,7 @@ impl Default for ServeConfig {
             batch: None,
             cache_rows: spec.cache_rows,
             weight_seed: spec.weight_seed,
+            custom_specs: Vec::new(),
         }
     }
 }
@@ -229,11 +249,14 @@ impl ServeConfig {
 }
 
 impl Coordinator {
-    /// Start the coordinator over `graph`. Plans are compiled and
-    /// weights resolved per shard up front, so the request path never
-    /// compiles.
+    /// Start the coordinator over `graph`. The model library (presets +
+    /// `cfg.custom_specs`) is validated/compiled here and weights are
+    /// resolved per shard up front, so the request path never compiles.
     pub fn start(graph: CsrGraph, sampler_seed: u64, cfg: ServeConfig) -> Result<Coordinator> {
         let graph = Arc::new(graph);
+        let (library, _keys) = ModelLibrary::with_customs(&cfg.model_cfg, &cfg.custom_specs)
+            .map_err(|e| anyhow!("registering model specs: {e}"))?;
+        let library = Arc::new(library);
         let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
         let (built_tx, built_rx) = mpsc::sync_channel::<ExecJob>(cfg.built_depth.max(1));
         let jobs = Arc::new(Mutex::new(job_rx));
@@ -244,10 +267,10 @@ impl Coordinator {
             let jobs = jobs.clone();
             let built_tx = built_tx.clone();
             let sampler = Sampler::new(sampler_seed);
-            let mc = cfg.model_cfg;
+            let library = library.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("grip-nf-builder-{i}"))
-                .spawn(move || builder_loop(&graph, &sampler, &mc, &jobs, &built_tx))
+                .spawn(move || builder_loop(&graph, &sampler, &library, &jobs, &built_tx))
                 .map_err(|e| anyhow!("spawning builder {i}: {e}"))?;
             builders.push(handle);
         }
@@ -255,9 +278,36 @@ impl Coordinator {
         drop(built_tx);
 
         let inflight = Arc::new(AtomicU64::new(0));
-        let pool = ShardPool::start(&cfg.shard_spec(), graph, built_rx, inflight.clone())?;
+        let pool = ShardPool::start(
+            &cfg.shard_spec(),
+            library.clone(),
+            graph,
+            built_rx,
+            inflight.clone(),
+        )?;
 
-        let (front, batcher) = match cfg.batch {
+        // Batched-request padding satellite: on the PJRT path, clamp the
+        // batcher's max_batch to the AOT artifacts' padded batch
+        // capacity so coalescing never produces a nodeflow that falls
+        // back to timing_only. (Fixed-point serving has no padding.)
+        let batch = match cfg.batch {
+            Some(mut bc) if cfg.numerics => {
+                if let Ok(man) = Manifest::load(&Manifest::default_dir()) {
+                    let cap = man.pad.max_coalesced_targets(&cfg.model_cfg);
+                    if bc.max_batch > cap {
+                        eprintln!(
+                            "batcher: clamping max_batch {} -> {} (AOT artifact padding)",
+                            bc.max_batch, cap
+                        );
+                        bc.max_batch = cap;
+                    }
+                }
+                Some(bc)
+            }
+            other => other,
+        };
+
+        let (front, batcher) = match batch {
             None => (Front::Direct(job_tx), None),
             Some(bc) => {
                 let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
@@ -270,7 +320,14 @@ impl Coordinator {
             }
         };
 
-        Ok(Coordinator { front: Some(front), batcher, builders, pool: Some(pool), inflight })
+        Ok(Coordinator {
+            front: Some(front),
+            batcher,
+            builders,
+            pool: Some(pool),
+            library,
+            inflight,
+        })
     }
 
     /// Submit a request; returns a receiver for the response. In direct
@@ -282,6 +339,13 @@ impl Coordinator {
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
         ensure!(!req.targets.is_empty(), "request {} has no targets", req.id);
+        ensure!(
+            self.library.contains(req.model),
+            "request {} names model key {} but only {} models are registered",
+            req.id,
+            req.model.index(),
+            self.library.len()
+        );
         let (rtx, rrx) = mpsc::channel();
         let t_submit = Instant::now();
         match self.front.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))? {
@@ -314,6 +378,17 @@ impl Coordinator {
     /// Executor shards actually running (1 when PJRT is pinned).
     pub fn shards(&self) -> usize {
         self.pool.as_ref().map(|p| p.shards()).unwrap_or(0)
+    }
+
+    /// The models this coordinator serves.
+    pub fn library(&self) -> &ModelLibrary {
+        &self.library
+    }
+
+    /// Resolve a model name (preset or registered custom spec) to its
+    /// request key.
+    pub fn model_key(&self, name: &str) -> Option<ModelKey> {
+        self.library.key(name)
     }
 }
 
@@ -409,7 +484,7 @@ fn batcher_loop(
 fn send_coalesced(
     job_tx: &mpsc::SyncSender<Job>,
     inflight: &AtomicU64,
-    model: GnnModel,
+    model: ModelKey,
     batch: Vec<Pending<Submission>>,
 ) -> Result<(), ()> {
     let mut targets = Vec::with_capacity(batch.len());
@@ -429,11 +504,13 @@ fn send_coalesced(
 }
 
 /// Builder stage: pull jobs off the shared queue, build nodeflows in
-/// parallel, hand them to the shard pool.
+/// parallel, hand them to the shard pool. Each job's nodeflow depth and
+/// per-layer sampling come from its model's library entry, so 2-layer
+/// presets and deeper custom specs share one pipeline.
 fn builder_loop(
     graph: &CsrGraph,
     sampler: &Sampler,
-    mc: &ModelConfig,
+    library: &ModelLibrary,
     jobs: &Mutex<mpsc::Receiver<Job>>,
     built_tx: &mpsc::SyncSender<ExecJob>,
 ) {
@@ -451,7 +528,8 @@ fn builder_loop(
             }
         };
         let t_dequeue = Instant::now();
-        let nf = Nodeflow::build(graph, sampler, &job.targets, mc);
+        let samples = library.samples(job.model);
+        let nf = Nodeflow::build_layers(graph, sampler, &job.targets, samples);
         let exec = ExecJob { model: job.model, nf, members: job.members, t_dequeue };
         if built_tx.send(exec).is_err() {
             break;
@@ -466,7 +544,7 @@ fn builder_loop(
 /// open-loop load at a fixed arrival rate, see `serve::run_open_loop`.)
 pub fn run_workload(
     coord: &Coordinator,
-    model: GnnModel,
+    model: impl Into<ModelKey>,
     targets: &[u32],
 ) -> Result<(LatencyStats, LatencyStats, Vec<InferenceResponse>)> {
     run_workload_batched(coord, model, targets, 1)
@@ -476,10 +554,11 @@ pub fn run_workload(
 /// one nodeflow build and one simulated accelerator pass.
 pub fn run_workload_batched(
     coord: &Coordinator,
-    model: GnnModel,
+    model: impl Into<ModelKey>,
     targets: &[u32],
     batch: usize,
 ) -> Result<(LatencyStats, LatencyStats, Vec<InferenceResponse>)> {
+    let model = model.into();
     let batch = batch.max(1);
     let mut pending = Vec::with_capacity(targets.len().div_ceil(batch));
     for (i, chunk) in targets.chunks(batch).enumerate() {
@@ -505,6 +584,7 @@ pub fn run_workload_batched(
 mod tests {
     use super::*;
     use crate::graph::{generate, GeneratorParams};
+    use crate::greta::GnnModel;
 
     fn graph() -> CsrGraph {
         generate(&GeneratorParams { nodes: 2_000, mean_degree: 8.0, ..Default::default() })
@@ -588,8 +668,70 @@ mod tests {
     #[test]
     fn empty_target_list_is_rejected() {
         let coord = Coordinator::start(graph(), 3, timing_cfg()).unwrap();
-        let err = coord.submit(InferenceRequest { id: 0, model: GnnModel::Gcn, targets: vec![] });
+        let err = coord
+            .submit(InferenceRequest { id: 0, model: GnnModel::Gcn.key(), targets: vec![] });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn unregistered_model_key_is_rejected() {
+        let coord = Coordinator::start(graph(), 3, timing_cfg()).unwrap();
+        let bogus = crate::greta::ModelKey::from_index(99);
+        let err = coord.submit(InferenceRequest::single(0, bogus, 42));
+        assert!(err.is_err(), "key 99 is not in the library");
+    }
+
+    #[test]
+    fn custom_spec_served_end_to_end() {
+        use crate::greta::{Activate, LayerSpec, ModelSpec, ProgramSpec, ReduceOp};
+        // A 3-layer mean-aggregate model, dims unrelated to ModelConfig.
+        let spec = ModelSpec::builder("tri")
+            .layer(LayerSpec::new(8, 6).sample(3).program(
+                ProgramSpec::new("t0")
+                    .reduce(ReduceOp::Mean)
+                    .transform("t_w0", 8, 6)
+                    .activate(Activate::Relu),
+            ))
+            .layer(LayerSpec::new(6, 5).sample(2).program(
+                ProgramSpec::new("t1")
+                    .reduce(ReduceOp::Mean)
+                    .transform("t_w1", 6, 5)
+                    .activate(Activate::Relu),
+            ))
+            .layer(LayerSpec::new(5, 3).sample(2).program(
+                ProgramSpec::new("t2")
+                    .reduce(ReduceOp::Mean)
+                    .transform("t_w2", 5, 3)
+                    .activate(Activate::Relu),
+            ))
+            .build();
+        let cfg = ServeConfig { custom_specs: vec![spec], ..fixed_cfg(2) };
+        let coord = Coordinator::start(graph(), 7, cfg).unwrap();
+        let key = coord.model_key("tri").expect("custom spec registered");
+        assert_eq!(key.index(), 4, "registered after the four presets");
+        let resp = coord.infer(InferenceRequest::single(1, key, 42)).unwrap();
+        assert!(!resp.timing_only);
+        assert_eq!(resp.embedding.len(), 3, "last layer out_dim");
+        assert!(resp.embedding.iter().all(|x| x.is_finite()));
+        // Determinism across repeats and alongside preset traffic.
+        let again = coord.infer(InferenceRequest::single(2, key, 42)).unwrap();
+        assert_eq!(resp.embedding, again.embedding);
+        let preset = coord.infer(InferenceRequest::single(3, GnnModel::Gcn, 42)).unwrap();
+        assert_eq!(preset.embedding.len(), small_mc().f_out);
+    }
+
+    #[test]
+    fn invalid_custom_spec_fails_start() {
+        use crate::greta::{LayerSpec, ModelSpec, ProgramSpec};
+        let bad = ModelSpec::builder("bad")
+            .layer(
+                LayerSpec::new(4, 4)
+                    .program(ProgramSpec::new("p").source_program(3).transform("b_w", 4, 4)),
+            )
+            .build();
+        let cfg = ServeConfig { custom_specs: vec![bad], ..timing_cfg() };
+        let err = Coordinator::start(graph(), 3, cfg);
+        assert!(err.is_err(), "dangling source must fail registration");
     }
 
     #[test]

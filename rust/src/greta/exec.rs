@@ -39,7 +39,7 @@ pub enum ExecError {
     MissingArg(String),
     /// An argument was present but not matrix-shaped.
     BadShape { name: String, shape: Vec<usize> },
-    DimMismatch { program: &'static str, expected: usize, got: usize },
+    DimMismatch { program: String, expected: usize, got: usize },
 }
 
 impl std::fmt::Display for ExecError {
@@ -72,7 +72,7 @@ pub fn exec_test_args(plan: &ModelPlan, seed: u64) -> Args {
             if let Some(t) = &p.transform {
                 let data: Vec<f32> =
                     lcg.fill(t.in_dim * t.out_dim).iter().map(|x| x * 0.4).collect();
-                args.insert(t.weight.to_string(), (vec![t.in_dim, t.out_dim], data));
+                args.insert(t.weight.clone(), (vec![t.in_dim, t.out_dim], data));
             }
         }
     }
@@ -134,10 +134,10 @@ impl PlanArgs {
             for prog in &lp.programs {
                 let w = match &prog.transform {
                     Some(t) => {
-                        let m = get_matrix(args, t.weight)?;
+                        let m = get_matrix(args, &t.weight)?;
                         if m.rows != t.in_dim || m.cols != t.out_dim {
                             return Err(ExecError::DimMismatch {
-                                program: prog.name,
+                                program: prog.name.clone(),
                                 expected: t.in_dim * t.out_dim,
                                 got: m.rows * m.cols,
                             });
@@ -146,11 +146,11 @@ impl PlanArgs {
                     }
                     None => None,
                 };
-                let s = match prog.self_scale {
+                let s = match &prog.self_scale {
                     Some(SelfScale::OnePlusArg(name)) => {
                         Some(Fx16::from_f32(1.0 + get_scalar(args, name)?))
                     }
-                    Some(SelfScale::Const(c)) => Some(Fx16::from_f32(c)),
+                    Some(SelfScale::Const(c)) => Some(Fx16::from_f32(*c)),
                     None => None,
                 };
                 wrow.push(w);
@@ -464,7 +464,11 @@ fn run_program(
     // -------------------------------------------- vertex-accumulate phase
     let mut result = if let Some(t) = &prog.transform {
         if t.in_dim != dim {
-            return Err(ExecError::DimMismatch { program: prog.name, expected: t.in_dim, got: dim });
+            return Err(ExecError::DimMismatch {
+                program: prog.name.clone(),
+                expected: t.in_dim,
+                got: dim,
+            });
         }
         let w = weight.expect("resolved PlanArgs carries every transform weight");
         let out_dim = w.cols;
@@ -667,10 +671,10 @@ fn run_program_ref(
     };
 
     // Self contribution (GIN): acc[v] += (1+eps) * src[v].
-    if let Some(ss) = prog.self_scale {
+    if let Some(ss) = &prog.self_scale {
         let scale = match ss {
             SelfScale::OnePlusArg(name) => Fx16::from_f32(1.0 + get_scalar(args, name)?),
-            SelfScale::Const(c) => Fx16::from_f32(c),
+            SelfScale::Const(c) => Fx16::from_f32(*c),
         };
         for r in 0..acc.rows {
             let s_row: Vec<Fx16> = src.row(r).iter().map(|x| x.sat_mul(scale)).collect();
@@ -683,12 +687,16 @@ fn run_program_ref(
     // -------------------------------------------- vertex-accumulate phase
     let mut result = if let Some(t) = &prog.transform {
         if t.in_dim != dim {
-            return Err(ExecError::DimMismatch { program: prog.name, expected: t.in_dim, got: dim });
+            return Err(ExecError::DimMismatch {
+                program: prog.name.clone(),
+                expected: t.in_dim,
+                got: dim,
+            });
         }
-        let w = get_matrix(args, t.weight)?;
+        let w = get_matrix(args, &t.weight)?;
         if w.rows != t.in_dim || w.cols != t.out_dim {
             return Err(ExecError::DimMismatch {
-                program: prog.name,
+                program: prog.name.clone(),
                 expected: t.in_dim * t.out_dim,
                 got: w.rows * w.cols,
             });

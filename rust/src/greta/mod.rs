@@ -8,9 +8,12 @@
 //!
 //! * [`ops`] — the UDF vocabulary our PE implementation supports
 //!   (paper Sec. V-A "PE Implementation").
-//! * [`program`] — programs, layer plans, and model compilation
-//!   ([`compile`]): GCN, GraphSAGE-max, GIN, G-GCN → program sequences
-//!   exactly mirroring Fig. 4.
+//! * [`spec`] — the data-driven model IR: [`ModelSpec`] (typed builder
+//!   + JSON loader), the validation/lowering pass into [`ModelPlan`],
+//!   and the serving [`ModelLibrary`] / [`ModelKey`] registry.
+//! * [`program`] — executable plans plus the [`GnnModel`] preset
+//!   factory: GCN, GraphSAGE-max, GIN, G-GCN specs exactly mirroring
+//!   Fig. 4.
 //! * [`exec`] — the bit-accurate functional executor: runs a compiled
 //!   plan over a nodeflow on the 16-bit fixed-point datapath ([`crate::fixed`]),
 //!   validated against the float PJRT path in integration tests.
@@ -18,10 +21,17 @@
 mod exec;
 mod ops;
 mod program;
+mod spec;
 
 pub use exec::{
     exec_test_args, execute_model, execute_model_into, execute_model_ref, Args as ExecArgs,
     ExecError, ExecScratch, PlanArgs,
 };
 pub use ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
-pub use program::{compile, GnnModel, LayerPlan, MatMul, ModelPlan, Program, Src, ALL_MODELS};
+pub use program::{
+    compile, GnnModel, LayerPlan, MatMul, ModelPlan, Program, Src, ALL_MODELS, MODEL_NAME_HELP,
+};
+pub use spec::{
+    LayerSpec, ModelEntry, ModelKey, ModelLibrary, ModelSpec, ModelSpecBuilder, ProgramSpec,
+    SpecError,
+};

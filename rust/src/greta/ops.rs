@@ -41,11 +41,13 @@ pub enum ReduceOp {
 }
 
 /// Optional self-contribution folded into the edge accumulator before
-/// transform (GIN's `(1 + eps) · h_v`).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// transform (GIN's `(1 + eps) · h_v`). Argument names are owned so
+/// data-driven [`crate::greta::ModelSpec`]s can name their scalars
+/// freely (the pre-redesign IR pinned them to `&'static str` literals).
+#[derive(Debug, Clone, PartialEq)]
 pub enum SelfScale {
     /// `1 + eps` with eps supplied as a runtime scalar argument.
-    OnePlusArg(&'static str),
+    OnePlusArg(String),
     /// Fixed constant.
     Const(f32),
 }

@@ -1,16 +1,24 @@
-//! GRIP programs and the model compiler (paper Sec. IV-A, Fig. 3/4).
+//! Executable GRIP plans and the paper-model preset factory (paper
+//! Sec. IV-A, Fig. 3/4).
 //!
 //! Each [`Program`] is one pass of the three GReTA phases over a domain;
 //! a [`LayerPlan`] is the program sequence implementing one
-//! message-passing layer; a [`ModelPlan`] is the full 2-layer model. The
-//! compiler output feeds both the functional executor (`exec.rs`) and
-//! the cycle simulator (`crate::sim`), so the cost model and the
-//! numerics always agree on program structure.
+//! message-passing layer; a [`ModelPlan`] is the full compiled model
+//! (any depth). Plans are produced by the [`super::spec::ModelSpec`]
+//! validation/lowering pass — from the typed builder, from JSON, or
+//! from the [`GnnModel`] preset factory below, which yields the four
+//! models evaluated by the paper. The plan feeds both the functional
+//! executor (`exec.rs`) and the cycle simulator (`crate::sim`), so the
+//! cost model and the numerics always agree on program structure.
 
 use super::ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
+use super::spec::{LayerSpec, ModelKey, ModelSpec, ProgramSpec};
 use crate::config::ModelConfig;
 
-/// The four GNN models evaluated by the paper (Sec. VII).
+/// The four GNN models evaluated by the paper (Sec. VII). Since the
+/// `ModelSpec` redesign this enum is a *preset factory only*: it names
+/// the paper specs ([`GnnModel::spec`]) and nothing else matches on it
+/// to derive program structure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum GnnModel {
     Gcn,
@@ -20,6 +28,9 @@ pub enum GnnModel {
 }
 
 pub const ALL_MODELS: [GnnModel; 4] = [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin, GnnModel::Ggcn];
+
+/// Accepted `--model` spellings, for CLI usage/error text.
+pub const MODEL_NAME_HELP: &str = "gcn | sage (aliases: gs, graphsage) | gin | ggcn (alias: g-gcn)";
 
 impl GnnModel {
     pub fn name(&self) -> &'static str {
@@ -31,6 +42,7 @@ impl GnnModel {
         }
     }
 
+    /// Parse a model name. Accepted spellings: [`MODEL_NAME_HELP`].
     pub fn from_name(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "gcn" => Some(GnnModel::Gcn),
@@ -40,14 +52,32 @@ impl GnnModel {
             _ => None,
         }
     }
+
+    /// This preset's [`ModelKey`] — valid in every
+    /// [`super::spec::ModelLibrary`] (presets always occupy keys 0..4).
+    pub fn key(self) -> ModelKey {
+        ModelKey::from(self)
+    }
+
+    /// The preset's data-driven spec: the Fig. 4 program sequences over
+    /// `mc`'s dims and sampling. `compile(model, mc)` lowers it.
+    pub fn spec(self, mc: &ModelConfig) -> ModelSpec {
+        let mut b = ModelSpec::builder(self.name());
+        for (i, &(sample, in_dim, out_dim)) in mc.layers().iter().enumerate() {
+            b = b.layer(preset_layer(self, i, in_dim, mc.f_hid, out_dim).sample(sample));
+        }
+        b.build()
+    }
 }
 
 /// Transform UDF: matrix multiply with a named weight (paper: transform
-/// is the only UDF with weight access).
+/// is the only UDF with weight access). The name is owned so manifest /
+/// argument resolution works for spec-defined models, not just the
+/// presets' literal names.
 #[derive(Debug, Clone)]
 pub struct MatMul {
-    /// Manifest parameter name (resolved by the runtime/executor).
-    pub weight: &'static str,
+    /// Runtime argument / manifest parameter name.
+    pub weight: String,
     pub in_dim: usize,
     pub out_dim: usize,
 }
@@ -55,7 +85,7 @@ pub struct MatMul {
 /// One GRIP program (paper Alg. 2 semantics).
 #[derive(Debug, Clone)]
 pub struct Program {
-    pub name: &'static str,
+    pub name: String,
     pub domain: Domain,
     /// Feature source: the layer's input features or a previous
     /// program's output (program composition, Fig. 4 plus-boxes).
@@ -94,7 +124,8 @@ pub struct LayerPlan {
 /// Compiled model: one plan per layer, outermost (largest U) first.
 #[derive(Debug, Clone)]
 pub struct ModelPlan {
-    pub model: GnnModel,
+    /// Model name (a preset name or the source spec's name).
+    pub name: String,
     pub layers: Vec<LayerPlan>,
 }
 
@@ -111,27 +142,44 @@ impl ModelPlan {
     }
 
     /// Names of all weight parameters in execution order.
-    pub fn weight_names(&self) -> Vec<&'static str> {
+    pub fn weight_names(&self) -> Vec<&str> {
         self.layers
             .iter()
             .flat_map(|l| l.programs.iter())
-            .filter_map(|p| p.transform.as_ref().map(|t| t.weight))
+            .filter_map(|p| p.transform.as_ref().map(|t| t.weight.as_str()))
             .collect()
+    }
+
+    /// Total programs across layers (framework-dispatch proxy for the
+    /// analytical baselines).
+    pub fn num_programs(&self) -> usize {
+        self.layers.iter().map(|l| l.programs.len()).sum()
+    }
+
+    /// Programs iterating real edges (per-neighborhood gather passes).
+    pub fn num_edge_programs(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.programs.iter())
+            .filter(|p| p.domain == Domain::Edges)
+            .count()
     }
 }
 
-/// Compile a model to its GRIP program sequence (Fig. 4).
+/// Compile a preset model to its GRIP program sequence (Fig. 4) —
+/// sugar for `model.spec(mc).compile()`.
 pub fn compile(model: GnnModel, mc: &ModelConfig) -> ModelPlan {
-    let dims = mc.layers();
-    let layers = dims
-        .iter()
-        .enumerate()
-        .map(|(i, &(_, in_dim, out_dim))| compile_layer(model, i, in_dim, mc.f_hid, out_dim))
-        .collect();
-    ModelPlan { model, layers }
+    model.spec(mc).compile().expect("paper preset specs are valid")
 }
 
-fn compile_layer(model: GnnModel, layer: usize, in_dim: usize, mid: usize, out_dim: usize) -> LayerPlan {
+/// The Fig. 4 program sequence of one preset layer, as a spec.
+fn preset_layer(
+    model: GnnModel,
+    layer: usize,
+    in_dim: usize,
+    mid: usize,
+    out_dim: usize,
+) -> LayerSpec {
     // Weight names match python/compile/model.py::param_names.
     macro_rules! w {
         ($a:expr, $b:expr) => {
@@ -142,134 +190,80 @@ fn compile_layer(model: GnnModel, layer: usize, in_dim: usize, mid: usize, out_d
             }
         };
     }
-    let programs = match model {
+    match model {
         // Z = relu((Â_mean H) W) — single program, the canonical case.
-        GnnModel::Gcn => vec![Program {
-            name: "gcn",
-            domain: Domain::Edges,
-            source: Src::LayerInput,
-            gather: GatherOp::Identity,
-            reduce: ReduceOp::Mean,
-            self_scale: None,
-            transform: Some(MatMul { weight: w!("w1", "w2"), in_dim, out_dim }),
-            add_program: None,
-            activate: Activate::Relu,
-        }],
+        GnnModel::Gcn => LayerSpec::new(in_dim, out_dim).program(
+            ProgramSpec::new("gcn")
+                .reduce(ReduceOp::Mean)
+                .transform(w!("w1", "w2"), in_dim, out_dim)
+                .activate(Activate::Relu),
+        ),
 
         // a_v = max_u relu(h_u W_pool); z = relu(h_v W_s + a_v W_n).
-        GnnModel::Sage => vec![
-            Program {
-                name: "sage-pool",
-                domain: Domain::AllInputs,
-                source: Src::LayerInput,
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Sum,
-                self_scale: None,
-                transform: Some(MatMul { weight: w!("wp1", "wp2"), in_dim, out_dim: mid }),
-                add_program: None,
-                activate: Activate::Relu,
-            },
-            Program {
-                name: "sage-agg",
-                domain: Domain::Edges,
-                source: Src::Program(0),
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Max,
-                self_scale: None,
-                transform: Some(MatMul { weight: w!("wn1", "wn2"), in_dim: mid, out_dim }),
-                add_program: None,
-                activate: Activate::None,
-            },
-            Program {
-                name: "sage-update",
-                domain: Domain::Outputs,
-                source: Src::LayerInput,
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Sum,
-                self_scale: None,
-                transform: Some(MatMul { weight: w!("ws1", "ws2"), in_dim, out_dim }),
-                add_program: Some(1),
-                activate: Activate::Relu,
-            },
-        ],
+        GnnModel::Sage => LayerSpec::new(in_dim, out_dim)
+            .program(
+                ProgramSpec::new("sage-pool")
+                    .domain(Domain::AllInputs)
+                    .transform(w!("wp1", "wp2"), in_dim, mid)
+                    .activate(Activate::Relu),
+            )
+            .program(
+                ProgramSpec::new("sage-agg")
+                    .source_program(0)
+                    .reduce(ReduceOp::Max)
+                    .transform(w!("wn1", "wn2"), mid, out_dim),
+            )
+            .program(
+                ProgramSpec::new("sage-update")
+                    .domain(Domain::Outputs)
+                    .transform(w!("ws1", "ws2"), in_dim, out_dim)
+                    .add_program(1)
+                    .activate(Activate::Relu),
+            ),
 
         // z = relu(W2 relu(W1 ((1+eps) h_v + Σ h_u))).
-        GnnModel::Gin => vec![
-            Program {
-                name: "gin-agg",
-                domain: Domain::Edges,
-                source: Src::LayerInput,
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Sum,
-                self_scale: Some(SelfScale::OnePlusArg(w!("eps1", "eps2"))),
-                transform: Some(MatMul { weight: w!("w1a", "w2a"), in_dim, out_dim: mid }),
-                add_program: None,
-                activate: Activate::Relu,
-            },
-            Program {
-                name: "gin-mlp2",
-                domain: Domain::Outputs,
-                source: Src::Program(0),
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Sum,
-                self_scale: None,
-                transform: Some(MatMul { weight: w!("w1b", "w2b"), in_dim: mid, out_dim }),
-                add_program: None,
-                activate: Activate::Relu,
-            },
-        ],
+        GnnModel::Gin => LayerSpec::new(in_dim, out_dim)
+            .program(
+                ProgramSpec::new("gin-agg")
+                    .self_scale(SelfScale::OnePlusArg(w!("eps1", "eps2").into()))
+                    .transform(w!("w1a", "w2a"), in_dim, mid)
+                    .activate(Activate::Relu),
+            )
+            .program(
+                ProgramSpec::new("gin-mlp2")
+                    .domain(Domain::Outputs)
+                    .source_program(0)
+                    .transform(w!("w1b", "w2b"), mid, out_dim)
+                    .activate(Activate::Relu),
+            ),
 
         // gate = σ(H wg) (scalar per source, Marcheggiani & Titov);
         // msg = H Wm; z = relu(Σ (gate ⊙ msg) + h_v Ws).
-        GnnModel::Ggcn => vec![
-            Program {
-                name: "ggcn-gate",
-                domain: Domain::AllInputs,
-                source: Src::LayerInput,
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Sum,
-                self_scale: None,
-                transform: Some(MatMul { weight: w!("wg1", "wg2"), in_dim, out_dim: 1 }),
-                add_program: None,
-                activate: Activate::Sigmoid,
-            },
-            Program {
-                name: "ggcn-msg",
-                domain: Domain::AllInputs,
-                source: Src::LayerInput,
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Sum,
-                self_scale: None,
-                transform: Some(MatMul { weight: w!("wm1", "wm2"), in_dim, out_dim }),
-                add_program: None,
-                activate: Activate::None,
-            },
-            Program {
-                name: "ggcn-reduce",
-                domain: Domain::Edges,
-                source: Src::Program(1),
-                gather: GatherOp::ProductWith(0),
-                reduce: ReduceOp::Sum,
-                self_scale: None,
-                transform: None,
-                add_program: None,
-                activate: Activate::None,
-            },
-            Program {
-                name: "ggcn-update",
-                domain: Domain::Outputs,
-                source: Src::LayerInput,
-                gather: GatherOp::Identity,
-                reduce: ReduceOp::Sum,
-                self_scale: None,
-                transform: Some(MatMul { weight: w!("ws1", "ws2"), in_dim, out_dim }),
-                add_program: Some(2),
-                activate: Activate::Relu,
-            },
-        ],
-    };
-    let output_program = programs.len() - 1;
-    LayerPlan { programs, output_program, in_dim, out_dim }
+        GnnModel::Ggcn => LayerSpec::new(in_dim, out_dim)
+            .program(
+                ProgramSpec::new("ggcn-gate")
+                    .domain(Domain::AllInputs)
+                    .transform(w!("wg1", "wg2"), in_dim, 1)
+                    .activate(Activate::Sigmoid),
+            )
+            .program(
+                ProgramSpec::new("ggcn-msg")
+                    .domain(Domain::AllInputs)
+                    .transform(w!("wm1", "wm2"), in_dim, out_dim),
+            )
+            .program(
+                ProgramSpec::new("ggcn-reduce")
+                    .source_program(1)
+                    .gather(GatherOp::ProductWith(0)),
+            )
+            .program(
+                ProgramSpec::new("ggcn-update")
+                    .domain(Domain::Outputs)
+                    .transform(w!("ws1", "ws2"), in_dim, out_dim)
+                    .add_program(2)
+                    .activate(Activate::Relu),
+            ),
+    }
 }
 
 #[cfg(test)]
@@ -287,6 +281,7 @@ mod tests {
         assert_eq!(plan.layers[0].programs.len(), 1);
         assert_eq!(plan.layers[0].programs[0].reduce, ReduceOp::Mean);
         assert_eq!(plan.weight_names(), vec!["w1", "w2"]);
+        assert_eq!(plan.name, "gcn");
     }
 
     #[test]
@@ -313,8 +308,8 @@ mod tests {
     fn gin_self_scale() {
         let plan = compile(GnnModel::Gin, &mc());
         assert!(matches!(
-            plan.layers[0].programs[0].self_scale,
-            Some(SelfScale::OnePlusArg("eps1"))
+            &plan.layers[0].programs[0].self_scale,
+            Some(SelfScale::OnePlusArg(name)) if name == "eps1"
         ));
         assert_eq!(plan.weight_names(), vec!["w1a", "w1b", "w2a", "w2b"]);
     }
@@ -342,5 +337,25 @@ mod tests {
             assert_eq!(GnnModel::from_name(m.name()), Some(m));
         }
         assert_eq!(GnnModel::from_name("GS"), Some(GnnModel::Sage));
+        assert_eq!(GnnModel::from_name("g-gcn"), Some(GnnModel::Ggcn));
+        // The usage string names every alias.
+        for alias in ["gs", "graphsage", "g-gcn"] {
+            assert!(MODEL_NAME_HELP.contains(alias), "{alias} missing from MODEL_NAME_HELP");
+        }
+    }
+
+    #[test]
+    fn preset_specs_carry_sampling() {
+        let spec = GnnModel::Gcn.spec(&mc());
+        assert_eq!(spec.layers[0].sample, Some(25));
+        assert_eq!(spec.layers[1].sample, Some(10));
+    }
+
+    #[test]
+    fn structural_counts() {
+        assert_eq!(compile(GnnModel::Gcn, &mc()).num_programs(), 2);
+        assert_eq!(compile(GnnModel::Ggcn, &mc()).num_programs(), 8);
+        assert_eq!(compile(GnnModel::Gcn, &mc()).num_edge_programs(), 2);
+        assert_eq!(compile(GnnModel::Sage, &mc()).num_edge_programs(), 2);
     }
 }

@@ -1,0 +1,1056 @@
+//! Data-driven model IR: [`ModelSpec`] is the programmable surface of
+//! GReTA (paper Sec. IV) — a typed description of arbitrary layer
+//! counts, dims, gather/reduce/activate ops, self-scale terms, and
+//! owned weight names — compiled by a single validation + lowering
+//! pass ([`ModelSpec::compile`]) into the executable [`ModelPlan`].
+//!
+//! Before this redesign the four paper models were hardcoded behind a
+//! closed `GnnModel` enum; every new scenario meant editing match arms
+//! across the crate. Now `GnnModel` is only a *preset factory*
+//! ([`GnnModel::spec`] yields the four Fig. 4 specs) and everything
+//! downstream — executor, cycle simulator, baselines, serving stack —
+//! consumes plans generically. Specs come from three places:
+//!
+//! * the typed builder: `ModelSpec::builder("x").layer(...)...build()`;
+//! * the preset factory (`GnnModel::Gcn.spec(&mc)`);
+//! * JSON ([`ModelSpec::from_json_str`], schema documented in
+//!   `examples/MODEL_SPEC.md`; parsed with the crate's own
+//!   [`crate::runtime::json`] — no new dependencies).
+//!
+//! [`ModelLibrary`] is the serving-side registry: the four presets plus
+//! any registered custom specs, each compiled once and addressed by a
+//! cheap [`ModelKey`] that requests, the batcher, and the load
+//! generator carry instead of the old enum.
+
+use super::ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
+use super::program::{GnnModel, LayerPlan, MatMul, ModelPlan, Program, Src, ALL_MODELS};
+use crate::config::ModelConfig;
+use crate::runtime::json::{parse, Json};
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Spec validation / parse errors. Every variant names the offending
+/// layer/program so a bad JSON file is debuggable without a stack trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// A required collection is empty ("layers", "programs in layer 1").
+    Empty(String),
+    /// Adjacent layers disagree on the chained dimension.
+    LayerChain { layer: usize, out_dim: usize, next_in_dim: usize },
+    /// A program references a program that is not strictly earlier in
+    /// the same layer (dangling `Src::Program` / gather / add ref).
+    Dangling { layer: usize, program: usize, what: &'static str, reference: usize },
+    /// A dimension contract is violated.
+    DimMismatch { layer: usize, program: String, what: &'static str, expected: usize, got: usize },
+    /// The same weight name is declared with two different shapes.
+    WeightConflict { weight: String },
+    /// The layer's output program is unusable (wrong rows/index).
+    BadProgram { layer: usize, why: String },
+    /// Registering a spec under a name the library already holds.
+    DuplicateName(String),
+    /// JSON-level failure (syntax, missing/unknown key, bad enum tag).
+    Parse(String),
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::Empty(what) => write!(f, "model spec has no {what}"),
+            SpecError::LayerChain { layer, out_dim, next_in_dim } => write!(
+                f,
+                "layer {layer} out_dim {out_dim} != layer {} in_dim {next_in_dim}",
+                layer + 1
+            ),
+            SpecError::Dangling { layer, program, what, reference } => write!(
+                f,
+                "layer {layer} program {program}: dangling {what} reference to program \
+                 {reference} (must reference an earlier program of the same layer)"
+            ),
+            SpecError::DimMismatch { layer, program, what, expected, got } => write!(
+                f,
+                "layer {layer} program {program:?}: {what} dim mismatch (expected {expected}, \
+                 got {got})"
+            ),
+            SpecError::WeightConflict { weight } => {
+                write!(f, "weight {weight:?} declared with conflicting shapes")
+            }
+            SpecError::BadProgram { layer, why } => write!(f, "layer {layer}: {why}"),
+            SpecError::DuplicateName(name) => {
+                write!(f, "model {name:?} is already registered")
+            }
+            SpecError::Parse(msg) => write!(f, "model spec parse error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+// ---------------------------------------------------------------------------
+// Spec types + builder
+// ---------------------------------------------------------------------------
+
+/// One program of a layer, pre-validation. Field-for-field the shape of
+/// the executable [`Program`]; the builder methods give it a fluent
+/// construction surface and [`ModelSpec::compile`] checks it.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub domain: Domain,
+    pub source: Src,
+    pub gather: GatherOp,
+    pub reduce: ReduceOp,
+    pub self_scale: Option<SelfScale>,
+    pub transform: Option<MatMul>,
+    pub add_program: Option<usize>,
+    pub activate: Activate,
+}
+
+impl ProgramSpec {
+    /// A program with the most common defaults: edge domain over the
+    /// layer input, identity gather, sum reduce, no transform, no
+    /// activation.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            domain: Domain::Edges,
+            source: Src::LayerInput,
+            gather: GatherOp::Identity,
+            reduce: ReduceOp::Sum,
+            self_scale: None,
+            transform: None,
+            add_program: None,
+            activate: Activate::None,
+        }
+    }
+
+    pub fn domain(mut self, d: Domain) -> Self {
+        self.domain = d;
+        self
+    }
+
+    pub fn source(mut self, s: Src) -> Self {
+        self.source = s;
+        self
+    }
+
+    /// Source the features from an earlier program's output.
+    pub fn source_program(self, k: usize) -> Self {
+        self.source(Src::Program(k))
+    }
+
+    pub fn gather(mut self, g: GatherOp) -> Self {
+        self.gather = g;
+        self
+    }
+
+    pub fn reduce(mut self, r: ReduceOp) -> Self {
+        self.reduce = r;
+        self
+    }
+
+    pub fn self_scale(mut self, s: SelfScale) -> Self {
+        self.self_scale = Some(s);
+        self
+    }
+
+    /// Vertex-accumulate matmul with a named weight.
+    pub fn transform(mut self, weight: impl Into<String>, in_dim: usize, out_dim: usize) -> Self {
+        self.transform = Some(MatMul { weight: weight.into(), in_dim, out_dim });
+        self
+    }
+
+    /// Accumulate program `k`'s output before activation (Fig. 4 plus-box).
+    pub fn add_program(mut self, k: usize) -> Self {
+        self.add_program = Some(k);
+        self
+    }
+
+    pub fn activate(mut self, a: Activate) -> Self {
+        self.activate = a;
+        self
+    }
+
+    fn lower(&self) -> Program {
+        Program {
+            name: self.name.clone(),
+            domain: self.domain,
+            source: self.source,
+            gather: self.gather,
+            reduce: self.reduce,
+            self_scale: self.self_scale.clone(),
+            transform: self.transform.clone(),
+            add_program: self.add_program,
+            activate: self.activate,
+        }
+    }
+}
+
+/// One message-passing layer of a spec.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Neighbor-sampling fan-out used when building nodeflows for this
+    /// layer (`None` → the serving `ModelConfig` default by position:
+    /// `sample1` for layer 0, `sample2` after).
+    pub sample: Option<usize>,
+    pub programs: Vec<ProgramSpec>,
+    /// Which program's result is the layer output Z (default: last).
+    pub output_program: Option<usize>,
+}
+
+impl LayerSpec {
+    pub fn new(in_dim: usize, out_dim: usize) -> Self {
+        Self { in_dim, out_dim, sample: None, programs: Vec::new(), output_program: None }
+    }
+
+    pub fn sample(mut self, s: usize) -> Self {
+        self.sample = Some(s);
+        self
+    }
+
+    pub fn program(mut self, p: ProgramSpec) -> Self {
+        self.programs.push(p);
+        self
+    }
+
+    pub fn output_program(mut self, k: usize) -> Self {
+        self.output_program = Some(k);
+        self
+    }
+}
+
+/// A complete model description: named, arbitrary depth.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Fluent constructor for [`ModelSpec`].
+pub struct ModelSpecBuilder {
+    name: String,
+    layers: Vec<LayerSpec>,
+}
+
+impl ModelSpecBuilder {
+    pub fn layer(mut self, l: LayerSpec) -> Self {
+        self.layers.push(l);
+        self
+    }
+
+    pub fn build(self) -> ModelSpec {
+        ModelSpec { name: self.name, layers: self.layers }
+    }
+}
+
+// Row domain of a program's result: U input rows or V output rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Rows {
+    U,
+    V,
+}
+
+impl ModelSpec {
+    pub fn builder(name: impl Into<String>) -> ModelSpecBuilder {
+        ModelSpecBuilder { name: name.into(), layers: Vec::new() }
+    }
+
+    /// Number of message-passing layers.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Validate and lower the spec into an executable [`ModelPlan`].
+    ///
+    /// Checks, in order: non-empty layers/programs, the inter-layer
+    /// dimension chain, back-reference discipline (sources, gather
+    /// operands, and `add_program` must reference strictly earlier
+    /// programs), gather-operand row/dim compatibility, transform
+    /// input dims, weight-shape consistency across the whole model, and
+    /// that each layer's output program yields `[V × out_dim]`.
+    pub fn compile(&self) -> Result<ModelPlan, SpecError> {
+        if self.layers.is_empty() {
+            return Err(SpecError::Empty("layers".into()));
+        }
+        for (li, w) in self.layers.windows(2).enumerate() {
+            if w[0].out_dim != w[1].in_dim {
+                return Err(SpecError::LayerChain {
+                    layer: li,
+                    out_dim: w[0].out_dim,
+                    next_in_dim: w[1].in_dim,
+                });
+            }
+        }
+        let mut weights: HashMap<&str, (usize, usize)> = HashMap::new();
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (li, ls) in self.layers.iter().enumerate() {
+            layers.push(compile_layer(li, ls, &mut weights)?);
+        }
+        Ok(ModelPlan { name: self.name.clone(), layers })
+    }
+
+    /// Parse a spec from JSON text (see `examples/MODEL_SPEC.md` for the
+    /// schema). Parsing alone does not validate program structure — call
+    /// [`ModelSpec::compile`] (or register with a [`ModelLibrary`]) to
+    /// validate.
+    pub fn from_json_str(text: &str) -> Result<ModelSpec, SpecError> {
+        let v = parse(text).map_err(SpecError::Parse)?;
+        ModelSpec::from_json(&v)
+    }
+
+    /// Parse a spec from an already-parsed [`Json`] value.
+    pub fn from_json(v: &Json) -> Result<ModelSpec, SpecError> {
+        let obj = as_obj(v, "model spec")?;
+        check_keys(obj, &["name", "layers"], "model spec")?;
+        let name = req_str(obj, "name", "model spec")?;
+        let layers_json = obj
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| perr("model spec: \"layers\" must be an array"))?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (li, lj) in layers_json.iter().enumerate() {
+            layers.push(layer_from_json(li, lj)?);
+        }
+        Ok(ModelSpec { name, layers })
+    }
+}
+
+fn compile_layer<'a>(
+    li: usize,
+    ls: &'a LayerSpec,
+    weights: &mut HashMap<&'a str, (usize, usize)>,
+) -> Result<LayerPlan, SpecError> {
+    if ls.programs.is_empty() {
+        return Err(SpecError::Empty(format!("programs in layer {li}")));
+    }
+    if ls.in_dim == 0 || ls.out_dim == 0 {
+        return Err(SpecError::BadProgram { layer: li, why: "zero layer dimension".into() });
+    }
+    // (rows, dim) of every already-validated program of this layer.
+    let mut shapes: Vec<(Rows, usize)> = Vec::with_capacity(ls.programs.len());
+    for (pi, p) in ls.programs.iter().enumerate() {
+        let back_ref = |what: &'static str, k: usize| -> Result<(Rows, usize), SpecError> {
+            if k < pi {
+                Ok(shapes[k])
+            } else {
+                Err(SpecError::Dangling { layer: li, program: pi, what, reference: k })
+            }
+        };
+
+        // Feature source.
+        let (src_rows, src_dim) = match p.source {
+            Src::LayerInput => (Rows::U, ls.in_dim),
+            Src::Program(k) => back_ref("source", k)?,
+        };
+        // Edge iteration indexes the source by input-vertex id, so an
+        // edge-domain program cannot read a V-rowed source.
+        if p.domain == Domain::Edges && src_rows != Rows::U {
+            return Err(SpecError::BadProgram {
+                layer: li,
+                why: format!(
+                    "program {pi} ({:?}) gathers over edges from a source with output-vertex \
+                     rows; edge sources must cover all input vertices",
+                    p.name
+                ),
+            });
+        }
+
+        // Gather operands are also indexed by input-vertex id.
+        match p.gather {
+            GatherOp::ProductWith(k) => {
+                let (rows, dim) = back_ref("gather operand", k)?;
+                if rows != Rows::U {
+                    return Err(SpecError::BadProgram {
+                        layer: li,
+                        why: format!(
+                            "program {pi}: gather operand {k} must be a per-input program"
+                        ),
+                    });
+                }
+                // dim 1 broadcasts (scalar gate), otherwise must match.
+                if dim != 1 && dim != src_dim {
+                    return Err(SpecError::DimMismatch {
+                        layer: li,
+                        program: p.name.clone(),
+                        what: "gather operand",
+                        expected: src_dim,
+                        got: dim,
+                    });
+                }
+            }
+            GatherOp::SumWith(k) => {
+                let (rows, dim) = back_ref("gather operand", k)?;
+                if rows != Rows::U {
+                    return Err(SpecError::BadProgram {
+                        layer: li,
+                        why: format!(
+                            "program {pi}: gather operand {k} must be a per-input program"
+                        ),
+                    });
+                }
+                if dim != src_dim {
+                    return Err(SpecError::DimMismatch {
+                        layer: li,
+                        program: p.name.clone(),
+                        what: "gather operand",
+                        expected: src_dim,
+                        got: dim,
+                    });
+                }
+            }
+            GatherOp::Identity | GatherOp::Scale(_) => {}
+        }
+
+        // Edge-accumulate result shape.
+        let acc_rows = match p.domain {
+            Domain::AllInputs => src_rows,
+            Domain::Edges | Domain::Outputs => Rows::V,
+        };
+
+        // Vertex-accumulate transform.
+        let dim = if let Some(t) = &p.transform {
+            if t.in_dim == 0 || t.out_dim == 0 {
+                return Err(SpecError::BadProgram {
+                    layer: li,
+                    why: format!("program {pi}: zero transform dimension"),
+                });
+            }
+            if t.in_dim != src_dim {
+                return Err(SpecError::DimMismatch {
+                    layer: li,
+                    program: p.name.clone(),
+                    what: "transform in_dim",
+                    expected: src_dim,
+                    got: t.in_dim,
+                });
+            }
+            match weights.get(t.weight.as_str()) {
+                Some(&shape) if shape != (t.in_dim, t.out_dim) => {
+                    return Err(SpecError::WeightConflict { weight: t.weight.clone() });
+                }
+                Some(_) => {}
+                None => {
+                    weights.insert(t.weight.as_str(), (t.in_dim, t.out_dim));
+                }
+            }
+            t.out_dim
+        } else {
+            src_dim
+        };
+
+        // Vertex-accumulator chaining.
+        if let Some(k) = p.add_program {
+            let (rows, adim) = back_ref("add_program", k)?;
+            if adim != dim {
+                return Err(SpecError::DimMismatch {
+                    layer: li,
+                    program: p.name.clone(),
+                    what: "add_program operand",
+                    expected: dim,
+                    got: adim,
+                });
+            }
+            // The operand needs at least as many rows as this result;
+            // V-rowed operands cannot feed a U-rowed accumulator.
+            if acc_rows == Rows::U && rows == Rows::V {
+                return Err(SpecError::BadProgram {
+                    layer: li,
+                    why: format!(
+                        "program {pi}: add_program {k} has output-vertex rows but this \
+                         program accumulates over all inputs"
+                    ),
+                });
+            }
+        }
+
+        shapes.push((acc_rows, dim));
+    }
+
+    // Layer output contract: [V × out_dim].
+    let output_program = ls.output_program.unwrap_or(ls.programs.len() - 1);
+    let Some(&(rows, dim)) = shapes.get(output_program) else {
+        return Err(SpecError::BadProgram {
+            layer: li,
+            why: format!(
+                "output_program {output_program} out of range ({} programs)",
+                ls.programs.len()
+            ),
+        });
+    };
+    if rows != Rows::V {
+        return Err(SpecError::BadProgram {
+            layer: li,
+            why: format!(
+                "output program {output_program} produces one row per *input* vertex; the \
+                 layer output needs one row per output vertex (domain edges/outputs)"
+            ),
+        });
+    }
+    if dim != ls.out_dim {
+        return Err(SpecError::DimMismatch {
+            layer: li,
+            program: ls.programs[output_program].name.clone(),
+            what: "layer output",
+            expected: ls.out_dim,
+            got: dim,
+        });
+    }
+
+    Ok(LayerPlan {
+        programs: ls.programs.iter().map(ProgramSpec::lower).collect(),
+        output_program,
+        in_dim: ls.in_dim,
+        out_dim: ls.out_dim,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// JSON decoding
+// ---------------------------------------------------------------------------
+
+fn perr(msg: impl Into<String>) -> SpecError {
+    SpecError::Parse(msg.into())
+}
+
+fn as_obj<'a>(v: &'a Json, ctx: &str) -> Result<&'a HashMap<String, Json>, SpecError> {
+    v.as_obj().ok_or_else(|| perr(format!("{ctx}: expected an object")))
+}
+
+/// Reject unknown keys (typo detection) except `_`-prefixed ones, which
+/// serve as inline comments — JSON has no comment syntax.
+fn check_keys(
+    obj: &HashMap<String, Json>,
+    allowed: &[&str],
+    ctx: &str,
+) -> Result<(), SpecError> {
+    for k in obj.keys() {
+        if !k.starts_with('_') && !allowed.contains(&k.as_str()) {
+            return Err(perr(format!(
+                "{ctx}: unknown key {k:?} (allowed: {allowed:?}; prefix with '_' for comments)"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Tagged-union objects must name exactly one variant — two variants at
+/// once would otherwise silently resolve to whichever is checked first.
+fn check_one_variant(
+    obj: &HashMap<String, Json>,
+    variants: &[&str],
+    what: &str,
+    ctx: &str,
+) -> Result<(), SpecError> {
+    let present: Vec<&str> =
+        variants.iter().copied().filter(|v| obj.contains_key(*v)).collect();
+    if present.len() != 1 {
+        return Err(perr(format!(
+            "{ctx}: {what} must name exactly one of {variants:?} (found {present:?})"
+        )));
+    }
+    Ok(())
+}
+
+fn req_str(obj: &HashMap<String, Json>, key: &str, ctx: &str) -> Result<String, SpecError> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| perr(format!("{ctx}: missing string {key:?}")))
+}
+
+/// Strict non-negative integer: `Json::as_usize` would truncate 4.5 to
+/// 4 and saturate -1 to 0 — silent spec corruption in a parser that
+/// otherwise rejects typos loudly.
+fn json_strict_usize(v: &Json) -> Option<usize> {
+    let n = v.as_f64()?;
+    (n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&n)).then_some(n as usize)
+}
+
+fn req_usize(obj: &HashMap<String, Json>, key: &str, ctx: &str) -> Result<usize, SpecError> {
+    obj.get(key)
+        .and_then(json_strict_usize)
+        .ok_or_else(|| perr(format!("{ctx}: {key:?} must be a non-negative integer")))
+}
+
+fn opt_usize(
+    obj: &HashMap<String, Json>,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<usize>, SpecError> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => json_strict_usize(v)
+            .map(Some)
+            .ok_or_else(|| perr(format!("{ctx}: {key:?} must be a non-negative integer"))),
+    }
+}
+
+fn layer_from_json(li: usize, v: &Json) -> Result<LayerSpec, SpecError> {
+    let ctx = format!("layer {li}");
+    let obj = as_obj(v, &ctx)?;
+    check_keys(obj, &["in_dim", "out_dim", "sample", "programs", "output_program"], &ctx)?;
+    let mut layer =
+        LayerSpec::new(req_usize(obj, "in_dim", &ctx)?, req_usize(obj, "out_dim", &ctx)?);
+    layer.sample = opt_usize(obj, "sample", &ctx)?;
+    layer.output_program = opt_usize(obj, "output_program", &ctx)?;
+    let programs = obj
+        .get("programs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| perr(format!("{ctx}: \"programs\" must be an array")))?;
+    for (pi, pj) in programs.iter().enumerate() {
+        layer.programs.push(program_from_json(li, pi, pj)?);
+    }
+    Ok(layer)
+}
+
+fn program_from_json(li: usize, pi: usize, v: &Json) -> Result<ProgramSpec, SpecError> {
+    let ctx = format!("layer {li} program {pi}");
+    let obj = as_obj(v, &ctx)?;
+    check_keys(
+        obj,
+        &[
+            "name", "domain", "source", "gather", "reduce", "self_scale", "transform",
+            "add_program", "activate",
+        ],
+        &ctx,
+    )?;
+    let name = match obj.get("name") {
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| perr(format!("{ctx}: \"name\" must be a string")))?,
+        None => format!("l{li}p{pi}"),
+    };
+    let mut p = ProgramSpec::new(name);
+
+    if let Some(d) = obj.get("domain") {
+        p.domain = match d.as_str() {
+            Some("edges") => Domain::Edges,
+            Some("all_inputs") => Domain::AllInputs,
+            Some("outputs") => Domain::Outputs,
+            _ => return Err(perr(format!("{ctx}: domain must be edges|all_inputs|outputs"))),
+        };
+    }
+    if let Some(s) = obj.get("source") {
+        p.source = match s {
+            Json::Str(tag) if tag == "layer_input" => Src::LayerInput,
+            Json::Obj(m) => {
+                check_keys(m, &["program"], &ctx)?;
+                Src::Program(req_usize(m, "program", &ctx)?)
+            }
+            _ => {
+                return Err(perr(format!(
+                    "{ctx}: source must be \"layer_input\" or {{\"program\": k}}"
+                )))
+            }
+        };
+    }
+    if let Some(g) = obj.get("gather") {
+        p.gather = match g {
+            Json::Str(tag) if tag == "identity" => GatherOp::Identity,
+            Json::Obj(m) => {
+                check_keys(m, &["product_with", "sum_with", "scale"], &ctx)?;
+                check_one_variant(m, &["product_with", "sum_with", "scale"], "gather", &ctx)?;
+                if let Some(k) = m.get("product_with").and_then(json_strict_usize) {
+                    GatherOp::ProductWith(k)
+                } else if let Some(k) = m.get("sum_with").and_then(json_strict_usize) {
+                    GatherOp::SumWith(k)
+                } else if let Some(c) = m.get("scale").and_then(Json::as_f64) {
+                    GatherOp::Scale(c as f32)
+                } else {
+                    return Err(perr(format!(
+                        "{ctx}: gather object must be {{\"product_with\"|\"sum_with\": k}} or \
+                         {{\"scale\": x}}"
+                    )));
+                }
+            }
+            _ => return Err(perr(format!("{ctx}: bad gather"))),
+        };
+    }
+    if let Some(r) = obj.get("reduce") {
+        p.reduce = match r.as_str() {
+            Some("sum") => ReduceOp::Sum,
+            Some("max") => ReduceOp::Max,
+            Some("mean") => ReduceOp::Mean,
+            _ => return Err(perr(format!("{ctx}: reduce must be sum|max|mean"))),
+        };
+    }
+    if let Some(s) = obj.get("self_scale") {
+        let m = as_obj(s, &ctx)?;
+        check_keys(m, &["one_plus_arg", "const"], &ctx)?;
+        check_one_variant(m, &["one_plus_arg", "const"], "self_scale", &ctx)?;
+        p.self_scale = if let Some(arg) = m.get("one_plus_arg").and_then(Json::as_str) {
+            Some(SelfScale::OnePlusArg(arg.to_string()))
+        } else if let Some(c) = m.get("const").and_then(Json::as_f64) {
+            Some(SelfScale::Const(c as f32))
+        } else {
+            return Err(perr(format!(
+                "{ctx}: self_scale must be {{\"one_plus_arg\": name}} or {{\"const\": x}}"
+            )));
+        };
+    }
+    if let Some(t) = obj.get("transform") {
+        let m = as_obj(t, &ctx)?;
+        check_keys(m, &["weight", "in_dim", "out_dim"], &ctx)?;
+        p.transform = Some(MatMul {
+            weight: req_str(m, "weight", &ctx)?,
+            in_dim: req_usize(m, "in_dim", &ctx)?,
+            out_dim: req_usize(m, "out_dim", &ctx)?,
+        });
+    }
+    p.add_program = opt_usize(obj, "add_program", &ctx)?;
+    if let Some(a) = obj.get("activate") {
+        p.activate = match a.as_str() {
+            Some("none") => Activate::None,
+            Some("relu") => Activate::Relu,
+            Some("sigmoid") => Activate::Sigmoid,
+            _ => return Err(perr(format!("{ctx}: activate must be none|relu|sigmoid"))),
+        };
+    }
+    Ok(p)
+}
+
+// ---------------------------------------------------------------------------
+// Model library / keys
+// ---------------------------------------------------------------------------
+
+/// A cheap, `Copy` reference to a model registered in a
+/// [`ModelLibrary`] — what [`crate::coordinator::InferenceRequest`],
+/// the SLO batcher, and the load generator carry. The four paper
+/// presets always occupy keys `0..4` (in [`ALL_MODELS`] order), so
+/// `GnnModel::Gcn.key()` / `ModelKey::from(GnnModel::Gcn)` are valid
+/// against every library; custom specs follow in registration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelKey(u16);
+
+impl ModelKey {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    pub fn from_index(i: usize) -> ModelKey {
+        ModelKey(u16::try_from(i).expect("model library holds < 65536 models"))
+    }
+}
+
+impl From<GnnModel> for ModelKey {
+    fn from(m: GnnModel) -> ModelKey {
+        ModelKey(ALL_MODELS.iter().position(|&x| x == m).expect("preset in ALL_MODELS") as u16)
+    }
+}
+
+/// One registered model: the source spec, the compiled plan, and the
+/// per-layer sampling fan-outs its nodeflows are built with.
+#[derive(Debug)]
+pub struct ModelEntry {
+    pub spec: ModelSpec,
+    pub plan: ModelPlan,
+    pub samples: Vec<usize>,
+}
+
+/// The set of models a serving stack can execute: the four paper
+/// presets (always, keys `0..4`) plus registered custom specs. Compiled
+/// once at registration — the request path only indexes.
+#[derive(Debug)]
+pub struct ModelLibrary {
+    mc: ModelConfig,
+    entries: Vec<ModelEntry>,
+    by_name: HashMap<String, ModelKey>,
+}
+
+impl ModelLibrary {
+    /// A library holding exactly the four paper presets compiled for
+    /// `mc`'s dims and sampling.
+    pub fn presets(mc: &ModelConfig) -> ModelLibrary {
+        let mut lib =
+            ModelLibrary { mc: *mc, entries: Vec::new(), by_name: HashMap::new() };
+        for m in ALL_MODELS {
+            lib.register(m.spec(mc)).expect("paper preset specs are valid");
+        }
+        lib
+    }
+
+    /// The presets plus `specs`, with the key assigned to each spec —
+    /// exactly the library a coordinator configured with these
+    /// `custom_specs` will serve. The single home of the "presets
+    /// first, customs in list order" key contract: callers that need a
+    /// spec's key *before* starting a coordinator (CLI, harnesses) use
+    /// this instead of re-deriving the ordering.
+    pub fn with_customs(
+        mc: &ModelConfig,
+        specs: &[ModelSpec],
+    ) -> Result<(ModelLibrary, Vec<ModelKey>), SpecError> {
+        let mut lib = ModelLibrary::presets(mc);
+        let keys = specs
+            .iter()
+            .map(|s| lib.register(s.clone()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok((lib, keys))
+    }
+
+    /// Validate, compile, and register a spec; returns its key. Layer
+    /// sampling defaults to the library `ModelConfig` by position when
+    /// the spec leaves `sample` unset.
+    pub fn register(&mut self, spec: ModelSpec) -> Result<ModelKey, SpecError> {
+        if self.by_name.contains_key(&spec.name) {
+            return Err(SpecError::DuplicateName(spec.name.clone()));
+        }
+        let plan = spec.compile()?;
+        let samples = spec
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                l.sample.unwrap_or(if i == 0 { self.mc.sample1 } else { self.mc.sample2 })
+            })
+            .collect();
+        let key = ModelKey::from_index(self.entries.len());
+        self.by_name.insert(spec.name.clone(), key);
+        self.entries.push(ModelEntry { spec, plan, samples });
+        Ok(key)
+    }
+
+    pub fn contains(&self, key: ModelKey) -> bool {
+        key.index() < self.entries.len()
+    }
+
+    pub fn plan(&self, key: ModelKey) -> &ModelPlan {
+        &self.entries[key.index()].plan
+    }
+
+    pub fn spec(&self, key: ModelKey) -> &ModelSpec {
+        &self.entries[key.index()].spec
+    }
+
+    /// Per-layer sampling fan-outs for nodeflow construction.
+    pub fn samples(&self, key: ModelKey) -> &[usize] {
+        &self.entries[key.index()].samples
+    }
+
+    pub fn name(&self, key: ModelKey) -> &str {
+        &self.entries[key.index()].spec.name
+    }
+
+    pub fn key(&self, name: &str) -> Option<ModelKey> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = ModelKey> + '_ {
+        (0..self.entries.len()).map(ModelKey::from_index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc() -> ModelConfig {
+        ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+    }
+
+    #[test]
+    fn presets_compile_and_keys_are_stable() {
+        let lib = ModelLibrary::presets(&mc());
+        assert_eq!(lib.len(), 4);
+        for m in ALL_MODELS {
+            let key = m.key();
+            assert_eq!(lib.name(key), m.name());
+            assert_eq!(lib.key(m.name()), Some(key));
+            assert_eq!(lib.samples(key), &[4, 3]);
+        }
+    }
+
+    #[test]
+    fn builder_three_layer_spec_compiles() {
+        let spec = ModelSpec::builder("deep")
+            .layer(
+                LayerSpec::new(8, 6)
+                    .sample(3)
+                    .program(
+                        ProgramSpec::new("l0")
+                            .reduce(ReduceOp::Mean)
+                            .transform("d0", 8, 6)
+                            .activate(Activate::Relu),
+                    ),
+            )
+            .layer(LayerSpec::new(6, 5).sample(2).program(
+                ProgramSpec::new("l1").transform("d1", 6, 5).activate(Activate::Relu),
+            ))
+            .layer(LayerSpec::new(5, 4).sample(2).program(
+                ProgramSpec::new("l2").transform("d2", 5, 4).activate(Activate::Relu),
+            ))
+            .build();
+        let plan = spec.compile().unwrap();
+        assert_eq!(plan.layers.len(), 3);
+        assert_eq!(plan.name, "deep");
+        assert_eq!(plan.weight_names(), vec!["d0", "d1", "d2"]);
+        let mut lib = ModelLibrary::presets(&mc());
+        let key = lib.register(spec).unwrap();
+        assert_eq!(key.index(), 4, "customs follow the presets");
+        assert_eq!(lib.samples(key), &[3, 2, 2]);
+    }
+
+    #[test]
+    fn dangling_source_rejected() {
+        let spec = ModelSpec::builder("bad")
+            .layer(LayerSpec::new(4, 4).program(
+                ProgramSpec::new("p").source_program(0).transform("w", 4, 4),
+            ))
+            .build();
+        let err = spec.compile().unwrap_err();
+        assert!(matches!(err, SpecError::Dangling { what: "source", reference: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn transform_dim_mismatch_rejected() {
+        let spec = ModelSpec::builder("bad")
+            .layer(LayerSpec::new(4, 4).program(ProgramSpec::new("p").transform("w", 5, 4)))
+            .build();
+        let err = spec.compile().unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SpecError::DimMismatch { what: "transform in_dim", expected: 4, got: 5, .. }
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn layer_chain_mismatch_rejected() {
+        let spec = ModelSpec::builder("bad")
+            .layer(LayerSpec::new(4, 4).program(ProgramSpec::new("a").transform("w0", 4, 4)))
+            .layer(LayerSpec::new(5, 3).program(ProgramSpec::new("b").transform("w1", 5, 3)))
+            .build();
+        assert!(matches!(spec.compile().unwrap_err(), SpecError::LayerChain { .. }));
+    }
+
+    #[test]
+    fn weight_shape_conflict_rejected() {
+        let spec = ModelSpec::builder("bad")
+            .layer(
+                LayerSpec::new(4, 3)
+                    .program(ProgramSpec::new("a").domain(Domain::AllInputs).transform("w", 4, 3))
+                    .program(ProgramSpec::new("b").transform("w", 4, 4))
+                    .output_program(0),
+            )
+            .build();
+        // Program b's transform in_dim matches (4) but redeclares "w"
+        // at 4x4 vs a's 4x3.
+        let err = spec.compile().unwrap_err();
+        assert!(matches!(err, SpecError::WeightConflict { .. }), "{err}");
+    }
+
+    #[test]
+    fn all_inputs_output_program_rejected() {
+        let spec = ModelSpec::builder("bad")
+            .layer(LayerSpec::new(4, 4).program(
+                ProgramSpec::new("p").domain(Domain::AllInputs).transform("w", 4, 4),
+            ))
+            .build();
+        let err = spec.compile().unwrap_err();
+        assert!(matches!(err, SpecError::BadProgram { .. }), "{err}");
+    }
+
+    #[test]
+    fn json_round_trip_matches_builder() {
+        let text = r#"{
+            "_doc": "two-layer mean-aggregate model",
+            "name": "tiny",
+            "layers": [
+                {"in_dim": 6, "out_dim": 4, "sample": 3, "programs": [
+                    {"name": "agg", "reduce": "mean",
+                     "transform": {"weight": "w1", "in_dim": 6, "out_dim": 4},
+                     "activate": "relu"}
+                ]},
+                {"in_dim": 4, "out_dim": 2, "programs": [
+                    {"reduce": "mean",
+                     "transform": {"weight": "w2", "in_dim": 4, "out_dim": 2},
+                     "activate": "relu"}
+                ]}
+            ]
+        }"#;
+        let spec = ModelSpec::from_json_str(text).unwrap();
+        assert_eq!(spec.name, "tiny");
+        assert_eq!(spec.layers[0].sample, Some(3));
+        let plan = spec.compile().unwrap();
+        assert_eq!(plan.weight_names(), vec!["w1", "w2"]);
+        assert_eq!(plan.layers[1].programs[0].name, "l1p0", "default program name");
+    }
+
+    #[test]
+    fn json_unknown_key_rejected_but_comments_pass() {
+        let bad = r#"{"name": "x", "layerz": []}"#;
+        let err = ModelSpec::from_json_str(bad).unwrap_err();
+        assert!(err.to_string().contains("unknown key"), "{err}");
+        let ok = r#"{"name": "x", "_note": "fine", "layers": []}"#;
+        assert!(ModelSpec::from_json_str(ok).is_ok());
+    }
+
+    #[test]
+    fn json_rejects_non_integer_dims() {
+        for layer in [
+            r#"{"in_dim":4.5,"out_dim":2,"programs":[{}]}"#,
+            r#"{"in_dim":4,"out_dim":-1,"programs":[{}]}"#,
+            r#"{"in_dim":4,"out_dim":2,"sample":2.5,"programs":[{}]}"#,
+        ] {
+            let text = format!(r#"{{"name":"x","layers":[{layer}]}}"#);
+            let err = ModelSpec::from_json_str(&text).unwrap_err();
+            assert!(err.to_string().contains("non-negative integer"), "{layer}: {err}");
+        }
+    }
+
+    #[test]
+    fn json_bad_tags_rejected() {
+        for (program, what) in [
+            (r#"{"domain":"loops"}"#, "domain"),
+            (r#"{"reduce":"avg"}"#, "reduce"),
+            (r#"{"activate":"tanh"}"#, "activate"),
+            (r#"{"gather":{"mystery":1}}"#, "mystery"),
+            (r#"{"source":"programs"}"#, "source"),
+        ] {
+            let text = format!(
+                r#"{{"name":"x","layers":[{{"in_dim":2,"out_dim":2,"programs":[{program}]}}]}}"#
+            );
+            let err = ModelSpec::from_json_str(&text).unwrap_err();
+            assert!(err.to_string().contains(what), "{what}: {err}");
+        }
+    }
+
+    #[test]
+    fn json_ambiguous_or_unknown_variant_objects_rejected() {
+        for (program, what) in [
+            // Two variants at once must not silently pick one.
+            (r#"{"gather":{"product_with":0,"sum_with":1}}"#, "exactly one"),
+            (r#"{"self_scale":{"one_plus_arg":"e","const":2.0}}"#, "exactly one"),
+            // Unknown keys inside nested objects are typos, not comments.
+            (r#"{"source":{"program":1,"programs":2}}"#, "unknown key"),
+            (r#"{"gather":{"scale_by":2.0}}"#, "unknown key"),
+        ] {
+            let text = format!(
+                r#"{{"name":"x","layers":[{{"in_dim":2,"out_dim":2,"programs":[{program}]}}]}}"#
+            );
+            let err = ModelSpec::from_json_str(&text).unwrap_err();
+            assert!(err.to_string().contains(what), "{program}: {err}");
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut lib = ModelLibrary::presets(&mc());
+        let err = lib.register(GnnModel::Gcn.spec(&mc())).unwrap_err();
+        assert!(matches!(err, SpecError::DuplicateName(_)));
+    }
+}

@@ -9,9 +9,11 @@
 //!   the paper's Table I (Youtube / LiveJournal / Pokec / Reddit).
 //! * [`nodeflow`] — GraphSAGE-style sampling, per-layer bipartite nodeflows,
 //!   and execution partitioning (paper Sec. VI-A).
-//! * [`greta`] — the GReTA programming model: UDFs, programs, and the
-//!   compiler from GNN models (GCN, GraphSAGE-max, GIN, G-GCN) to GRIP
-//!   program sequences (paper Sec. IV, Fig. 3/4).
+//! * [`greta`] — the GReTA programming model: UDFs, the data-driven
+//!   `ModelSpec` IR (typed builder + JSON loader + validation/lowering
+//!   pass), the serving `ModelLibrary`/`ModelKey` registry, and the
+//!   preset factory yielding the paper's four models (GCN,
+//!   GraphSAGE-max, GIN, G-GCN) as specs (paper Sec. IV, Fig. 3/4).
 //! * [`sim`] — the cycle-level GRIP microarchitecture simulator: edge unit
 //!   (prefetch lanes, crossbar, reduce lanes), vertex unit (16×32 PE array,
 //!   tile buffer, weight sequencer), update unit (ReLU + two-level LUT),

@@ -15,7 +15,7 @@
 use grip::config::{GripConfig, ModelConfig};
 use grip::coordinator::{run_workload, Coordinator, ServeConfig};
 use grip::graph::Dataset;
-use grip::greta::{compile, GnnModel};
+use grip::greta::{compile, GnnModel, ModelLibrary, ModelSpec, MODEL_NAME_HELP};
 use grip::nodeflow::{Nodeflow, Sampler};
 use grip::repro::ReproCtx;
 use grip::rng::SplitMix64;
@@ -29,14 +29,19 @@ fn usage() -> ! {
          commands:\n\
            repro   --exp <table1|table2|table3|table4|fig2|fig9a|fig9b|fig10a..d|fig11a|fig11b|fig12|fig13a|fig13b|all>\n\
                    [--scale S=0.01] [--targets N=128] [--seed K=17]\n\
-           serve   [--model gcn|sage|gin|ggcn] [--dataset yt|lj|po|rd] [--requests N=256]\n\
+           serve   [--model M] [--model-spec FILE.json] [--dataset yt|lj|po|rd] [--requests N=256]\n\
                    [--scale S=0.01] [--no-numerics]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
-                   [--no-batching] [--bursty] [--paper-dims] [--seed K=17] [--out PATH]\n\
-           sim     [--model M] [--dataset D] [--scale S]\n\
+                   [--no-batching] [--bursty] [--paper-dims] [--model-spec FILE.json]\n\
+                   [--seed K=17] [--out PATH]\n\
+           sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
            verify\n\
-           info"
+           info\n\
+         \n\
+         --model M accepts: {MODEL_NAME_HELP}\n\
+         --model-spec loads a custom model description (JSON schema: examples/MODEL_SPEC.md);\n\
+           serving a spec uses the Q4.12 fixed-point numeric path (no AOT artifact exists for it)"
     );
     std::process::exit(2);
 }
@@ -86,8 +91,29 @@ impl Args {
 
     fn model(&self) -> GnnModel {
         self.get("model")
-            .map(|s| GnnModel::from_name(s).unwrap_or_else(|| usage()))
+            .map(|s| {
+                GnnModel::from_name(s).unwrap_or_else(|| {
+                    eprintln!("unknown model {s:?}; accepted names: {MODEL_NAME_HELP}");
+                    usage()
+                })
+            })
             .unwrap_or(GnnModel::Gcn)
+    }
+
+    /// Load + validate the `--model-spec` file, if given.
+    fn model_spec(&self) -> anyhow::Result<Option<ModelSpec>> {
+        let Some(path) = self.get("model-spec") else { return Ok(None) };
+        anyhow::ensure!(
+            !self.has("model"),
+            "--model and --model-spec are mutually exclusive; the spec file names its own model"
+        );
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading model spec {path}: {e}"))?;
+        let spec = ModelSpec::from_json_str(&text)
+            .map_err(|e| anyhow::anyhow!("parsing model spec {path}: {e}"))?;
+        // Surface validation errors now, with the file name attached.
+        spec.compile().map_err(|e| anyhow::anyhow!("invalid model spec {path}: {e}"))?;
+        Ok(Some(spec))
     }
 
     fn dataset(&self) -> Dataset {
@@ -132,6 +158,7 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let model = args.model();
+    let spec = args.model_spec()?;
     let dataset = args.dataset();
     let n = args.get_usize("requests", 256);
     let scale = args.get_f64("scale", 0.01);
@@ -140,16 +167,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, 17);
     let num_v = graph.num_vertices();
-    let cfg = ServeConfig { numerics, ..Default::default() };
+    // A spec-defined model has no AOT artifact: serve it on the Q4.12
+    // fixed-point numeric path instead of PJRT (--no-numerics still
+    // downgrades to timing-only).
+    let cfg = match &spec {
+        Some(s) => ServeConfig {
+            numerics: false,
+            fixed_numerics: numerics,
+            custom_specs: vec![s.clone()],
+            ..Default::default()
+        },
+        None => ServeConfig { numerics, ..Default::default() },
+    };
     let coord = Coordinator::start(graph, 17, cfg)?;
+    let (key, model_name) = match &spec {
+        Some(s) => (coord.model_key(&s.name).expect("spec registered at start"), s.name.clone()),
+        None => (model.key(), model.name().to_string()),
+    };
 
     let mut rng = SplitMix64::new(99);
     let targets: Vec<u32> = (0..n).map(|_| rng.gen_range(num_v) as u32).collect();
     let t0 = std::time::Instant::now();
-    let (accel, host, responses) = run_workload(&coord, model, &targets)?;
+    let (accel, host, responses) = run_workload(&coord, key, &targets)?;
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("== serve: {} on {:?}, {} requests ==", model.name(), dataset, n);
+    println!("== serve: {model_name} on {dataset:?}, {n} requests ==");
     println!(
         "accelerator latency (simulated): p50 {:.1} µs  p99 {:.1} µs  mean {:.1} µs",
         accel.p50(),
@@ -178,7 +220,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         if !r.embedding.is_empty() {
             let norm: f32 = r.embedding.iter().map(|x| x * x).sum::<f32>().sqrt();
             println!(
-                "first embedding: dim {} l2 {:.4} (PJRT numeric path live)",
+                "first embedding: dim {} l2 {:.4} (numeric path live)",
                 r.embedding.len(),
                 norm
             );
@@ -219,10 +261,23 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
 
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, seed);
+    // --model-spec: sweep the custom model alone instead of the
+    // four-preset mix (its key follows the presets, resolved exactly as
+    // the coordinator will assign it).
+    let (custom_specs, mix) = match args.model_spec()? {
+        Some(spec) => {
+            let (_, keys) = ModelLibrary::with_customs(&model_cfg, std::slice::from_ref(&spec))
+                .map_err(|e| anyhow::anyhow!("registering model spec: {e}"))?;
+            eprintln!("serving custom spec {:?} ({} layers)", spec.name, spec.depth());
+            (vec![spec], ModelMix::only(keys[0]))
+        }
+        None => (Vec::new(), ModelMix::default()),
+    };
     let base = OpenLoopConfig {
         requests,
-        mix: ModelMix::default(),
+        mix,
         model_cfg,
+        custom_specs,
         batch: if args.has("no-batching") {
             None
         } else {
@@ -297,10 +352,19 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let sampler = Sampler::new(ctx.seed);
     let mut rng = SplitMix64::new(1);
     let target = rng.gen_range(g.num_vertices()) as u32;
-    let nf = Nodeflow::build(&g, &sampler, &[target], &ctx.mc);
-    let plan = compile(model, &ctx.mc);
+    // A spec supplies its own plan, depth, and per-layer sampling;
+    // presets use the 2-layer paper scheme.
+    let (plan, samples) = match args.model_spec()? {
+        Some(spec) => {
+            let (lib, keys) = ModelLibrary::with_customs(&ctx.mc, std::slice::from_ref(&spec))
+                .map_err(|e| anyhow::anyhow!("registering model spec: {e}"))?;
+            (lib.plan(keys[0]).clone(), lib.samples(keys[0]).to_vec())
+        }
+        None => (compile(model, &ctx.mc), vec![ctx.mc.sample1, ctx.mc.sample2]),
+    };
+    let nf = Nodeflow::build_layers(&g, &sampler, &[target], &samples);
     let r = simulate(&ctx.grip, &plan, &nf);
-    println!("== sim: {} on {:?}, target {target} ==", model.name(), dataset);
+    println!("== sim: {} on {:?}, target {target} ==", plan.name, dataset);
     println!("neighborhood: {} unique vertices, {} edges", nf.neighborhood_size(), nf.total_edges());
     println!("latency: {:.2} µs ({:.0} cycles)", r.us(&ctx.grip), r.cycles);
     for (i, l) in r.layers.iter().enumerate() {

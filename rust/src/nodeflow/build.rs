@@ -123,44 +123,49 @@ impl Nodeflow {
     /// paper's sampling scheme: `s2` neighbors at the top layer, `s1` at
     /// the input layer, samples independent between layers.
     pub fn build(g: &CsrGraph, sampler: &Sampler, targets: &[u32], mc: &ModelConfig) -> Self {
-        // ---- top layer (layer index 1): V = targets, U = V ∪ samples
-        let mut u2: Vec<u32> = targets.to_vec();
-        let mut u2_index: HashMap<u32, u32> = HashMap::new();
-        for (i, &t) in targets.iter().enumerate() {
-            u2_index.insert(t, i as u32);
-        }
-        let mut e2: Vec<(u32, u32)> = Vec::new();
-        for (vi, &t) in targets.iter().enumerate() {
-            for u in sampler.sample(g, t, mc.sample2, 1) {
-                let idx = *u2_index.entry(u).or_insert_with(|| {
-                    u2.push(u);
-                    (u2.len() - 1) as u32
-                });
-                e2.push((idx, vi as u32));
-            }
-        }
-        let layer2 = NodeflowLayer::new(u2, targets.len(), e2);
+        Self::build_layers(g, sampler, targets, &[mc.sample1, mc.sample2])
+    }
 
-        // ---- input layer (layer index 0): V = U2, U = V ∪ samples
-        let v1 = layer2.inputs.clone();
-        let mut u1 = v1.clone();
-        let mut u1_index: HashMap<u32, u32> = HashMap::new();
-        for (i, &t) in u1.iter().enumerate() {
-            u1_index.insert(t, i as u32);
-        }
-        let mut e1: Vec<(u32, u32)> = Vec::new();
-        for (vi, &t) in v1.iter().enumerate() {
-            for u in sampler.sample(g, t, mc.sample1, 0) {
-                let idx = *u1_index.entry(u).or_insert_with(|| {
-                    u1.push(u);
-                    (u1.len() - 1) as u32
-                });
-                e1.push((idx, vi as u32));
+    /// Build a K-layer nodeflow, one bipartite layer per sampling
+    /// fan-out in `samples` (outermost first, matching
+    /// `ModelConfig::layers()` / `ModelSpec` layer order). The sampler
+    /// keys draws by (vertex, layer index), so for `samples.len() == 2`
+    /// this is bit-identical to the original 2-layer builder. This is
+    /// what lets spec-defined models of any depth run through the whole
+    /// serving path.
+    pub fn build_layers(
+        g: &CsrGraph,
+        sampler: &Sampler,
+        targets: &[u32],
+        samples: &[usize],
+    ) -> Self {
+        assert!(!samples.is_empty(), "nodeflow needs at least one layer");
+        // Build from the innermost layer (V = targets) outward; each
+        // layer's input set becomes the next-outer layer's output set.
+        let mut layers_rev: Vec<NodeflowLayer> = Vec::with_capacity(samples.len());
+        let mut v: Vec<u32> = targets.to_vec();
+        for (li, &fanout) in samples.iter().enumerate().rev() {
+            let mut u = v.clone();
+            let mut u_index: HashMap<u32, u32> = HashMap::new();
+            for (i, &t) in u.iter().enumerate() {
+                u_index.insert(t, i as u32);
             }
+            let mut edges: Vec<(u32, u32)> = Vec::new();
+            for (vi, &t) in v.iter().enumerate() {
+                for s in sampler.sample(g, t, fanout, li) {
+                    let idx = *u_index.entry(s).or_insert_with(|| {
+                        u.push(s);
+                        (u.len() - 1) as u32
+                    });
+                    edges.push((idx, vi as u32));
+                }
+            }
+            let layer = NodeflowLayer::new(u, v.len(), edges);
+            v = layer.inputs.clone();
+            layers_rev.push(layer);
         }
-        let layer1 = NodeflowLayer::new(u1, v1.len(), e1);
-
-        Nodeflow { layers: vec![layer1, layer2], targets: targets.to_vec() }
+        layers_rev.reverse();
+        Nodeflow { layers: layers_rev, targets: targets.to_vec() }
     }
 
     /// Unique vertices read at the input layer — the "neighborhood size"

@@ -237,7 +237,7 @@ pub fn fig12(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
         "nbhd bin", "min µs", "med µs", "p99 µs", "CPU µs", "speedup"
     )?;
     for (bin, stats) in &by_bin {
-        let cpu = cpu_latency_us(GnnModel::Gcn, bin + 12);
+        let cpu = cpu_latency_us(&plan, bin + 12);
         writeln!(
             out,
             "{:>9} {:>8.1} {:>8.1} {:>8.1} {:>8.0} {:>9.1}x",

@@ -4,9 +4,10 @@ use super::workload::{geomean, ReproCtx};
 use crate::baseline::{cpu_latency_us, gpu_latency_us};
 use crate::energy::{power_breakdown, EnergyParams};
 use crate::graph::{Dataset, TABLE1};
-use crate::greta::GnnModel;
+use crate::greta::{compile, GnnModel};
 use std::io::Write;
 
+/// Table III row order (paper order, not ALL_MODELS order).
 const MODELS: [GnnModel; 4] = [GnnModel::Gcn, GnnModel::Ggcn, GnnModel::Sage, GnnModel::Gin];
 
 /// Table I: dataset statistics (paper values vs our synthetic
@@ -86,25 +87,26 @@ pub fn table3(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
     let mut cpu_speedups = Vec::new();
     let mut gpu_speedups = Vec::new();
     for model in MODELS {
+        let plan = compile(model, &ctx.mc);
         for ds in TABLE1 {
             let wl = ctx.workload(ds);
-            let (lat, nbhd, rep) = ctx.sim_stats(&ctx.grip, model, &wl);
+            let (lat, nbhd, rep) = ctx.sim_stats(&ctx.grip, &plan, &wl);
             let grip_us = lat.p99();
             let p99_nbhd = nbhd.p99() as usize;
-            let cpu_us = cpu_latency_us(model, p99_nbhd);
+            let cpu_us = cpu_latency_us(&plan, p99_nbhd);
             let flops = 2.0 * rep.counters.macs as f64;
-            let gpu_us = gpu_latency_us(model, p99_nbhd, flops);
+            let gpu_us = gpu_latency_us(&plan, p99_nbhd, flops);
             let (cx, gx) = (cpu_us / grip_us, gpu_us / grip_us);
             cpu_speedups.push(cx);
             gpu_speedups.push(gx);
             let paper = PAPER_TABLE3
                 .iter()
-                .find(|(m, d, ..)| *m == model.name() && *d == ds.spec().name)
+                .find(|(m, d, ..)| *m == plan.name && *d == ds.spec().name)
                 .unwrap();
             writeln!(
                 out,
                 "{:<6} {:<13} {:>8.1} {:>9.1} {:>7.1}x {:>7.0} {:>7.1}x {:>7}  {:>5.1}/{:>4.1}x/{:>4.1}x",
-                model.name(),
+                plan.name,
                 ds.spec().name,
                 grip_us,
                 cpu_us,
@@ -140,7 +142,7 @@ pub const PAPER_TABLE4: [(&str, f64, f64); 6] = [
 /// Table IV: power breakdown for GCN inference.
 pub fn table4(ctx: &ReproCtx, out: &mut dyn Write) -> anyhow::Result<()> {
     let wl = ctx.workload(Dataset::Pokec);
-    let (_, _, rep) = ctx.sim_stats(&ctx.grip, GnnModel::Gcn, &wl);
+    let (_, _, rep) = ctx.sim_stats(&ctx.grip, &compile(GnnModel::Gcn, &ctx.mc), &wl);
     let b = power_breakdown(&ctx.grip, &EnergyParams::paper(), &rep);
     writeln!(out, "== Table IV: power breakdown, GCN inference ==")?;
     writeln!(

@@ -12,7 +12,7 @@
 use crate::config::{GripConfig, ModelConfig};
 use crate::coordinator::LatencyStats;
 use crate::graph::{CsrGraph, Dataset};
-use crate::greta::{compile, GnnModel};
+use crate::greta::ModelPlan;
 use crate::nodeflow::{Nodeflow, Sampler};
 use crate::rng::SplitMix64;
 use crate::sim::{simulate, SimResult};
@@ -64,21 +64,22 @@ impl ReproCtx {
         DatasetWorkload { dataset: ds, graph, nodeflows }
     }
 
-    /// Simulate a model over a workload with a given config; returns
-    /// (latency stats µs, neighborhood stats, a representative SimResult
-    /// for counters — the one at the p99 neighborhood).
+    /// Simulate a compiled plan over a workload with a given config;
+    /// returns (latency stats µs, neighborhood stats, a representative
+    /// SimResult for counters — the one at the p99 neighborhood). Plans
+    /// come from anywhere — presets via `compile(model, &ctx.mc)`, or a
+    /// spec's [`ModelSpec::compile`](crate::greta::ModelSpec::compile).
     pub fn sim_stats(
         &self,
         cfg: &GripConfig,
-        model: GnnModel,
+        plan: &ModelPlan,
         wl: &DatasetWorkload,
     ) -> (LatencyStats, LatencyStats, SimResult) {
-        let plan = compile(model, &self.mc);
         let mut lat = LatencyStats::new();
         let mut nbhd = LatencyStats::new();
         let mut best: Option<(usize, SimResult)> = None;
         for nf in &wl.nodeflows {
-            let r = simulate(cfg, plan_ref(&plan), nf);
+            let r = simulate(cfg, plan, nf);
             lat.record(r.us(cfg));
             nbhd.record(nf.neighborhood_size() as f64);
             let n = nf.neighborhood_size();
@@ -96,11 +97,6 @@ impl ReproCtx {
         sizes.sort_unstable();
         sizes[sizes.len() / 2]
     }
-}
-
-// Tiny helper so `plan` isn't moved into the loop.
-fn plan_ref(p: &crate::greta::ModelPlan) -> &crate::greta::ModelPlan {
-    p
 }
 
 /// Geometric mean of positive values.
@@ -134,9 +130,11 @@ mod tests {
 
     #[test]
     fn sim_stats_populated() {
+        use crate::greta::{compile, GnnModel};
         let ctx = ReproCtx { targets_per_dataset: 4, scale: 0.003, ..Default::default() };
         let wl = ctx.workload(Dataset::Youtube);
-        let (lat, nbhd, rep) = ctx.sim_stats(&ctx.grip, GnnModel::Gcn, &wl);
+        let plan = compile(GnnModel::Gcn, &ctx.mc);
+        let (lat, nbhd, rep) = ctx.sim_stats(&ctx.grip, &plan, &wl);
         assert_eq!(lat.count(), 4);
         assert!(nbhd.p50() >= 1.0);
         assert!(rep.counters.macs > 0);

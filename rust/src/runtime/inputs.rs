@@ -8,18 +8,28 @@
 
 use super::golden::serving_weights;
 use super::manifest::ModelArtifact;
-use crate::greta::GnnModel;
+use crate::greta::{Domain, ModelPlan, ReduceOp};
 use crate::nodeflow::{Nodeflow, NormKind};
 use crate::rng::GoldenLcg;
 use anyhow::{ensure, Result};
 
-/// Normalization each model expects in its dense nodeflow matrices
-/// (must match python/compile/model.py's conventions).
-pub fn norm_for(model: GnnModel) -> NormKind {
-    match model {
-        GnnModel::Gcn => NormKind::Mean,
-        GnnModel::Sage => NormKind::Mask,
-        GnnModel::Gin | GnnModel::Ggcn => NormKind::Sum,
+/// Normalization a plan expects in its dense nodeflow matrices, derived
+/// from program structure instead of a closed model enum: the first
+/// edge-domain program's reduce op determines how the AOT'd dense
+/// matmul must encode edge multiplicity (mean → row-normalized, max →
+/// 0/1 mask, sum → raw counts). Matches python/compile/model.py's
+/// conventions for the four presets.
+pub fn norm_for_plan(plan: &ModelPlan) -> NormKind {
+    let reduce = plan
+        .layers
+        .iter()
+        .flat_map(|l| l.programs.iter())
+        .find(|p| p.domain == Domain::Edges)
+        .map(|p| p.reduce);
+    match reduce {
+        Some(ReduceOp::Mean) => NormKind::Mean,
+        Some(ReduceOp::Max) => NormKind::Mask,
+        _ => NormKind::Sum,
     }
 }
 
@@ -140,21 +150,22 @@ impl MarshalScratch {
 /// [`FeatureStore`]. (Convenience wrapper over
 /// [`build_dynamic_args_into`] with a fresh arena.)
 pub fn build_dynamic_args(
-    model: GnnModel,
+    plan: &ModelPlan,
     artifact: &ModelArtifact,
     nf: &Nodeflow,
     store: &mut FeatureStore,
 ) -> Result<Vec<Vec<f32>>> {
     let mut scratch = MarshalScratch::new();
-    build_dynamic_args_into(model, artifact, nf, store, &mut scratch)?;
+    build_dynamic_args_into(plan, artifact, nf, store, &mut scratch)?;
     Ok(scratch.bufs)
 }
 
 /// Allocation-free marshalling: render `(a1, a2, h)` into the reusable
 /// `scratch` arena (available afterwards via [`MarshalScratch::args`]).
-/// `features` is any [`FeatureSource`] tier.
+/// `features` is any [`FeatureSource`] tier; the nodeflow normalization
+/// is derived from the plan ([`norm_for_plan`]).
 pub fn build_dynamic_args_into(
-    model: GnnModel,
+    plan: &ModelPlan,
     artifact: &ModelArtifact,
     nf: &Nodeflow,
     features: &mut impl FeatureSource,
@@ -170,7 +181,7 @@ pub fn build_dynamic_args_into(
     let f_in = h_shape[1];
 
     scratch.bufs.resize_with(3, Vec::new);
-    let norm = norm_for(model);
+    let norm = norm_for_plan(plan);
     let [a1, a2, h] = scratch.bufs.as_mut_slice() else {
         unreachable!("scratch sized to 3 above")
     };
@@ -187,13 +198,13 @@ pub fn build_dynamic_args_into(
 /// Hot-path variant of [`build_args`]: weights are pre-generated once
 /// per model and feature rows come from the memoizing [`FeatureStore`].
 pub fn build_args_cached(
-    model: GnnModel,
+    plan: &ModelPlan,
     artifact: &ModelArtifact,
     nf: &Nodeflow,
     weights: &[Vec<f32>],
     store: &mut FeatureStore,
 ) -> Result<Vec<Vec<f32>>> {
-    let mut args = build_dynamic_args(model, artifact, nf, store)?;
+    let mut args = build_dynamic_args(plan, artifact, nf, store)?;
     args.extend(weights.iter().cloned());
     Ok(args)
 }
@@ -202,7 +213,7 @@ pub fn build_args_cached(
 /// (uncached convenience path; the coordinator uses
 /// [`build_args_cached`]).
 pub fn build_args(
-    model: GnnModel,
+    plan: &ModelPlan,
     artifact: &ModelArtifact,
     nf: &Nodeflow,
 ) -> Result<Vec<Vec<f32>>> {
@@ -214,7 +225,7 @@ pub fn build_args(
     let (pad_v2, pad_u2) = (a2_shape[0], a2_shape[1]);
     let f_in = h_shape[1];
 
-    let norm = norm_for(model);
+    let norm = norm_for_plan(plan);
     let a1 = nf.to_dense(0, pad_v1, pad_u1, norm);
     let a2 = nf.to_dense(1, pad_v2, pad_u2, norm);
     let h = feature_rows(&nf.layers[0].inputs, f_in, pad_u1);
@@ -229,6 +240,7 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
     use crate::graph::{generate, GeneratorParams};
+    use crate::greta::GnnModel;
     use crate::nodeflow::Sampler;
     use crate::runtime::manifest::ArgSpec;
 
@@ -251,10 +263,13 @@ mod tests {
         }
     }
 
+    fn small_mc() -> ModelConfig {
+        ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+    }
+
     fn small_nf() -> Nodeflow {
         let g = generate(&GeneratorParams { nodes: 500, mean_degree: 6.0, ..Default::default() });
-        let mc = ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 };
-        Nodeflow::build(&g, &Sampler::new(3), &[17], &mc)
+        Nodeflow::build(&g, &Sampler::new(3), &[17], &small_mc())
     }
 
     #[test]
@@ -263,15 +278,17 @@ mod tests {
         let art = test_artifact(64, 256, 8, 64);
         assert!(fits_padding(&art, &nf));
         let mut store = FeatureStore::new();
-        let fresh = build_dynamic_args(GnnModel::Gcn, &art, &nf, &mut store).unwrap();
+        let gcn = crate::greta::compile(GnnModel::Gcn, &small_mc());
+        let gin = crate::greta::compile(GnnModel::Gin, &small_mc());
+        let fresh = build_dynamic_args(&gcn, &art, &nf, &mut store).unwrap();
         let mut scratch = MarshalScratch::new();
         // Marshal twice through the same arena (second pass over dirty
         // buffers) and once for a different model; every pass must equal
         // the allocate-fresh result.
-        for model in [GnnModel::Gcn, GnnModel::Gcn, GnnModel::Gin] {
-            build_dynamic_args_into(model, &art, &nf, &mut store, &mut scratch).unwrap();
-            let want = build_dynamic_args(model, &art, &nf, &mut store).unwrap();
-            assert_eq!(scratch.args(), &want[..], "{model:?}");
+        for plan in [&gcn, &gcn, &gin] {
+            build_dynamic_args_into(plan, &art, &nf, &mut store, &mut scratch).unwrap();
+            let want = build_dynamic_args(plan, &art, &nf, &mut store).unwrap();
+            assert_eq!(scratch.args(), &want[..], "{}", plan.name);
         }
         assert_eq!(scratch.args().len(), 3);
         assert_eq!(fresh.len(), 3);
@@ -283,7 +300,8 @@ mod tests {
         let art = test_artifact(2, 3, 1, 2);
         assert!(!fits_padding(&art, &nf));
         let mut store = FeatureStore::new();
-        assert!(build_dynamic_args(GnnModel::Gcn, &art, &nf, &mut store).is_err());
+        let gcn = crate::greta::compile(GnnModel::Gcn, &small_mc());
+        assert!(build_dynamic_args(&gcn, &art, &nf, &mut store).is_err());
     }
 
     #[test]
@@ -296,10 +314,14 @@ mod tests {
 
     #[test]
     fn norms_match_python_conventions() {
-        assert_eq!(norm_for(GnnModel::Gcn), NormKind::Mean);
-        assert_eq!(norm_for(GnnModel::Sage), NormKind::Mask);
-        assert_eq!(norm_for(GnnModel::Gin), NormKind::Sum);
-        assert_eq!(norm_for(GnnModel::Ggcn), NormKind::Sum);
+        // Derived from program structure, not the preset enum — but the
+        // presets must land exactly on python/compile/model.py's norms.
+        let mc = small_mc();
+        let norm = |m: GnnModel| norm_for_plan(&crate::greta::compile(m, &mc));
+        assert_eq!(norm(GnnModel::Gcn), NormKind::Mean);
+        assert_eq!(norm(GnnModel::Sage), NormKind::Mask);
+        assert_eq!(norm(GnnModel::Gin), NormKind::Sum);
+        assert_eq!(norm(GnnModel::Ggcn), NormKind::Sum);
     }
 
     #[test]

@@ -49,6 +49,26 @@ pub struct PadShapes {
     pub f_out: usize,
 }
 
+impl PadShapes {
+    /// The largest number of coalesced targets whose nodeflow is
+    /// *guaranteed* to fit these padded shapes under `mc`'s sampling
+    /// (worst case: every sample hits a distinct vertex). The SLO
+    /// batcher's `max_batch` is clamped to this on the PJRT path, so a
+    /// coalesced batch can never silently degrade to a `timing_only`
+    /// reply — with the paper's batch-1 artifact padding this is 1, and
+    /// it grows automatically when artifacts are recompiled with larger
+    /// padded shapes.
+    pub fn max_coalesced_targets(&self, mc: &crate::config::ModelConfig) -> usize {
+        let fan1 = mc.sample1 + 1;
+        let fan2 = mc.sample2 + 1;
+        [self.v2, self.u2 / fan2, self.v1 / fan2, self.u1 / (fan1 * fan2)]
+            .into_iter()
+            .min()
+            .unwrap_or(1)
+            .max(1)
+    }
+}
+
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -186,6 +206,21 @@ mod tests {
             assert_eq!(a.golden_row0.len(), m.pad.f_out, "{}", a.name);
             assert_eq!(a.golden_seed, 42);
         }
+    }
+
+    #[test]
+    fn padded_batch_cap() {
+        use crate::config::ModelConfig;
+        let pad = PadShapes { u1: 288, v1: 16, u2: 16, v2: 8, f_in: 602, f_hid: 512, f_out: 256 };
+        // Paper sampling (25/10): batch-1 padding caps coalescing at 1.
+        assert_eq!(pad.max_coalesced_targets(&ModelConfig::paper()), 1);
+        // 4x larger padding at light sampling admits real batches.
+        let big = PadShapes { u1: 1200, v1: 120, u2: 120, v2: 32, ..pad };
+        let light = ModelConfig { sample1: 4, sample2: 3, ..ModelConfig::paper() };
+        assert_eq!(big.max_coalesced_targets(&light), 30);
+        // Degenerate padding still returns at least 1.
+        let tiny = PadShapes { u1: 1, v1: 1, u2: 1, v2: 1, ..pad };
+        assert_eq!(tiny.max_coalesced_targets(&ModelConfig::paper()), 1);
     }
 
     #[test]

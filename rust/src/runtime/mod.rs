@@ -18,6 +18,6 @@ pub use executor::{Executor, LoadedModel};
 pub use golden::{golden_args, serving_weights};
 pub use inputs::{
     build_args, build_args_cached, build_dynamic_args, build_dynamic_args_into, feature_rows,
-    fill_feature_row, fits_padding, FeatureSource, FeatureStore, MarshalScratch,
+    fill_feature_row, fits_padding, norm_for_plan, FeatureSource, FeatureStore, MarshalScratch,
 };
 pub use manifest::{ArgSpec, Manifest, ModelArtifact, PadShapes};

@@ -21,7 +21,7 @@
 //! tested in virtual time (`tests/serve_props.rs`); the coordinator
 //! drives it with a real clock and `recv_timeout`.
 
-use crate::greta::{GnnModel, ALL_MODELS};
+use crate::greta::ModelKey;
 use std::collections::VecDeque;
 
 /// Batching policy knobs.
@@ -54,20 +54,18 @@ pub struct Pending<T> {
 
 /// The batcher state machine. `T` is the caller's per-request payload
 /// (the coordinator stores its reply slot; tests store request ids).
+/// Queues are keyed by [`ModelKey`] — presets and registered custom
+/// specs alike — and materialize on first use, so the batcher needs no
+/// knowledge of how many models the serving library holds.
 pub struct Batcher<T> {
     cfg: BatchConfig,
-    /// One FIFO per model, indexed by [`ALL_MODELS`] position.
+    /// One FIFO per model, indexed by [`ModelKey::index`].
     queues: Vec<VecDeque<Pending<T>>>,
-}
-
-fn model_index(m: GnnModel) -> usize {
-    ALL_MODELS.iter().position(|&x| x == m).expect("model in ALL_MODELS")
 }
 
 impl<T> Batcher<T> {
     pub fn new(cfg: BatchConfig) -> Self {
-        let queues = (0..ALL_MODELS.len()).map(|_| VecDeque::new()).collect();
-        Self { cfg, queues }
+        Self { cfg, queues: Vec::new() }
     }
 
     pub fn config(&self) -> BatchConfig {
@@ -75,9 +73,13 @@ impl<T> Batcher<T> {
     }
 
     /// Queue a single-target request arriving at `now_us`.
-    pub fn offer(&mut self, model: GnnModel, item: T, now_us: f64) {
+    pub fn offer(&mut self, model: ModelKey, item: T, now_us: f64) {
         let headroom = (self.cfg.slo_us - self.cfg.margin_us).max(0.0);
-        self.queues[model_index(model)].push_back(Pending {
+        let i = model.index();
+        if i >= self.queues.len() {
+            self.queues.resize_with(i + 1, VecDeque::new);
+        }
+        self.queues[i].push_back(Pending {
             item,
             arrival_us: now_us,
             dispatch_by_us: now_us + headroom,
@@ -99,13 +101,13 @@ impl<T> Batcher<T> {
     /// member's deadline has arrived. Queues are drained oldest-
     /// deadline-first; members leave in FIFO order, at most `max_batch`
     /// at a time. Returns None when nothing is due at `now_us`.
-    pub fn pop_due(&mut self, now_us: f64) -> Option<(GnnModel, Vec<Pending<T>>)> {
+    pub fn pop_due(&mut self, now_us: f64) -> Option<(ModelKey, Vec<Pending<T>>)> {
         let max_batch = self.cfg.max_batch.max(1);
         // Full queues first (they free padding-bounded capacity).
         for (i, q) in self.queues.iter_mut().enumerate() {
             if q.len() >= max_batch {
                 let batch = q.drain(..max_batch).collect();
-                return Some((ALL_MODELS[i], batch));
+                return Some((ModelKey::from_index(i), batch));
             }
         }
         // Then the queue with the earliest expired deadline.
@@ -120,17 +122,17 @@ impl<T> Batcher<T> {
         let q = &mut self.queues[i];
         let take = q.len().min(max_batch);
         let batch = q.drain(..take).collect();
-        Some((ALL_MODELS[i], batch))
+        Some((ModelKey::from_index(i), batch))
     }
 
     /// Drain everything regardless of deadline (shutdown path).
-    pub fn pop_all(&mut self) -> Option<(GnnModel, Vec<Pending<T>>)> {
+    pub fn pop_all(&mut self) -> Option<(ModelKey, Vec<Pending<T>>)> {
         let max_batch = self.cfg.max_batch.max(1);
         for (i, q) in self.queues.iter_mut().enumerate() {
             if !q.is_empty() {
                 let take = q.len().min(max_batch);
                 let batch = q.drain(..take).collect();
-                return Some((ALL_MODELS[i], batch));
+                return Some((ModelKey::from_index(i), batch));
             }
         }
         None
@@ -149,6 +151,7 @@ impl<T> Batcher<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::greta::GnnModel;
 
     fn cfg(slo: f64, margin: f64, max_batch: usize) -> BatchConfig {
         BatchConfig { slo_us: slo, margin_us: margin, max_batch }
@@ -157,13 +160,13 @@ mod tests {
     #[test]
     fn holds_until_deadline_then_dispatches() {
         let mut b = Batcher::new(cfg(1000.0, 200.0, 8));
-        b.offer(GnnModel::Gcn, 1u64, 0.0);
-        b.offer(GnnModel::Gcn, 2u64, 100.0);
+        b.offer(GnnModel::Gcn.key(), 1u64, 0.0);
+        b.offer(GnnModel::Gcn.key(), 2u64, 100.0);
         // Deadline of the oldest member: 0 + (1000 - 200) = 800.
         assert_eq!(b.next_deadline(), Some(800.0));
         assert!(b.pop_due(799.0).is_none(), "not due yet");
         let (m, batch) = b.pop_due(800.0).expect("due at the deadline");
-        assert_eq!(m, GnnModel::Gcn);
+        assert_eq!(m, GnnModel::Gcn.key());
         assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 2]);
         assert!(b.is_empty());
     }
@@ -172,32 +175,48 @@ mod tests {
     fn full_queue_dispatches_early() {
         let mut b = Batcher::new(cfg(10_000.0, 0.0, 3));
         for i in 0..3u64 {
-            b.offer(GnnModel::Sage, i, i as f64);
+            b.offer(GnnModel::Sage.key(), i, i as f64);
         }
         // Well before any deadline, the full queue goes out.
         let (m, batch) = b.pop_due(5.0).expect("full batch due immediately");
-        assert_eq!(m, GnnModel::Sage);
+        assert_eq!(m, GnnModel::Sage.key());
         assert_eq!(batch.len(), 3);
     }
 
     #[test]
     fn models_never_mix() {
         let mut b = Batcher::new(cfg(100.0, 0.0, 8));
-        b.offer(GnnModel::Gcn, 1u64, 0.0);
-        b.offer(GnnModel::Gin, 2u64, 0.0);
+        b.offer(GnnModel::Gcn.key(), 1u64, 0.0);
+        b.offer(GnnModel::Gin.key(), 2u64, 0.0);
         let mut seen = Vec::new();
         while let Some((m, batch)) = b.pop_due(1e9) {
             seen.push((m, batch.len()));
         }
-        seen.sort_by_key(|&(m, _)| model_index(m));
-        assert_eq!(seen, vec![(GnnModel::Gcn, 1), (GnnModel::Gin, 1)]);
+        seen.sort_by_key(|&(m, _)| m);
+        assert_eq!(seen, vec![(GnnModel::Gcn.key(), 1), (GnnModel::Gin.key(), 1)]);
+    }
+
+    #[test]
+    fn custom_model_keys_get_their_own_queue() {
+        // Keys beyond the four presets (registered custom specs) batch
+        // independently, never mixing with preset queues.
+        let custom = ModelKey::from_index(7);
+        let mut b = Batcher::new(cfg(100.0, 0.0, 8));
+        b.offer(GnnModel::Gcn.key(), 1u64, 0.0);
+        b.offer(custom, 2u64, 0.0);
+        let mut seen = Vec::new();
+        while let Some((m, batch)) = b.pop_due(1e9) {
+            seen.push((m, batch.len()));
+        }
+        seen.sort_by_key(|&(m, _)| m);
+        assert_eq!(seen, vec![(GnnModel::Gcn.key(), 1), (custom, 1)]);
     }
 
     #[test]
     fn oversized_queue_dispatches_in_fifo_chunks() {
         let mut b = Batcher::new(cfg(100.0, 0.0, 4));
         for i in 0..10u64 {
-            b.offer(GnnModel::Ggcn, i, 0.0);
+            b.offer(GnnModel::Ggcn.key(), i, 0.0);
         }
         let mut out = Vec::new();
         while let Some((_, batch)) = b.pop_due(1e9) {
@@ -210,7 +229,7 @@ mod tests {
     #[test]
     fn margin_larger_than_slo_means_dispatch_now() {
         let mut b = Batcher::new(cfg(100.0, 500.0, 8));
-        b.offer(GnnModel::Gcn, 1u64, 42.0);
+        b.offer(GnnModel::Gcn.key(), 1u64, 42.0);
         assert_eq!(b.next_deadline(), Some(42.0), "no headroom left");
         assert!(b.pop_due(42.0).is_some());
     }
@@ -219,7 +238,7 @@ mod tests {
     fn pop_all_drains_everything() {
         let mut b = Batcher::new(cfg(1e6, 0.0, 2));
         for i in 0..5u64 {
-            b.offer(GnnModel::Gcn, i, 0.0);
+            b.offer(GnnModel::Gcn.key(), i, 0.0);
         }
         let mut n = 0;
         while let Some((_, batch)) = b.pop_all() {

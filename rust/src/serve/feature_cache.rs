@@ -24,10 +24,66 @@
 //! and simulated on-chip hit rates can be compared side by side in
 //! `BENCH_serve.json`.
 
+use crate::graph::CsrGraph;
 use crate::runtime::fill_feature_row;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Degree-class breakpoints: a vertex of out-degree `d` gets protection
+/// class 1 (`d <= b1`), 2 (`d <= b2`), 3 (`d <= b3`), or 4 (hubs).
+///
+/// The defaults (2/8/32) were hand-picked for the synthetic Table-I
+/// zipf graphs; [`DegreeClasses::from_graph`] calibrates them to the
+/// *served* dataset's actual degree quantiles (p50/p75/p90) instead, so
+/// "hub" means hub relative to this graph, not to a constant. The
+/// static values remain the fallback when no graph statistics are
+/// available (empty graph, or callers without one).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegreeClasses {
+    pub b1: usize,
+    pub b2: usize,
+    pub b3: usize,
+}
+
+impl Default for DegreeClasses {
+    fn default() -> Self {
+        Self { b1: 2, b2: 8, b3: 32 }
+    }
+}
+
+impl DegreeClasses {
+    /// Calibrate breakpoints from the graph's out-degree distribution:
+    /// b1/b2/b3 = p50/p75/p90. Quantile ties are forced strictly
+    /// increasing so all four classes stay reachable; an empty graph
+    /// falls back to the static defaults.
+    pub fn from_graph(g: &CsrGraph) -> Self {
+        let n = g.num_vertices();
+        if n == 0 {
+            return Self::default();
+        }
+        let mut degrees: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
+        degrees.sort_unstable();
+        let q = |p: f64| degrees[((n - 1) as f64 * p) as usize];
+        let b1 = q(0.50).max(1);
+        let b2 = q(0.75).max(b1 + 1);
+        let b3 = q(0.90).max(b2 + 1);
+        Self { b1, b2, b3 }
+    }
+
+    /// Protection level for an out-degree: hubs get more second chances.
+    fn class(&self, degree: usize) -> u8 {
+        if degree <= self.b1 {
+            1
+        } else if degree <= self.b2 {
+            2
+        } else if degree <= self.b3 {
+            3
+        } else {
+            4
+        }
+    }
+}
 
 /// One cached feature row.
 struct Slot {
@@ -52,25 +108,23 @@ pub struct FeatureCache {
     inner: Mutex<Inner>,
     capacity: usize,
     f_in: usize,
+    classes: DegreeClasses,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
-/// Protection level by out-degree: hubs get more second chances.
-fn degree_class(degree: usize) -> u8 {
-    match degree {
-        0..=2 => 1,
-        3..=8 => 2,
-        9..=32 => 3,
-        _ => 4,
-    }
-}
-
 impl FeatureCache {
-    /// A cache holding at most `capacity` rows of `f_in` features.
-    /// `capacity == 0` disables caching (every access is a miss that
-    /// synthesizes in place — useful as an ablation baseline).
+    /// A cache holding at most `capacity` rows of `f_in` features, with
+    /// the static default degree classes. `capacity == 0` disables
+    /// caching (every access is a miss that synthesizes in place —
+    /// useful as an ablation baseline).
     pub fn new(capacity: usize, f_in: usize) -> Self {
+        Self::with_classes(capacity, f_in, DegreeClasses::default())
+    }
+
+    /// A cache with explicit degree-class breakpoints (usually
+    /// [`DegreeClasses::from_graph`] over the serving graph).
+    pub fn with_classes(capacity: usize, f_in: usize, classes: DegreeClasses) -> Self {
         Self {
             inner: Mutex::new(Inner {
                 index: HashMap::with_capacity(capacity),
@@ -79,6 +133,7 @@ impl FeatureCache {
             }),
             capacity,
             f_in,
+            classes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -86,6 +141,11 @@ impl FeatureCache {
 
     pub fn f_in(&self) -> usize {
         self.f_in
+    }
+
+    /// The degree-class breakpoints this cache protects with.
+    pub fn classes(&self) -> DegreeClasses {
+        self.classes
     }
 
     /// Append vertex `v`'s `f_in` feature values to `out`. `degree` is
@@ -102,7 +162,7 @@ impl FeatureCache {
         }
         let mut inner = self.inner.lock().expect("feature cache poisoned");
         if let Some(&si) = inner.index.get(&v) {
-            let class = degree_class(degree);
+            let class = self.classes.class(degree);
             let slot = &mut inner.slots[si];
             slot.lives = slot.lives.max(class);
             out.extend_from_slice(&slot.row);
@@ -130,7 +190,7 @@ impl FeatureCache {
         }
         let mut inner = self.inner.lock().expect("feature cache poisoned");
         if let Some(&si) = inner.index.get(&v) {
-            let class = degree_class(degree);
+            let class = self.classes.class(degree);
             let slot = &mut inner.slots[si];
             slot.lives = slot.lives.max(class);
             dst.copy_from_slice(&slot.row);
@@ -155,7 +215,7 @@ impl FeatureCache {
     /// while an equal-or-hotter candidate still replaces in O(1). The
     /// evicted slot's buffer is reused (no steady-state allocation).
     fn admit(&self, inner: &mut Inner, v: u32, degree: usize, row: &[f32]) {
-        let lives = degree_class(degree);
+        let lives = self.classes.class(degree);
         if inner.slots.len() < self.capacity {
             let si = inner.slots.len();
             inner.slots.push(Slot { v, lives, row: row.to_vec() });
@@ -292,6 +352,39 @@ mod tests {
         }
         assert_eq!(cache.len(), 3);
         assert_eq!(cache.misses(), 10);
+    }
+
+    #[test]
+    fn degree_classes_calibrate_from_graph_quantiles() {
+        use crate::graph::{generate, GeneratorParams};
+        let g = generate(&GeneratorParams {
+            nodes: 3_000,
+            mean_degree: 8.0,
+            ..Default::default()
+        });
+        let c = DegreeClasses::from_graph(&g);
+        // Quantiles are strictly increasing and ordered like the degree
+        // distribution (zipf: p50 < p75 < p90 << max).
+        assert!(c.b1 >= 1 && c.b1 < c.b2 && c.b2 < c.b3, "{c:?}");
+        // The calibrated breakpoints classify ~half the vertices as
+        // class 1 and only a small head above class 3.
+        let n = g.num_vertices();
+        let class_le_1 =
+            (0..n as u32).filter(|&v| g.degree(v) <= c.b1).count() as f64 / n as f64;
+        let hubs = (0..n as u32).filter(|&v| g.degree(v) > c.b3).count() as f64 / n as f64;
+        assert!(class_le_1 >= 0.5, "p50 breakpoint covers {class_le_1}");
+        assert!(hubs <= 0.12, "hub fraction {hubs}");
+        // Deterministic, and wired through the constructor.
+        assert_eq!(c, DegreeClasses::from_graph(&g));
+        let cache = FeatureCache::with_classes(8, 4, c);
+        assert_eq!(cache.classes(), c);
+    }
+
+    #[test]
+    fn empty_graph_falls_back_to_static_classes() {
+        let g = crate::graph::CsrGraph::from_adjacency(Vec::new());
+        assert_eq!(DegreeClasses::from_graph(&g), DegreeClasses::default());
+        assert_eq!(DegreeClasses::default(), DegreeClasses { b1: 2, b2: 8, b3: 32 });
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::coordinator::{
     Coordinator, InferenceRequest, InferenceResponse, LatencyStats, ServeConfig,
 };
 use crate::graph::CsrGraph;
+use crate::greta::ModelSpec;
 use anyhow::{anyhow, Result};
 use std::time::{Duration, Instant};
 
@@ -31,6 +32,9 @@ pub struct OpenLoopConfig {
     pub batch: Option<BatchConfig>,
     pub grip: GripConfig,
     pub model_cfg: ModelConfig,
+    /// Custom model specs to register with the coordinator (keys follow
+    /// the four presets in list order; address them in `mix`).
+    pub custom_specs: Vec<ModelSpec>,
     pub cache_rows: usize,
     pub builders: usize,
     pub seed: u64,
@@ -46,6 +50,7 @@ impl Default for OpenLoopConfig {
             batch: None,
             grip: GripConfig::paper(),
             model_cfg: ModelConfig::paper(),
+            custom_specs: Vec::new(),
             cache_rows: 4096,
             builders: 4,
             seed: 17,
@@ -124,6 +129,7 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
         batch: cfg.batch,
         grip: cfg.grip.clone(),
         model_cfg: cfg.model_cfg,
+        custom_specs: cfg.custom_specs.clone(),
         cache_rows: cfg.cache_rows,
         builders: cfg.builders,
         // Open loop: the submission path must never block, or the
@@ -229,6 +235,37 @@ mod tests {
         assert!(report.achieved_rps > 0.0);
         assert_eq!(report.stats.jobs, 40, "no batching configured");
         assert!(report.responses.iter().all(|r| !r.timing_only));
+    }
+
+    #[test]
+    fn open_loop_serves_json_spec_timing_and_numerics() {
+        // The acceptance path: the depth-3 spec from examples/ (the same
+        // file `grip serve-bench --model-spec` loads) served open-loop —
+        // cycle-sim timing plus fixed-point numerics on every reply.
+        use crate::greta::{ModelLibrary, ModelSpec};
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/model_spec.json");
+        let text = std::fs::read_to_string(path).expect("examples/model_spec.json in repo");
+        let spec = ModelSpec::from_json_str(&text).expect("example spec parses");
+        assert_eq!(spec.depth(), 3);
+        let out_dim = spec.layers.last().unwrap().out_dim;
+
+        let base = tiny_cfg(2_000.0, 24);
+        // Resolve the spec's key exactly as the coordinator will.
+        let (_, keys) =
+            ModelLibrary::with_customs(&base.model_cfg, std::slice::from_ref(&spec)).unwrap();
+        let cfg = OpenLoopConfig {
+            custom_specs: vec![spec],
+            mix: ModelMix::only(keys[0]),
+            ..base
+        };
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        let report = run_open_loop(&g, &cfg).unwrap();
+        assert_eq!(report.responses.len(), 24);
+        for r in &report.responses {
+            assert!(!r.timing_only, "fixed-point numerics serve the spec");
+            assert_eq!(r.embedding.len(), out_dim, "3-layer spec's final out_dim");
+            assert!(r.accel_us > 0.0, "cycle sim timed the 3-layer nodeflow");
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! (defaults to the paper's four Table-III models, equally weighted)
 //! and a uniformly sampled target vertex.
 
-use crate::greta::{GnnModel, ALL_MODELS};
+use crate::greta::{GnnModel, ModelKey, ALL_MODELS};
 use crate::rng::SplitMix64;
 
 /// One scheduled request of the open-loop workload.
@@ -33,7 +33,8 @@ use crate::rng::SplitMix64;
 pub struct Arrival {
     /// Scheduled submission time, µs from workload start.
     pub t_us: f64,
-    pub model: GnnModel,
+    /// Model to serve (preset or registered custom spec).
+    pub model: ModelKey,
     /// Target vertex id (uniform over the serving graph).
     pub target: u32,
 }
@@ -75,27 +76,29 @@ impl ArrivalProcess {
     }
 }
 
-/// Weighted model mix for generated requests.
+/// Weighted model mix for generated requests. Entries are
+/// [`ModelKey`]s, so a mix can combine presets and registered custom
+/// specs freely.
 #[derive(Debug, Clone)]
 pub struct ModelMix {
     /// (model, weight) — weights need not be normalized.
-    pub weights: Vec<(GnnModel, f64)>,
+    pub weights: Vec<(ModelKey, f64)>,
 }
 
 impl Default for ModelMix {
     /// All four Table-III models, equally weighted.
     fn default() -> Self {
-        Self { weights: ALL_MODELS.into_iter().map(|m| (m, 1.0)).collect() }
+        Self { weights: ALL_MODELS.into_iter().map(|m| (m.key(), 1.0)).collect() }
     }
 }
 
 impl ModelMix {
     /// A single-model mix.
-    pub fn only(model: GnnModel) -> Self {
-        Self { weights: vec![(model, 1.0)] }
+    pub fn only(model: impl Into<ModelKey>) -> Self {
+        Self { weights: vec![(model.into(), 1.0)] }
     }
 
-    fn pick(&self, rng: &mut SplitMix64) -> GnnModel {
+    fn pick(&self, rng: &mut SplitMix64) -> ModelKey {
         let total: f64 = self.weights.iter().map(|(_, w)| w).sum();
         let mut x = rng.gen_f64() * total;
         for &(m, w) in &self.weights {
@@ -104,7 +107,7 @@ impl ModelMix {
             }
             x -= w;
         }
-        self.weights.last().map(|&(m, _)| m).unwrap_or(GnnModel::Gcn)
+        self.weights.last().map(|&(m, _)| m).unwrap_or(GnnModel::Gcn.key())
     }
 }
 
@@ -252,18 +255,19 @@ mod tests {
 
     #[test]
     fn model_mix_respects_weights() {
-        let mix = ModelMix { weights: vec![(GnnModel::Gcn, 3.0), (GnnModel::Gin, 1.0)] };
+        let mix =
+            ModelMix { weights: vec![(GnnModel::Gcn.key(), 3.0), (GnnModel::Gin.key(), 1.0)] };
         let a = generate_arrivals(poisson(100.0), &mix, 2000, 10, 9);
-        let gcn = a.iter().filter(|x| x.model == GnnModel::Gcn).count();
+        let gcn = a.iter().filter(|x| x.model == GnnModel::Gcn.key()).count();
         let frac = gcn as f64 / a.len() as f64;
         assert!((frac - 0.75).abs() < 0.05, "gcn fraction {frac}");
-        assert!(a.iter().all(|x| x.model != GnnModel::Sage));
+        assert!(a.iter().all(|x| x.model != GnnModel::Sage.key()));
     }
 
     #[test]
     fn single_model_mix() {
         let mix = ModelMix::only(GnnModel::Ggcn);
         let a = generate_arrivals(poisson(100.0), &mix, 50, 10, 1);
-        assert!(a.iter().all(|x| x.model == GnnModel::Ggcn));
+        assert!(a.iter().all(|x| x.model == GnnModel::Ggcn.key()));
     }
 }

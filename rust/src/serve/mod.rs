@@ -55,7 +55,7 @@ pub mod loadgen;
 pub mod shards;
 
 pub use batcher::{BatchConfig, Batcher, Pending};
-pub use feature_cache::FeatureCache;
+pub use feature_cache::{DegreeClasses, FeatureCache};
 pub use harness::{poisson, run_open_loop, run_sweep, OpenLoopConfig, OpenLoopReport};
 pub use loadgen::{generate_arrivals, Arrival, ArrivalProcess, ModelMix};
 pub use shards::{

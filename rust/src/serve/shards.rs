@@ -23,17 +23,17 @@ use crate::config::{GripConfig, ModelConfig};
 use crate::coordinator::InferenceResponse;
 use crate::graph::CsrGraph;
 use crate::greta::{
-    compile, exec_test_args, execute_model_into, ExecArgs, ExecScratch, GnnModel, ModelPlan,
-    PlanArgs, ALL_MODELS,
+    exec_test_args, execute_model_into, ExecArgs, ExecScratch, ModelKey, ModelLibrary, ModelPlan,
+    PlanArgs, SelfScale, ALL_MODELS,
 };
 use crate::nodeflow::Nodeflow;
 use crate::runtime::{
-    build_dynamic_args_into, fits_padding, Executor, FeatureSource, Manifest, MarshalScratch,
+    build_dynamic_args_into, fill_feature_row, fits_padding, Executor, FeatureSource, Manifest,
+    MarshalScratch,
 };
-use crate::serve::FeatureCache;
+use crate::serve::{DegreeClasses, FeatureCache};
 use crate::sim::simulate;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -50,7 +50,8 @@ pub struct ReplySlot {
 /// A unit of executor work: a built nodeflow plus the reply slots of
 /// every request coalesced into it (one slot for direct submissions).
 pub struct ExecJob {
-    pub model: GnnModel,
+    /// Model to execute, resolved against the pool's [`ModelLibrary`].
+    pub model: ModelKey,
     pub nf: Nodeflow,
     pub members: Vec<ReplySlot>,
     /// When a builder dequeued the job (start of service time).
@@ -130,13 +131,22 @@ pub struct ShardPool {
 
 /// Deterministic fixed-point serving weights for `plan` (the Q4.12
 /// analogue of `runtime::serving_weights`): every transform weight from
-/// the shared test-weight generator plus GIN's eps scalars. Identical
-/// on every shard for a given seed — the root of the pool's
-/// bit-identity guarantee.
+/// the shared test-weight generator, plus a scalar for every
+/// `one_plus_arg` self-scale the plan declares (layer `i` gets
+/// `0.1 * (i + 1)` — exactly the eps1 = 0.1 / eps2 = 0.2 the GIN preset
+/// served before the spec redesign, now derived from plan structure
+/// instead of hardcoded names). Identical on every shard for a given
+/// seed — the root of the pool's bit-identity guarantee.
 pub fn fixed_serving_args(plan: &ModelPlan, seed: u64) -> ExecArgs {
     let mut args = exec_test_args(plan, seed);
-    args.insert("eps1".into(), (Vec::new(), vec![0.1]));
-    args.insert("eps2".into(), (Vec::new(), vec![0.2]));
+    for (li, layer) in plan.layers.iter().enumerate() {
+        for p in &layer.programs {
+            if let Some(SelfScale::OnePlusArg(name)) = &p.self_scale {
+                args.entry(name.clone())
+                    .or_insert_with(|| (Vec::new(), vec![0.1 * (li as f32 + 1.0)]));
+            }
+        }
+    }
     args
 }
 
@@ -154,25 +164,38 @@ impl FeatureSource for CachedFeatures<'_> {
 }
 
 impl ShardPool {
-    /// Spawn the pool over `rx`. When `spec.pjrt` is set the pool is
-    /// forced to a single shard (shard 0 owns the non-Send PJRT
-    /// client); otherwise `spec.shards` fixed-point shards share the
-    /// queue. `inflight` is decremented once per completed job — the
-    /// gauge the coordinator's batcher uses for idle-aware early
-    /// dispatch (the sender increments it on enqueue).
+    /// Spawn the pool over `rx`, serving the models in `library`. When
+    /// `spec.pjrt` is set the pool is forced to a single shard (shard 0
+    /// owns the non-Send PJRT client); otherwise `spec.shards`
+    /// fixed-point shards share the queue. The shared feature cache's
+    /// degree classes are calibrated from the serving graph's degree
+    /// quantiles ([`DegreeClasses::from_graph`]). `inflight` is
+    /// decremented once per completed job — the gauge the coordinator's
+    /// batcher uses for idle-aware early dispatch (the sender
+    /// increments it on enqueue).
     pub fn start(
         spec: &ShardSpec,
+        library: Arc<ModelLibrary>,
         graph: Arc<CsrGraph>,
         rx: mpsc::Receiver<ExecJob>,
         inflight: Arc<AtomicU64>,
     ) -> Result<ShardPool> {
         let shards = if spec.pjrt { 1 } else { spec.shards.max(1) };
-        let cache = Arc::new(FeatureCache::new(spec.cache_rows, spec.model_cfg.f_in));
+        // Quantile calibration walks + sorts every vertex degree — skip
+        // it when caching is disabled (cache_rows 0 never admits).
+        let classes = if spec.cache_rows > 0 {
+            DegreeClasses::from_graph(&graph)
+        } else {
+            DegreeClasses::default()
+        };
+        let cache =
+            Arc::new(FeatureCache::with_classes(spec.cache_rows, spec.model_cfg.f_in, classes));
         let counters = Arc::new(PoolCounters::default());
         let rx = Arc::new(Mutex::new(rx));
         let mut threads = Vec::with_capacity(shards);
         for i in 0..shards {
             let spec = spec.clone();
+            let library = library.clone();
             let graph = graph.clone();
             let cache = cache.clone();
             let counters = counters.clone();
@@ -180,7 +203,9 @@ impl ShardPool {
             let inflight = inflight.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("grip-shard-{i}"))
-                .spawn(move || shard_loop(i, &spec, &graph, &cache, &counters, &rx, &inflight))
+                .spawn(move || {
+                    shard_loop(i, &spec, &library, &graph, &cache, &counters, &rx, &inflight)
+                })
                 .map_err(|e| anyhow!("spawning shard {i}: {e}"))?;
             threads.push(handle);
         }
@@ -221,12 +246,14 @@ impl Drop for ShardPool {
     }
 }
 
-/// One shard: compile plans and resolve fixed-point weights once, then
-/// drain the shared queue. Shard 0 additionally owns the PJRT executor
-/// when requested.
+/// One shard: resolve fixed-point weights for every library model once,
+/// then drain the shared queue. Shard 0 additionally owns the PJRT
+/// executor when requested.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     shard: usize,
     spec: &ShardSpec,
+    library: &ModelLibrary,
     graph: &CsrGraph,
     cache: &FeatureCache,
     counters: &PoolCounters,
@@ -244,13 +271,13 @@ fn shard_loop(
     } else {
         None
     };
-    let plans: HashMap<GnnModel, ModelPlan> =
-        ALL_MODELS.into_iter().map(|m| (m, compile(m, &spec.model_cfg))).collect();
-    let pargs: HashMap<GnnModel, PlanArgs> = plans
-        .iter()
-        .map(|(&m, p)| {
-            let args = fixed_serving_args(p, spec.weight_seed);
-            (m, PlanArgs::resolve(p, &args).expect("serving weights match their own plan"))
+    // One resolved PlanArgs per library model, indexed by ModelKey.
+    let pargs: Vec<PlanArgs> = library
+        .keys()
+        .map(|k| {
+            let plan = library.plan(k);
+            let args = fixed_serving_args(plan, spec.weight_seed);
+            PlanArgs::resolve(plan, &args).expect("serving weights match their own plan")
         })
         .collect();
     let mut scratch = ExecScratch::for_config(&spec.grip);
@@ -273,11 +300,11 @@ fn shard_loop(
         };
         execute_job(
             spec,
+            library,
             graph,
             cache,
             counters,
             pjrt.as_ref(),
-            &plans,
             &pargs,
             &mut scratch,
             &mut marshal,
@@ -295,12 +322,12 @@ fn shard_loop(
 #[allow(clippy::too_many_arguments)]
 fn execute_job(
     spec: &ShardSpec,
+    library: &ModelLibrary,
     graph: &CsrGraph,
     cache: &FeatureCache,
     counters: &PoolCounters,
     pjrt: Option<&Executor>,
-    plans: &HashMap<GnnModel, ModelPlan>,
-    pargs: &HashMap<GnnModel, PlanArgs>,
+    pargs: &[PlanArgs],
     scratch: &mut ExecScratch,
     marshal: &mut MarshalScratch,
     h: &mut Vec<f32>,
@@ -308,7 +335,7 @@ fn execute_job(
     job: ExecJob,
 ) {
     let ExecJob { model, nf, members, t_dequeue } = job;
-    let plan = &plans[&model];
+    let plan = library.plan(model);
 
     // 1. Cycle-level accelerator timing (and the sim-side feature-cache
     //    accounting mirrored into the pool stats).
@@ -326,40 +353,59 @@ fn execute_job(
     //    datapath, else timing-only. On success `emb` holds
     //    f_out * nf.targets.len() values.
     let outcome: Result<(usize, bool), String> = if let Some(exec) = pjrt {
-        match exec.model(model.name()) {
-            Ok(lm) => {
-                if fits_padding(&lm.artifact, &nf) {
-                    let mut src = CachedFeatures { cache, graph };
-                    build_dynamic_args_into(model, &lm.artifact, &nf, &mut src, marshal)
-                        .map_err(|e| e.to_string())
-                        .and_then(|_| {
-                            exec.run_prepared(model.name(), marshal.args())
-                                .map_err(|e| e.to_string())
-                        })
-                        .map(|out| {
-                            let f_out = *lm.artifact.output_shape.last().unwrap_or(&1);
-                            emb.clear();
-                            emb.extend_from_slice(&out[..f_out * nf.targets.len()]);
-                            (f_out, false)
-                        })
-                } else {
-                    // Batched nodeflow exceeds the batch-1 AOT padding:
-                    // degrade to an explicitly-flagged timing-only reply.
-                    emb.clear();
-                    Ok((0, true))
-                }
+        match exec.model(&plan.name) {
+            Ok(lm) if fits_padding(&lm.artifact, &nf) => {
+                let mut src = CachedFeatures { cache, graph };
+                build_dynamic_args_into(plan, &lm.artifact, &nf, &mut src, marshal)
+                    .map_err(|e| e.to_string())
+                    .and_then(|_| {
+                        exec.run_prepared(&plan.name, marshal.args()).map_err(|e| e.to_string())
+                    })
+                    .map(|out| {
+                        let f_out = *lm.artifact.output_shape.last().unwrap_or(&1);
+                        emb.clear();
+                        emb.extend_from_slice(&out[..f_out * nf.targets.len()]);
+                        (f_out, false)
+                    })
             }
+            Ok(_) => {
+                // The (batched) nodeflow exceeds the AOT padding:
+                // degrade to an explicitly-flagged timing-only reply.
+                emb.clear();
+                Ok((0, true))
+            }
+            Err(_) if model.index() >= ALL_MODELS.len() => {
+                // Custom specs have no AOT artifact — an expected
+                // timing-only degrade, not an error.
+                emb.clear();
+                Ok((0, true))
+            }
+            // A *preset* artifact that fails to load is a broken
+            // deployment: surface it to the caller instead of quietly
+            // answering timing-only.
             Err(e) => Err(e.to_string()),
         }
     } else if spec.fixed_numerics {
+        // The plan's own input width governs the feature rows; the
+        // shared cache only serves rows of its configured width, so
+        // specs with non-default dims synthesize rows directly.
+        let in_dim = plan.layers[0].in_dim;
         let l0 = &nf.layers[0];
         h.clear();
-        h.reserve(l0.num_inputs() * spec.model_cfg.f_in);
-        for &v in &l0.inputs {
-            cache.append_row(v, graph.degree(v), h);
+        if in_dim == cache.f_in() {
+            h.reserve(l0.num_inputs() * in_dim);
+            for &v in &l0.inputs {
+                cache.append_row(v, graph.degree(v), h);
+            }
+        } else {
+            h.resize(l0.num_inputs() * in_dim, 0f32);
+            for (i, &v) in l0.inputs.iter().enumerate() {
+                fill_feature_row(v, &mut h[i * in_dim..(i + 1) * in_dim]);
+            }
         }
-        match execute_model_into(plan, &nf, h, &pargs[&model], scratch, emb) {
-            Ok(()) => Ok((spec.model_cfg.f_out, false)),
+        let f_out = plan.layers.last().expect("validated plans have layers").out_dim;
+        match execute_model_into(plan, &nf, h, &pargs[model.index()], scratch, emb) {
+            Ok(()) => Ok((f_out, false)),
             Err(e) => Err(e.to_string()),
         }
     } else {
@@ -408,6 +454,7 @@ fn execute_job(
 mod tests {
     use super::*;
     use crate::graph::{generate, GeneratorParams};
+    use crate::greta::GnnModel;
     use crate::nodeflow::Sampler;
 
     fn graph() -> Arc<CsrGraph> {
@@ -439,7 +486,7 @@ mod tests {
         let nf = Nodeflow::build(g, &Sampler::new(9), targets, mc);
         let (rtx, rrx) = mpsc::channel();
         tx.send(ExecJob {
-            model,
+            model: model.key(),
             nf,
             members: vec![ReplySlot {
                 id,
@@ -464,7 +511,8 @@ mod tests {
             ..Default::default()
         };
         let (tx, rx) = mpsc::channel();
-        let pool = ShardPool::start(&spec, g.clone(), rx, gauge(ids.len())).unwrap();
+        let library = Arc::new(ModelLibrary::presets(&mc));
+        let pool = ShardPool::start(&spec, library, g.clone(), rx, gauge(ids.len())).unwrap();
         let replies: Vec<_> = ids
             .iter()
             .enumerate()
@@ -521,12 +569,12 @@ mod tests {
         let mc = small_mc();
         let spec_fx = ShardSpec { model_cfg: mc, fixed_numerics: true, ..Default::default() };
         let spec_timing = ShardSpec { model_cfg: mc, fixed_numerics: false, ..Default::default() };
-        let plans: HashMap<GnnModel, ModelPlan> =
-            ALL_MODELS.into_iter().map(|m| (m, compile(m, &mc))).collect();
-        let pargs: HashMap<GnnModel, PlanArgs> = plans
-            .iter()
-            .map(|(&m, p)| {
-                (m, PlanArgs::resolve(p, &fixed_serving_args(p, spec_fx.weight_seed)).unwrap())
+        let library = ModelLibrary::presets(&mc);
+        let pargs: Vec<PlanArgs> = library
+            .keys()
+            .map(|k| {
+                let p = library.plan(k);
+                PlanArgs::resolve(p, &fixed_serving_args(p, spec_fx.weight_seed)).unwrap()
             })
             .collect();
         let cache = FeatureCache::new(64, mc.f_in);
@@ -540,7 +588,7 @@ mod tests {
             let nf = Nodeflow::build(&g, &Sampler::new(9), &[7], &mc);
             let (rtx, rrx) = mpsc::channel();
             let job = ExecJob {
-                model: GnnModel::Gcn,
+                model: GnnModel::Gcn.key(),
                 nf,
                 members: vec![ReplySlot {
                     id,
@@ -556,8 +604,8 @@ mod tests {
         // 1. A numeric job fills the shared embedding buffer.
         let (job, rx1) = mk_job(0);
         execute_job(
-            &spec_fx, &g, &cache, &counters, None, &plans, &pargs, &mut scratch, &mut marshal,
-            &mut h, &mut emb, job,
+            &spec_fx, &library, &g, &cache, &counters, None, &pargs, &mut scratch,
+            &mut marshal, &mut h, &mut emb, job,
         );
         let r1 = rx1.recv().unwrap().unwrap();
         assert!(!r1.timing_only && !r1.embedding.is_empty());
@@ -565,7 +613,7 @@ mod tests {
         // 2. A timing-only job reusing the same buffers must reply empty.
         let (job, rx2) = mk_job(1);
         execute_job(
-            &spec_timing, &g, &cache, &counters, None, &plans, &pargs, &mut scratch,
+            &spec_timing, &library, &g, &cache, &counters, None, &pargs, &mut scratch,
             &mut marshal, &mut h, &mut emb, job,
         );
         let r2 = rx2.recv().unwrap().unwrap();
@@ -585,7 +633,8 @@ mod tests {
             ..Default::default()
         };
         let (tx, rx) = mpsc::channel();
-        let pool = ShardPool::start(&spec, g.clone(), rx, gauge(2)).unwrap();
+        let library = Arc::new(ModelLibrary::presets(&mc));
+        let pool = ShardPool::start(&spec, library, g.clone(), rx, gauge(2)).unwrap();
         // Same target twice: the second job's rows should mostly hit.
         let a = submit(&tx, &g, &mc, GnnModel::Gcn, 0, &[42]);
         a.recv().unwrap().unwrap();

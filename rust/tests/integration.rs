@@ -96,11 +96,12 @@ fn sim_speedup_over_cpu_baseline_in_paper_decade() {
     // GRIP vs the fitted CPU model: geomean speedup for GCN must land
     // in the paper's decade (Table III: 11-30x per dataset).
     let ctx = small_ctx();
+    let plan = compile(GnnModel::Gcn, &ctx.mc);
     let mut speedups = Vec::new();
     for ds in TABLE1 {
         let wl = ctx.workload(ds);
-        let (lat, nbhd, _) = ctx.sim_stats(&ctx.grip, GnnModel::Gcn, &wl);
-        let cpu = grip::baseline::cpu_latency_us(GnnModel::Gcn, nbhd.p99() as usize);
+        let (lat, nbhd, _) = ctx.sim_stats(&ctx.grip, &plan, &wl);
+        let cpu = grip::baseline::cpu_latency_us(&plan, nbhd.p99() as usize);
         speedups.push(cpu / lat.p99());
     }
     let geo = (speedups.iter().map(|x: &f64| x.ln()).sum::<f64>() / speedups.len() as f64).exp();

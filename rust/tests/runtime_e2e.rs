@@ -63,12 +63,10 @@ fn fixed_point_datapath_matches_pjrt_on_real_nodeflows() {
 
     for model in ALL_MODELS {
         let artifact = exec.model(model.name()).unwrap().artifact.clone();
-        let args = build_args(model, &artifact, &nf).unwrap();
+        let plan = compile(model, &mc);
+        let args = build_args(&plan, &artifact, &nf).unwrap();
         let pjrt_out = exec.run(model.name(), &args).unwrap();
         let f_out = *artifact.output_shape.last().unwrap();
-
-        // Same inputs through the fixed-point executor.
-        let plan = compile(model, &mc);
         let h = &args[2]; // padded features; executor wants exact rows
         let u1 = nf.layers[0].num_inputs();
         let h_exact: Vec<f32> = h[..u1 * mc.f_in].to_vec();
@@ -107,7 +105,7 @@ fn run_prepared_matches_run() {
     let nf = Nodeflow::build(&g, &s, &[42], &mc);
     for model in ALL_MODELS {
         let artifact = exec.model(model.name()).unwrap().artifact.clone();
-        let full = build_args(model, &artifact, &nf).unwrap();
+        let full = build_args(&compile(model, &mc), &artifact, &nf).unwrap();
         let via_run = exec.run(model.name(), &full).unwrap();
         let via_prepared = exec.run_prepared(model.name(), &full[..3]).unwrap();
         assert_eq!(via_run, via_prepared, "{model:?}");

@@ -1,0 +1,334 @@
+//! ModelSpec redesign acceptance tests.
+//!
+//! The four paper presets used to be hardcoded `match` arms building
+//! `Program` literals (the pre-redesign `compile_layer`). That exact
+//! construction is preserved *here*, as `legacy_compile`, and every
+//! preset's spec-compiled plan must execute bit-identically to it on a
+//! fixed seed graph — the redesign is a pure refactor of where program
+//! structure lives, never of what it computes.
+//!
+//! Also here: the JSON example file under `examples/` must parse,
+//! compile, and execute (so the documented schema cannot drift from the
+//! parser — the CI smoke step runs the same file through the `grip`
+//! CLI), and spec validation must reject malformed models.
+
+use grip::config::ModelConfig;
+use grip::greta::{
+    compile, exec_test_args, execute_model, Activate, Domain, ExecArgs, ExecError, GatherOp,
+    GnnModel, LayerPlan, LayerSpec, MatMul, ModelPlan, ModelSpec, Program, ProgramSpec, ReduceOp,
+    SelfScale, Src, ALL_MODELS,
+};
+use grip::graph::{generate, GeneratorParams};
+use grip::nodeflow::{Nodeflow, Sampler};
+use grip::rng::GoldenLcg;
+
+// ---------------------------------------------------------------------------
+// The pre-redesign hardcoded compiler, verbatim (names owned instead of
+// &'static str — the only mechanical difference).
+// ---------------------------------------------------------------------------
+
+fn legacy_compile(model: GnnModel, mc: &ModelConfig) -> ModelPlan {
+    let dims = mc.layers();
+    let layers = dims
+        .iter()
+        .enumerate()
+        .map(|(i, &(_, in_dim, out_dim))| legacy_layer(model, i, in_dim, mc.f_hid, out_dim))
+        .collect();
+    ModelPlan { name: model.name().to_string(), layers }
+}
+
+fn legacy_layer(
+    model: GnnModel,
+    layer: usize,
+    in_dim: usize,
+    mid: usize,
+    out_dim: usize,
+) -> LayerPlan {
+    macro_rules! w {
+        ($a:expr, $b:expr) => {
+            if layer == 0 {
+                $a.to_string()
+            } else {
+                $b.to_string()
+            }
+        };
+    }
+    let programs = match model {
+        GnnModel::Gcn => vec![Program {
+            name: "gcn".into(),
+            domain: Domain::Edges,
+            source: Src::LayerInput,
+            gather: GatherOp::Identity,
+            reduce: ReduceOp::Mean,
+            self_scale: None,
+            transform: Some(MatMul { weight: w!("w1", "w2"), in_dim, out_dim }),
+            add_program: None,
+            activate: Activate::Relu,
+        }],
+        GnnModel::Sage => vec![
+            Program {
+                name: "sage-pool".into(),
+                domain: Domain::AllInputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wp1", "wp2"), in_dim, out_dim: mid }),
+                add_program: None,
+                activate: Activate::Relu,
+            },
+            Program {
+                name: "sage-agg".into(),
+                domain: Domain::Edges,
+                source: Src::Program(0),
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Max,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wn1", "wn2"), in_dim: mid, out_dim }),
+                add_program: None,
+                activate: Activate::None,
+            },
+            Program {
+                name: "sage-update".into(),
+                domain: Domain::Outputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("ws1", "ws2"), in_dim, out_dim }),
+                add_program: Some(1),
+                activate: Activate::Relu,
+            },
+        ],
+        GnnModel::Gin => vec![
+            Program {
+                name: "gin-agg".into(),
+                domain: Domain::Edges,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: Some(SelfScale::OnePlusArg(w!("eps1", "eps2"))),
+                transform: Some(MatMul { weight: w!("w1a", "w2a"), in_dim, out_dim: mid }),
+                add_program: None,
+                activate: Activate::Relu,
+            },
+            Program {
+                name: "gin-mlp2".into(),
+                domain: Domain::Outputs,
+                source: Src::Program(0),
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("w1b", "w2b"), in_dim: mid, out_dim }),
+                add_program: None,
+                activate: Activate::Relu,
+            },
+        ],
+        GnnModel::Ggcn => vec![
+            Program {
+                name: "ggcn-gate".into(),
+                domain: Domain::AllInputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wg1", "wg2"), in_dim, out_dim: 1 }),
+                add_program: None,
+                activate: Activate::Sigmoid,
+            },
+            Program {
+                name: "ggcn-msg".into(),
+                domain: Domain::AllInputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("wm1", "wm2"), in_dim, out_dim }),
+                add_program: None,
+                activate: Activate::None,
+            },
+            Program {
+                name: "ggcn-reduce".into(),
+                domain: Domain::Edges,
+                source: Src::Program(1),
+                gather: GatherOp::ProductWith(0),
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: None,
+                add_program: None,
+                activate: Activate::None,
+            },
+            Program {
+                name: "ggcn-update".into(),
+                domain: Domain::Outputs,
+                source: Src::LayerInput,
+                gather: GatherOp::Identity,
+                reduce: ReduceOp::Sum,
+                self_scale: None,
+                transform: Some(MatMul { weight: w!("ws1", "ws2"), in_dim, out_dim }),
+                add_program: Some(2),
+                activate: Activate::Relu,
+            },
+        ],
+    };
+    let output_program = programs.len() - 1;
+    LayerPlan { programs, output_program, in_dim, out_dim }
+}
+
+// ---------------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------------
+
+fn small_mc() -> ModelConfig {
+    ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+}
+
+fn setup(mc: &ModelConfig, targets: &[u32]) -> (Nodeflow, Vec<f32>) {
+    let g = generate(&GeneratorParams { nodes: 900, mean_degree: 7.0, ..Default::default() });
+    let nf = Nodeflow::build(&g, &Sampler::new(3), targets, mc);
+    let mut lcg = GoldenLcg::new(7);
+    let h: Vec<f32> =
+        lcg.fill(nf.layers[0].num_inputs() * mc.f_in).iter().map(|x| x * 0.5).collect();
+    (nf, h)
+}
+
+fn args_for(plan: &ModelPlan, seed: u64) -> ExecArgs {
+    let mut args = exec_test_args(plan, seed);
+    args.insert("eps1".into(), (vec![], vec![0.1]));
+    args.insert("eps2".into(), (vec![], vec![0.2]));
+    args
+}
+
+// ---------------------------------------------------------------------------
+// Round trip: preset specs == legacy hardcoded plans
+// ---------------------------------------------------------------------------
+
+#[test]
+fn preset_specs_bit_identical_to_legacy_hardcoded_plans() {
+    let mc = small_mc();
+    let (nf, h) = setup(&mc, &[17, 230]);
+    for model in ALL_MODELS {
+        let legacy = legacy_compile(model, &mc);
+        let spec_plan = model.spec(&mc).compile().expect("preset spec compiles");
+        // Same weight contract in the same order → one argument set
+        // feeds both plans identically.
+        assert_eq!(spec_plan.weight_names(), legacy.weight_names(), "{model:?}");
+        assert_eq!(spec_plan.num_programs(), legacy.num_programs(), "{model:?}");
+        let args = args_for(&legacy, 99);
+        let a = execute_model(&legacy, &nf, &h, &args).unwrap();
+        let b = execute_model(&spec_plan, &nf, &h, &args).unwrap();
+        assert_eq!(a, b, "{model:?}: spec-compiled plan diverged from the legacy plan");
+        // And `compile()` is exactly the spec path.
+        let c = execute_model(&compile(model, &mc), &nf, &h, &args).unwrap();
+        assert_eq!(a, c, "{model:?}");
+    }
+}
+
+#[test]
+fn preset_specs_match_legacy_structure_at_paper_dims() {
+    // Executing 602-dim plans is too slow for a unit test; pin the
+    // structural contract instead (dims, weight bytes, names).
+    let mc = ModelConfig::paper();
+    for model in ALL_MODELS {
+        let legacy = legacy_compile(model, &mc);
+        let spec_plan = compile(model, &mc);
+        assert_eq!(spec_plan.weight_names(), legacy.weight_names(), "{model:?}");
+        assert_eq!(spec_plan.weight_bytes(2), legacy.weight_bytes(2), "{model:?}");
+        assert_eq!(spec_plan.layers.len(), legacy.layers.len());
+        for (sl, ll) in spec_plan.layers.iter().zip(legacy.layers.iter()) {
+            assert_eq!(sl.in_dim, ll.in_dim);
+            assert_eq!(sl.out_dim, ll.out_dim);
+            assert_eq!(sl.output_program, ll.output_program);
+            assert_eq!(sl.programs.len(), ll.programs.len());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON: the documented example file executes end-to-end
+// ---------------------------------------------------------------------------
+
+fn example_spec() -> ModelSpec {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/model_spec.json");
+    let text = std::fs::read_to_string(path).expect("examples/model_spec.json in repo");
+    ModelSpec::from_json_str(&text).expect("example spec parses")
+}
+
+#[test]
+fn example_json_spec_compiles_and_executes_three_layers() {
+    let spec = example_spec();
+    assert_eq!(spec.depth(), 3, "the example documents a depth-3 model");
+    let plan = spec.compile().expect("example spec validates");
+
+    // Execute on a nodeflow built with the spec's own sampling.
+    let g = generate(&GeneratorParams { nodes: 900, mean_degree: 7.0, ..Default::default() });
+    let samples: Vec<usize> =
+        spec.layers.iter().map(|l| l.sample.expect("example sets sampling")).collect();
+    let nf = Nodeflow::build_layers(&g, &Sampler::new(3), &[42, 77], &samples);
+    assert_eq!(nf.layers.len(), 3);
+
+    let in_dim = plan.layers[0].in_dim;
+    let mut lcg = GoldenLcg::new(5);
+    let h: Vec<f32> =
+        lcg.fill(nf.layers[0].num_inputs() * in_dim).iter().map(|x| x * 0.5).collect();
+    let args = args_for(&plan, 31);
+    let out = execute_model(&plan, &nf, &h, &args).unwrap();
+    assert_eq!(out.len(), 2 * plan.layers.last().unwrap().out_dim);
+    assert!(out.iter().all(|x| x.is_finite()));
+    // Deterministic.
+    assert_eq!(out, execute_model(&plan, &nf, &h, &args).unwrap());
+}
+
+// ---------------------------------------------------------------------------
+// Negative: validation and argument resolution reject bad specs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spec_validation_rejects_dim_mismatch() {
+    let spec = ModelSpec::builder("bad-dims")
+        .layer(
+            LayerSpec::new(8, 4)
+                .program(ProgramSpec::new("p").transform("w", 6, 4)), // in_dim 6 != source 8
+        )
+        .build();
+    let err = spec.compile().unwrap_err();
+    assert!(err.to_string().contains("transform in_dim"), "{err}");
+}
+
+#[test]
+fn spec_validation_rejects_dangling_program_ref() {
+    let spec = ModelSpec::builder("bad-ref")
+        .layer(
+            LayerSpec::new(4, 4)
+                .program(ProgramSpec::new("a").transform("w0", 4, 4))
+                .program(ProgramSpec::new("b").source_program(5).transform("w1", 4, 4)),
+        )
+        .build();
+    let err = spec.compile().unwrap_err();
+    assert!(err.to_string().contains("dangling"), "{err}");
+}
+
+#[test]
+fn unknown_weight_name_surfaces_as_missing_arg() {
+    // Validation can't know what weights the runtime will supply; a
+    // spec naming a weight absent from the argument set must fail
+    // resolution with the name attached, not panic mid-execution.
+    let spec = ModelSpec::builder("missing-w")
+        .layer(LayerSpec::new(12, 6).program(
+            ProgramSpec::new("p").reduce(ReduceOp::Mean).transform("nobody_supplies_this", 12, 6),
+        ))
+        .build();
+    let plan = spec.compile().unwrap();
+    let nf = Nodeflow::build_layers(
+        &generate(&GeneratorParams { nodes: 900, mean_degree: 7.0, ..Default::default() }),
+        &Sampler::new(3),
+        &[17],
+        &[4],
+    );
+    let h: Vec<f32> = vec![0.1; nf.layers[0].num_inputs() * 12];
+    let err = execute_model(&plan, &nf, &h, &ExecArgs::new()).unwrap_err();
+    match err {
+        ExecError::MissingArg(name) => assert_eq!(name, "nobody_supplies_this"),
+        other => panic!("expected MissingArg, got {other:?}"),
+    }
+}
