@@ -8,11 +8,12 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use grip::backend::{BackendChoice, BackendFactory, BackendScratch, NumericsBackend};
 use grip::config::{GripConfig, ModelConfig};
 use grip::graph::{generate, GeneratorParams};
 use grip::greta::{compile, GnnModel};
 use grip::nodeflow::{Nodeflow, Sampler};
-use grip::runtime::{build_args, Executor, Manifest};
+use grip::runtime::FeatureStore;
 use grip::sim::simulate;
 
 fn main() -> anyhow::Result<()> {
@@ -64,18 +65,35 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 5. Real numerics via the AOT'd JAX/Pallas model on PJRT.
-    match Executor::load(&Manifest::default_dir()) {
-        Ok(exec) => {
-            let artifact = &exec.model(model.name())?.artifact;
-            let args = build_args(&plan, artifact, &nf)?;
-            let out = exec.run(model.name(), &args)?;
-            let f_out = *artifact.output_shape.last().unwrap();
-            let emb = &out[..f_out];
+    // 5. Real numerics through the pluggable execution layer — the
+    //    same NumericsBackend trait a serving shard drives (PJRT here;
+    //    swap the choice for BackendChoice::Fixed to run the Q4.12
+    //    datapath without artifacts; contract in examples/BACKENDS.md).
+    match BackendFactory::new(BackendChoice::Pjrt).build(0) {
+        Ok(mut backend) => {
+            // prepare = per-shard weight residency (device upload),
+            // once; execute = dynamic args only, per request. The args
+            // carry the deterministic Q4.12 serving weights — PJRT
+            // ignores them (its weights are device-resident from the
+            // manifest), but they make the BackendChoice::Fixed swap
+            // above actually runnable.
+            let args = grip::serve::fixed_serving_args(&plan, 0x5EED_5E4E);
+            let prepared = backend.prepare(&plan, &args)?;
+            let mut features = FeatureStore::new();
+            let mut scratch = BackendScratch::new();
+            let out = backend.execute(&prepared, &nf, &mut features, &mut scratch)?;
+            // Float on the PJRT backend; FixedQ412 after the swap.
+            assert!(out.numerics.is_numeric(), "numeric backend returned {:?}", out.numerics);
+            let emb = &out.embeddings[..out.f_out];
             let norm: f32 = emb.iter().map(|x| x * x).sum::<f32>().sqrt();
-            println!("embedding: dim {f_out}, l2 norm {norm:.4}, first 4 = {:?}", &emb[..4]);
+            println!(
+                "embedding ({} backend): dim {}, l2 norm {norm:.4}, first 4 = {:?}",
+                backend.name(),
+                out.f_out,
+                &emb[..4]
+            );
         }
-        Err(e) => println!("(PJRT path skipped: {e}; run `make artifacts`)"),
+        Err(e) => println!("(PJRT backend skipped: {e}; run `make artifacts`)"),
     }
     Ok(())
 }

@@ -9,8 +9,10 @@
 //! CPU/GPU comparison — proving the queue → batcher → nodeflow →
 //! {simulator, PJRT} → response pipeline composes.
 //!
-//! Run: `cargo run --release --example serve_latency [requests] [scale]`
+//! Run: `cargo run --release --example serve_latency [requests] [scale] [backend]`
+//! (`backend` = fixed | pjrt | reference | timing, default pjrt)
 
+use grip::backend::BackendChoice;
 use grip::baseline::{cpu_latency_us, gpu_latency_us};
 use grip::coordinator::{run_workload, Coordinator, ServeConfig};
 use grip::graph::Dataset;
@@ -21,6 +23,10 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
     let scale: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.005);
+    let backend = args
+        .get(3)
+        .map(|s| BackendChoice::from_name(s).expect("backend: fixed|pjrt|reference|timing"))
+        .unwrap_or(BackendChoice::Pjrt);
 
     eprintln!("generating pokec graph at scale {scale} ...");
     let dataset = Dataset::Pokec;
@@ -28,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let num_v = graph.num_vertices();
     eprintln!("graph: {} vertices, {} edges", num_v, graph.num_edges());
 
-    let coord = Coordinator::start(graph, 17, ServeConfig::default())?;
+    let coord = Coordinator::start(graph, 17, ServeConfig { backend, ..Default::default() })?;
     let mut rng = SplitMix64::new(99);
     let targets: Vec<u32> = (0..requests).map(|_| rng.gen_range(num_v) as u32).collect();
 
@@ -62,7 +68,12 @@ fn main() -> anyhow::Result<()> {
             requests as f64 / wall
         );
     }
-    println!("\n(accelerator latency from the cycle simulator; embeddings computed");
-    println!(" live by the AOT'd JAX/Pallas models on PJRT — zero Python at runtime)");
+    let stats = coord.serve_stats();
+    println!(
+        "\n(accelerator latency from the cycle simulator; numerics backend {backend:?},\n \
+         per-shard [{}], {} fallback(s))",
+        stats.shard_backends.join(", "),
+        stats.backend_fallbacks
+    );
     Ok(())
 }

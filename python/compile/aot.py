@@ -6,6 +6,13 @@ which the runtime's xla_extension 0.5.1 rejects (``proto.id() <=
 INT_MAX``).  The text parser on the Rust side reassigns ids, so text
 round-trips cleanly.  See /opt/xla-example/README.md.
 
+The manifest's ``pad_shapes`` block is load-bearing for serving: the
+Rust SLO batcher clamps its coalescing cap to
+``PadShapes::max_coalesced_targets`` derived from these pads.  Since
+PR 4 the default pads admit batches of up to 8 coalesced targets at
+paper sampling (see ``model.PadShapes``); regenerating artifacts with
+this file automatically re-enables PJRT batch coalescing.
+
 Usage (driven by `make artifacts`):
     cd python && python -m compile.aot --out ../artifacts
 """

@@ -18,8 +18,13 @@ asserted in integration tests):
     are provably inert for every model (masked max treats empty rows as
     0; affine transforms map zero rows to zero).
 
-Default shapes follow the paper: 2 layers, samples (25, 10), feature
-dims 602 -> 512 -> 256, batch = 1 target vertex.
+Default shapes follow the paper for 2 layers, samples (25, 10), feature
+dims 602 -> 512 -> 256 — but padded for a batch of up to **8 coalesced
+target vertices** (PR 4): the Rust SLO batcher derives its coalescing
+cap from these pads (`PadShapes::max_coalesced_targets`), so batch-1
+padding silently disabled batching on the PJRT path.  Worst case every
+sample hits a distinct vertex, so 8 targets need v2 >= 8,
+v1 = u2 >= 8 * (10 + 1) = 88, and u1 >= 8 * 26 * 11 = 2288.
 """
 
 from __future__ import annotations
@@ -67,10 +72,10 @@ def _mmax(mask, msg):
 class PadShapes:
     """Fixed padded nodeflow dimensions baked into the HLO artifact."""
 
-    u1: int = 288  # >= 11 * 25 sampled layer-1 inputs, padded to tile
-    v1: int = 16  # >= 1 + 10 layer-1 outputs
-    u2: int = 16  # == v1
-    v2: int = 8  # >= 1 target vertex (m-tile aligned)
+    u1: int = 2304  # >= 8 targets * 26 * 11 sampled layer-1 inputs, tile-aligned
+    v1: int = 96  # >= 8 targets * 11 layer-1 outputs, m-tile aligned
+    u2: int = 96  # == v1
+    v2: int = 8  # >= 8 coalesced target vertices (m-tile aligned)
     f_in: int = 602
     f_hid: int = 512
     f_out: int = 256

@@ -8,6 +8,7 @@
 //!
 //! Run: `cargo bench --bench bench_exec` (or the produced binary).
 
+use grip::backend::BackendChoice;
 use grip::benchutil::{bench, black_box, write_bench_json};
 use grip::config::ModelConfig;
 use grip::coordinator::{run_workload, BatchConfig, Coordinator, LatencyStats, ServeConfig};
@@ -114,7 +115,7 @@ fn main() {
     // ---------------- serving pipeline: 500 requests, timing path ----------
     println!("\n== serving pipeline: 500 requests over the 10k-node graph ==");
     let g_sweep = g.clone();
-    let cfg = ServeConfig { numerics: false, ..Default::default() };
+    let cfg = ServeConfig { backend: BackendChoice::TimingOnly, ..Default::default() };
     let builders = cfg.builders;
     let coord = Coordinator::start(g, 17, cfg).expect("coordinator start");
     let mut rng = SplitMix64::new(99);

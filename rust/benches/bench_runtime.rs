@@ -1,12 +1,16 @@
 //! PJRT numeric-path benchmarks: the real request-path hot loop
-//! (argument marshalling + HLO execution). Skipped without artifacts.
+//! (argument marshalling + HLO execution), both through the raw
+//! executor API and through the serving [`PjrtBackend`]
+//! (prepare-once / execute-per-request — what a shard actually runs).
+//! Skipped without artifacts.
 
+use grip::backend::{BackendScratch, NumericsBackend, PjrtBackend};
 use grip::benchutil::bench;
 use grip::config::ModelConfig;
 use grip::graph::Dataset;
-use grip::greta::{compile, exec_test_args, execute_model, GnnModel};
+use grip::greta::{compile, exec_test_args, execute_model, ExecArgs, GnnModel};
 use grip::nodeflow::{Nodeflow, Sampler};
-use grip::runtime::{build_args, build_args_cached, serving_weights, Executor, FeatureStore, Manifest};
+use grip::runtime::{build_args, build_args_cached, serving_weights, FeatureStore, Manifest};
 
 fn main() {
     let mc = ModelConfig::paper();
@@ -15,15 +19,15 @@ fn main() {
     let nf = Nodeflow::build(&g, &s, &[42], &mc);
 
     println!("== bench_runtime: PJRT + marshalling + fixed-point paths ==");
-    match Executor::load(&Manifest::default_dir()) {
-        Ok(exec) => {
+    match PjrtBackend::load(&Manifest::default_dir()) {
+        Ok(mut be) => {
             for name in ["gcn", "gin", "sage", "ggcn"] {
                 let model = GnnModel::from_name(name).unwrap();
                 let plan = compile(model, &mc);
-                let artifact = exec.model(name).unwrap().artifact.clone();
+                let artifact = be.executor().model(name).unwrap().artifact.clone();
                 let args = build_args(&plan, &artifact, &nf).unwrap();
                 bench(&format!("pjrt_execute/{name}"), 3, 20, || {
-                    exec.run(name, &args).unwrap().len()
+                    be.executor().run(name, &args).unwrap().len()
                 });
                 bench(&format!("build_args/{name}"), 3, 50, || {
                     build_args(&plan, &artifact, &nf).unwrap().len()
@@ -32,6 +36,13 @@ fn main() {
                 let mut store = FeatureStore::new();
                 bench(&format!("build_args_cached/{name}"), 3, 50, || {
                     build_args_cached(&plan, &artifact, &nf, &w, &mut store).unwrap().len()
+                });
+                // The serving path: device-resident weights, reusable
+                // marshalling arena, dynamic-args-only upload.
+                let prepared = be.prepare(&plan, &ExecArgs::new()).unwrap();
+                let mut scratch = BackendScratch::new();
+                bench(&format!("backend_pjrt/{name}"), 3, 20, || {
+                    be.execute(&prepared, &nf, &mut store, &mut scratch).unwrap().embeddings.len()
                 });
             }
         }

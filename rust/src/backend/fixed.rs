@@ -1,0 +1,60 @@
+//! The Q4.12 fixed-point engine: [`PlanArgs`] + [`ExecScratch`] behind
+//! the [`NumericsBackend`] trait — bit-identical to the pre-trait
+//! shard loop (pinned by `tests/backend_conformance.rs` and
+//! `tests/serve_props.rs`).
+
+use super::{stage_features, BackendOutput, Numerics, NumericsBackend, PreparedModel};
+use crate::greta::{execute_model_into, ExecArgs, ModelPlan, PlanArgs};
+use crate::nodeflow::Nodeflow;
+use crate::runtime::FeatureSource;
+use anyhow::{anyhow, Result};
+
+/// The scale-out serving engine: GRIP's bit-accurate 16-bit datapath
+/// on the PR-1 hot path (weights quantized once at `prepare`, CSR edge
+/// streaming, vertex-tiled matmul, zero steady-state allocations).
+pub struct FixedPointBackend;
+
+impl FixedPointBackend {
+    pub fn new() -> Self {
+        FixedPointBackend
+    }
+}
+
+impl Default for FixedPointBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NumericsBackend for FixedPointBackend {
+    fn name(&self) -> &'static str {
+        "fixed-q4.12"
+    }
+
+    /// Quantize and shape-check every transform weight / self-scale
+    /// scalar once; the request path never touches the `Args` map.
+    fn prepare(&mut self, plan: &ModelPlan, args: &ExecArgs) -> Result<PreparedModel> {
+        let pargs = PlanArgs::resolve(plan, args)
+            .map_err(|e| anyhow!("{}: resolving serving weights: {e}", plan.name))?;
+        Ok(PreparedModel::new(plan.clone(), Box::new(pargs)))
+    }
+
+    fn execute<'s>(
+        &mut self,
+        prepared: &PreparedModel,
+        nf: &Nodeflow,
+        features: &mut dyn FeatureSource,
+        scratch: &'s mut super::BackendScratch,
+    ) -> Result<BackendOutput<'s>> {
+        let pargs: &PlanArgs = prepared.state()?;
+        let plan = prepared.plan();
+        stage_features(nf, plan.layers[0].in_dim, features, &mut scratch.h);
+        execute_model_into(plan, nf, &scratch.h, pargs, &mut scratch.exec, &mut scratch.emb)
+            .map_err(|e| anyhow!("{}: {e}", plan.name))?;
+        Ok(BackendOutput {
+            embeddings: &scratch.emb,
+            f_out: prepared.f_out(),
+            numerics: Numerics::FixedQ412,
+        })
+    }
+}

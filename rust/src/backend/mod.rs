@@ -1,0 +1,434 @@
+//! Pluggable per-shard execution engines behind one trait (PR 4).
+//!
+//! GRIP's serving story is phase-specialized hardware behind a single
+//! inference interface; before this module the runtime exposed three
+//! incompatible execution APIs instead — the Q4.12 path
+//! (`PlanArgs`/`ExecScratch`/`execute_model_into`), the PJRT float path
+//! (`runtime::Executor`, hand-wired as an `Option<&Executor>` owned
+//! only by shard 0), and a pair of bools (`pjrt`/`fixed_numerics`)
+//! selecting between them. [`NumericsBackend`] unifies them:
+//!
+//! * [`prepare`](NumericsBackend::prepare) resolves one model's
+//!   execution state **once per shard** — quantized weights for the
+//!   fixed-point engine, device-resident weight buffers for PJRT — so
+//!   the request path never compiles, quantizes, or uploads weights.
+//! * [`execute`](NumericsBackend::execute) runs one (possibly
+//!   coalesced) nodeflow and returns a [`BackendOutput`]: the target
+//!   embeddings plus an explicit [`Numerics`] tag replacing the
+//!   scattered `timing_only` bools.
+//!
+//! Backends are **not** required to be `Send`: the [`BackendFactory`]
+//! is what crosses threads, and it constructs each shard's backend
+//! *inside* that shard's thread. This is what un-pins PJRT from shard
+//! 0 — every shard owns its own (non-`Send`) PJRT client and its own
+//! device-resident weights, so float serving scales out exactly like
+//! the fixed-point path.
+//!
+//! Engines shipped here:
+//!
+//! * [`FixedPointBackend`] — the Q4.12 hot path (bit-identical to the
+//!   pre-trait shard loop).
+//! * [`PjrtBackend`] — the AOT'd float path, one client per shard.
+//! * [`ReferenceBackend`] — the seed edge-list executor, kept for
+//!   conformance testing (`tests/backend_conformance.rs`).
+//! * [`TimingOnlyBackend`] — no numerics; also the universal fallback
+//!   when a configured backend fails to construct.
+//!
+//! Embedding-buffer convention: `execute` writes the job's embeddings
+//! into [`BackendScratch::emb`] (reused across requests — the PR-1
+//! zero-steady-state-allocation discipline) and returns them as the
+//! borrowed [`BackendOutput::embeddings`] slice. See
+//! `examples/BACKENDS.md` for the full contract.
+
+mod fixed;
+mod pjrt;
+mod reference;
+
+pub use fixed::FixedPointBackend;
+pub use pjrt::PjrtBackend;
+pub use reference::ReferenceBackend;
+
+use crate::config::GripConfig;
+use crate::greta::{ExecArgs, ExecScratch, ModelPlan};
+use crate::nodeflow::Nodeflow;
+use crate::runtime::{FeatureSource, Manifest, MarshalScratch};
+use anyhow::{anyhow, Result};
+use std::any::Any;
+use std::path::PathBuf;
+
+/// What kind of numbers a reply's embedding holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Numerics {
+    /// f32 float embeddings (the AOT'd PJRT path).
+    Float,
+    /// Q4.12 fixed-point embeddings collapsed to f32 (the GRIP
+    /// datapath — both the hot CSR executor and the reference
+    /// edge-list executor produce this tag).
+    FixedQ412,
+    /// No numeric path ran: the reply carries timing only and its
+    /// embedding is empty.
+    TimingOnly,
+}
+
+impl Numerics {
+    /// True when the reply carries an actual embedding.
+    pub fn is_numeric(self) -> bool {
+        !matches!(self, Numerics::TimingOnly)
+    }
+}
+
+/// The result of one [`NumericsBackend::execute`] call.
+pub struct BackendOutput<'a> {
+    /// Row-major `[targets × f_out]` embeddings, borrowed from the
+    /// scratch arena the call ran with. Empty iff `numerics` is
+    /// [`Numerics::TimingOnly`].
+    pub embeddings: &'a [f32],
+    /// Output feature width per target (0 for timing-only replies).
+    pub f_out: usize,
+    /// Which numeric path produced `embeddings`.
+    pub numerics: Numerics,
+}
+
+/// One model's per-shard execution state, produced by
+/// [`NumericsBackend::prepare`]: the compiled plan plus an opaque
+/// backend-specific payload (resolved Q4.12 weights, the PJRT
+/// artifact record, ...). Handles are only valid with the backend
+/// that prepared them.
+pub struct PreparedModel {
+    plan: ModelPlan,
+    f_out: usize,
+    state: Box<dyn Any>,
+}
+
+impl PreparedModel {
+    /// Wrap a backend's per-model state. `f_out` defaults to the
+    /// plan's final layer width (PJRT overrides it from the artifact).
+    pub fn new(plan: ModelPlan, state: Box<dyn Any>) -> Self {
+        let f_out = plan.layers.last().map(|l| l.out_dim).unwrap_or(0);
+        Self { plan, f_out, state }
+    }
+
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
+    }
+
+    /// Output width the owning backend will produce per target.
+    pub fn f_out(&self) -> usize {
+        self.f_out
+    }
+
+    /// Downcast the backend-specific state.
+    pub fn state<T: 'static>(&self) -> Result<&T> {
+        self.state
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("{}: prepared by a different backend", self.plan.name))
+    }
+}
+
+/// Reusable working memory shared by every backend on one shard:
+/// feature staging, the output embedding buffer, the fixed-point
+/// executor arena, and the PJRT marshalling arena. After warm-up no
+/// buffer reallocates — the PR-1 hot-path discipline, now owned by the
+/// execution layer instead of hand-threaded through the shard loop.
+pub struct BackendScratch {
+    /// Layer-0 feature staging (`num_inputs × in_dim`, row-major).
+    pub h: Vec<f32>,
+    /// Embedding output buffer ([`BackendOutput::embeddings`] borrows
+    /// from here).
+    pub emb: Vec<f32>,
+    /// Fixed-point executor arena.
+    pub exec: ExecScratch,
+    /// PJRT dense-argument marshalling arena.
+    pub marshal: MarshalScratch,
+}
+
+impl BackendScratch {
+    pub fn new() -> Self {
+        Self::for_config(&GripConfig::paper())
+    }
+
+    /// Vertex-tile width for the fixed-point matmul from an explicit
+    /// architecture configuration.
+    pub fn for_config(cfg: &GripConfig) -> Self {
+        Self {
+            h: Vec::new(),
+            emb: Vec::new(),
+            exec: ExecScratch::for_config(cfg),
+            marshal: MarshalScratch::new(),
+        }
+    }
+}
+
+impl Default for BackendScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Stage layer-0 features for `nf` into `h` (`num_inputs × in_dim`
+/// rows from `features`). Shared by the fixed-point and reference
+/// backends; the PJRT backend pads instead (its artifact fixes the
+/// dense shapes).
+pub fn stage_features(
+    nf: &Nodeflow,
+    in_dim: usize,
+    features: &mut dyn FeatureSource,
+    h: &mut Vec<f32>,
+) {
+    let l0 = &nf.layers[0];
+    // Resize without a clear: every element is overwritten by the row
+    // loop below, so only growth pays a zero-fill (no per-request
+    // memset of the whole staging buffer).
+    h.resize(l0.num_inputs() * in_dim, 0f32);
+    for (i, &v) in l0.inputs.iter().enumerate() {
+        features.fill_row(v, &mut h[i * in_dim..(i + 1) * in_dim]);
+    }
+}
+
+/// A per-shard execution engine. One backend instance serves one shard
+/// thread; it is constructed there by the [`BackendFactory`], prepares
+/// every library model once, then executes jobs for the lifetime of
+/// the shard.
+///
+/// Contract (pinned by `tests/backend_conformance.rs` and documented
+/// in `examples/BACKENDS.md`):
+///
+/// * `prepare` is called once per (shard, model), before any
+///   `execute`; all weight residency (quantization, device upload)
+///   happens here.
+/// * `execute` runs the nodeflow's target batch (`nf.targets`) and
+///   leaves the embeddings in `scratch.emb`, returned as the borrowed
+///   [`BackendOutput`]; it must be deterministic for a given
+///   (prepared, nodeflow, features) triple so replies never depend on
+///   which shard served them.
+/// * Backends need not be `Send`; they never leave the thread that
+///   built them.
+pub trait NumericsBackend {
+    /// Stable engine name, also used as the per-shard status string in
+    /// `ServeStats::shard_backends`.
+    fn name(&self) -> &'static str;
+
+    /// Resolve `plan`'s execution state for this shard. `args` holds
+    /// the named serving weights/scalars; backends with their own
+    /// weight source (PJRT's device-resident manifest weights) may
+    /// ignore it.
+    fn prepare(&mut self, plan: &ModelPlan, args: &ExecArgs) -> Result<PreparedModel>;
+
+    /// Execute one job over `nf` (embeddings for every target, in
+    /// member order). `features` materializes layer-0 feature rows;
+    /// `scratch` is this shard's reusable working memory.
+    fn execute<'s>(
+        &mut self,
+        prepared: &PreparedModel,
+        nf: &Nodeflow,
+        features: &mut dyn FeatureSource,
+        scratch: &'s mut BackendScratch,
+    ) -> Result<BackendOutput<'s>>;
+}
+
+/// The no-numerics engine: replies carry cycle-sim timing only. Also
+/// the universal fallback when a configured backend fails to construct
+/// (surfaced via `ServeStats::backend_fallbacks`).
+pub struct TimingOnlyBackend;
+
+impl NumericsBackend for TimingOnlyBackend {
+    fn name(&self) -> &'static str {
+        "timing-only"
+    }
+
+    fn prepare(&mut self, plan: &ModelPlan, _args: &ExecArgs) -> Result<PreparedModel> {
+        Ok(PreparedModel::new(plan.clone(), Box::new(())))
+    }
+
+    fn execute<'s>(
+        &mut self,
+        _prepared: &PreparedModel,
+        _nf: &Nodeflow,
+        _features: &mut dyn FeatureSource,
+        scratch: &'s mut BackendScratch,
+    ) -> Result<BackendOutput<'s>> {
+        scratch.emb.clear();
+        Ok(BackendOutput { embeddings: &scratch.emb, f_out: 0, numerics: Numerics::TimingOnly })
+    }
+}
+
+/// Which execution engine a serving stack runs — the plain-data
+/// selector that replaced the `pjrt`/`fixed_numerics` bool pair in
+/// `ShardSpec`/`ServeConfig` (`--backend` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// No numeric path; timing-only replies.
+    TimingOnly,
+    /// Q4.12 fixed-point datapath (the scale-out serving default).
+    Fixed,
+    /// AOT'd float path on PJRT, one client per shard. Falls back to
+    /// timing-only per shard when the runtime is unavailable.
+    Pjrt,
+    /// Seed edge-list executor (conformance; slow).
+    Reference,
+}
+
+/// Accepted `--backend` spellings.
+pub const BACKEND_NAME_HELP: &str =
+    "fixed (q412) | pjrt (float) | reference (ref) | timing (none)";
+
+impl BackendChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendChoice::TimingOnly => "timing",
+            BackendChoice::Fixed => "fixed",
+            BackendChoice::Pjrt => "pjrt",
+            BackendChoice::Reference => "reference",
+        }
+    }
+
+    /// Parse a CLI spelling (see [`BACKEND_NAME_HELP`]).
+    pub fn from_name(s: &str) -> Option<BackendChoice> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "fixed-point" | "q412" | "q4.12" => Some(BackendChoice::Fixed),
+            "pjrt" | "float" => Some(BackendChoice::Pjrt),
+            "reference" | "ref" => Some(BackendChoice::Reference),
+            "timing" | "timing-only" | "none" => Some(BackendChoice::TimingOnly),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Builds one backend per shard. The factory itself is plain `Send +
+/// Sync` data and is cloned into every shard thread; [`build`] runs
+/// *inside* the thread, so non-`Send` engines (the PJRT client) are
+/// born where they live and never cross a thread boundary.
+///
+/// [`build`]: BackendFactory::build
+#[derive(Debug, Clone)]
+pub struct BackendFactory {
+    choice: BackendChoice,
+    artifact_dir: PathBuf,
+}
+
+impl BackendFactory {
+    /// A factory for `choice` loading PJRT artifacts from the default
+    /// directory.
+    pub fn new(choice: BackendChoice) -> Self {
+        Self { choice, artifact_dir: Manifest::default_dir() }
+    }
+
+    /// A factory with an explicit artifact directory (PJRT only).
+    pub fn with_artifact_dir(choice: BackendChoice, artifact_dir: PathBuf) -> Self {
+        Self { choice, artifact_dir }
+    }
+
+    pub fn choice(&self) -> BackendChoice {
+        self.choice
+    }
+
+    /// Construct shard `shard`'s backend. Errors (e.g. PJRT runtime or
+    /// artifacts unavailable) are the caller's to surface — the shard
+    /// pool counts them in `ServeStats::backend_fallbacks` and serves
+    /// the [`fallback`](BackendFactory::fallback) instead.
+    pub fn build(&self, shard: usize) -> Result<Box<dyn NumericsBackend>> {
+        match self.choice {
+            BackendChoice::TimingOnly => Ok(Box::new(TimingOnlyBackend)),
+            BackendChoice::Fixed => Ok(Box::new(FixedPointBackend::new())),
+            BackendChoice::Reference => Ok(Box::new(ReferenceBackend::new())),
+            BackendChoice::Pjrt => PjrtBackend::load(&self.artifact_dir)
+                .map(|b| Box::new(b) as Box<dyn NumericsBackend>)
+                .map_err(|e| anyhow!("shard {shard}: PJRT backend: {e}")),
+        }
+    }
+
+    /// The engine a shard degrades to when [`build`] or `prepare`
+    /// fails: timing-only serving, never a hard stop.
+    ///
+    /// [`build`]: BackendFactory::build
+    pub fn fallback(&self) -> Box<dyn NumericsBackend> {
+        Box::new(TimingOnlyBackend)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::graph::{generate, GeneratorParams};
+    use crate::greta::{exec_test_args, GnnModel};
+    use crate::nodeflow::Sampler;
+    use crate::runtime::FeatureStore;
+
+    fn small_mc() -> ModelConfig {
+        ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+    }
+
+    fn small_nf(mc: &ModelConfig) -> Nodeflow {
+        let g = generate(&GeneratorParams { nodes: 400, mean_degree: 6.0, ..Default::default() });
+        Nodeflow::build(&g, &Sampler::new(3), &[17], mc)
+    }
+
+    #[test]
+    fn choice_names_round_trip() {
+        for c in [
+            BackendChoice::TimingOnly,
+            BackendChoice::Fixed,
+            BackendChoice::Pjrt,
+            BackendChoice::Reference,
+        ] {
+            assert_eq!(BackendChoice::from_name(c.name()), Some(c), "{c}");
+        }
+        assert_eq!(BackendChoice::from_name("Q4.12"), Some(BackendChoice::Fixed));
+        assert_eq!(BackendChoice::from_name("none"), Some(BackendChoice::TimingOnly));
+        assert_eq!(BackendChoice::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn timing_only_backend_serves_empty_tagged_replies() {
+        let mc = small_mc();
+        let nf = small_nf(&mc);
+        let plan = crate::greta::compile(GnnModel::Gcn, &mc);
+        let mut be = TimingOnlyBackend;
+        let prepared = be.prepare(&plan, &exec_test_args(&plan, 1)).unwrap();
+        let mut store = FeatureStore::new();
+        let mut scratch = BackendScratch::new();
+        // Dirty the shared embedding buffer first: a timing-only reply
+        // must never leak a previous job's numbers.
+        scratch.emb.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let out = be.execute(&prepared, &nf, &mut store, &mut scratch).unwrap();
+        assert_eq!(out.numerics, Numerics::TimingOnly);
+        assert!(!out.numerics.is_numeric());
+        assert!(out.embeddings.is_empty());
+        assert_eq!(out.f_out, 0);
+    }
+
+    #[test]
+    fn prepared_state_downcast_is_checked() {
+        let mc = small_mc();
+        let plan = crate::greta::compile(GnnModel::Gcn, &mc);
+        let mut be = TimingOnlyBackend;
+        let prepared = be.prepare(&plan, &ExecArgs::new()).unwrap();
+        assert!(prepared.state::<()>().is_ok());
+        assert!(prepared.state::<u32>().is_err(), "wrong-backend handles must not alias");
+        assert_eq!(prepared.f_out(), mc.f_out);
+        assert_eq!(prepared.plan().name, "gcn");
+    }
+
+    #[test]
+    fn factory_builds_every_infallible_choice() {
+        for c in [BackendChoice::TimingOnly, BackendChoice::Fixed, BackendChoice::Reference] {
+            let be = BackendFactory::new(c).build(0).unwrap();
+            assert!(!be.name().is_empty());
+        }
+        // PJRT may fail (stub executor / no artifacts); either way the
+        // factory's fallback path must hold.
+        let f = BackendFactory::new(BackendChoice::Pjrt);
+        if let Err(e) = f.build(0) {
+            let msg = e.to_string();
+            assert!(msg.contains("PJRT"), "error names the backend: {msg}");
+            assert_eq!(f.fallback().name(), "timing-only");
+        }
+    }
+}

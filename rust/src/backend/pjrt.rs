@@ -1,0 +1,146 @@
+//! The float engine: AOT'd HLO artifacts on a PJRT client, one client
+//! **per shard** (the client is not `Send`; the [`BackendFactory`]
+//! constructs this backend inside each shard thread, which is what
+//! deleted the old shard-0 pinning). `prepare` resolves the model's
+//! artifact once — the serving weights were already transferred to the
+//! device by [`Executor::load`] — so the request path only uploads the
+//! per-request `(a1, a2, h)` dynamic args.
+//!
+//! Compiles identically with and without the `pjrt` cargo feature: the
+//! stub [`Executor`]'s `load` always fails, so default builds fall
+//! back to timing-only serving at construction time (counted in
+//! `ServeStats::backend_fallbacks`) rather than needing any cfg here.
+//!
+//! [`BackendFactory`]: super::BackendFactory
+
+use super::{BackendOutput, Numerics, NumericsBackend, PreparedModel};
+use crate::greta::{ExecArgs, ModelPlan, ALL_MODELS};
+use crate::nodeflow::Nodeflow;
+use crate::runtime::{
+    build_dynamic_args_into, fits_padding, Executor, FeatureSource, ModelArtifact,
+};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Per-model prepared state for the PJRT engine.
+enum PjrtModel {
+    /// An AOT artifact exists: serve float numerics through it.
+    Artifact(ModelArtifact),
+    /// No usable artifact: none exists (custom `ModelSpec`s are not
+    /// AOT-compiled yet — the ROADMAP's spec→HLO bridge), or one
+    /// exists but was compiled for different feature dims than this
+    /// plan. An *expected* timing-only degrade, not an error.
+    NoArtifact,
+    /// A *preset* whose artifact is missing — a broken deployment.
+    /// Kept per-model (rather than failing `prepare` and degrading the
+    /// whole shard) so healthy presets keep serving float while every
+    /// request for the broken one surfaces this error to its caller.
+    Broken(String),
+}
+
+/// Float numerics on the CPU PJRT client, weights device-resident.
+pub struct PjrtBackend {
+    exec: Executor,
+}
+
+impl PjrtBackend {
+    /// Load the manifest, compile every model on this shard's own
+    /// client, and transfer serving weights to the device. Fails when
+    /// the runtime is stubbed out or artifacts are missing — callers
+    /// degrade to [`super::TimingOnlyBackend`].
+    pub fn load(artifact_dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { exec: Executor::load(artifact_dir)? })
+    }
+
+    /// The underlying per-shard executor (golden verification, tests).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+}
+
+impl NumericsBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&mut self, plan: &ModelPlan, _args: &ExecArgs) -> Result<PreparedModel> {
+        match self.exec.model(&plan.name) {
+            Ok(lm) => {
+                let artifact = lm.artifact.clone();
+                // An artifact is only usable if it was AOT-compiled for
+                // this plan's feature dims (h arg = [pad_u1, f_in]). A
+                // name match with different dims — e.g. serve-bench's
+                // shrunk default ModelConfig against the paper-dims
+                // artifact — must NOT silently serve the artifact's
+                // numerics for a different model; degrade to the
+                // explicit timing-only path instead.
+                let art_f_in = artifact.args.get(2).and_then(|a| a.shape.get(1)).copied();
+                let art_f_out = artifact.output_shape.last().copied();
+                let plan_f_in = plan.layers.first().map(|l| l.in_dim);
+                let plan_f_out = plan.layers.last().map(|l| l.out_dim);
+                if art_f_in != plan_f_in || art_f_out != plan_f_out {
+                    return Ok(PreparedModel::new(
+                        plan.clone(),
+                        Box::new(PjrtModel::NoArtifact),
+                    ));
+                }
+                let f_out = *artifact.output_shape.last().unwrap_or(&1);
+                let mut prepared =
+                    PreparedModel::new(plan.clone(), Box::new(PjrtModel::Artifact(artifact)));
+                prepared.f_out = f_out;
+                Ok(prepared)
+            }
+            Err(e) if ALL_MODELS.iter().any(|m| m.name() == plan.name) => {
+                Ok(PreparedModel::new(
+                    plan.clone(),
+                    Box::new(PjrtModel::Broken(format!("preset {}: {e}", plan.name))),
+                ))
+            }
+            Err(_) => Ok(PreparedModel::new(plan.clone(), Box::new(PjrtModel::NoArtifact))),
+        }
+    }
+
+    fn execute<'s>(
+        &mut self,
+        prepared: &PreparedModel,
+        nf: &Nodeflow,
+        features: &mut dyn FeatureSource,
+        scratch: &'s mut super::BackendScratch,
+    ) -> Result<BackendOutput<'s>> {
+        let state: &PjrtModel = prepared.state()?;
+        let artifact = match state {
+            PjrtModel::Artifact(a) => a,
+            // A broken preset deployment errors to *this* model's
+            // callers; healthy models on the same shard keep serving.
+            PjrtModel::Broken(msg) => return Err(anyhow!("{msg}")),
+            PjrtModel::NoArtifact => {
+                scratch.emb.clear();
+                return Ok(BackendOutput {
+                    embeddings: &scratch.emb,
+                    f_out: 0,
+                    numerics: Numerics::TimingOnly,
+                });
+            }
+        };
+        if !fits_padding(artifact, nf) {
+            // The (batched) nodeflow exceeds the AOT padding: degrade
+            // to an explicitly-tagged timing-only reply. The SLO
+            // batcher's `max_coalesced_targets` clamp makes this
+            // unreachable for coalesced batches; direct multi-target
+            // submissions can still land here.
+            scratch.emb.clear();
+            return Ok(BackendOutput {
+                embeddings: &scratch.emb,
+                f_out: 0,
+                numerics: Numerics::TimingOnly,
+            });
+        }
+        let plan = prepared.plan();
+        build_dynamic_args_into(plan, artifact, nf, features, &mut scratch.marshal)?;
+        let out = self.exec.run_prepared(&plan.name, scratch.marshal.args())?;
+        let f_out = prepared.f_out();
+        scratch.emb.clear();
+        scratch.emb.extend_from_slice(&out[..f_out * nf.targets.len()]);
+        Ok(BackendOutput { embeddings: &scratch.emb, f_out, numerics: Numerics::Float })
+    }
+}

@@ -1,0 +1,62 @@
+//! The conformance engine: the seed edge-list executor
+//! ([`execute_model_ref`]) behind the [`NumericsBackend`] trait. Slow
+//! (per-call weight quantization, per-edge staging) but the canonical
+//! Q4.12 semantics — `tests/backend_conformance.rs` pins the
+//! fixed-point hot path bit-identical to this.
+
+use super::{stage_features, BackendOutput, Numerics, NumericsBackend, PreparedModel};
+use crate::greta::{execute_model_ref, ExecArgs, ModelPlan};
+use crate::nodeflow::Nodeflow;
+use crate::runtime::FeatureSource;
+use anyhow::{anyhow, Result};
+
+/// Reference Q4.12 executor (seed implementation, unsorted edge-list
+/// walk). Use for conformance runs, not serving throughput.
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        ReferenceBackend
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NumericsBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    /// The reference executor re-resolves weights per call; `prepare`
+    /// just snapshots the args map (and validates nothing up front —
+    /// exactly the seed behavior the conformance suite compares
+    /// against).
+    fn prepare(&mut self, plan: &ModelPlan, args: &ExecArgs) -> Result<PreparedModel> {
+        Ok(PreparedModel::new(plan.clone(), Box::new(args.clone())))
+    }
+
+    fn execute<'s>(
+        &mut self,
+        prepared: &PreparedModel,
+        nf: &Nodeflow,
+        features: &mut dyn FeatureSource,
+        scratch: &'s mut super::BackendScratch,
+    ) -> Result<BackendOutput<'s>> {
+        let args: &ExecArgs = prepared.state()?;
+        let plan = prepared.plan();
+        stage_features(nf, plan.layers[0].in_dim, features, &mut scratch.h);
+        let out = execute_model_ref(plan, nf, &scratch.h, args)
+            .map_err(|e| anyhow!("{}: {e}", plan.name))?;
+        scratch.emb.clear();
+        scratch.emb.extend_from_slice(&out);
+        Ok(BackendOutput {
+            embeddings: &scratch.emb,
+            f_out: prepared.f_out(),
+            numerics: Numerics::FixedQ412,
+        })
+    }
+}

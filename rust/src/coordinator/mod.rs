@@ -4,9 +4,11 @@
 //! bounded request queue with backpressure → nodeflow-builder thread
 //! pool (read-only graph + deterministic sampler, so builds
 //! parallelize) → bounded channel → executor shard pool
-//! ([`crate::serve::ShardPool`]: fixed-point executors behind a shared
-//! degree-aware feature cache; PJRT pinned to shard 0) — with latency
-//! metrics (p50/p99, per MLPerf practice).
+//! ([`crate::serve::ShardPool`]: one pluggable
+//! [`crate::backend::NumericsBackend`] per shard — fixed-point, PJRT
+//! with a per-shard client, reference, or timing-only — behind a
+//! shared degree-aware feature cache) — with latency metrics (p50/p99,
+//! per MLPerf practice).
 
 mod metrics;
 mod server;
@@ -16,6 +18,7 @@ pub use server::{
     run_workload, run_workload_batched, Coordinator, InferenceRequest, InferenceResponse,
     ServeConfig,
 };
-// Re-exported so serving callers configure batching without importing
-// the serve module separately.
+// Re-exported so serving callers configure batching and the execution
+// engine without importing the serve/backend modules separately.
+pub use crate::backend::BackendChoice;
 pub use crate::serve::{BatchConfig, ServeStats};

@@ -20,12 +20,14 @@
 //!                                             │
 //!                                             ▼
 //!                                  sharded executor pool (serve::ShardPool):
-//!                                  K fixed-point executors, each owning
-//!                                  its own PlanArgs + ExecScratch, all
-//!                                  fronted by one shared degree-aware
-//!                                  feature cache; the non-Send PJRT
-//!                                  executor stays pinned to shard 0
-//!                                  (PJRT numerics force K = 1)
+//!                                  K shards, each owning its own
+//!                                  NumericsBackend (ServeConfig::backend:
+//!                                  fixed | pjrt | reference | timing)
+//!                                  built inside the shard thread — so
+//!                                  even the non-Send PJRT client scales
+//!                                  out, one client + device-resident
+//!                                  weights per shard — all fronted by
+//!                                  one shared degree-aware feature cache
 //!                                             │
 //!                                             ▼
 //!                                      per-request replies (a coalesced
@@ -34,8 +36,8 @@
 //! ```
 //!
 //! Nodeflow construction — the dominant host-side cost — overlaps with
-//! execution of earlier requests, and execution itself now scales
-//! across cores for the fixed-point path. Requests may complete out of
+//! execution of earlier requests, and execution itself scales across
+//! cores for every backend. Requests may complete out of
 //! submission order; each reply travels on its own channel, so callers
 //! are unaffected. The deterministic sampler keys samples by (vertex,
 //! layer) and the serving weights/features are synthesized from vertex
@@ -46,12 +48,13 @@
 //! Requests carry a batch of target vertices: a multi-target request
 //! shares one nodeflow build and one simulated accelerator pass
 //! ([`run_workload_batched`] drives this). The AOT artifacts are padded
-//! for the paper's batch-1 online-inference regime, so on the PJRT path
-//! batched requests degrade to replies with
-//! [`InferenceResponse::timing_only`] set when their nodeflow exceeds
-//! the artifact padding.
+//! for a bounded coalesced batch (8 targets at paper sampling since
+//! PR 4), so on the PJRT path requests whose nodeflow exceeds the
+//! artifact padding degrade to replies with
+//! [`InferenceResponse::timing_only`] set.
 
 use super::metrics::LatencyStats;
+use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
 use crate::graph::CsrGraph;
 use crate::greta::{ModelKey, ModelLibrary, ModelSpec};
@@ -91,8 +94,8 @@ impl InferenceRequest {
 pub struct InferenceResponse {
     pub id: u64,
     /// Target embeddings (`targets.len() × f_out` values, row-major):
-    /// PJRT float numerics on shard 0, or the Q4.12 fixed-point
-    /// datapath when serving with `fixed_numerics`. Empty iff
+    /// PJRT float numerics or the Q4.12 fixed-point datapath,
+    /// depending on [`ServeConfig::backend`]. Empty iff
     /// `timing_only`.
     pub embedding: Vec<f32>,
     /// Simulated GRIP accelerator latency (µs) for this nodeflow.
@@ -181,21 +184,20 @@ pub struct ServeConfig {
     pub model_cfg: ModelConfig,
     /// Bounded submission-queue depth (backpressure).
     pub queue_depth: usize,
-    /// Run the PJRT numeric path (pins execution to shard 0; disable
-    /// for pure-timing benches or fixed-point scale-out serving).
-    pub numerics: bool,
+    /// Execution engine every shard runs (`--backend` on the CLI):
+    /// PJRT float (default, one client per shard), Q4.12 fixed-point,
+    /// the reference executor, or timing-only. A shard whose backend
+    /// fails to construct falls back to timing-only serving, counted
+    /// in [`ServeStats::backend_fallbacks`].
+    pub backend: BackendChoice,
     /// Nodeflow-builder threads (sampling + CSR build are read-only
     /// over the graph, so they scale near-linearly).
     pub builders: usize,
     /// Bounded depth of the built-nodeflow channel between the builder
     /// pool and the executor shards.
     pub built_depth: usize,
-    /// Executor shards for the fixed-point path (PJRT numerics force 1).
+    /// Executor shards (every backend scales out).
     pub shards: usize,
-    /// Serve Q4.12 fixed-point embeddings when PJRT numerics are off —
-    /// the scale-out serving mode. Off by default: timing-only benches
-    /// expect empty embeddings.
-    pub fixed_numerics: bool,
     /// Enable the SLO-aware dynamic batcher with this policy. On the
     /// PJRT path the policy's `max_batch` is clamped to the AOT
     /// artifacts' padded batch capacity
@@ -221,11 +223,10 @@ impl Default for ServeConfig {
             grip: GripConfig::paper(),
             model_cfg: ModelConfig::paper(),
             queue_depth: 256,
-            numerics: true,
+            backend: BackendChoice::Pjrt,
             builders: 4,
             built_depth: 64,
             shards: 1,
-            fixed_numerics: false,
             batch: None,
             cache_rows: spec.cache_rows,
             weight_seed: spec.weight_seed,
@@ -240,8 +241,7 @@ impl ServeConfig {
             shards: self.shards,
             grip: self.grip.clone(),
             model_cfg: self.model_cfg,
-            pjrt: self.numerics,
-            fixed_numerics: self.fixed_numerics,
+            backend: self.backend,
             cache_rows: self.cache_rows,
             weight_seed: self.weight_seed,
         }
@@ -291,7 +291,7 @@ impl Coordinator {
         // capacity so coalescing never produces a nodeflow that falls
         // back to timing_only. (Fixed-point serving has no padding.)
         let batch = match cfg.batch {
-            Some(mut bc) if cfg.numerics => {
+            Some(mut bc) if cfg.backend == BackendChoice::Pjrt => {
                 if let Ok(man) = Manifest::load(&Manifest::default_dir()) {
                     let cap = man.pad.max_coalesced_targets(&cfg.model_cfg);
                     if bc.max_batch > cap {
@@ -375,7 +375,7 @@ impl Coordinator {
         self.pool.as_ref().map(|p| p.stats()).unwrap_or_default()
     }
 
-    /// Executor shards actually running (1 when PJRT is pinned).
+    /// Executor shards actually running.
     pub fn shards(&self) -> usize {
         self.pool.as_ref().map(|p| p.shards()).unwrap_or(0)
     }
@@ -591,7 +591,7 @@ mod tests {
     }
 
     fn timing_cfg() -> ServeConfig {
-        ServeConfig { numerics: false, builders: 3, ..Default::default() }
+        ServeConfig { backend: BackendChoice::TimingOnly, builders: 3, ..Default::default() }
     }
 
     /// Small feature dims keep the fixed-point matmuls test-sized.
@@ -601,8 +601,7 @@ mod tests {
 
     fn fixed_cfg(shards: usize) -> ServeConfig {
         ServeConfig {
-            numerics: false,
-            fixed_numerics: true,
+            backend: BackendChoice::Fixed,
             shards,
             builders: 3,
             model_cfg: small_mc(),
@@ -736,7 +735,12 @@ mod tests {
 
     #[test]
     fn single_builder_still_works() {
-        let cfg = ServeConfig { numerics: false, builders: 1, built_depth: 1, ..Default::default() };
+        let cfg = ServeConfig {
+            backend: BackendChoice::TimingOnly,
+            builders: 1,
+            built_depth: 1,
+            ..Default::default()
+        };
         let coord = Coordinator::start(graph(), 5, cfg).unwrap();
         let targets: Vec<u32> = (0..32).collect();
         let (accel, _, _) = run_workload(&coord, GnnModel::Gin, &targets).unwrap();

@@ -26,6 +26,11 @@
 //!   TPU+, Graphicionado-like; Sec. VIII-F) performance models.
 //! * [`runtime`] — PJRT executor loading the AOT-compiled JAX/Pallas HLO
 //!   artifacts; Python never runs on the request path.
+//! * [`backend`] — the pluggable execution layer: the `NumericsBackend`
+//!   trait (prepare = per-shard weight residency, execute = one
+//!   nodeflow → tagged embeddings) with fixed-point, PJRT (one client
+//!   per shard), reference, and timing-only engines behind a
+//!   thread-crossing `BackendFactory`.
 //! * [`coordinator`] — the low-latency serving pipeline: bounded request
 //!   queue, parallel nodeflow-builder pool, sharded executor pool, batched
 //!   multi-target requests, and latency metrics (p50/p99).
@@ -35,6 +40,7 @@
 //!   rate × shard sweep behind `grip serve-bench`.
 //! * [`repro`] — one generator per paper table and figure.
 
+pub mod backend;
 pub mod baseline;
 pub mod benchutil;
 pub mod config;

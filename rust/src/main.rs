@@ -12,6 +12,7 @@
 //! (Hand-rolled argument parsing: the build environment is offline and
 //! the vendored crate set has no clap.)
 
+use grip::backend::{BackendChoice, BACKEND_NAME_HELP};
 use grip::config::{GripConfig, ModelConfig};
 use grip::coordinator::{run_workload, Coordinator, ServeConfig};
 use grip::graph::Dataset;
@@ -30,18 +31,21 @@ fn usage() -> ! {
            repro   --exp <table1|table2|table3|table4|fig2|fig9a|fig9b|fig10a..d|fig11a|fig11b|fig12|fig13a|fig13b|all>\n\
                    [--scale S=0.01] [--targets N=128] [--seed K=17]\n\
            serve   [--model M] [--model-spec FILE.json] [--dataset yt|lj|po|rd] [--requests N=256]\n\
-                   [--scale S=0.01] [--no-numerics]\n\
+                   [--scale S=0.01] [--backend B] [--no-numerics]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
                    [--no-batching] [--bursty] [--paper-dims] [--model-spec FILE.json]\n\
-                   [--seed K=17] [--out PATH]\n\
+                   [--backend B=fixed] [--seed K=17] [--out PATH]\n\
            sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
            verify\n\
            info\n\
          \n\
          --model M accepts: {MODEL_NAME_HELP}\n\
          --model-spec loads a custom model description (JSON schema: examples/MODEL_SPEC.md);\n\
-           serving a spec uses the Q4.12 fixed-point numeric path (no AOT artifact exists for it)"
+           by default a spec serves on the Q4.12 fixed-point path (no AOT artifact exists for it)\n\
+         --backend B selects the per-shard execution engine: {BACKEND_NAME_HELP}\n\
+           (contract: examples/BACKENDS.md; serve defaults to pjrt for presets, fixed for specs;\n\
+           --no-numerics is the legacy spelling of --backend timing)"
     );
     std::process::exit(2);
 }
@@ -116,6 +120,25 @@ impl Args {
         Ok(Some(spec))
     }
 
+    /// Parse `--backend`, if given (`--no-numerics` remains as the
+    /// legacy spelling of `--backend timing` and must not conflict).
+    fn backend(&self) -> anyhow::Result<Option<BackendChoice>> {
+        let Some(name) = self.get("backend") else {
+            return Ok(if self.has("no-numerics") {
+                Some(BackendChoice::TimingOnly)
+            } else {
+                None
+            });
+        };
+        anyhow::ensure!(
+            !self.has("no-numerics"),
+            "--backend and --no-numerics are mutually exclusive"
+        );
+        BackendChoice::from_name(name).map(Some).ok_or_else(|| {
+            anyhow::anyhow!("unknown backend {name:?}; accepted: {BACKEND_NAME_HELP}")
+        })
+    }
+
     fn dataset(&self) -> Dataset {
         self.get("dataset")
             .map(|s| Dataset::from_name(s).unwrap_or_else(|| usage()))
@@ -162,22 +185,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dataset = args.dataset();
     let n = args.get_usize("requests", 256);
     let scale = args.get_f64("scale", 0.01);
-    let numerics = !args.has("no-numerics");
+    // Default engine: PJRT float for presets; a spec-defined model has
+    // no AOT artifact yet, so it defaults to the Q4.12 fixed-point
+    // path. `--backend` overrides either.
+    let backend = args.backend()?.unwrap_or(if spec.is_some() {
+        BackendChoice::Fixed
+    } else {
+        BackendChoice::Pjrt
+    });
 
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, 17);
     let num_v = graph.num_vertices();
-    // A spec-defined model has no AOT artifact: serve it on the Q4.12
-    // fixed-point numeric path instead of PJRT (--no-numerics still
-    // downgrades to timing-only).
-    let cfg = match &spec {
-        Some(s) => ServeConfig {
-            numerics: false,
-            fixed_numerics: numerics,
-            custom_specs: vec![s.clone()],
-            ..Default::default()
-        },
-        None => ServeConfig { numerics, ..Default::default() },
+    let cfg = ServeConfig {
+        backend,
+        custom_specs: spec.iter().cloned().collect(),
+        ..Default::default()
     };
     let coord = Coordinator::start(graph, 17, cfg)?;
     let (key, model_name) = match &spec {
@@ -216,6 +239,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         host.p99()
     );
     println!("throughput: {:.0} req/s (host wall clock)", n as f64 / wall);
+    // Per-shard backend status: construction failures no longer hide
+    // in stderr — they are part of the serving stats.
+    let stats = coord.serve_stats();
+    println!(
+        "backend: requested {backend}, per-shard [{}]{}",
+        stats.shard_backends.join(", "),
+        if stats.backend_fallbacks > 0 {
+            format!(" — {} shard(s) fell back to timing-only", stats.backend_fallbacks)
+        } else {
+            String::new()
+        }
+    );
     if let Some(r) = responses.first() {
         if !r.embedding.is_empty() {
             let norm: f32 = r.embedding.iter().map(|x| x * x).sum::<f32>().sqrt();
@@ -242,6 +277,10 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     let requests = args.get_usize("requests", 160);
     let seed = args.get_usize("seed", 17) as u64;
     let slo_us = args.get_f64("slo-us", 5_000.0);
+    // Fixed-point numerics by default; `--backend pjrt` sweeps one
+    // PJRT client per shard (shards degrade to counted timing-only
+    // fallbacks when the runtime is unavailable).
+    let backend = args.backend()?.unwrap_or(BackendChoice::Fixed);
     let rates = parse_list(args.get("rates").unwrap_or("25,50,100"))?;
     let shard_counts: Vec<usize> = parse_list(args.get("shards").unwrap_or("1,4"))?
         .into_iter()
@@ -278,6 +317,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         mix,
         model_cfg,
         custom_specs,
+        backend,
         batch: if args.has("no-batching") {
             None
         } else {
@@ -288,7 +328,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     };
 
     println!(
-        "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts ==",
+        "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts, \
+         backend {backend} ==",
         dataset,
         requests,
         rates.len(),
@@ -310,12 +351,18 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     for (label, r) in &points {
         println!(
             "{label:<32} offered {:>7.0} rps | e2e p50 {:>9.0} µs p99 {:>9.0} µs | \
-             cache hit {:>5.1}% (sim {:>5.1}%)",
+             cache hit {:>5.1}% (sim {:>5.1}%) | backends [{}]{}",
             r.offered_rps,
             r.e2e.p50(),
             r.e2e.p99(),
             r.stats.cache_hit_rate * 100.0,
-            r.stats.sim_feature_hit_rate * 100.0
+            r.stats.sim_feature_hit_rate * 100.0,
+            r.stats.shard_backends.join(", "),
+            if r.stats.backend_fallbacks > 0 {
+                format!(" ({} fallback(s))", r.stats.backend_fallbacks)
+            } else {
+                String::new()
+            }
         );
     }
     let sections: Vec<(&str, Vec<(&str, f64)>)> =

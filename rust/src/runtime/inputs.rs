@@ -168,7 +168,7 @@ pub fn build_dynamic_args_into(
     plan: &ModelPlan,
     artifact: &ModelArtifact,
     nf: &Nodeflow,
-    features: &mut impl FeatureSource,
+    features: &mut dyn FeatureSource,
     scratch: &mut MarshalScratch,
 ) -> Result<()> {
     ensure!(nf.layers.len() == 2, "AOT artifacts are 2-layer");

@@ -55,9 +55,10 @@ impl PadShapes {
     /// (worst case: every sample hits a distinct vertex). The SLO
     /// batcher's `max_batch` is clamped to this on the PJRT path, so a
     /// coalesced batch can never silently degrade to a `timing_only`
-    /// reply — with the paper's batch-1 artifact padding this is 1, and
-    /// it grows automatically when artifacts are recompiled with larger
-    /// padded shapes.
+    /// reply — the original batch-1 artifact padding capped this at 1;
+    /// the PR-4 pads (`python/compile/model.py`: u1 2304, v1/u2 96,
+    /// v2 8) admit 8 coalesced targets at paper sampling, and the cap
+    /// keeps tracking whatever shapes artifacts are recompiled with.
     pub fn max_coalesced_targets(&self, mc: &crate::config::ModelConfig) -> usize {
         let fan1 = mc.sample1 + 1;
         let fan2 = mc.sample2 + 1;
@@ -212,8 +213,12 @@ mod tests {
     fn padded_batch_cap() {
         use crate::config::ModelConfig;
         let pad = PadShapes { u1: 288, v1: 16, u2: 16, v2: 8, f_in: 602, f_hid: 512, f_out: 256 };
-        // Paper sampling (25/10): batch-1 padding caps coalescing at 1.
+        // Paper sampling (25/10): the old batch-1 padding capped
+        // coalescing at 1.
         assert_eq!(pad.max_coalesced_targets(&ModelConfig::paper()), 1);
+        // The PR-4 aot.py pads admit 8-target batches at paper sampling.
+        let grown = PadShapes { u1: 2304, v1: 96, u2: 96, v2: 8, ..pad };
+        assert_eq!(grown.max_coalesced_targets(&ModelConfig::paper()), 8);
         // 4x larger padding at light sampling admits real batches.
         let big = PadShapes { u1: 1200, v1: 120, u2: 120, v2: 32, ..pad };
         let light = ModelConfig { sample1: 4, sample2: 3, ..ModelConfig::paper() };

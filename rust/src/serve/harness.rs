@@ -11,6 +11,7 @@
 use super::batcher::BatchConfig;
 use super::loadgen::{generate_arrivals, ArrivalProcess, ModelMix};
 use super::shards::ServeStats;
+use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
 use crate::coordinator::{
     Coordinator, InferenceRequest, InferenceResponse, LatencyStats, ServeConfig,
@@ -26,8 +27,14 @@ pub struct OpenLoopConfig {
     pub process: ArrivalProcess,
     pub requests: usize,
     pub mix: ModelMix,
-    /// Executor shards (fixed-point serving path).
+    /// Executor shards.
     pub shards: usize,
+    /// Execution engine per shard. Defaults to the Q4.12 fixed-point
+    /// path so rate × shard sweeps measure real numerics; `--backend
+    /// pjrt` runs one PJRT client per shard instead (shards that fail
+    /// to construct it serve timing-only and are counted in
+    /// `backend_fallbacks`).
+    pub backend: BackendChoice,
     /// Optional SLO-aware dynamic batching policy.
     pub batch: Option<BatchConfig>,
     pub grip: GripConfig,
@@ -47,6 +54,7 @@ impl Default for OpenLoopConfig {
             requests: 200,
             mix: ModelMix::default(),
             shards: 1,
+            backend: BackendChoice::Fixed,
             batch: None,
             grip: GripConfig::paper(),
             model_cfg: ModelConfig::paper(),
@@ -95,6 +103,7 @@ impl OpenLoopReport {
             ("sim_feature_hit_rate", self.stats.sim_feature_hit_rate),
             ("jobs", self.stats.jobs as f64),
             ("timing_only_jobs", self.stats.timing_only_jobs as f64),
+            ("backend_fallbacks", self.stats.backend_fallbacks as f64),
         ]
     }
 }
@@ -116,15 +125,15 @@ fn pace_until(origin: &Instant, due: Duration) {
     }
 }
 
-/// Run one open-loop measurement over (a clone of) `graph`. Serving
-/// uses the fixed-point numeric path so the shard sweep is meaningful
-/// (PJRT would pin execution to shard 0).
+/// Run one open-loop measurement over (a clone of) `graph` with
+/// `cfg.backend` numerics on every shard (fixed-point by default; the
+/// per-shard PJRT engine sweeps too, now that nothing pins it to one
+/// shard).
 pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
     let arrivals =
         generate_arrivals(cfg.process, &cfg.mix, cfg.requests, graph.num_vertices(), cfg.seed);
     let serve = ServeConfig {
-        numerics: false,
-        fixed_numerics: true,
+        backend: cfg.backend,
         shards: cfg.shards,
         batch: cfg.batch,
         grip: cfg.grip.clone(),

@@ -25,8 +25,10 @@
 //!  nodeflow-builder pool (PR 1): parallel sampling + CSR build
 //!      │  built nodeflows
 //!      ▼
-//!  shards — executor pool: K fixed-point executors, each with its
-//!  own PlanArgs + ExecScratch; PJRT pinned to shard 0
+//!  shards — executor pool: K shards, each owning its own
+//!  NumericsBackend (crate::backend) built inside the shard
+//!  thread — fixed-point, per-shard PJRT clients, reference, or
+//!  timing-only — plus that backend's prepared per-model state
 //!      │         │
 //!      │         ▼
 //!      │  feature_cache — one shared degree-aware clock cache of
@@ -43,7 +45,9 @@
 //!   arrival processes, weighted model mixes.
 //! * [`batcher`] — the batch-by-deadline state machine (pure virtual
 //!   time; property-tested in `tests/serve_props.rs`).
-//! * [`shards`] — the executor pool and its serving statistics.
+//! * [`shards`] — the executor pool (one [`crate::backend::NumericsBackend`]
+//!   per shard, backend fallbacks surfaced in [`ServeStats`]) and its
+//!   serving statistics.
 //! * [`feature_cache`] — the shared degree-aware clock cache.
 //! * [`harness`] — open-loop measurement and the rate × shard sweep
 //!   behind `grip serve-bench` and `cargo bench --bench bench_exec`.

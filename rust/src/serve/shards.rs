@@ -1,36 +1,43 @@
-//! Sharded executor pool: N fixed-point executors behind one work
-//! queue, fronted by the shared degree-aware [`FeatureCache`].
+//! Sharded executor pool: N executor shards behind one work queue,
+//! fronted by the shared degree-aware [`FeatureCache`].
 //!
 //! PR 1 parallelized nodeflow *builds* but left execution on a single
-//! thread (ROADMAP open item). This pool closes that gap for the
-//! fixed-point datapath: each shard owns its own compiled
-//! [`ModelPlan`]s, resolved [`PlanArgs`] (weights pre-quantized once)
-//! and [`ExecScratch`] arena, so shards share **no mutable state**
-//! except the feature cache — execution scales across cores with one
-//! mutex probe per feature row.
+//! thread; PR 2 sharded the fixed-point datapath; PR 4 made the
+//! engine itself pluggable. Each shard owns a boxed
+//! [`NumericsBackend`] built **inside its own thread** by the
+//! [`BackendFactory`], plus that backend's prepared per-model state
+//! ([`PreparedModel`]: quantized weights, device-resident PJRT
+//! buffers) and a [`BackendScratch`] arena — so shards share **no
+//! mutable state** except the feature cache, and execution scales
+//! across cores for *every* engine. In particular the PJRT float path
+//! is no longer pinned to shard 0: every shard constructs its own
+//! (non-`Send`) client with its own device weights.
 //!
-//! The PJRT float path stays **pinned to shard 0**: the PJRT client is
-//! not `Send`, and replies must not depend on which shard served them,
-//! so when PJRT numerics are requested the pool runs single-shard
-//! (exactly the PR-1 pipeline, plus the marshalling arena and the
-//! explicit `timing_only` fallback). Scale-out applies to the Q4.12
-//! fixed-point serving mode, whose output is bit-identical for any
-//! shard count (`tests/serve_props.rs` pins this): per-request results
-//! depend only on vertex ids — sampled nodeflow, synthesized features,
-//! and the deterministic serving weights — never on scheduling.
+//! A shard whose configured backend fails to construct or prepare
+//! (PJRT runtime stubbed out, artifact manifest missing) falls back to
+//! timing-only serving; the failure is counted in
+//! [`ServeStats::backend_fallbacks`] and the per-shard status string
+//! in [`ServeStats::shard_backends`] carries the error — it no longer
+//! vanishes into stderr. (A single broken *model* inside an otherwise
+//! healthy backend stays per-model: its requests get error replies
+//! while sibling models keep serving.)
+//!
+//! Replies must not depend on which shard served them: every backend's
+//! `execute` is deterministic in (prepared state, nodeflow, features),
+//! per-request results depend only on vertex ids — sampled nodeflow,
+//! synthesized features, and the deterministic serving weights — never
+//! on scheduling. `tests/serve_props.rs` and
+//! `tests/backend_conformance.rs` pin this for any shard count.
 
+use crate::backend::{
+    BackendChoice, BackendFactory, BackendScratch, NumericsBackend, PreparedModel,
+};
 use crate::config::{GripConfig, ModelConfig};
 use crate::coordinator::InferenceResponse;
 use crate::graph::CsrGraph;
-use crate::greta::{
-    exec_test_args, execute_model_into, ExecArgs, ExecScratch, ModelKey, ModelLibrary, ModelPlan,
-    PlanArgs, SelfScale, ALL_MODELS,
-};
+use crate::greta::{exec_test_args, ExecArgs, ModelKey, ModelLibrary, ModelPlan, SelfScale};
 use crate::nodeflow::Nodeflow;
-use crate::runtime::{
-    build_dynamic_args_into, fill_feature_row, fits_padding, Executor, FeatureSource, Manifest,
-    MarshalScratch,
-};
+use crate::runtime::{fill_feature_row, FeatureSource};
 use crate::serve::{DegreeClasses, FeatureCache};
 use crate::sim::simulate;
 use anyhow::{anyhow, Result};
@@ -65,11 +72,10 @@ pub struct ShardSpec {
     pub shards: usize,
     pub grip: GripConfig,
     pub model_cfg: ModelConfig,
-    /// Attempt to load the PJRT executor (pins the pool to one shard).
-    pub pjrt: bool,
-    /// Serve Q4.12 fixed-point embeddings from every shard when PJRT
-    /// numerics are off/unavailable (otherwise replies are timing-only).
-    pub fixed_numerics: bool,
+    /// Execution engine every shard runs (the [`BackendFactory`] is
+    /// invoked once per shard, inside the shard thread). Replaces the
+    /// old `pjrt`/`fixed_numerics` bool pair.
+    pub backend: BackendChoice,
     /// Shared feature-cache capacity in rows (0 disables caching).
     pub cache_rows: usize,
     /// Seed of the deterministic fixed-point serving weights.
@@ -82,8 +88,7 @@ impl Default for ShardSpec {
             shards: 1,
             grip: GripConfig::paper(),
             model_cfg: ModelConfig::paper(),
-            pjrt: false,
-            fixed_numerics: false,
+            backend: BackendChoice::TimingOnly,
             cache_rows: 4096,
             weight_seed: 0x5EED_5E4E,
         }
@@ -96,12 +101,13 @@ impl Default for ShardSpec {
 struct PoolCounters {
     jobs: AtomicU64,
     timing_only: AtomicU64,
+    backend_fallbacks: AtomicU64,
     sim_rows_touched: AtomicU64,
     sim_rows_loaded: AtomicU64,
 }
 
 /// A point-in-time view of the pool's serving statistics.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     /// Executor shards actually running.
     pub shards: usize,
@@ -110,6 +116,13 @@ pub struct ServeStats {
     /// Jobs that produced no numeric embedding (see
     /// `InferenceResponse::timing_only`).
     pub timing_only_jobs: u64,
+    /// Shards whose configured backend failed to construct/prepare and
+    /// fell back to timing-only serving (the old stderr-only "PJRT
+    /// unavailable" signal, now first-class).
+    pub backend_fallbacks: u64,
+    /// Per-shard backend status: the engine name, or
+    /// `timing-only (fallback: <error>)` after a fallback.
+    pub shard_backends: Vec<String>,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// Host-side feature-cache hit fraction.
@@ -126,6 +139,7 @@ pub struct ShardPool {
     threads: Vec<std::thread::JoinHandle<()>>,
     cache: Arc<FeatureCache>,
     counters: Arc<PoolCounters>,
+    status: Arc<Mutex<Vec<String>>>,
     shards: usize,
 }
 
@@ -151,7 +165,10 @@ pub fn fixed_serving_args(plan: &ModelPlan, seed: u64) -> ExecArgs {
 }
 
 /// [`FeatureSource`] adapter: serve rows from the shared cache, using
-/// the serving graph's out-degree as the admission weight.
+/// the serving graph's out-degree as the admission weight. Rows whose
+/// width differs from the cache's configured `f_in` (a custom spec
+/// with non-default dims) bypass the cache and synthesize directly —
+/// the cache stores a single fixed row width.
 pub struct CachedFeatures<'a> {
     pub cache: &'a FeatureCache,
     pub graph: &'a CsrGraph,
@@ -159,20 +176,25 @@ pub struct CachedFeatures<'a> {
 
 impl FeatureSource for CachedFeatures<'_> {
     fn fill_row(&mut self, v: u32, dst: &mut [f32]) {
-        self.cache.copy_row(v, self.graph.degree(v), dst);
+        if dst.len() == self.cache.f_in() {
+            self.cache.copy_row(v, self.graph.degree(v), dst);
+        } else {
+            fill_feature_row(v, dst);
+        }
     }
 }
 
 impl ShardPool {
-    /// Spawn the pool over `rx`, serving the models in `library`. When
-    /// `spec.pjrt` is set the pool is forced to a single shard (shard 0
-    /// owns the non-Send PJRT client); otherwise `spec.shards`
-    /// fixed-point shards share the queue. The shared feature cache's
-    /// degree classes are calibrated from the serving graph's degree
-    /// quantiles ([`DegreeClasses::from_graph`]). `inflight` is
-    /// decremented once per completed job — the gauge the coordinator's
-    /// batcher uses for idle-aware early dispatch (the sender
-    /// increments it on enqueue).
+    /// Spawn the pool over `rx`, serving the models in `library`.
+    /// `spec.shards` shards share the queue regardless of backend —
+    /// each shard builds its own engine (and, for PJRT, its own
+    /// non-`Send` client + device-resident weights) inside its thread,
+    /// so no engine pins the pool to one shard anymore. The shared
+    /// feature cache's degree classes are calibrated from the serving
+    /// graph's degree quantiles ([`DegreeClasses::from_graph`]).
+    /// `inflight` is decremented once per completed job — the gauge the
+    /// coordinator's batcher uses for idle-aware early dispatch (the
+    /// sender increments it on enqueue).
     pub fn start(
         spec: &ShardSpec,
         library: Arc<ModelLibrary>,
@@ -180,7 +202,7 @@ impl ShardPool {
         rx: mpsc::Receiver<ExecJob>,
         inflight: Arc<AtomicU64>,
     ) -> Result<ShardPool> {
-        let shards = if spec.pjrt { 1 } else { spec.shards.max(1) };
+        let shards = spec.shards.max(1);
         // Quantile calibration walks + sorts every vertex degree — skip
         // it when caching is disabled (cache_rows 0 never admits).
         let classes = if spec.cache_rows > 0 {
@@ -191,7 +213,13 @@ impl ShardPool {
         let cache =
             Arc::new(FeatureCache::with_classes(spec.cache_rows, spec.model_cfg.f_in, classes));
         let counters = Arc::new(PoolCounters::default());
+        let status = Arc::new(Mutex::new(vec![String::from("starting"); shards]));
         let rx = Arc::new(Mutex::new(rx));
+        // Shards signal here once their backend is built and every
+        // model prepared; `start` blocks on all of them so the request
+        // path never races engine construction and `stats()` always
+        // reflects the shards' real backends.
+        let (init_tx, init_rx) = mpsc::channel::<()>();
         let mut threads = Vec::with_capacity(shards);
         for i in 0..shards {
             let spec = spec.clone();
@@ -199,17 +227,28 @@ impl ShardPool {
             let graph = graph.clone();
             let cache = cache.clone();
             let counters = counters.clone();
+            let status = status.clone();
             let rx = rx.clone();
             let inflight = inflight.clone();
+            let init_tx = init_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("grip-shard-{i}"))
                 .spawn(move || {
-                    shard_loop(i, &spec, &library, &graph, &cache, &counters, &rx, &inflight)
+                    shard_loop(
+                        i, &spec, &library, &graph, &cache, &counters, &status, init_tx, &rx,
+                        &inflight,
+                    )
                 })
                 .map_err(|e| anyhow!("spawning shard {i}: {e}"))?;
             threads.push(handle);
         }
-        Ok(ShardPool { threads, cache, counters, shards })
+        drop(init_tx);
+        for _ in 0..shards {
+            // Err only if a shard panicked during init; the join in
+            // Drop will surface that — don't hang here.
+            let _ = init_rx.recv();
+        }
+        Ok(ShardPool { threads, cache, counters, status, shards })
     }
 
     pub fn shards(&self) -> usize {
@@ -219,10 +258,14 @@ impl ShardPool {
     pub fn stats(&self) -> ServeStats {
         let touched = self.counters.sim_rows_touched.load(Ordering::Relaxed);
         let loaded = self.counters.sim_rows_loaded.load(Ordering::Relaxed);
+        let shard_backends =
+            self.status.lock().map(|s| s.clone()).unwrap_or_default();
         ServeStats {
             shards: self.shards,
             jobs: self.counters.jobs.load(Ordering::Relaxed),
             timing_only_jobs: self.counters.timing_only.load(Ordering::Relaxed),
+            backend_fallbacks: self.counters.backend_fallbacks.load(Ordering::Relaxed),
+            shard_backends,
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
             cache_hit_rate: self.cache.hit_rate(),
@@ -246,9 +289,64 @@ impl Drop for ShardPool {
     }
 }
 
-/// One shard: resolve fixed-point weights for every library model once,
-/// then drain the shared queue. Shard 0 additionally owns the PJRT
-/// executor when requested.
+/// Prepare every library model on `backend` (per-shard weight
+/// residency). The serving weights are derived deterministically from
+/// each plan + the pool seed, so prepared state is identical across
+/// shards.
+fn prepare_all(
+    backend: &mut dyn NumericsBackend,
+    library: &ModelLibrary,
+    weight_seed: u64,
+) -> Result<Vec<PreparedModel>> {
+    library
+        .keys()
+        .map(|k| {
+            let plan = library.plan(k);
+            let args = fixed_serving_args(plan, weight_seed);
+            backend.prepare(plan, &args)
+        })
+        .collect()
+}
+
+/// Build + prepare this shard's backend, degrading to the factory's
+/// timing-only fallback on failure. Returns the engine, its prepared
+/// models, and the status string for [`ServeStats::shard_backends`];
+/// `fell_back` drives the `backend_fallbacks` counter.
+struct ShardEngine {
+    backend: Box<dyn NumericsBackend>,
+    prepared: Vec<PreparedModel>,
+    status: String,
+    fell_back: bool,
+}
+
+fn init_engine(shard: usize, spec: &ShardSpec, library: &ModelLibrary) -> ShardEngine {
+    let factory = BackendFactory::new(spec.backend);
+    let attempt = factory.build(shard).and_then(|mut backend| {
+        let prepared = prepare_all(backend.as_mut(), library, spec.weight_seed)?;
+        Ok((backend, prepared))
+    });
+    match attempt {
+        Ok((backend, prepared)) => {
+            let status = backend.name().to_string();
+            ShardEngine { backend, prepared, status, fell_back: false }
+        }
+        Err(e) => {
+            let mut backend = factory.fallback();
+            let prepared = prepare_all(backend.as_mut(), library, spec.weight_seed)
+                .expect("timing-only prepare is infallible");
+            ShardEngine {
+                backend,
+                prepared,
+                status: format!("timing-only (fallback: {e})"),
+                fell_back: true,
+            }
+        }
+    }
+}
+
+/// One shard: build its backend *in this thread* (non-`Send` engines
+/// never cross threads), prepare every library model once, signal
+/// readiness on `init_tx`, then drain the shared queue.
 #[allow(clippy::too_many_arguments)]
 fn shard_loop(
     shard: usize,
@@ -257,33 +355,23 @@ fn shard_loop(
     graph: &CsrGraph,
     cache: &FeatureCache,
     counters: &PoolCounters,
+    status: &Mutex<Vec<String>>,
+    init_tx: mpsc::Sender<()>,
     rx: &Mutex<mpsc::Receiver<ExecJob>>,
     inflight: &AtomicU64,
 ) {
-    let pjrt = if spec.pjrt && shard == 0 {
-        match Executor::load(&Manifest::default_dir()) {
-            Ok(e) => Some(e),
-            Err(e) => {
-                eprintln!("shard 0: PJRT unavailable ({e}); serving without float numerics");
-                None
-            }
-        }
-    } else {
-        None
-    };
-    // One resolved PlanArgs per library model, indexed by ModelKey.
-    let pargs: Vec<PlanArgs> = library
-        .keys()
-        .map(|k| {
-            let plan = library.plan(k);
-            let args = fixed_serving_args(plan, spec.weight_seed);
-            PlanArgs::resolve(plan, &args).expect("serving weights match their own plan")
-        })
-        .collect();
-    let mut scratch = ExecScratch::for_config(&spec.grip);
-    let mut marshal = MarshalScratch::new();
-    let mut h: Vec<f32> = Vec::new();
-    let mut emb: Vec<f32> = Vec::new();
+    let mut engine = init_engine(shard, spec, library);
+    if engine.fell_back {
+        counters.backend_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Ok(mut s) = status.lock() {
+        s[shard] = engine.status.clone();
+    }
+    let mut scratch = BackendScratch::for_config(&spec.grip);
+    // Init complete: unblock `ShardPool::start` (dropping the sender
+    // right away so a sibling shard's panic can never wedge it).
+    let _ = init_tx.send(());
+    drop(init_tx);
 
     loop {
         // Hold the queue lock only while waiting; execution runs
@@ -304,12 +392,9 @@ fn shard_loop(
             graph,
             cache,
             counters,
-            pjrt.as_ref(),
-            &pargs,
+            engine.backend.as_mut(),
+            &engine.prepared,
             &mut scratch,
-            &mut marshal,
-            &mut h,
-            &mut emb,
             job,
         );
         // Replies are out: this job no longer occupies the pipeline.
@@ -317,8 +402,7 @@ fn shard_loop(
     }
 }
 
-/// Execute one job and fan replies out to its members. `emb` holds the
-/// job's full embedding (`f_out` values per target, member order).
+/// Execute one job on `backend` and fan replies out to its members.
 #[allow(clippy::too_many_arguments)]
 fn execute_job(
     spec: &ShardSpec,
@@ -326,12 +410,9 @@ fn execute_job(
     graph: &CsrGraph,
     cache: &FeatureCache,
     counters: &PoolCounters,
-    pjrt: Option<&Executor>,
-    pargs: &[PlanArgs],
-    scratch: &mut ExecScratch,
-    marshal: &mut MarshalScratch,
-    h: &mut Vec<f32>,
-    emb: &mut Vec<f32>,
+    backend: &mut dyn NumericsBackend,
+    prepared: &[PreparedModel],
+    scratch: &mut BackendScratch,
     job: ExecJob,
 ) {
     let ExecJob { model, nf, members, t_dequeue } = job;
@@ -349,79 +430,23 @@ fn execute_job(
         .sim_rows_loaded
         .fetch_add(sim.counters.feature_rows_loaded, Ordering::Relaxed);
 
-    // 2. Numerics: PJRT float path (shard 0), else the fixed-point
-    //    datapath, else timing-only. On success `emb` holds
-    //    f_out * nf.targets.len() values.
-    let outcome: Result<(usize, bool), String> = if let Some(exec) = pjrt {
-        match exec.model(&plan.name) {
-            Ok(lm) if fits_padding(&lm.artifact, &nf) => {
-                let mut src = CachedFeatures { cache, graph };
-                build_dynamic_args_into(plan, &lm.artifact, &nf, &mut src, marshal)
-                    .map_err(|e| e.to_string())
-                    .and_then(|_| {
-                        exec.run_prepared(&plan.name, marshal.args()).map_err(|e| e.to_string())
-                    })
-                    .map(|out| {
-                        let f_out = *lm.artifact.output_shape.last().unwrap_or(&1);
-                        emb.clear();
-                        emb.extend_from_slice(&out[..f_out * nf.targets.len()]);
-                        (f_out, false)
-                    })
-            }
-            Ok(_) => {
-                // The (batched) nodeflow exceeds the AOT padding:
-                // degrade to an explicitly-flagged timing-only reply.
-                emb.clear();
-                Ok((0, true))
-            }
-            Err(_) if model.index() >= ALL_MODELS.len() => {
-                // Custom specs have no AOT artifact — an expected
-                // timing-only degrade, not an error.
-                emb.clear();
-                Ok((0, true))
-            }
-            // A *preset* artifact that fails to load is a broken
-            // deployment: surface it to the caller instead of quietly
-            // answering timing-only.
-            Err(e) => Err(e.to_string()),
-        }
-    } else if spec.fixed_numerics {
-        // The plan's own input width governs the feature rows; the
-        // shared cache only serves rows of its configured width, so
-        // specs with non-default dims synthesize rows directly.
-        let in_dim = plan.layers[0].in_dim;
-        let l0 = &nf.layers[0];
-        h.clear();
-        if in_dim == cache.f_in() {
-            h.reserve(l0.num_inputs() * in_dim);
-            for &v in &l0.inputs {
-                cache.append_row(v, graph.degree(v), h);
-            }
-        } else {
-            h.resize(l0.num_inputs() * in_dim, 0f32);
-            for (i, &v) in l0.inputs.iter().enumerate() {
-                fill_feature_row(v, &mut h[i * in_dim..(i + 1) * in_dim]);
-            }
-        }
-        let f_out = plan.layers.last().expect("validated plans have layers").out_dim;
-        match execute_model_into(plan, &nf, h, &pargs[model.index()], scratch, emb) {
-            Ok(()) => Ok((f_out, false)),
-            Err(e) => Err(e.to_string()),
-        }
-    } else {
-        emb.clear();
-        Ok((0, true))
-    };
+    // 2. Numerics: one backend call, whatever the engine. The shared
+    //    cache fronts feature rows for every backend via the
+    //    width-checking adapter.
+    let mut features = CachedFeatures { cache, graph };
+    let outcome = backend.execute(&prepared[model.index()], &nf, &mut features, scratch);
 
     // 3. Fan out per-member replies (a coalesced batch shares one
     //    nodeflow, one simulated pass, and one embedding buffer).
     match outcome {
         Err(e) => {
+            let e = e.to_string();
             for m in members {
                 let _ = m.reply.send(Err(e.clone()));
             }
         }
-        Ok((f_out, timing_only)) => {
+        Ok(out) => {
+            let timing_only = !out.numerics.is_numeric();
             if timing_only {
                 counters.timing_only.fetch_add(1, Ordering::Relaxed);
             }
@@ -432,7 +457,7 @@ fn execute_job(
                 let embedding = if timing_only {
                     Vec::new()
                 } else {
-                    emb[row * f_out..(row + m.n_targets) * f_out].to_vec()
+                    out.embeddings[row * out.f_out..(row + m.n_targets) * out.f_out].to_vec()
                 };
                 row += m.n_targets;
                 let resp = InferenceResponse {
@@ -453,6 +478,7 @@ fn execute_job(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{FixedPointBackend, TimingOnlyBackend};
     use crate::graph::{generate, GeneratorParams};
     use crate::greta::GnnModel;
     use crate::nodeflow::Sampler;
@@ -500,16 +526,15 @@ mod tests {
         rrx
     }
 
-    fn run_pool(shards: usize, fixed: bool, ids: &[u32]) -> Vec<InferenceResponse> {
+    fn run_pool_stats(
+        shards: usize,
+        backend: BackendChoice,
+        ids: &[u32],
+    ) -> (Vec<InferenceResponse>, ServeStats) {
         let g = graph();
         let mc = small_mc();
-        let spec = ShardSpec {
-            shards,
-            model_cfg: mc,
-            fixed_numerics: fixed,
-            cache_rows: 256,
-            ..Default::default()
-        };
+        let spec =
+            ShardSpec { shards, model_cfg: mc, backend, cache_rows: 256, ..Default::default() };
         let (tx, rx) = mpsc::channel();
         let library = Arc::new(ModelLibrary::presets(&mc));
         let pool = ShardPool::start(&spec, library, g.clone(), rx, gauge(ids.len())).unwrap();
@@ -521,13 +546,18 @@ mod tests {
         drop(tx);
         let out: Vec<InferenceResponse> =
             replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        let stats = pool.stats();
         drop(pool);
-        out
+        (out, stats)
+    }
+
+    fn run_pool(shards: usize, backend: BackendChoice, ids: &[u32]) -> Vec<InferenceResponse> {
+        run_pool_stats(shards, backend, ids).0
     }
 
     #[test]
     fn fixed_point_pool_serves_embeddings() {
-        let out = run_pool(2, true, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let out = run_pool(2, BackendChoice::Fixed, &[1, 2, 3, 4, 5, 6, 7, 8]);
         assert_eq!(out.len(), 8);
         for r in &out {
             assert!(!r.timing_only);
@@ -539,8 +569,8 @@ mod tests {
     #[test]
     fn pool_output_independent_of_shard_count() {
         let ids: Vec<u32> = (0..24).map(|i| i * 13 % 2000).collect();
-        let one = run_pool(1, true, &ids);
-        let four = run_pool(4, true, &ids);
+        let one = run_pool(1, BackendChoice::Fixed, &ids);
+        let four = run_pool(4, BackendChoice::Fixed, &ids);
         for (a, b) in one.iter().zip(four.iter()) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.embedding, b.embedding, "id {}", a.id);
@@ -551,38 +581,78 @@ mod tests {
 
     #[test]
     fn without_numerics_replies_are_flagged_timing_only() {
-        let out = run_pool(2, false, &[10, 20]);
+        let (out, stats) = run_pool_stats(2, BackendChoice::TimingOnly, &[10, 20]);
         for r in &out {
             assert!(r.timing_only);
             assert!(r.embedding.is_empty());
             assert!(r.accel_us > 0.0, "timing still served");
         }
+        // An explicitly-requested timing-only engine is not a fallback.
+        assert_eq!(stats.backend_fallbacks, 0);
+        assert_eq!(stats.shard_backends, vec!["timing-only", "timing-only"]);
+    }
+
+    #[test]
+    fn pjrt_pool_runs_every_shard_and_reports_status() {
+        // The acceptance path: `--backend pjrt --shards 4` must run all
+        // 4 shards (no more shard-0 pinning) whatever happens to the
+        // runtime. In default builds the stub executor fails to load,
+        // so every shard reports a counted timing-only fallback instead
+        // of an stderr-only message.
+        let ids: Vec<u32> = (0..12).map(|i| i * 7 % 2000).collect();
+        let (four, stats) = run_pool_stats(4, BackendChoice::Pjrt, &ids);
+        assert_eq!(stats.shards, 4, "PJRT no longer pins the pool to one shard");
+        assert_eq!(stats.shard_backends.len(), 4);
+        if stats.backend_fallbacks > 0 {
+            // Stub executor / no artifacts: all shards fall back, all
+            // replies are tagged, and the status strings say why.
+            assert_eq!(stats.backend_fallbacks, 4);
+            assert!(stats
+                .shard_backends
+                .iter()
+                .all(|s| s.starts_with("timing-only (fallback:")), "{:?}", stats.shard_backends);
+            assert!(four.iter().all(|r| r.timing_only && r.embedding.is_empty()));
+        } else {
+            // Real PJRT runtime + artifacts: every shard serves float.
+            assert!(stats.shard_backends.iter().all(|s| s == "pjrt"));
+        }
+        // Replies are shard-count-independent either way.
+        let (one, _) = run_pool_stats(1, BackendChoice::Pjrt, &ids);
+        for (a, b) in one.iter().zip(four.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.embedding, b.embedding, "id {}", a.id);
+            assert_eq!(a.timing_only, b.timing_only);
+        }
+    }
+
+    #[test]
+    fn reference_pool_matches_fixed_pool() {
+        let ids: Vec<u32> = (0..10).map(|i| i * 191 % 2000).collect();
+        let fixed = run_pool(2, BackendChoice::Fixed, &ids);
+        let reference = run_pool(2, BackendChoice::Reference, &ids);
+        for (a, b) in fixed.iter().zip(reference.iter()) {
+            assert_eq!(a.embedding, b.embedding, "id {}: hot path diverged from reference", a.id);
+        }
     }
 
     #[test]
     fn timing_only_reply_never_leaks_a_previous_jobs_embedding() {
-        // The timing-only fallbacks (numerics disabled, or the PJRT
-        // padding-exceeded degrade — both run `emb.clear(); (0, true)`)
-        // share one embedding buffer with numeric jobs on the same
-        // shard; a stale buffer must never fan out to members.
+        // Timing-only executions share one scratch arena with numeric
+        // jobs on the same shard; a stale embedding buffer must never
+        // fan out to members.
         let g = graph();
         let mc = small_mc();
-        let spec_fx = ShardSpec { model_cfg: mc, fixed_numerics: true, ..Default::default() };
-        let spec_timing = ShardSpec { model_cfg: mc, fixed_numerics: false, ..Default::default() };
+        let spec = ShardSpec { model_cfg: mc, ..Default::default() };
         let library = ModelLibrary::presets(&mc);
-        let pargs: Vec<PlanArgs> = library
-            .keys()
-            .map(|k| {
-                let p = library.plan(k);
-                PlanArgs::resolve(p, &fixed_serving_args(p, spec_fx.weight_seed)).unwrap()
-            })
-            .collect();
+        let mut fixed: Box<dyn NumericsBackend> = Box::new(FixedPointBackend::new());
+        let prepared_fx =
+            prepare_all(fixed.as_mut(), &library, spec.weight_seed).unwrap();
+        let mut timing: Box<dyn NumericsBackend> = Box::new(TimingOnlyBackend);
+        let prepared_t =
+            prepare_all(timing.as_mut(), &library, spec.weight_seed).unwrap();
         let cache = FeatureCache::new(64, mc.f_in);
         let counters = PoolCounters::default();
-        let mut scratch = ExecScratch::new();
-        let mut marshal = MarshalScratch::new();
-        let mut h = Vec::new();
-        let mut emb = Vec::new();
+        let mut scratch = BackendScratch::new();
 
         let mk_job = |id: u64| {
             let nf = Nodeflow::build(&g, &Sampler::new(9), &[7], &mc);
@@ -604,17 +674,17 @@ mod tests {
         // 1. A numeric job fills the shared embedding buffer.
         let (job, rx1) = mk_job(0);
         execute_job(
-            &spec_fx, &library, &g, &cache, &counters, None, &pargs, &mut scratch,
-            &mut marshal, &mut h, &mut emb, job,
+            &spec, &library, &g, &cache, &counters, fixed.as_mut(), &prepared_fx,
+            &mut scratch, job,
         );
         let r1 = rx1.recv().unwrap().unwrap();
         assert!(!r1.timing_only && !r1.embedding.is_empty());
 
-        // 2. A timing-only job reusing the same buffers must reply empty.
+        // 2. A timing-only job reusing the same scratch must reply empty.
         let (job, rx2) = mk_job(1);
         execute_job(
-            &spec_timing, &library, &g, &cache, &counters, None, &pargs, &mut scratch,
-            &mut marshal, &mut h, &mut emb, job,
+            &spec, &library, &g, &cache, &counters, timing.as_mut(), &prepared_t,
+            &mut scratch, job,
         );
         let r2 = rx2.recv().unwrap().unwrap();
         assert!(r2.timing_only, "no numeric path ran");
@@ -628,7 +698,7 @@ mod tests {
         let spec = ShardSpec {
             shards: 2,
             model_cfg: mc,
-            fixed_numerics: true,
+            backend: BackendChoice::Fixed,
             cache_rows: 1024,
             ..Default::default()
         };
@@ -644,6 +714,8 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.jobs, 2);
         assert_eq!(s.timing_only_jobs, 0);
+        assert_eq!(s.backend_fallbacks, 0);
+        assert!(s.shard_backends.iter().all(|b| b == "fixed-q4.12"), "{:?}", s.shard_backends);
         assert!(s.cache_hits > 0, "repeat neighborhood must hit");
         assert!(s.cache_hit_rate > 0.0 && s.cache_hit_rate < 1.0);
         assert!(s.sim_feature_hit_rate >= 0.0);

@@ -161,15 +161,15 @@ fn vertex_tiling_buffer_claim() {
 
 #[test]
 fn serving_coordinator_timing_only_smoke() {
-    // Coordinator end-to-end without PJRT (numerics off): queue,
-    // nodeflow, simulation, metrics.
-    use grip::coordinator::{run_workload, Coordinator, ServeConfig};
+    // Coordinator end-to-end without numerics (timing-only backend):
+    // queue, nodeflow, simulation, metrics.
+    use grip::coordinator::{run_workload, BackendChoice, Coordinator, ServeConfig};
     let g = Dataset::Youtube.generate(0.002, 5);
     let n = g.num_vertices() as u32;
     let coord = Coordinator::start(
         g,
         7,
-        ServeConfig { numerics: false, ..Default::default() },
+        ServeConfig { backend: BackendChoice::TimingOnly, ..Default::default() },
     )
     .unwrap();
     let targets: Vec<u32> = (0..16).map(|i| (i * 31) % n).collect();

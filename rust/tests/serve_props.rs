@@ -9,6 +9,7 @@
 //!   path — and to a from-scratch single-threaded execution — for the
 //!   same request set.
 
+use grip::backend::BackendChoice;
 use grip::config::ModelConfig;
 use grip::coordinator::{Coordinator, InferenceRequest, InferenceResponse, ServeConfig};
 use grip::graph::{generate, CsrGraph, GeneratorParams};
@@ -126,8 +127,7 @@ fn small_mc() -> ModelConfig {
 
 fn fixed_cfg(shards: usize) -> ServeConfig {
     ServeConfig {
-        numerics: false,
-        fixed_numerics: true,
+        backend: BackendChoice::Fixed,
         shards,
         builders: 3,
         model_cfg: small_mc(),
