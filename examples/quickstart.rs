@@ -8,7 +8,9 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use grip::backend::{BackendChoice, BackendFactory, BackendScratch, NumericsBackend};
+use grip::backend::{
+    BackendChoice, BackendFactory, BackendScratch, NumericsBackend, StagedFeatures,
+};
 use grip::config::{GripConfig, ModelConfig};
 use grip::graph::{generate, GeneratorParams};
 use grip::greta::{compile, GnnModel};
@@ -79,9 +81,15 @@ fn main() -> anyhow::Result<()> {
             // above actually runnable.
             let args = grip::serve::fixed_serving_args(&plan, 0x5EED_5E4E);
             let prepared = backend.prepare(&plan, &args)?;
-            let mut features = FeatureStore::new();
+            // Edge-centric phase first: gather the nodeflow's layer-0
+            // feature rows into a StagedFeatures buffer (in serving, a
+            // prefetch lane does this concurrently with the previous
+            // job's matmul), then hand them to the vertex engine.
+            let mut store = FeatureStore::new();
+            let mut staged = StagedFeatures::new();
+            staged.stage(&nf, mc.f_in, &mut store);
             let mut scratch = BackendScratch::new();
-            let out = backend.execute(&prepared, &nf, &mut features, &mut scratch)?;
+            let out = backend.execute(&prepared, &nf, &staged, &mut scratch)?;
             // Float on the PJRT backend; FixedQ412 after the swap.
             assert!(out.numerics.is_numeric(), "numeric backend returned {:?}", out.numerics);
             let emb = &out.embeddings[..out.f_out];

@@ -13,6 +13,18 @@ PR 4 the default pads admit batches of up to 8 coalesced targets at
 paper sampling (see ``model.PadShapes``); regenerating artifacts with
 this file automatically re-enables PJRT batch coalescing.
 
+Since PR 5 every model is lowered **twice**: at the batch-8 serving
+pads (primary entries; ``pad_shapes`` still describes these) and at
+the batch-1 pads (``<model>_b1`` entries, ``<model>.b1.hlo.txt``
+files) so single-target requests stop paying the batch-8 dense shapes.
+``PjrtBackend::execute`` selects per request by target count; bundles
+without ``_b1`` entries keep working (everything runs the big pads).
+Note the Rust executor uploads the *base* artifact's serving weights
+for ``_b1`` entries (the golden/serving LCG stream consumes the
+pad-dependent ``(a1, a2, h)`` counts first, so per-variant generation
+would yield different weights); the per-entry golden vectors here stay
+self-consistent because golden verification feeds all args explicitly.
+
 Usage (driven by `make artifacts`):
     cd python && python -m compile.aot --out ../artifacts
 """
@@ -116,43 +128,53 @@ def main() -> None:
     args = ap.parse_args()
 
     shapes = PadShapes()
+    shapes_b1 = PadShapes.for_batch(1)
     os.makedirs(args.out, exist_ok=True)
     manifest = {
+        # Global pads stay the batch-8 serving shapes: the SLO
+        # batcher's coalescing cap derives from these.
         "pad_shapes": dataclasses.asdict(shapes),
         "models": {},
     }
     import numpy as np
 
     for name in args.models.split(","):
-        # Serving artifact: ref-impl bodies (XLA-fusable on CPU PJRT).
-        text = lower_model(name, shapes, impl="ref")
-        path = os.path.join(args.out, f"{name}.hlo.txt")
-        with open(path, "w") as f:
-            f.write(text)
-        # Hardware-structural artifact: Pallas vertex-tiling bodies.
-        text_pl = lower_model(name, shapes, impl="pallas")
-        with open(os.path.join(args.out, f"{name}.pallas.hlo.txt"), "w") as f:
-            f.write(text_pl)
-        # Build-time cross-check: both impls compute the same numbers.
-        gold = golden_output(name, shapes, impl="ref")
-        gold_pl = golden_output(name, shapes, impl="pallas")
-        np.testing.assert_allclose(gold, gold_pl, rtol=2e-4, atol=2e-4)
-        manifest["models"][name] = {
-            "hlo": f"{name}.hlo.txt",
-            "hlo_pallas": f"{name}.pallas.hlo.txt",
-            "sha256": hashlib.sha256(text.encode()).hexdigest(),
-            "args": arg_manifest(name, shapes),
-            "output": {
-                "shape": [shapes.v2, shapes.f_out],
-                "dtype": "float32",
-            },
-            "golden": {
-                "seed": 42,
-                # first row of the output, enough to pin the whole pipeline
-                "row0": [float(x) for x in gold[0]],
-            },
-        }
-        print(f"wrote {path} ({len(text)} chars)")
+        # (manifest key, pads, file stem): the batch-8 serving entry
+        # plus the PR-5 batch-1 variant for online single-target
+        # requests.
+        for key, variant_shapes, stem in (
+            (name, shapes, name),
+            (f"{name}_b1", shapes_b1, f"{name}.b1"),
+        ):
+            # Serving artifact: ref-impl bodies (XLA-fusable on CPU PJRT).
+            text = lower_model(name, variant_shapes, impl="ref")
+            path = os.path.join(args.out, f"{stem}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            # Hardware-structural artifact: Pallas vertex-tiling bodies.
+            text_pl = lower_model(name, variant_shapes, impl="pallas")
+            with open(os.path.join(args.out, f"{stem}.pallas.hlo.txt"), "w") as f:
+                f.write(text_pl)
+            # Build-time cross-check: both impls compute the same numbers.
+            gold = golden_output(name, variant_shapes, impl="ref")
+            gold_pl = golden_output(name, variant_shapes, impl="pallas")
+            np.testing.assert_allclose(gold, gold_pl, rtol=2e-4, atol=2e-4)
+            manifest["models"][key] = {
+                "hlo": f"{stem}.hlo.txt",
+                "hlo_pallas": f"{stem}.pallas.hlo.txt",
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "args": arg_manifest(name, variant_shapes),
+                "output": {
+                    "shape": [variant_shapes.v2, variant_shapes.f_out],
+                    "dtype": "float32",
+                },
+                "golden": {
+                    "seed": 42,
+                    # first row of the output, enough to pin the whole pipeline
+                    "row0": [float(x) for x in gold[0]],
+                },
+            }
+            print(f"wrote {path} ({len(text)} chars)")
 
     mpath = os.path.join(args.out, "manifest.json")
     with open(mpath, "w") as f:

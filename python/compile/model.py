@@ -25,6 +25,14 @@ cap from these pads (`PadShapes::max_coalesced_targets`), so batch-1
 padding silently disabled batching on the PJRT path.  Worst case every
 sample hits a distinct vertex, so 8 targets need v2 >= 8,
 v1 = u2 >= 8 * (10 + 1) = 88, and u1 >= 8 * 26 * 11 = 2288.
+
+Since PR 5 the AOT bundle additionally carries a **batch-1 variant**
+per model (``PadShapes.for_batch(1)``, manifest key ``<model>_b1``,
+file ``<model>.b1.hlo.txt``): the batch-8 pads made every online
+single-target request pay ~8x the dense ``(a1, a2, h)`` marshalling
+volume and matmul rows.  ``PjrtBackend::execute`` on the Rust side
+selects the variant by nodeflow target count, so single-target traffic
+runs the small shapes while coalesced batches keep the big ones.
 """
 
 from __future__ import annotations
@@ -85,6 +93,32 @@ class PadShapes:
     m: int = 8
     f: int = 64
     o: int = 128
+
+    @classmethod
+    def for_batch(cls, batch: int, dims: "ModelDims | None" = None) -> "PadShapes":
+        """Pads admitting `batch` worst-case coalesced targets under
+        `dims`' sampling (every sample a distinct vertex), aligned the
+        same way the hand-chosen defaults are (u1 to 16, v1/u2 to the
+        m-tile, v2 to at least one m-tile).  ``for_batch(1)``
+        reproduces the original batch-1 pads (288 / 16 / 16 / 8);
+        ``for_batch(8)`` lands on the PR-4 defaults up to u1 rounding
+        slack (2288 vs the hand-rounded 2304 — the dataclass defaults
+        stay the batch-8 source of truth)."""
+        d = dims or ModelDims()
+        fan1, fan2 = d.sample1 + 1, d.sample2 + 1
+
+        def align(x: int, a: int) -> int:
+            return -(-x // a) * a
+
+        return cls(
+            u1=align(batch * fan1 * fan2, 16),
+            v1=align(batch * fan2, 16),
+            u2=align(batch * fan2, 16),
+            v2=max(align(batch, 8), 8),
+            f_in=d.f_in,
+            f_hid=d.f_hid,
+            f_out=d.f_out,
+        )
 
 
 @dataclass(frozen=True)

@@ -13,6 +13,21 @@ jax.config.update("jax_platform_name", "cpu")
 
 # Small shapes so lowering all four models stays fast in CI.
 SMALL = PadShapes(u1=48, v1=16, u2=16, v2=8, f_in=30, f_hid=24, f_out=12, m=8, f=16, o=8)
+# An even smaller stand-in for the batch-1 variant pads.
+SMALL_B1 = PadShapes(u1=32, v1=16, u2=16, v2=8, f_in=30, f_hid=24, f_out=12, m=8, f=16, o=8)
+
+
+class _SmallPadFactory:
+    """Stands in for the PadShapes class inside aot.main: calling it
+    yields the batch-8 test pads, for_batch(1) the batch-1 ones."""
+
+    def __call__(self):
+        return SMALL
+
+    @staticmethod
+    def for_batch(batch, dims=None):
+        assert batch == 1
+        return SMALL_B1
 
 
 @pytest.mark.parametrize("name", MODELS)
@@ -44,8 +59,9 @@ def test_lowering_is_deterministic():
 
 
 def test_main_writes_artifacts(tmp_path, monkeypatch):
-    """End-to-end aot.main with one small model."""
-    monkeypatch.setattr(aot, "PadShapes", lambda: SMALL)
+    """End-to-end aot.main with one small model: the batch-8 entry plus
+    the PR-5 batch-1 variant, one manifest."""
+    monkeypatch.setattr(aot, "PadShapes", _SmallPadFactory())
     monkeypatch.setattr(
         "sys.argv", ["aot", "--out", str(tmp_path), "--models", "gcn"]
     )
@@ -55,3 +71,24 @@ def test_main_writes_artifacts(tmp_path, monkeypatch):
     hlo = (tmp_path / "gcn.hlo.txt").read_text()
     assert "HloModule" in hlo
     assert man["models"]["gcn"]["output"]["shape"] == [SMALL.v2, SMALL.f_out]
+    # Global pads stay the batch-8 shapes (the batcher cap's source).
+    assert man["pad_shapes"]["u1"] == SMALL.u1
+    # The batch-1 variant rides along under <model>_b1.
+    assert "gcn_b1" in man["models"]
+    b1 = man["models"]["gcn_b1"]
+    assert b1["output"]["shape"] == [SMALL_B1.v2, SMALL_B1.f_out]
+    assert b1["args"][0]["shape"] == [SMALL_B1.v1, SMALL_B1.u1]
+    assert "HloModule" in (tmp_path / "gcn.b1.hlo.txt").read_text()
+    assert (tmp_path / "gcn.b1.pallas.hlo.txt").exists()
+
+
+def test_for_batch_pads():
+    """for_batch(1) reproduces the original batch-1 pads; for_batch(8)
+    admits 8 coalesced targets at paper sampling."""
+    b1 = PadShapes.for_batch(1)
+    assert (b1.u1, b1.v1, b1.u2, b1.v2) == (288, 16, 16, 8)
+    assert (b1.f_in, b1.f_hid, b1.f_out) == (602, 512, 256)
+    b8 = PadShapes.for_batch(8)
+    assert b8.v2 >= 8
+    assert b8.u2 >= 8 * 11 and b8.v1 >= 8 * 11
+    assert b8.u1 >= 8 * 26 * 11

@@ -4,7 +4,7 @@
 //! (prepare-once / execute-per-request — what a shard actually runs).
 //! Skipped without artifacts.
 
-use grip::backend::{BackendScratch, NumericsBackend, PjrtBackend};
+use grip::backend::{BackendScratch, NumericsBackend, PjrtBackend, StagedFeatures};
 use grip::benchutil::bench;
 use grip::config::ModelConfig;
 use grip::graph::Dataset;
@@ -38,11 +38,14 @@ fn main() {
                     build_args_cached(&plan, &artifact, &nf, &w, &mut store).unwrap().len()
                 });
                 // The serving path: device-resident weights, reusable
-                // marshalling arena, dynamic-args-only upload.
+                // marshalling arena, pre-staged features (the prefetch
+                // lane's output), dynamic-args-only upload.
                 let prepared = be.prepare(&plan, &ExecArgs::new()).unwrap();
                 let mut scratch = BackendScratch::new();
+                let mut staged = StagedFeatures::new();
+                staged.stage(&nf, mc.f_in, &mut store);
                 bench(&format!("backend_pjrt/{name}"), 3, 20, || {
-                    be.execute(&prepared, &nf, &mut store, &mut scratch).unwrap().embeddings.len()
+                    be.execute(&prepared, &nf, &staged, &mut scratch).unwrap().embeddings.len()
                 });
             }
         }

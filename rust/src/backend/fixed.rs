@@ -3,10 +3,9 @@
 //! shard loop (pinned by `tests/backend_conformance.rs` and
 //! `tests/serve_props.rs`).
 
-use super::{stage_features, BackendOutput, Numerics, NumericsBackend, PreparedModel};
+use super::{BackendOutput, Numerics, NumericsBackend, PreparedModel, StagedFeatures};
 use crate::greta::{execute_model_into, ExecArgs, ModelPlan, PlanArgs};
 use crate::nodeflow::Nodeflow;
-use crate::runtime::FeatureSource;
 use anyhow::{anyhow, Result};
 
 /// The scale-out serving engine: GRIP's bit-accurate 16-bit datapath
@@ -43,13 +42,13 @@ impl NumericsBackend for FixedPointBackend {
         &mut self,
         prepared: &PreparedModel,
         nf: &Nodeflow,
-        features: &mut dyn FeatureSource,
+        features: &StagedFeatures,
         scratch: &'s mut super::BackendScratch,
     ) -> Result<BackendOutput<'s>> {
         let pargs: &PlanArgs = prepared.state()?;
         let plan = prepared.plan();
-        stage_features(nf, plan.layers[0].in_dim, features, &mut scratch.h);
-        execute_model_into(plan, nf, &scratch.h, pargs, &mut scratch.exec, &mut scratch.emb)
+        let h = features.rows_for(nf, plan.layers[0].in_dim)?;
+        execute_model_into(plan, nf, h, pargs, &mut scratch.exec, &mut scratch.emb)
             .map_err(|e| anyhow!("{}: {e}", plan.name))?;
         Ok(BackendOutput {
             embeddings: &scratch.emb,

@@ -39,6 +39,15 @@
 //! zero-steady-state-allocation discipline) and returns them as the
 //! borrowed [`BackendOutput::embeddings`] slice. See
 //! `examples/BACKENDS.md` for the full contract.
+//!
+//! Since PR 5 the **edge-centric phase is decoupled from execution**:
+//! layer-0 feature rows arrive pre-gathered in a [`StagedFeatures`]
+//! buffer (filled by the serving pipeline's prefetch lanes, or inline
+//! by the caller) instead of being pulled row-by-row through a
+//! `FeatureSource` inside `execute`. This is what lets the shard
+//! pipeline overlap feature gathering for job *i+1* with the matmul
+//! for job *i* — GRIP's parallel prefetch engines feeding the vertex
+//! engine.
 
 mod fixed;
 mod pjrt;
@@ -125,14 +134,14 @@ impl PreparedModel {
     }
 }
 
-/// Reusable working memory shared by every backend on one shard:
-/// feature staging, the output embedding buffer, the fixed-point
-/// executor arena, and the PJRT marshalling arena. After warm-up no
-/// buffer reallocates — the PR-1 hot-path discipline, now owned by the
-/// execution layer instead of hand-threaded through the shard loop.
+/// Reusable working memory shared by every backend on one shard: the
+/// output embedding buffer, the fixed-point executor arena, and the
+/// PJRT marshalling arena. After warm-up no buffer reallocates — the
+/// PR-1 hot-path discipline, now owned by the execution layer instead
+/// of hand-threaded through the shard loop. (Layer-0 feature staging
+/// moved out to [`StagedFeatures`] in PR 5 so it can cross the
+/// prefetch-lane → vertex-engine queue.)
 pub struct BackendScratch {
-    /// Layer-0 feature staging (`num_inputs × in_dim`, row-major).
-    pub h: Vec<f32>,
     /// Embedding output buffer ([`BackendOutput::embeddings`] borrows
     /// from here).
     pub emb: Vec<f32>,
@@ -151,7 +160,6 @@ impl BackendScratch {
     /// architecture configuration.
     pub fn for_config(cfg: &GripConfig) -> Self {
         Self {
-            h: Vec::new(),
             emb: Vec::new(),
             exec: ExecScratch::for_config(cfg),
             marshal: MarshalScratch::new(),
@@ -165,23 +173,71 @@ impl Default for BackendScratch {
     }
 }
 
-/// Stage layer-0 features for `nf` into `h` (`num_inputs × in_dim`
-/// rows from `features`). Shared by the fixed-point and reference
-/// backends; the PJRT backend pads instead (its artifact fixes the
-/// dense shapes).
-pub fn stage_features(
-    nf: &Nodeflow,
+/// A job's staged layer-0 feature rows — the edge-centric phase's
+/// output, decoupled from execution so it can cross the serving
+/// pipeline's prefetch-lane → vertex-engine queue (this used to be the
+/// `h` buffer inside `BackendScratch`, filled by a `stage_features`
+/// call at the top of every `execute`).
+///
+/// Rows sit in `nf.layers[0].inputs` order at width `in_dim` — exactly
+/// the layout `execute_model_into` consumes and the PJRT marshaller
+/// pads from. Buffers are pooled and reused by the shard pipeline, so
+/// staging is allocation-free in steady state.
+#[derive(Debug, Default)]
+pub struct StagedFeatures {
+    rows: Vec<f32>,
     in_dim: usize,
-    features: &mut dyn FeatureSource,
-    h: &mut Vec<f32>,
-) {
-    let l0 = &nf.layers[0];
-    // Resize without a clear: every element is overwritten by the row
-    // loop below, so only growth pays a zero-fill (no per-request
-    // memset of the whole staging buffer).
-    h.resize(l0.num_inputs() * in_dim, 0f32);
-    for (i, &v) in l0.inputs.iter().enumerate() {
-        features.fill_row(v, &mut h[i * in_dim..(i + 1) * in_dim]);
+    num_rows: usize,
+}
+
+impl StagedFeatures {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Gather `nf`'s layer-0 feature rows from `features` (the
+    /// edge-centric phase). Deterministic in `(nf, features)`: the
+    /// values depend only on vertex ids, never on which lane or thread
+    /// staged them — the root of the pipeline's bit-identity guarantee.
+    pub fn stage(&mut self, nf: &Nodeflow, in_dim: usize, features: &mut dyn FeatureSource) {
+        let l0 = &nf.layers[0];
+        self.in_dim = in_dim;
+        self.num_rows = l0.num_inputs();
+        // Resize without a clear: every element is overwritten by the
+        // row loop below, so only growth pays a zero-fill (no
+        // per-request memset of the whole staging buffer).
+        self.rows.resize(self.num_rows * in_dim, 0f32);
+        for (i, &v) in l0.inputs.iter().enumerate() {
+            features.fill_row(v, &mut self.rows[i * in_dim..(i + 1) * in_dim]);
+        }
+    }
+
+    /// Staged width per row.
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Staged row count.
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    /// The flat `num_rows × in_dim` row block for `nf`, shape-checked
+    /// against the consuming plan (catches a lane staging with a
+    /// different width than the engine executes, or a buffer paired
+    /// with the wrong job).
+    pub fn rows_for(&self, nf: &Nodeflow, in_dim: usize) -> Result<&[f32]> {
+        let want_rows = nf.layers[0].num_inputs();
+        if self.in_dim != in_dim || self.num_rows != want_rows {
+            return Err(anyhow!(
+                "staged features are {}x{}, the job needs {}x{}",
+                self.num_rows,
+                self.in_dim,
+                want_rows,
+                in_dim
+            ));
+        }
+        Ok(&self.rows[..self.num_rows * self.in_dim])
     }
 }
 
@@ -199,8 +255,8 @@ pub fn stage_features(
 /// * `execute` runs the nodeflow's target batch (`nf.targets`) and
 ///   leaves the embeddings in `scratch.emb`, returned as the borrowed
 ///   [`BackendOutput`]; it must be deterministic for a given
-///   (prepared, nodeflow, features) triple so replies never depend on
-///   which shard served them.
+///   (prepared, nodeflow, staged-features) triple so replies never
+///   depend on which shard served them.
 /// * Backends need not be `Send`; they never leave the thread that
 ///   built them.
 pub trait NumericsBackend {
@@ -215,13 +271,14 @@ pub trait NumericsBackend {
     fn prepare(&mut self, plan: &ModelPlan, args: &ExecArgs) -> Result<PreparedModel>;
 
     /// Execute one job over `nf` (embeddings for every target, in
-    /// member order). `features` materializes layer-0 feature rows;
-    /// `scratch` is this shard's reusable working memory.
+    /// member order). `features` carries the job's pre-gathered layer-0
+    /// rows — the edge-centric phase already ran, possibly on another
+    /// thread; `scratch` is this shard's reusable working memory.
     fn execute<'s>(
         &mut self,
         prepared: &PreparedModel,
         nf: &Nodeflow,
-        features: &mut dyn FeatureSource,
+        features: &StagedFeatures,
         scratch: &'s mut BackendScratch,
     ) -> Result<BackendOutput<'s>>;
 }
@@ -244,7 +301,7 @@ impl NumericsBackend for TimingOnlyBackend {
         &mut self,
         _prepared: &PreparedModel,
         _nf: &Nodeflow,
-        _features: &mut dyn FeatureSource,
+        _features: &StagedFeatures,
         scratch: &'s mut BackendScratch,
     ) -> Result<BackendOutput<'s>> {
         scratch.emb.clear();
@@ -393,15 +450,41 @@ mod tests {
         let mut be = TimingOnlyBackend;
         let prepared = be.prepare(&plan, &exec_test_args(&plan, 1)).unwrap();
         let mut store = FeatureStore::new();
+        let mut staged = StagedFeatures::new();
+        staged.stage(&nf, mc.f_in, &mut store);
         let mut scratch = BackendScratch::new();
         // Dirty the shared embedding buffer first: a timing-only reply
         // must never leak a previous job's numbers.
         scratch.emb.extend_from_slice(&[1.0, 2.0, 3.0]);
-        let out = be.execute(&prepared, &nf, &mut store, &mut scratch).unwrap();
+        let out = be.execute(&prepared, &nf, &staged, &mut scratch).unwrap();
         assert_eq!(out.numerics, Numerics::TimingOnly);
         assert!(!out.numerics.is_numeric());
         assert!(out.embeddings.is_empty());
         assert_eq!(out.f_out, 0);
+    }
+
+    #[test]
+    fn staged_features_match_direct_gather_and_check_shape() {
+        let mc = small_mc();
+        let nf = small_nf(&mc);
+        let mut store = FeatureStore::new();
+        let mut staged = StagedFeatures::new();
+        staged.stage(&nf, mc.f_in, &mut store);
+        assert_eq!(staged.num_rows(), nf.layers[0].num_inputs());
+        assert_eq!(staged.in_dim(), mc.f_in);
+        // The staged block equals a hand-rolled row-by-row gather.
+        let rows = staged.rows_for(&nf, mc.f_in).unwrap();
+        let mut want = vec![0f32; nf.layers[0].num_inputs() * mc.f_in];
+        for (i, &v) in nf.layers[0].inputs.iter().enumerate() {
+            crate::runtime::fill_feature_row(v, &mut want[i * mc.f_in..(i + 1) * mc.f_in]);
+        }
+        assert_eq!(rows, &want[..]);
+        // Re-staging at a different width over the dirty buffer is
+        // exact (the pipeline pools and reuses these buffers).
+        staged.stage(&nf, 7, &mut store);
+        assert_eq!(staged.rows_for(&nf, 7).unwrap().len(), nf.layers[0].num_inputs() * 7);
+        // Shape mismatches are errors, not silent garbage.
+        assert!(staged.rows_for(&nf, mc.f_in).is_err(), "stale width must be rejected");
     }
 
     #[test]

@@ -6,6 +6,17 @@
 //! device by [`Executor::load`] — so the request path only uploads the
 //! per-request `(a1, a2, h)` dynamic args.
 //!
+//! Since PR 5 each preset may ship **two** artifacts: the batch-8 pads
+//! (the SLO batcher's coalescing capacity) and a batch-1 variant
+//! (`<model>_b1` in the manifest) with ~8× smaller dense `(a1, a2, h)`
+//! shapes. `execute` picks by nodeflow target count, so online
+//! single-target requests stop paying the batch-8 marshalling volume
+//! and matmul rows (the ROADMAP open item). The variant serves the
+//! **base artifact's** device weights (`Executor::load` sources them
+//! from the primary entry — the serving-weight stream is
+//! pad-dependent), so which artifact a request lands on can never
+//! change its embedding.
+//!
 //! Compiles identically with and without the `pjrt` cargo feature: the
 //! stub [`Executor`]'s `load` always fails, so default builds fall
 //! back to timing-only serving at construction time (counted in
@@ -13,11 +24,11 @@
 //!
 //! [`BackendFactory`]: super::BackendFactory
 
-use super::{BackendOutput, Numerics, NumericsBackend, PreparedModel};
+use super::{BackendOutput, Numerics, NumericsBackend, PreparedModel, StagedFeatures};
 use crate::greta::{ExecArgs, ModelPlan, ALL_MODELS};
 use crate::nodeflow::Nodeflow;
 use crate::runtime::{
-    build_dynamic_args_into, fits_padding, Executor, FeatureSource, ModelArtifact,
+    build_dynamic_args_staged, fits_padding, Executor, Manifest, ModelArtifact,
 };
 use anyhow::{anyhow, Result};
 use std::path::Path;
@@ -25,7 +36,10 @@ use std::path::Path;
 /// Per-model prepared state for the PJRT engine.
 enum PjrtModel {
     /// An AOT artifact exists: serve float numerics through it.
-    Artifact(ModelArtifact),
+    /// `b1` is the batch-1 variant, when the AOT bundle ships one —
+    /// selected per job for single-target nodeflows that fit its
+    /// smaller pads.
+    Artifact { full: ModelArtifact, b1: Option<ModelArtifact> },
     /// No usable artifact: none exists (custom `ModelSpec`s are not
     /// AOT-compiled yet — the ROADMAP's spec→HLO bridge), or one
     /// exists but was compiled for different feature dims than this
@@ -41,6 +55,19 @@ enum PjrtModel {
 /// Float numerics on the CPU PJRT client, weights device-resident.
 pub struct PjrtBackend {
     exec: Executor,
+}
+
+/// Do the artifact's feature dims match the plan's? An artifact is
+/// only usable if it was AOT-compiled for this plan's feature dims
+/// (h arg = `[pad_u, f_in]`). A name match with different dims — e.g.
+/// serve-bench's shrunk default `ModelConfig` against the paper-dims
+/// artifact — must NOT silently serve the artifact's numerics for a
+/// different model.
+fn dims_match(artifact: &ModelArtifact, plan: &ModelPlan) -> bool {
+    let art_f_in = artifact.args.get(2).and_then(|a| a.shape.get(1)).copied();
+    let art_f_out = artifact.output_shape.last().copied();
+    art_f_in == plan.layers.first().map(|l| l.in_dim)
+        && art_f_out == plan.layers.last().map(|l| l.out_dim)
 }
 
 impl PjrtBackend {
@@ -67,26 +94,26 @@ impl NumericsBackend for PjrtBackend {
         match self.exec.model(&plan.name) {
             Ok(lm) => {
                 let artifact = lm.artifact.clone();
-                // An artifact is only usable if it was AOT-compiled for
-                // this plan's feature dims (h arg = [pad_u1, f_in]). A
-                // name match with different dims — e.g. serve-bench's
-                // shrunk default ModelConfig against the paper-dims
-                // artifact — must NOT silently serve the artifact's
-                // numerics for a different model; degrade to the
-                // explicit timing-only path instead.
-                let art_f_in = artifact.args.get(2).and_then(|a| a.shape.get(1)).copied();
-                let art_f_out = artifact.output_shape.last().copied();
-                let plan_f_in = plan.layers.first().map(|l| l.in_dim);
-                let plan_f_out = plan.layers.last().map(|l| l.out_dim);
-                if art_f_in != plan_f_in || art_f_out != plan_f_out {
+                if !dims_match(&artifact, plan) {
                     return Ok(PreparedModel::new(
                         plan.clone(),
                         Box::new(PjrtModel::NoArtifact),
                     ));
                 }
+                // The batch-1 variant is optional (older AOT bundles
+                // predate it) and must agree on feature dims with the
+                // full artifact it substitutes for.
+                let b1 = self
+                    .exec
+                    .model(&Manifest::batch1_name(&plan.name))
+                    .ok()
+                    .map(|lm| lm.artifact.clone())
+                    .filter(|a| dims_match(a, plan));
                 let f_out = *artifact.output_shape.last().unwrap_or(&1);
-                let mut prepared =
-                    PreparedModel::new(plan.clone(), Box::new(PjrtModel::Artifact(artifact)));
+                let mut prepared = PreparedModel::new(
+                    plan.clone(),
+                    Box::new(PjrtModel::Artifact { full: artifact, b1 }),
+                );
                 prepared.f_out = f_out;
                 Ok(prepared)
             }
@@ -104,12 +131,12 @@ impl NumericsBackend for PjrtBackend {
         &mut self,
         prepared: &PreparedModel,
         nf: &Nodeflow,
-        features: &mut dyn FeatureSource,
+        features: &StagedFeatures,
         scratch: &'s mut super::BackendScratch,
     ) -> Result<BackendOutput<'s>> {
         let state: &PjrtModel = prepared.state()?;
-        let artifact = match state {
-            PjrtModel::Artifact(a) => a,
+        let (full, b1) = match state {
+            PjrtModel::Artifact { full, b1 } => (full, b1),
             // A broken preset deployment errors to *this* model's
             // callers; healthy models on the same shard keep serving.
             PjrtModel::Broken(msg) => return Err(anyhow!("{msg}")),
@@ -121,6 +148,13 @@ impl NumericsBackend for PjrtBackend {
                     numerics: Numerics::TimingOnly,
                 });
             }
+        };
+        // Single-target requests take the batch-1 artifact when its
+        // (much smaller) pads fit this nodeflow — same math over the
+        // same device weights, ~8x less dense marshalling volume.
+        let artifact = match b1 {
+            Some(small) if nf.targets.len() == 1 && fits_padding(small, nf) => small,
+            _ => full,
         };
         if !fits_padding(artifact, nf) {
             // The (batched) nodeflow exceeds the AOT padding: degrade
@@ -136,8 +170,9 @@ impl NumericsBackend for PjrtBackend {
             });
         }
         let plan = prepared.plan();
-        build_dynamic_args_into(plan, artifact, nf, features, &mut scratch.marshal)?;
-        let out = self.exec.run_prepared(&plan.name, scratch.marshal.args())?;
+        let h = features.rows_for(nf, plan.layers[0].in_dim)?;
+        build_dynamic_args_staged(plan, artifact, nf, h, &mut scratch.marshal)?;
+        let out = self.exec.run_prepared(&artifact.name, scratch.marshal.args())?;
         let f_out = prepared.f_out();
         scratch.emb.clear();
         scratch.emb.extend_from_slice(&out[..f_out * nf.targets.len()]);

@@ -4,10 +4,9 @@
 //! Q4.12 semantics — `tests/backend_conformance.rs` pins the
 //! fixed-point hot path bit-identical to this.
 
-use super::{stage_features, BackendOutput, Numerics, NumericsBackend, PreparedModel};
+use super::{BackendOutput, Numerics, NumericsBackend, PreparedModel, StagedFeatures};
 use crate::greta::{execute_model_ref, ExecArgs, ModelPlan};
 use crate::nodeflow::Nodeflow;
-use crate::runtime::FeatureSource;
 use anyhow::{anyhow, Result};
 
 /// Reference Q4.12 executor (seed implementation, unsorted edge-list
@@ -43,13 +42,13 @@ impl NumericsBackend for ReferenceBackend {
         &mut self,
         prepared: &PreparedModel,
         nf: &Nodeflow,
-        features: &mut dyn FeatureSource,
+        features: &StagedFeatures,
         scratch: &'s mut super::BackendScratch,
     ) -> Result<BackendOutput<'s>> {
         let args: &ExecArgs = prepared.state()?;
         let plan = prepared.plan();
-        stage_features(nf, plan.layers[0].in_dim, features, &mut scratch.h);
-        let out = execute_model_ref(plan, nf, &scratch.h, args)
+        let h = features.rows_for(nf, plan.layers[0].in_dim)?;
+        let out = execute_model_ref(plan, nf, h, args)
             .map_err(|e| anyhow!("{}: {e}", plan.name))?;
         scratch.emb.clear();
         scratch.emb.extend_from_slice(&out);

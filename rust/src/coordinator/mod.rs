@@ -16,9 +16,10 @@ mod server;
 pub use metrics::LatencyStats;
 pub use server::{
     run_workload, run_workload_batched, Coordinator, InferenceRequest, InferenceResponse,
-    ServeConfig,
+    ServeConfig, Submitter,
 };
-// Re-exported so serving callers configure batching and the execution
-// engine without importing the serve/backend modules separately.
+// Re-exported so serving callers configure batching, the execution
+// engine, and the shard phase pipeline without importing the
+// serve/backend modules separately.
 pub use crate::backend::BackendChoice;
-pub use crate::serve::{BatchConfig, ServeStats};
+pub use crate::serve::{BatchConfig, PipelineConfig, ServeStats};

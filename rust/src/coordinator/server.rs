@@ -61,7 +61,8 @@ use crate::greta::{ModelKey, ModelLibrary, ModelSpec};
 use crate::nodeflow::{Nodeflow, Sampler};
 use crate::runtime::Manifest;
 use crate::serve::{
-    BatchConfig, Batcher, ExecJob, Pending, ReplySlot, ServeStats, ShardPool, ShardSpec,
+    BatchConfig, Batcher, ExecJob, Pending, PipelineConfig, ReplySlot, ServeStats, ShardPool,
+    ShardSpec,
 };
 use anyhow::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -155,10 +156,79 @@ impl Job {
 }
 
 /// The coordinator's front door: straight to the job queue, or through
-/// the dynamic batcher.
+/// the dynamic batcher. Cloneable — every clone is an independent
+/// submission lane over the same pipeline.
+#[derive(Clone)]
 enum Front {
     Direct(mpsc::SyncSender<Job>),
     Batched(mpsc::Sender<Submission>),
+}
+
+/// A cloneable, `Send` submission handle over a running coordinator's
+/// pipeline. `mpsc` senders are not `Sync`, so `&Coordinator` alone
+/// cannot be driven from several threads — each open-loop submitter
+/// lane clones one of these instead (the ROADMAP's fix for the
+/// single sleep+spin submitter bottleneck above ~50k offered rps).
+///
+/// The lifetime ties every lane to the coordinator that issued it: a
+/// `Submitter` (or clone) **cannot outlive its `Coordinator`**, so by
+/// the time `Drop` runs, every front-channel handle is gone and the
+/// pipeline join cannot hang on a still-open sender. Scoped threads
+/// (`std::thread::scope`) are the natural way to fan lanes out.
+#[derive(Clone)]
+pub struct Submitter<'a> {
+    front: Front,
+    library: Arc<ModelLibrary>,
+    inflight: Arc<AtomicU64>,
+    /// Lifetime-only brand (no `&Coordinator` inside — that would cost
+    /// `Send`): borrows the coordinator so clones can't escape it.
+    _coord: std::marker::PhantomData<&'a ()>,
+}
+
+impl Submitter<'_> {
+    /// Submit a request; returns a receiver for the response. In direct
+    /// mode this blocks when the submission queue is full
+    /// (backpressure); with batching enabled the batcher absorbs the
+    /// burst and applies backpressure downstream instead.
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        submit_via(&self.front, &self.library, &self.inflight, req)
+    }
+}
+
+/// The submission path shared by [`Coordinator::submit`] and every
+/// [`Submitter`] lane.
+fn submit_via(
+    front: &Front,
+    library: &ModelLibrary,
+    inflight: &AtomicU64,
+    req: InferenceRequest,
+) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+    ensure!(!req.targets.is_empty(), "request {} has no targets", req.id);
+    ensure!(
+        library.contains(req.model),
+        "request {} names model key {} but only {} models are registered",
+        req.id,
+        req.model.index(),
+        library.len()
+    );
+    let (rtx, rrx) = mpsc::channel();
+    let t_submit = Instant::now();
+    match front {
+        Front::Direct(tx) => {
+            inflight.fetch_add(1, Ordering::Relaxed);
+            tx.send(Job::single(req, rtx, t_submit)).map_err(|_| {
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                anyhow!("coordinator stopped")
+            })?
+        }
+        Front::Batched(tx) => tx
+            .send(Submission { req, reply: rtx, t_submit })
+            .map_err(|_| anyhow!("coordinator stopped"))?,
+    }
+    Ok(rrx)
 }
 
 /// Serving coordinator handle. Owns the model library, batcher, builder
@@ -198,6 +268,13 @@ pub struct ServeConfig {
     pub built_depth: usize,
     /// Executor shards (every backend scales out).
     pub shards: usize,
+    /// Per-shard phase pipeline: prefetch lanes gathering features
+    /// through the shared cache feed the shard's vertex engine through
+    /// a bounded ready queue, so the gather for one job overlaps the
+    /// matmul for the previous one (`--prefetch-lanes`,
+    /// `--pipeline-depth`, `--pipeline off` for the sequential loop).
+    /// Bit-identical replies for any setting.
+    pub pipeline: PipelineConfig,
     /// Enable the SLO-aware dynamic batcher with this policy. On the
     /// PJRT path the policy's `max_batch` is clamped to the AOT
     /// artifacts' padded batch capacity
@@ -227,6 +304,7 @@ impl Default for ServeConfig {
             builders: 4,
             built_depth: 64,
             shards: 1,
+            pipeline: PipelineConfig::default(),
             batch: None,
             cache_rows: spec.cache_rows,
             weight_seed: spec.weight_seed,
@@ -242,6 +320,7 @@ impl ServeConfig {
             grip: self.grip.clone(),
             model_cfg: self.model_cfg,
             backend: self.backend,
+            pipeline: self.pipeline,
             cache_rows: self.cache_rows,
             weight_seed: self.weight_seed,
         }
@@ -330,37 +409,27 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request; returns a receiver for the response. In direct
-    /// mode this blocks when the submission queue is full
-    /// (backpressure); with batching enabled the batcher absorbs the
-    /// burst and applies backpressure downstream instead.
+    /// Submit a request; returns a receiver for the response (see
+    /// [`Submitter::submit`] — this is the single-lane convenience).
     pub fn submit(
         &self,
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
-        ensure!(!req.targets.is_empty(), "request {} has no targets", req.id);
-        ensure!(
-            self.library.contains(req.model),
-            "request {} names model key {} but only {} models are registered",
-            req.id,
-            req.model.index(),
-            self.library.len()
-        );
-        let (rtx, rrx) = mpsc::channel();
-        let t_submit = Instant::now();
-        match self.front.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))? {
-            Front::Direct(tx) => {
-                self.inflight.fetch_add(1, Ordering::Relaxed);
-                tx.send(Job::single(req, rtx, t_submit)).map_err(|_| {
-                    self.inflight.fetch_sub(1, Ordering::Relaxed);
-                    anyhow!("coordinator stopped")
-                })?
-            }
-            Front::Batched(tx) => tx
-                .send(Submission { req, reply: rtx, t_submit })
-                .map_err(|_| anyhow!("coordinator stopped"))?,
+        let front = self.front.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))?;
+        submit_via(front, &self.library, &self.inflight, req)
+    }
+
+    /// A cloneable, `Send` submission lane over this pipeline — one
+    /// per open-loop submitter worker. Lifetime-bound to this
+    /// coordinator, so no lane (or clone) can survive into `Drop` and
+    /// wedge the pipeline join.
+    pub fn submitter(&self) -> Submitter<'_> {
+        Submitter {
+            front: self.front.as_ref().expect("coordinator running").clone(),
+            library: self.library.clone(),
+            inflight: self.inflight.clone(),
+            _coord: std::marker::PhantomData,
         }
-        Ok(rrx)
     }
 
     /// Convenience: submit and wait.
@@ -745,6 +814,74 @@ mod tests {
         let targets: Vec<u32> = (0..32).collect();
         let (accel, _, _) = run_workload(&coord, GnnModel::Gin, &targets).unwrap();
         assert_eq!(accel.count(), 32);
+    }
+
+    #[test]
+    fn submitter_lanes_submit_from_many_threads() {
+        // The open-loop harness drives one Submitter clone per pacing
+        // lane; replies must be identical to single-lane submission.
+        let g = graph();
+        let solo = Coordinator::start(g.clone(), 7, fixed_cfg(2)).unwrap();
+        let want: Vec<InferenceResponse> = (0..16u32)
+            .map(|i| solo.infer(InferenceRequest::single(i as u64, GnnModel::Gcn, i * 31)).unwrap())
+            .collect();
+        drop(solo);
+
+        let coord = Coordinator::start(g, 7, fixed_cfg(2)).unwrap();
+        let lanes = 4usize;
+        let mut got: Vec<Option<InferenceResponse>> = (0..16).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..lanes)
+                .map(|w| {
+                    let sub = coord.submitter();
+                    s.spawn(move || {
+                        (w..16)
+                            .step_by(lanes)
+                            .map(|i| {
+                                let rx = sub
+                                    .submit(InferenceRequest::single(
+                                        i as u64,
+                                        GnnModel::Gcn,
+                                        i as u32 * 31,
+                                    ))
+                                    .unwrap();
+                                (i, rx.recv().unwrap().unwrap())
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().unwrap() {
+                    got[i] = Some(r);
+                }
+            }
+        });
+        for (a, b) in want.iter().zip(got.iter()) {
+            let b = b.as_ref().expect("every lane reply collected");
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.embedding, b.embedding, "id {}: lane count changed numerics", a.id);
+        }
+        // Bad requests fail identically through a lane.
+        let sub = coord.submitter();
+        assert!(sub
+            .submit(InferenceRequest { id: 99, model: GnnModel::Gcn.key(), targets: vec![] })
+            .is_err());
+    }
+
+    #[test]
+    fn pipeline_off_serves_identically() {
+        let g = graph();
+        let on = Coordinator::start(g.clone(), 7, fixed_cfg(2)).unwrap();
+        let a = on.infer(InferenceRequest::single(1, GnnModel::Gin, 77)).unwrap();
+        drop(on);
+        let cfg = ServeConfig { pipeline: PipelineConfig::off(), ..fixed_cfg(2) };
+        let off = Coordinator::start(g, 7, cfg).unwrap();
+        let b = off.infer(InferenceRequest::single(1, GnnModel::Gin, 77)).unwrap();
+        assert_eq!(a.embedding, b.embedding, "pipeline mode changed numerics");
+        assert_eq!(a.accel_us, b.accel_us);
+        let s = off.serve_stats();
+        assert_eq!(s.staged_jobs, 0, "sequential loop stages nothing across a queue");
     }
 
     #[test]

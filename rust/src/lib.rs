@@ -35,9 +35,12 @@
 //!   queue, parallel nodeflow-builder pool, sharded executor pool, batched
 //!   multi-target requests, and latency metrics (p50/p99).
 //! * [`serve`] — the scale-out serving subsystem: open-loop load engine
-//!   (Poisson / bursty MMPP), SLO-aware dynamic batcher, executor shard
-//!   pool with a shared degree-aware feature cache, and the open-loop
-//!   rate × shard sweep behind `grip serve-bench`.
+//!   (Poisson / bursty MMPP) with per-worker submission lanes, SLO-aware
+//!   dynamic batcher, phase-decoupled executor shard pool (per shard:
+//!   prefetch lanes feeding the vertex engine through a bounded ready
+//!   queue, mirroring GRIP's edge/vertex phase split) with a shared
+//!   degree-aware feature cache, and the open-loop rate × shard sweep
+//!   behind `grip serve-bench`.
 //! * [`repro`] — one generator per paper table and figure.
 
 pub mod backend;

@@ -32,10 +32,13 @@ fn usage() -> ! {
                    [--scale S=0.01] [--targets N=128] [--seed K=17]\n\
            serve   [--model M] [--model-spec FILE.json] [--dataset yt|lj|po|rd] [--requests N=256]\n\
                    [--scale S=0.01] [--backend B] [--no-numerics]\n\
+                   [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
                    [--no-batching] [--bursty] [--paper-dims] [--model-spec FILE.json]\n\
                    [--backend B=fixed] [--seed K=17] [--out PATH]\n\
+                   [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
+                   [--submit-lanes W=0 (auto)]\n\
            sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
            verify\n\
            info\n\
@@ -45,7 +48,10 @@ fn usage() -> ! {
            by default a spec serves on the Q4.12 fixed-point path (no AOT artifact exists for it)\n\
          --backend B selects the per-shard execution engine: {BACKEND_NAME_HELP}\n\
            (contract: examples/BACKENDS.md; serve defaults to pjrt for presets, fixed for specs;\n\
-           --no-numerics is the legacy spelling of --backend timing)"
+           --no-numerics is the legacy spelling of --backend timing)\n\
+         --prefetch-lanes/--pipeline-depth shape each shard's phase pipeline (edge-centric\n\
+           feature-prefetch lanes feeding the vertex engine; --pipeline off = sequential loop;\n\
+           replies are bit-identical either way)"
     );
     std::process::exit(2);
 }
@@ -139,6 +145,37 @@ impl Args {
         })
     }
 
+    /// Parse the shard phase-pipeline flags (`--pipeline on|off`,
+    /// `--prefetch-lanes`, `--pipeline-depth`).
+    fn pipeline(&self) -> anyhow::Result<grip::coordinator::PipelineConfig> {
+        use grip::coordinator::PipelineConfig;
+        let mut pc = PipelineConfig::default();
+        match self.get("pipeline") {
+            None | Some("on") | Some("true") => {}
+            Some("off") | Some("none") | Some("false") => pc.enabled = false,
+            Some(v) => anyhow::bail!("unknown --pipeline {v:?}; accepted: on | off"),
+        }
+        for (flag, slot) in [
+            ("prefetch-lanes", &mut pc.prefetch_lanes),
+            ("pipeline-depth", &mut pc.depth),
+        ] {
+            if let Some(v) = self.get(flag) {
+                *slot = v
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("--{flag} wants a positive integer, got {v:?}")
+                    })?;
+            }
+        }
+        anyhow::ensure!(
+            pc.enabled || (!self.has("prefetch-lanes") && !self.has("pipeline-depth")),
+            "--pipeline off conflicts with --prefetch-lanes/--pipeline-depth"
+        );
+        Ok(pc)
+    }
+
     fn dataset(&self) -> Dataset {
         self.get("dataset")
             .map(|s| Dataset::from_name(s).unwrap_or_else(|| usage()))
@@ -194,11 +231,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         BackendChoice::Pjrt
     });
 
+    let pipeline = args.pipeline()?;
+
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, 17);
     let num_v = graph.num_vertices();
     let cfg = ServeConfig {
         backend,
+        pipeline,
         custom_specs: spec.iter().cloned().collect(),
         ..Default::default()
     };
@@ -251,6 +291,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             String::new()
         }
     );
+    // Phase-pipeline health: which side of the lane → engine queue
+    // waited, and how full it ran (next to the sim's phase overlap).
+    if pipeline.enabled {
+        println!(
+            "pipeline {}: {} staged jobs, occupancy {:.2}, stalls prefetch {} / engine {}, \
+             sim phase overlap {:.1}%",
+            pipeline.label(),
+            stats.staged_jobs,
+            stats.prefetch_occupancy,
+            stats.prefetch_stalls,
+            stats.engine_stalls,
+            stats.sim_phase_overlap * 100.0
+        );
+    } else {
+        println!("pipeline off (sequential shard loop)");
+    }
     if let Some(r) = responses.first() {
         if !r.embedding.is_empty() {
             let norm: f32 = r.embedding.iter().map(|x| x * x).sum::<f32>().sqrt();
@@ -312,12 +368,15 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         }
         None => (Vec::new(), ModelMix::default()),
     };
+    let pipeline = args.pipeline()?;
     let base = OpenLoopConfig {
         requests,
         mix,
         model_cfg,
         custom_specs,
         backend,
+        pipeline,
+        submit_lanes: args.get_usize("submit-lanes", 0),
         batch: if args.has("no-batching") {
             None
         } else {
@@ -329,11 +388,12 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
 
     println!(
         "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts, \
-         backend {backend} ==",
+         backend {backend}, pipeline {} ==",
         dataset,
         requests,
         rates.len(),
-        shard_counts.len()
+        shard_counts.len(),
+        pipeline.label()
     );
     let bursty = args.has("bursty");
     let points = run_sweep(&graph, &rates, &shard_counts, &base, |rate| {
@@ -351,12 +411,17 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     for (label, r) in &points {
         println!(
             "{label:<32} offered {:>7.0} rps | e2e p50 {:>9.0} µs p99 {:>9.0} µs | \
-             cache hit {:>5.1}% (sim {:>5.1}%) | backends [{}]{}",
+             cache hit {:>5.1}% (sim {:>5.1}%) | occ {:.2} stalls p{}/e{} overlap {:>4.1}% | \
+             backends [{}]{}",
             r.offered_rps,
             r.e2e.p50(),
             r.e2e.p99(),
             r.stats.cache_hit_rate * 100.0,
             r.stats.sim_feature_hit_rate * 100.0,
+            r.stats.prefetch_occupancy,
+            r.stats.prefetch_stalls,
+            r.stats.engine_stalls,
+            r.stats.sim_phase_overlap * 100.0,
             r.stats.shard_backends.join(", "),
             if r.stats.backend_fallbacks > 0 {
                 format!(" ({} fallback(s))", r.stats.backend_fallbacks)

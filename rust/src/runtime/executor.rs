@@ -57,9 +57,20 @@ mod imp {
                 let exe = client
                     .compile(&comp)
                     .map_err(|e| anyhow!("{name}: compiling: {e:?}"))?;
-                // Transfer the serving weights to device once.
+                // Transfer the serving weights to device once. A
+                // batch-1 variant must carry the SAME weight values as
+                // its base artifact — the serving-weight stream first
+                // consumes the pad-dependent (a1, a2, h) element
+                // counts, so generating from the variant's own pads
+                // would silently serve a different model whenever
+                // `PjrtBackend::execute` picks the small shapes. The
+                // weight arg shapes themselves are pad-independent, so
+                // the base values fit the variant exactly.
+                let weight_source = Manifest::base_name(name)
+                    .and_then(|base| manifest.models.get(base))
+                    .unwrap_or(artifact);
                 let mut weight_buffers = Vec::new();
-                for (spec, w) in artifact.args[3..].iter().zip(serving_weights(artifact)) {
+                for (spec, w) in artifact.args[3..].iter().zip(serving_weights(weight_source)) {
                     let buf = client
                         .buffer_from_host_buffer::<f32>(&w, &spec.shape, None)
                         .map_err(|e| anyhow!("{name}.{}: to device: {e:?}", spec.name))?;

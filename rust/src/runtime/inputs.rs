@@ -160,17 +160,15 @@ pub fn build_dynamic_args(
     Ok(scratch.bufs)
 }
 
-/// Allocation-free marshalling: render `(a1, a2, h)` into the reusable
-/// `scratch` arena (available afterwards via [`MarshalScratch::args`]).
-/// `features` is any [`FeatureSource`] tier; the nodeflow normalization
-/// is derived from the plan ([`norm_for_plan`]).
-pub fn build_dynamic_args_into(
+/// Render the padded dense layer matrices `(a1, a2)` into the arena
+/// and size the `h` slot; returns `(pad_u1, f_in)` for the caller's
+/// feature fill. Shared by the two marshalling entry points below.
+fn marshal_frames(
     plan: &ModelPlan,
     artifact: &ModelArtifact,
     nf: &Nodeflow,
-    features: &mut dyn FeatureSource,
     scratch: &mut MarshalScratch,
-) -> Result<()> {
+) -> Result<(usize, usize)> {
     ensure!(nf.layers.len() == 2, "AOT artifacts are 2-layer");
     ensure!(fits_padding(artifact, nf), "nodeflow exceeds the artifact's padded shapes");
     let a1_shape = &artifact.args[0].shape;
@@ -189,9 +187,49 @@ pub fn build_dynamic_args_into(
     nf.to_dense_into(1, pad_v2, pad_u2, norm, a2);
     h.clear();
     h.resize(pad_u1 * f_in, 0f32);
+    Ok((pad_u1, f_in))
+}
+
+/// Allocation-free marshalling: render `(a1, a2, h)` into the reusable
+/// `scratch` arena (available afterwards via [`MarshalScratch::args`]).
+/// `features` is any [`FeatureSource`] tier; the nodeflow normalization
+/// is derived from the plan ([`norm_for_plan`]).
+pub fn build_dynamic_args_into(
+    plan: &ModelPlan,
+    artifact: &ModelArtifact,
+    nf: &Nodeflow,
+    features: &mut dyn FeatureSource,
+    scratch: &mut MarshalScratch,
+) -> Result<()> {
+    let (_, f_in) = marshal_frames(plan, artifact, nf, scratch)?;
+    let h = &mut scratch.bufs[2];
     for (i, &v) in nf.layers[0].inputs.iter().enumerate() {
         features.fill_row(v, &mut h[i * f_in..(i + 1) * f_in]);
     }
+    Ok(())
+}
+
+/// [`build_dynamic_args_into`] for a pre-gathered feature block — the
+/// phase-decoupled serving path. `h_rows` is the `num_inputs × f_in`
+/// row block a prefetch lane already staged
+/// (`crate::backend::StagedFeatures`), copied into the padded `h`
+/// argument instead of re-gathering row by row; values are identical
+/// to the gather-in-place path bit for bit.
+pub fn build_dynamic_args_staged(
+    plan: &ModelPlan,
+    artifact: &ModelArtifact,
+    nf: &Nodeflow,
+    h_rows: &[f32],
+    scratch: &mut MarshalScratch,
+) -> Result<()> {
+    let (_, f_in) = marshal_frames(plan, artifact, nf, scratch)?;
+    let want = nf.layers[0].num_inputs() * f_in;
+    ensure!(
+        h_rows.len() == want,
+        "staged feature block holds {} values, the artifact needs {want}",
+        h_rows.len()
+    );
+    scratch.bufs[2][..want].copy_from_slice(h_rows);
     Ok(())
 }
 
@@ -292,6 +330,29 @@ mod tests {
         }
         assert_eq!(scratch.args().len(), 3);
         assert_eq!(fresh.len(), 3);
+    }
+
+    #[test]
+    fn staged_marshalling_matches_gather_in_place() {
+        let nf = small_nf();
+        let art = test_artifact(64, 256, 8, 64);
+        let mc = small_mc();
+        let gcn = crate::greta::compile(GnnModel::Gcn, &mc);
+        let mut store = FeatureStore::new();
+        let want = build_dynamic_args(&gcn, &art, &nf, &mut store).unwrap();
+        // Pre-gather the rows exactly as a prefetch lane would.
+        let mut rows = vec![0f32; nf.layers[0].num_inputs() * mc.f_in];
+        for (i, &v) in nf.layers[0].inputs.iter().enumerate() {
+            fill_feature_row(v, &mut rows[i * mc.f_in..(i + 1) * mc.f_in]);
+        }
+        let mut scratch = MarshalScratch::new();
+        build_dynamic_args_staged(&gcn, &art, &nf, &rows, &mut scratch).unwrap();
+        assert_eq!(scratch.args(), &want[..], "staged path diverged");
+        // Re-marshalling over the dirty arena stays exact, and a
+        // wrong-sized block is rejected.
+        build_dynamic_args_staged(&gcn, &art, &nf, &rows, &mut scratch).unwrap();
+        assert_eq!(scratch.args(), &want[..]);
+        assert!(build_dynamic_args_staged(&gcn, &art, &nf, &rows[1..], &mut scratch).is_err());
     }
 
     #[test]

@@ -168,6 +168,30 @@ impl Manifest {
     pub fn default_dir() -> PathBuf {
         PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
     }
+
+    /// Manifest key under which `aot.py` registers the batch-1 (online
+    /// single-target) variant of `model` — compiled with ~8× smaller
+    /// dense pads than the batch-8 serving artifact, selected by
+    /// `PjrtBackend::execute` for single-target nodeflows. Optional:
+    /// AOT bundles that predate PR 5 simply lack these entries.
+    pub fn batch1_name(model: &str) -> String {
+        format!("{model}_b1")
+    }
+
+    /// Is `name` a batch-1 variant entry rather than a primary model?
+    pub fn is_batch1_name(name: &str) -> bool {
+        name.ends_with("_b1")
+    }
+
+    /// The primary model a batch-1 variant derives from (`gcn_b1` →
+    /// `gcn`); `None` for primary entries. Load-bearing for numerics:
+    /// `serving_weights` draws from one sequential stream that first
+    /// consumes the pad-dependent `(a1, a2, h)` element counts, so a
+    /// variant's weights must be generated from its *base* artifact or
+    /// the two would serve different models (see `Executor::load`).
+    pub fn base_name(name: &str) -> Option<&str> {
+        name.strip_suffix("_b1")
+    }
 }
 
 #[cfg(test)]
@@ -193,11 +217,59 @@ mod tests {
             assert_eq!(a.args[0].name, "a1");
             assert_eq!(a.args[1].name, "a2");
             assert_eq!(a.args[2].name, "h");
-            // nodeflow shapes match pad_shapes
-            assert_eq!(a.args[0].shape, vec![m.pad.v1, m.pad.u1]);
-            assert_eq!(a.args[1].shape, vec![m.pad.v2, m.pad.u2]);
-            assert_eq!(a.args[2].shape, vec![m.pad.u1, m.pad.f_in]);
+            if Manifest::is_batch1_name(&a.name) {
+                // Batch-1 variants carry their own (smaller) pads; only
+                // the feature dims must agree with the global block.
+                assert_eq!(a.args[2].shape[1], m.pad.f_in, "{}", a.name);
+                assert!(a.args[0].shape[1] <= m.pad.u1, "{}", a.name);
+            } else {
+                // Primary artifacts' nodeflow shapes match pad_shapes.
+                assert_eq!(a.args[0].shape, vec![m.pad.v1, m.pad.u1]);
+                assert_eq!(a.args[1].shape, vec![m.pad.v2, m.pad.u2]);
+                assert_eq!(a.args[2].shape, vec![m.pad.u1, m.pad.f_in]);
+            }
         }
+    }
+
+    #[test]
+    fn batch1_names_round_trip() {
+        assert_eq!(Manifest::batch1_name("gcn"), "gcn_b1");
+        assert!(Manifest::is_batch1_name("gcn_b1"));
+        assert!(!Manifest::is_batch1_name("gcn"));
+        for m in ["gcn", "sage", "gin", "ggcn"] {
+            let v = Manifest::batch1_name(m);
+            assert!(Manifest::is_batch1_name(&v));
+            assert_eq!(Manifest::base_name(&v), Some(m), "variant resolves to its base");
+        }
+        assert_eq!(Manifest::base_name("gcn"), None, "primary entries have no base");
+    }
+
+    #[test]
+    fn serving_weights_are_pad_dependent_hence_base_sourced() {
+        // The reason Executor::load sources a _b1 variant's weights
+        // from its base artifact: the serving-weight stream consumes
+        // the pad-dependent (a1, a2, h) counts first, so the same
+        // model at different pads would otherwise get different
+        // weight values.
+        use crate::runtime::golden::serving_weights;
+        let mk = |u1: usize, v1: usize| ModelArtifact {
+            name: "t".into(),
+            hlo_path: "/dev/null".into(),
+            hlo_pallas_path: None,
+            args: vec![
+                ArgSpec { name: "a1".into(), shape: vec![v1, u1] },
+                ArgSpec { name: "a2".into(), shape: vec![2, v1] },
+                ArgSpec { name: "h".into(), shape: vec![u1, 6] },
+                ArgSpec { name: "w".into(), shape: vec![6, 4] },
+            ],
+            output_shape: vec![2, 4],
+            golden_seed: 42,
+            golden_row0: Vec::new(),
+        };
+        let full = serving_weights(&mk(32, 8));
+        let b1 = serving_weights(&mk(16, 4));
+        assert_eq!(full[0].len(), b1[0].len(), "weight shapes are pad-independent");
+        assert_ne!(full, b1, "values ARE pad-dependent — base sourcing is load-bearing");
     }
 
     #[test]

@@ -17,7 +17,8 @@ pub mod manifest;
 pub use executor::{Executor, LoadedModel};
 pub use golden::{golden_args, serving_weights};
 pub use inputs::{
-    build_args, build_args_cached, build_dynamic_args, build_dynamic_args_into, feature_rows,
-    fill_feature_row, fits_padding, norm_for_plan, FeatureSource, FeatureStore, MarshalScratch,
+    build_args, build_args_cached, build_dynamic_args, build_dynamic_args_into,
+    build_dynamic_args_staged, feature_rows, fill_feature_row, fits_padding, norm_for_plan,
+    FeatureSource, FeatureStore, MarshalScratch,
 };
 pub use manifest::{ArgSpec, Manifest, ModelArtifact, PadShapes};

@@ -10,7 +10,7 @@
 
 use super::batcher::BatchConfig;
 use super::loadgen::{generate_arrivals, ArrivalProcess, ModelMix};
-use super::shards::ServeStats;
+use super::shards::{PipelineConfig, ServeStats};
 use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
 use crate::coordinator::{
@@ -19,7 +19,11 @@ use crate::coordinator::{
 use crate::graph::CsrGraph;
 use crate::greta::ModelSpec;
 use anyhow::{anyhow, Result};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// The reply receiver a submission lane collects per arrival.
+type ReplyRx = mpsc::Receiver<Result<InferenceResponse, String>>;
 
 /// One open-loop measurement's configuration.
 #[derive(Debug, Clone)]
@@ -35,6 +39,8 @@ pub struct OpenLoopConfig {
     /// to construct it serve timing-only and are counted in
     /// `backend_fallbacks`).
     pub backend: BackendChoice,
+    /// Per-shard phase pipeline (prefetch lanes → vertex engine).
+    pub pipeline: PipelineConfig,
     /// Optional SLO-aware dynamic batching policy.
     pub batch: Option<BatchConfig>,
     pub grip: GripConfig,
@@ -44,6 +50,12 @@ pub struct OpenLoopConfig {
     pub custom_specs: Vec<ModelSpec>,
     pub cache_rows: usize,
     pub builders: usize,
+    /// Pacing lanes submitting the arrival schedule (0 = auto-scale
+    /// with the offered rate). One sleep+spin thread saturates around
+    /// ~50k submissions/s; beyond that the *submitter* throttled the
+    /// measured load — per-worker lanes (each a cloned
+    /// [`crate::coordinator::Submitter`]) keep the schedule honest.
+    pub submit_lanes: usize,
     pub seed: u64,
 }
 
@@ -55,14 +67,29 @@ impl Default for OpenLoopConfig {
             mix: ModelMix::default(),
             shards: 1,
             backend: BackendChoice::Fixed,
+            pipeline: PipelineConfig::default(),
             batch: None,
             grip: GripConfig::paper(),
             model_cfg: ModelConfig::paper(),
             custom_specs: Vec::new(),
             cache_rows: 4096,
             builders: 4,
+            submit_lanes: 0,
             seed: 17,
         }
+    }
+}
+
+impl OpenLoopConfig {
+    /// Resolved submitter-lane count: explicit, or one lane per ~25k
+    /// offered rps (capped at 8 — lanes pace disjoint slices of one
+    /// schedule, so more lanes than cores just fight over sleep
+    /// wakeups).
+    pub fn resolved_submit_lanes(&self) -> usize {
+        if self.submit_lanes > 0 {
+            return self.submit_lanes;
+        }
+        ((self.process.mean_rps() / 25_000.0).ceil() as usize).clamp(1, 8)
     }
 }
 
@@ -104,6 +131,15 @@ impl OpenLoopReport {
             ("jobs", self.stats.jobs as f64),
             ("timing_only_jobs", self.stats.timing_only_jobs as f64),
             ("backend_fallbacks", self.stats.backend_fallbacks as f64),
+            // Phase-pipeline health: how often each side of the
+            // lane → engine queue waited, and how full it ran —
+            // alongside the cycle sim's overlap fraction for the same
+            // jobs (host vs on-chip phase overlap, side by side).
+            ("staged_jobs", self.stats.staged_jobs as f64),
+            ("prefetch_stalls", self.stats.prefetch_stalls as f64),
+            ("engine_stalls", self.stats.engine_stalls as f64),
+            ("prefetch_occupancy", self.stats.prefetch_occupancy),
+            ("sim_phase_overlap", self.stats.sim_phase_overlap),
         ]
     }
 }
@@ -128,13 +164,19 @@ fn pace_until(origin: &Instant, due: Duration) {
 /// Run one open-loop measurement over (a clone of) `graph` with
 /// `cfg.backend` numerics on every shard (fixed-point by default; the
 /// per-shard PJRT engine sweeps too, now that nothing pins it to one
-/// shard).
+/// shard). Submissions are paced by `cfg.resolved_submit_lanes()`
+/// worker lanes — each owns a cloned [`crate::coordinator::Submitter`]
+/// and paces a disjoint round-robin slice of the schedule against the
+/// shared origin, so the offered load is achieved even past the
+/// ~50k rps where one sleep+spin thread used to become the bottleneck.
+/// Request ids, targets, and replies are identical for any lane count.
 pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
     let arrivals =
         generate_arrivals(cfg.process, &cfg.mix, cfg.requests, graph.num_vertices(), cfg.seed);
     let serve = ServeConfig {
         backend: cfg.backend,
         shards: cfg.shards,
+        pipeline: cfg.pipeline,
         batch: cfg.batch,
         grip: cfg.grip.clone(),
         model_cfg: cfg.model_cfg,
@@ -148,18 +190,46 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
     };
     let coord = Coordinator::start(graph.clone(), cfg.seed, serve)?;
     let shards = coord.shards();
+    let lanes = cfg.resolved_submit_lanes().max(1);
 
     let origin = Instant::now();
-    let mut pending = Vec::with_capacity(arrivals.len());
-    for (i, a) in arrivals.iter().enumerate() {
-        pace_until(&origin, Duration::from_secs_f64(a.t_us / 1e6));
-        pending.push(coord.submit(InferenceRequest::single(i as u64, a.model, a.target))?);
-    }
+    let mut pending: Vec<Option<ReplyRx>> = (0..arrivals.len()).map(|_| None).collect();
+    std::thread::scope(|scope| -> Result<()> {
+        // Scoped lanes: every Submitter clone dies here, before the
+        // coordinator, so pipeline shutdown can drain.
+        let handles: Vec<_> = (0..lanes)
+            .map(|w| {
+                let sub = coord.submitter();
+                let arrivals = &arrivals;
+                let origin = &origin;
+                scope.spawn(move || -> Result<Vec<(usize, ReplyRx)>> {
+                    let mut got = Vec::with_capacity(arrivals.len() / lanes + 1);
+                    for i in (w..arrivals.len()).step_by(lanes) {
+                        let a = &arrivals[i];
+                        pace_until(origin, Duration::from_secs_f64(a.t_us / 1e6));
+                        got.push((
+                            i,
+                            sub.submit(InferenceRequest::single(i as u64, a.model, a.target))?,
+                        ));
+                    }
+                    Ok(got)
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().map_err(|_| anyhow!("submitter lane panicked"))??;
+            for (i, rx) in got {
+                pending[i] = Some(rx);
+            }
+        }
+        Ok(())
+    })?;
     let mut e2e = LatencyStats::new();
     let mut service = LatencyStats::new();
     let mut accel = LatencyStats::new();
     let mut responses = Vec::with_capacity(pending.len());
     for rx in pending {
+        let rx = rx.ok_or_else(|| anyhow!("arrival never submitted"))?;
         let r = rx.recv().map_err(|_| anyhow!("pipeline dropped"))?.map_err(|e| anyhow!(e))?;
         e2e.record(r.host_us);
         service.record(r.service_us);
@@ -274,6 +344,63 @@ mod tests {
             assert!(!r.timing_only, "fixed-point numerics serve the spec");
             assert_eq!(r.embedding.len(), out_dim, "3-layer spec's final out_dim");
             assert!(r.accel_us > 0.0, "cycle sim timed the 3-layer nodeflow");
+        }
+    }
+
+    #[test]
+    fn submit_lanes_resolve_and_serve_identically() {
+        // Auto-scaling: low rates pace on one lane, huge rates fan out.
+        assert_eq!(tiny_cfg(100.0, 4).resolved_submit_lanes(), 1);
+        assert_eq!(tiny_cfg(60_000.0, 4).resolved_submit_lanes(), 3);
+        assert_eq!(tiny_cfg(1e9, 4).resolved_submit_lanes(), 8, "capped");
+        assert_eq!(
+            OpenLoopConfig { submit_lanes: 5, ..tiny_cfg(100.0, 4) }.resolved_submit_lanes(),
+            5,
+            "explicit overrides auto"
+        );
+        // Same schedule through 1 and 4 lanes: same replies per id.
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        let one = run_open_loop(
+            &g,
+            &OpenLoopConfig { submit_lanes: 1, ..tiny_cfg(3_000.0, 32) },
+        )
+        .unwrap();
+        let four = run_open_loop(
+            &g,
+            &OpenLoopConfig { submit_lanes: 4, ..tiny_cfg(3_000.0, 32) },
+        )
+        .unwrap();
+        assert_eq!(one.responses.len(), four.responses.len());
+        for (a, b) in one.responses.iter().zip(four.responses.iter()) {
+            assert_eq!(a.id, b.id, "responses collected in arrival order");
+            assert_eq!(a.embedding, b.embedding, "id {}: lane count changed numerics", a.id);
+        }
+    }
+
+    #[test]
+    fn report_carries_pipeline_metrics() {
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        let report = run_open_loop(&g, &tiny_cfg(2_000.0, 24)).unwrap();
+        let metrics = report.metrics();
+        for key in
+            ["staged_jobs", "prefetch_stalls", "engine_stalls", "prefetch_occupancy", "sim_phase_overlap"]
+        {
+            assert!(metrics.iter().any(|(k, _)| *k == key), "missing {key}");
+        }
+        // The default pipeline staged every job.
+        assert_eq!(report.stats.staged_jobs, 24);
+        // And the sequential path reports zero staged jobs.
+        let off = run_open_loop(
+            &g,
+            &OpenLoopConfig { pipeline: crate::serve::PipelineConfig::off(), ..tiny_cfg(2_000.0, 8) },
+        )
+        .unwrap();
+        assert_eq!(off.stats.staged_jobs, 0);
+        for (a, b) in off.responses.iter().zip(report.responses[..8].iter()) {
+            // Same seed → same schedule prefix → same targets; replies
+            // must agree across pipeline modes bit for bit.
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.embedding, b.embedding, "id {}: pipeline mode changed numerics", a.id);
         }
     }
 

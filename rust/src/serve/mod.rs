@@ -25,10 +25,15 @@
 //!  nodeflow-builder pool (PR 1): parallel sampling + CSR build
 //!      │  built nodeflows
 //!      ▼
-//!  shards — executor pool: K shards, each owning its own
-//!  NumericsBackend (crate::backend) built inside the shard
-//!  thread — fixed-point, per-shard PJRT clients, reference, or
-//!  timing-only — plus that backend's prepared per-model state
+//!  shards — executor pool: K phase-decoupled shards. Per shard,
+//!  N prefetch lanes (edge-centric: cycle sim + feature gather
+//!  through the shared cache into pooled StagedFeatures buffers)
+//!  feed a bounded ready queue consumed by the vertex engine —
+//!  the shard's NumericsBackend (crate::backend), built inside
+//!  its own thread: fixed-point, per-shard PJRT clients,
+//!  reference, or timing-only — so the gather for job i+1
+//!  overlaps the matmul for job i (GRIP's parallel prefetch
+//!  engines; `--pipeline off` restores the sequential loop)
 //!      │         │
 //!      │         ▼
 //!      │  feature_cache — one shared degree-aware clock cache of
@@ -63,5 +68,6 @@ pub use feature_cache::{DegreeClasses, FeatureCache};
 pub use harness::{poisson, run_open_loop, run_sweep, OpenLoopConfig, OpenLoopReport};
 pub use loadgen::{generate_arrivals, Arrival, ArrivalProcess, ModelMix};
 pub use shards::{
-    fixed_serving_args, CachedFeatures, ExecJob, ReplySlot, ServeStats, ShardPool, ShardSpec,
+    fixed_serving_args, CachedFeatures, ExecJob, PipelineConfig, ReplySlot, ServeStats,
+    ShardPool, ShardSpec,
 };

@@ -29,6 +29,20 @@ pub struct ActivityCounters {
     /// the serving feature cache's misses, so simulated and host-side
     /// hit rates are directly comparable (`BENCH_serve.json`).
     pub feature_rows_loaded: u64,
+    /// Cycles the edge-centric phase (feature prefetch streams over the
+    /// DRAM channels) kept the memory system busy — the on-chip
+    /// analogue of the serving layer's prefetch lanes.
+    pub prefetch_cycles: u64,
+    /// Cycles the vertex-centric phase (edge-accumulate + PE-array
+    /// matmul + update) kept the compute units busy — the analogue of
+    /// the serving layer's vertex engine.
+    pub compute_cycles: u64,
+    /// Busy cycles *hidden* by running the two phases concurrently
+    /// (serial phase sum minus the exposed span) — GRIP's inter-phase
+    /// pipelining win, mirrored host-side by the shard pipeline's
+    /// occupancy/stall counters so simulated and measured phase overlap
+    /// sit side by side in `BENCH_serve.json`.
+    pub overlap_cycles: u64,
 }
 
 impl ActivityCounters {
@@ -41,6 +55,9 @@ impl ActivityCounters {
         self.update_elems += other.update_elems;
         self.feature_rows_touched += other.feature_rows_touched;
         self.feature_rows_loaded += other.feature_rows_loaded;
+        self.prefetch_cycles += other.prefetch_cycles;
+        self.compute_cycles += other.compute_cycles;
+        self.overlap_cycles += other.overlap_cycles;
     }
 
     /// Fraction of feature-row touches served from the on-chip
@@ -57,6 +74,18 @@ impl ActivityCounters {
     pub fn total_ops(&self) -> u64 {
         2 * self.macs + self.edge_alu_ops + self.update_elems
     }
+
+    /// Fraction of phase-busy cycles hidden by edge/vertex overlap
+    /// (0.0 = fully serial phases, e.g. `pipeline_partitions` off).
+    /// The simulated counterpart of the serving pipeline's
+    /// prefetch-occupancy metric.
+    pub fn phase_overlap_rate(&self) -> f64 {
+        let busy = self.prefetch_cycles + self.compute_cycles;
+        if busy == 0 {
+            return 0.0;
+        }
+        self.overlap_cycles as f64 / busy as f64
+    }
 }
 
 #[cfg(test)]
@@ -72,5 +101,23 @@ mod tests {
         assert_eq!(a.macs, 7);
         assert_eq!(a.update_elems, 3);
         assert_eq!(a.total_ops(), 17);
+    }
+
+    #[test]
+    fn phase_overlap_rate_bounds() {
+        let none = ActivityCounters::default();
+        assert_eq!(none.phase_overlap_rate(), 0.0, "no busy cycles, no overlap");
+        let some = ActivityCounters {
+            prefetch_cycles: 60,
+            compute_cycles: 140,
+            overlap_cycles: 50,
+            ..Default::default()
+        };
+        assert!((some.phase_overlap_rate() - 0.25).abs() < 1e-12);
+        let mut sum = some;
+        sum.add(&some);
+        assert_eq!(sum.prefetch_cycles, 120);
+        assert_eq!(sum.overlap_cycles, 100);
+        assert!((sum.phase_overlap_rate() - 0.25).abs() < 1e-12, "rate is scale-invariant");
     }
 }

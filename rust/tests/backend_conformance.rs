@@ -11,7 +11,9 @@
 //!   pinning, no silent shard shrink), fall back to counted
 //!   timing-only serving, and stay shard-count independent.
 
-use grip::backend::{BackendChoice, BackendFactory, BackendScratch, Numerics, NumericsBackend};
+use grip::backend::{
+    BackendChoice, BackendFactory, BackendScratch, Numerics, NumericsBackend, StagedFeatures,
+};
 use grip::config::ModelConfig;
 use grip::coordinator::{Coordinator, InferenceRequest, InferenceResponse, ServeConfig};
 use grip::graph::{generate, CsrGraph, GeneratorParams};
@@ -71,6 +73,7 @@ fn run_direct(choice: BackendChoice, targets: &[u32]) -> Vec<(String, Vec<f32>, 
     let mut backend = BackendFactory::new(choice).build(0).expect("backend constructs");
     let sampler = Sampler::new(11);
     let mut scratch = BackendScratch::new();
+    let mut staged = StagedFeatures::new();
     let mut out = Vec::new();
     for key in lib.keys() {
         let plan = lib.plan(key);
@@ -79,7 +82,10 @@ fn run_direct(choice: BackendChoice, targets: &[u32]) -> Vec<(String, Vec<f32>, 
         for &t in targets {
             let nf = Nodeflow::build_layers(&g, &sampler, &[t], lib.samples(key));
             let mut store = FeatureStore::new();
-            let o = backend.execute(&prepared, &nf, &mut store, &mut scratch).expect("execute");
+            // Edge-centric phase first (what a prefetch lane does),
+            // then the vertex engine consumes the staged rows.
+            staged.stage(&nf, plan.layers[0].in_dim, &mut store);
+            let o = backend.execute(&prepared, &nf, &staged, &mut scratch).expect("execute");
             out.push((format!("{}@{t}", lib.name(key)), o.embeddings.to_vec(), o.numerics));
         }
     }
@@ -226,13 +232,15 @@ fn pjrt_backend_matches_fixed_backend_within_quantization_error() {
         let prepared_f = fixed.prepare(plan, &args).unwrap();
 
         let mut store = FeatureStore::new();
+        let mut staged = StagedFeatures::new();
+        staged.stage(&nf, mc.f_in, &mut store);
         let float = {
-            let o = pjrt.execute(&prepared_p, &nf, &mut store, &mut scratch_p).unwrap();
+            let o = pjrt.execute(&prepared_p, &nf, &staged, &mut scratch_p).unwrap();
             assert_eq!(o.numerics, Numerics::Float, "{model:?}");
             o.embeddings.to_vec()
         };
         let fx = {
-            let o = fixed.execute(&prepared_f, &nf, &mut store, &mut scratch_f).unwrap();
+            let o = fixed.execute(&prepared_f, &nf, &staged, &mut scratch_f).unwrap();
             assert_eq!(o.numerics, Numerics::FixedQ412, "{model:?}");
             o.embeddings.to_vec()
         };

@@ -8,12 +8,21 @@
 //! * The sharded executor pool is bit-identical to the single-executor
 //!   path — and to a from-scratch single-threaded execution — for the
 //!   same request set.
+//! * The PR-5 phase-decoupled shard pipeline is bit-identical to the
+//!   sequential `--pipeline off` loop (and to the same from-scratch
+//!   reference) for every (lanes, depth), every preset, and a depth-3
+//!   custom spec: scheduling may never change numerics.
 
 use grip::backend::BackendChoice;
 use grip::config::ModelConfig;
-use grip::coordinator::{Coordinator, InferenceRequest, InferenceResponse, ServeConfig};
+use grip::coordinator::{
+    Coordinator, InferenceRequest, InferenceResponse, PipelineConfig, ServeConfig,
+};
 use grip::graph::{generate, CsrGraph, GeneratorParams};
-use grip::greta::{compile, execute_model_into, ExecScratch, GnnModel, PlanArgs};
+use grip::greta::{
+    compile, execute_model_into, Activate, ExecScratch, GnnModel, LayerSpec, ModelKey,
+    ModelLibrary, ModelSpec, PlanArgs, ProgramSpec, ReduceOp,
+};
 use grip::nodeflow::{Nodeflow, Sampler};
 use grip::rng::SplitMix64;
 use grip::runtime::fill_feature_row;
@@ -169,6 +178,117 @@ fn prop_shard_pool_bit_identical_to_single_executor() {
         assert_eq!(a.accel_us, b.accel_us, "id {}: shard count changed timing", a.id);
         assert_eq!(a.neighborhood, b.neighborhood);
         assert!(!a.timing_only && !b.timing_only);
+    }
+}
+
+// --------------------------- phase-pipeline numeric bit-identity (PR 5)
+
+/// A depth-3 mean-aggregate spec with dims unrelated to `ModelConfig`
+/// (8 → 6 → 5 → 3) — deeper-than-preset coverage for the pipeline.
+fn depth3_spec() -> ModelSpec {
+    ModelSpec::builder("tri3")
+        .layer(LayerSpec::new(8, 6).sample(3).program(
+            ProgramSpec::new("t0")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w0", 8, 6)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(6, 5).sample(2).program(
+            ProgramSpec::new("t1")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w1", 6, 5)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(5, 3).sample(2).program(
+            ProgramSpec::new("t2")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w2", 5, 3)
+                .activate(Activate::Relu),
+        ))
+        .build()
+}
+
+/// Serve `reqs` (mixed presets + the depth-3 spec) through a 3-shard
+/// fixed-point coordinator with the given pipeline policy.
+fn serve_all_pipelined(
+    graph: &CsrGraph,
+    pipeline: PipelineConfig,
+    reqs: &[(ModelKey, u32)],
+) -> Vec<InferenceResponse> {
+    let cfg = ServeConfig {
+        pipeline,
+        custom_specs: vec![depth3_spec()],
+        ..fixed_cfg(3)
+    };
+    let coord = Coordinator::start(graph.clone(), 11, cfg).unwrap();
+    let pending: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, t))| coord.submit(InferenceRequest::single(i as u64, m, t)).unwrap())
+        .collect();
+    pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect()
+}
+
+#[test]
+fn prop_pipelined_pool_bit_identical_to_sequential_and_reference() {
+    // THE PR-5 property: for a (lanes × depth) grid — including the
+    // defaults and a depth-3 custom spec in the mix — pipelined replies
+    // equal the sequential `--pipeline off` replies equal a
+    // from-scratch single-threaded execution, bit for bit.
+    let graph = serving_graph(13);
+    let mc = small_mc();
+    let weight_seed = ServeConfig::default().weight_seed;
+    let (lib, _) = ModelLibrary::with_customs(&mc, &[depth3_spec()]).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    assert_eq!(keys.len(), 5, "4 presets + tri3");
+    let mut rng = SplitMix64::new(41);
+    let reqs: Vec<(ModelKey, u32)> = (0..30)
+        .map(|i| (keys[i % keys.len()], rng.gen_range(1_500) as u32))
+        .collect();
+
+    let sequential = serve_all_pipelined(&graph, PipelineConfig::off(), &reqs);
+    assert!(sequential.iter().all(|r| !r.timing_only));
+
+    // Every preset and the custom spec against the pipelined pool over
+    // the full grid (the defaults 2x2 included).
+    for (lanes, depth) in [(1, 1), (1, 3), (2, 2), (4, 1), (4, 3)] {
+        let pipelined =
+            serve_all_pipelined(&graph, PipelineConfig::lanes_depth(lanes, depth), &reqs);
+        assert_eq!(pipelined.len(), sequential.len());
+        for (a, b) in sequential.iter().zip(pipelined.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.embedding, b.embedding,
+                "id {}: pipeline {lanes}x{depth} changed numerics",
+                a.id
+            );
+            assert_eq!(a.accel_us, b.accel_us, "id {}: timing changed", a.id);
+            assert_eq!(a.neighborhood, b.neighborhood);
+        }
+    }
+
+    // From-scratch single-threaded reference: same sampler seed, same
+    // serving weights, same synthesized features — no hidden state in
+    // either pipeline mode.
+    let sampler = Sampler::new(11);
+    let mut scratch = ExecScratch::new();
+    let mut out = Vec::new();
+    for (i, &(key, t)) in reqs.iter().enumerate() {
+        let plan = lib.plan(key);
+        let pargs = PlanArgs::resolve(plan, &fixed_serving_args(plan, weight_seed)).unwrap();
+        let nf = Nodeflow::build_layers(&graph, &sampler, &[t], lib.samples(key));
+        let in_dim = plan.layers[0].in_dim;
+        let l0 = &nf.layers[0];
+        let mut h = vec![0f32; l0.num_inputs() * in_dim];
+        for (r, &v) in l0.inputs.iter().enumerate() {
+            fill_feature_row(v, &mut h[r * in_dim..(r + 1) * in_dim]);
+        }
+        execute_model_into(plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
+        assert_eq!(
+            sequential[i].embedding, out,
+            "request {i} ({}@{t}) diverged from the reference",
+            lib.name(key)
+        );
     }
 }
 
