@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare a freshly measured BENCH_serve.json
+against the committed baseline and fail on large regressions.
+
+Usage: bench_gate.py COMMITTED_JSON FRESH_JSON [--threshold PCT]
+
+Gated metrics, per section:
+  * every key ending in ``_p99_us`` (tail latency)
+  * ``steady_state_allocs_per_request`` (the PR-1 zero-alloc criterion)
+
+A metric regresses when ``fresh > committed * (1 + threshold)``
+(default threshold 20%). Null committed values are skipped — the
+committed file is still the schema-only placeholder until someone
+copies a measured CI artifact over it — so the gate arms itself
+automatically the moment real numbers land. Exits 0 while every
+gated committed value is null.
+
+Stdlib-only on purpose: the CI bench job runs it with a bare python3.
+"""
+
+import argparse
+import json
+import sys
+
+
+GATED_SUFFIXES = ("_p99_us",)
+GATED_KEYS = ("steady_state_allocs_per_request",)
+
+
+def is_gated(key):
+    return key.endswith(GATED_SUFFIXES) or key in GATED_KEYS
+
+
+def gated_metrics(doc):
+    """Yield (section, key, value) for every gated metric in the doc."""
+    for section, metrics in doc.items():
+        if not isinstance(metrics, dict):
+            continue
+        for key, value in metrics.items():
+            if is_gated(key):
+                yield section, key, value
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("committed", help="baseline BENCH_serve.json (repo copy)")
+    ap.add_argument("fresh", help="freshly measured BENCH_serve.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=20.0,
+        help="allowed regression in percent (default: 20)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.committed) as f:
+        committed = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    compared = 0
+    skipped = 0
+    failures = []
+    for section, key, base in gated_metrics(committed):
+        if base is None:
+            skipped += 1
+            continue
+        new = fresh.get(section, {}).get(key)
+        if new is None:
+            # A gated metric vanished from the fresh run: schema drift
+            # or a dropped sweep point — surface it rather than pass.
+            failures.append(f"{section}/{key}: committed {base} but missing from fresh run")
+            continue
+        compared += 1
+        # allocs/request can legitimately be 0.0; guard the ratio.
+        limit = base * (1.0 + args.threshold / 100.0) + 1e-9
+        if new > limit:
+            pct = (new - base) / base * 100.0 if base else float("inf")
+            failures.append(
+                f"{section}/{key}: {base:.3f} -> {new:.3f} (+{pct:.1f}% > {args.threshold:.0f}%)"
+            )
+
+    if skipped and not compared and not failures:
+        print(
+            f"bench gate: all {skipped} gated committed values are null "
+            "(placeholder baseline) — skipping"
+        )
+        return 0
+    if failures:
+        print(f"bench gate: {len(failures)} regression(s) vs {args.committed}:")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        return 1
+    print(f"bench gate: {compared} gated metric(s) within {args.threshold:.0f}% ({skipped} null-skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

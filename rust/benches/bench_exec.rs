@@ -12,7 +12,7 @@ use grip::backend::BackendChoice;
 use grip::benchutil::{bench, black_box, write_bench_json};
 use grip::config::ModelConfig;
 use grip::coordinator::{run_workload, BatchConfig, Coordinator, LatencyStats, ServeConfig};
-use grip::graph::{generate, GeneratorParams};
+use grip::graph::{generate, GeneratorParams, PartitionStrategy};
 use grip::greta::{
     compile, exec_test_args, execute_model_into, execute_model_ref, ExecScratch, GnnModel,
     PlanArgs,
@@ -62,8 +62,13 @@ fn main() {
         nf.total_edges()
     );
 
-    let mut sections: Vec<(&str, Vec<(&str, f64)>)> = Vec::new();
+    let mut sections: Vec<(String, Vec<(String, f64)>)> = Vec::new();
     let mut micro: Vec<(&str, f64)> = Vec::new();
+    // Static sections keep `&str` labels locally; `owned` lifts them to
+    // the String-keyed shape the partitioned sweep reports use.
+    let owned = |name: &str, metrics: Vec<(&str, f64)>| {
+        (name.to_string(), metrics.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    };
 
     let plan = compile(GnnModel::Gcn, &mc);
     let mut args = exec_test_args(&plan, 9);
@@ -110,7 +115,7 @@ fn main() {
     micro.push(("csr_mean_us", csr_r.mean_us));
     micro.push(("speedup", speedup));
     micro.push(("steady_state_allocs_per_request", allocs_per_req));
-    sections.push(("exec_microbench", micro));
+    sections.push(owned("exec_microbench", micro));
 
     // ---------------- serving pipeline: 500 requests, timing path ----------
     println!("\n== serving pipeline: 500 requests over the 10k-node graph ==");
@@ -143,7 +148,7 @@ fn main() {
     );
     assert_eq!(responses.len(), requests);
 
-    sections.push((
+    sections.push(owned(
         "serve",
         vec![
             ("requests", requests as f64),
@@ -173,20 +178,33 @@ fn main() {
         seed: 17,
         ..Default::default()
     };
-    let sweep = run_sweep(&g_sweep, &[50.0, 100.0, 200.0], &[1, 4], &base, poisson).expect("sweep");
+    let mut sweep =
+        run_sweep(&g_sweep, &[50.0, 100.0, 200.0], &[1, 4], &base, poisson).expect("sweep");
+    // Partitioned points (PR 6): same load at 4 shards with degree- and
+    // hash-partitioned caches + routing, so BENCH_serve.json tracks
+    // edge-cut, balance, per-partition hit rates, and boundary-fetch
+    // latency alongside the shared-cache baseline.
+    for strategy in [PartitionStrategy::Degree, PartitionStrategy::Hash] {
+        let part_base = OpenLoopConfig { partition: strategy, ..base.clone() };
+        sweep.extend(
+            run_sweep(&g_sweep, &[100.0], &[4], &part_base, poisson).expect("partitioned sweep"),
+        );
+    }
     for (label, r) in &sweep {
         println!(
-            "{label:<32} e2e p50 {:>9.0} µs p99 {:>9.0} µs | cache hit {:>5.1}% (sim {:>5.1}%)",
+            "{label:<40} e2e p50 {:>9.0} µs p99 {:>9.0} µs | cache hit {:>5.1}% (sim {:>5.1}%) | cut {:>5.1}% bfetch {}",
             r.e2e.p50(),
             r.e2e.p99(),
             r.stats.cache_hit_rate * 100.0,
-            r.stats.sim_feature_hit_rate * 100.0
+            r.stats.sim_feature_hit_rate * 100.0,
+            r.stats.edge_cut_fraction * 100.0,
+            r.stats.boundary_fetches,
         );
     }
 
     let mut all = sections;
     for (label, r) in &sweep {
-        all.push((label.as_str(), r.metrics()));
+        all.push((label.clone(), r.metrics()));
     }
     let repo_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -55,22 +55,25 @@ pub fn black_box<T>(x: T) -> T {
 /// the offline vendored crate set, so the emitter is hand-rolled).
 ///
 /// Output shape: `{"section": {"metric": 1.23, ...}, ...}` with keys in
-/// the given order. Non-finite values are written as `null`.
-pub fn write_bench_json(
+/// the given order. Non-finite values are written as `null`. Generic
+/// over the key types so callers can mix static labels with the
+/// per-partition keys (`part{i}_hit_rate`, ...) a partitioned serve
+/// report generates at runtime.
+pub fn write_bench_json<S: AsRef<str>, K: AsRef<str>>(
     path: &std::path::Path,
-    sections: &[(&str, Vec<(&str, f64)>)],
+    sections: &[(S, Vec<(K, f64)>)],
 ) -> std::io::Result<()> {
     use std::io::Write;
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(f, "{{")?;
     for (si, (section, metrics)) in sections.iter().enumerate() {
-        writeln!(f, "  {:?}: {{", section)?;
+        writeln!(f, "  {:?}: {{", section.as_ref())?;
         for (mi, (name, value)) in metrics.iter().enumerate() {
             let comma = if mi + 1 < metrics.len() { "," } else { "" };
             if value.is_finite() {
-                writeln!(f, "    {:?}: {:.3}{}", name, value, comma)?;
+                writeln!(f, "    {:?}: {:.3}{}", name.as_ref(), value, comma)?;
             } else {
-                writeln!(f, "    {:?}: null{}", name, comma)?;
+                writeln!(f, "    {:?}: null{}", name.as_ref(), comma)?;
             }
         }
         let comma = if si + 1 < sections.len() { "," } else { "" };

@@ -26,8 +26,12 @@
 //!                                  built inside the shard thread — so
 //!                                  even the non-Send PJRT client scales
 //!                                  out, one client + device-resident
-//!                                  weights per shard — all fronted by
-//!                                  one shared degree-aware feature cache
+//!                                  weights per shard — fronted by one
+//!                                  shared degree-aware feature cache,
+//!                                  or (ServeConfig::partition) by
+//!                                  partition-local caches behind a
+//!                                  degree-balanced router with a
+//!                                  cross-shard boundary-fetch path
 //!                                             │
 //!                                             ▼
 //!                                      per-request replies (a coalesced
@@ -56,7 +60,7 @@
 use super::metrics::LatencyStats;
 use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, PartitionStrategy};
 use crate::greta::{ModelKey, ModelLibrary, ModelSpec};
 use crate::nodeflow::{Nodeflow, Sampler};
 use crate::runtime::Manifest;
@@ -268,6 +272,15 @@ pub struct ServeConfig {
     pub built_depth: usize,
     /// Executor shards (every backend scales out).
     pub shards: usize,
+    /// Graph partitioning across the shards (`--partition` on the CLI).
+    /// `Off` (the default) keeps PR-5 behavior: one shared job queue
+    /// and one shared feature cache. `Degree`/`Hash` give each shard a
+    /// home partition: jobs are routed to their target's owner, each
+    /// shard caches only its own partition's rows (the `cache_rows`
+    /// budget split by largest remainder), and remote layer-0 inputs
+    /// travel the cross-shard boundary-fetch path. Replies are
+    /// bit-identical in every mode.
+    pub partition: PartitionStrategy,
     /// Per-shard phase pipeline: prefetch lanes gathering features
     /// through the shared cache feed the shard's vertex engine through
     /// a bounded ready queue, so the gather for one job overlaps the
@@ -304,6 +317,7 @@ impl Default for ServeConfig {
             builders: 4,
             built_depth: 64,
             shards: 1,
+            partition: PartitionStrategy::Off,
             pipeline: PipelineConfig::default(),
             batch: None,
             cache_rows: spec.cache_rows,
@@ -317,6 +331,7 @@ impl ServeConfig {
     fn shard_spec(&self) -> ShardSpec {
         ShardSpec {
             shards: self.shards,
+            partition: self.partition,
             grip: self.grip.clone(),
             model_cfg: self.model_cfg,
             backend: self.backend,
@@ -882,6 +897,37 @@ mod tests {
         assert_eq!(a.accel_us, b.accel_us);
         let s = off.serve_stats();
         assert_eq!(s.staged_jobs, 0, "sequential loop stages nothing across a queue");
+    }
+
+    #[test]
+    fn partitioned_coordinator_serves_bit_identically() {
+        // End-to-end through the coordinator: a degree-partitioned pool
+        // must reply byte-for-byte like the unpartitioned one, while
+        // actually routing jobs and reporting partition stats.
+        let g = graph();
+        let off = Coordinator::start(g.clone(), 7, fixed_cfg(2)).unwrap();
+        let want: Vec<InferenceResponse> = (0..12u32)
+            .map(|i| off.infer(InferenceRequest::single(i as u64, GnnModel::Gcn, i * 97)).unwrap())
+            .collect();
+        drop(off);
+        let cfg = ServeConfig {
+            partition: PartitionStrategy::Degree,
+            cache_rows: 256,
+            ..fixed_cfg(2)
+        };
+        let coord = Coordinator::start(g, 7, cfg).unwrap();
+        for (i, w) in want.iter().enumerate() {
+            let r = coord
+                .infer(InferenceRequest::single(i as u64, GnnModel::Gcn, i as u32 * 97))
+                .unwrap();
+            assert_eq!(r.embedding, w.embedding, "id {i}: partitioning changed numerics");
+            assert_eq!(r.accel_us, w.accel_us, "id {i}: partitioning changed sim timing");
+        }
+        let s = coord.serve_stats();
+        assert_eq!(s.partition, "degree");
+        assert_eq!(s.routed_jobs.iter().sum::<u64>(), 12, "every job went through the router");
+        assert_eq!(s.cache_rows_total, 256, "budget preserved across the split");
+        assert_eq!(s.shard_cache_rows.len(), 2);
     }
 
     #[test]

@@ -13,7 +13,9 @@
 mod csr;
 mod datasets;
 mod generator;
+mod partition;
 
 pub use csr::CsrGraph;
 pub use datasets::{Dataset, DatasetSpec, TABLE1};
 pub use generator::{generate, GeneratorParams};
+pub use partition::{PartitionStats, PartitionStrategy, Partitioning};

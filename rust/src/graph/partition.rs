@@ -1,0 +1,319 @@
+//! Vertex partitioning for partition-local serving (PR 6).
+//!
+//! GRIP's prefetch engines win because each one streams features for a
+//! bounded slice of the graph; giving every executor shard the whole
+//! graph and one shared cache throws that locality away. This module
+//! produces deterministic vertex partitions over a [`CsrGraph`] so each
+//! shard of the serving pool can own a **partition-local** feature
+//! cache and only pull boundary rows from its peers.
+//!
+//! Two strategies:
+//!
+//! * **Degree-balanced** — LPT greedy over out-degree: vertices are
+//!   assigned in descending degree order to the partition with the
+//!   least accumulated degree. This balances *edge work* (feature
+//!   gathers scale with degree, not vertex count), the quantity GNNIE's
+//!   degree-aware load balancing targets. The classic LPT bound gives
+//!   `max_load <= mean_load + max_degree`, which the unit tests pin.
+//! * **Hash baseline** — SplitMix64-finalizer of the vertex id, modulo
+//!   the part count. Near-perfect vertex-count balance, oblivious to
+//!   degree and locality; the control arm for the bench sweep.
+//!
+//! Both are pure functions of `(graph, parts)` — no RNG state — so the
+//! same graph always routes the same way, which the bit-identity
+//! property tests rely on.
+
+use crate::graph::CsrGraph;
+
+/// Which vertex-partitioning pass the serving pool should run.
+/// `Off` preserves the PR-5 behavior: every shard sees the whole graph
+/// and shares one feature cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionStrategy {
+    Degree,
+    Hash,
+    #[default]
+    Off,
+}
+
+impl PartitionStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Degree => "degree",
+            PartitionStrategy::Hash => "hash",
+            PartitionStrategy::Off => "off",
+        }
+    }
+
+    /// Parse a CLI spelling (`degree|hash|off`).
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "degree" => Some(PartitionStrategy::Degree),
+            "hash" => Some(PartitionStrategy::Hash),
+            "off" => Some(PartitionStrategy::Off),
+            _ => None,
+        }
+    }
+}
+
+/// Per-partition occupancy and cut statistics, computed once at build
+/// time and surfaced through `ServeStats` / `BENCH_serve.json`.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionStats {
+    pub parts: usize,
+    /// Vertices owned by each partition.
+    pub vertices: Vec<usize>,
+    /// Sum of owned out-degrees per partition (the "edge work" LPT
+    /// balances).
+    pub edges: Vec<u64>,
+    /// Edges whose endpoint lives on a different partition than its
+    /// source — each one is a potential boundary fetch.
+    pub cut_edges: u64,
+    pub total_edges: u64,
+    /// `max(edges) / mean(edges)`: 1.0 is perfect degree balance.
+    pub balance: f64,
+}
+
+impl PartitionStats {
+    /// Fraction of edges crossing partitions (0.0 for 1 part or an
+    /// edgeless graph).
+    pub fn edge_cut_fraction(&self) -> f64 {
+        if self.total_edges == 0 {
+            0.0
+        } else {
+            self.cut_edges as f64 / self.total_edges as f64
+        }
+    }
+}
+
+/// A vertex → partition assignment plus its stats.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    strategy: PartitionStrategy,
+    parts: usize,
+    /// `owner[v]` = partition owning vertex `v`.
+    owner: Vec<u32>,
+    stats: PartitionStats,
+}
+
+/// SplitMix64 finalizer: a stateless avalanche of the vertex id, so the
+/// hash baseline needs no RNG object and stays order-independent.
+fn mix64(v: u64) -> u64 {
+    let mut z = v.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Partitioning {
+    /// Partition `g` into `parts` pieces. `parts == 0` is treated as 1;
+    /// `Off` degenerates to one part owning everything (so callers can
+    /// route unconditionally).
+    pub fn build(strategy: PartitionStrategy, g: &CsrGraph, parts: usize) -> Self {
+        let parts = match strategy {
+            PartitionStrategy::Off => 1,
+            _ => parts.max(1),
+        };
+        let n = g.num_vertices();
+        let mut owner = vec![0u32; n];
+        match strategy {
+            PartitionStrategy::Off => {}
+            PartitionStrategy::Hash => {
+                for (v, o) in owner.iter_mut().enumerate() {
+                    *o = (mix64(v as u64) % parts as u64) as u32;
+                }
+            }
+            PartitionStrategy::Degree => {
+                // LPT greedy: highest degree first, ties by vertex id,
+                // each into the currently lightest part (ties by part
+                // index). Deterministic and O(n log n + n·p); p is the
+                // shard count (single digits), so the linear min scan
+                // beats a heap here.
+                let mut order: Vec<u32> = (0..n as u32).collect();
+                order.sort_unstable_by(|&a, &b| {
+                    g.degree(b).cmp(&g.degree(a)).then(a.cmp(&b))
+                });
+                let mut load = vec![0u64; parts];
+                for v in order {
+                    let mut best = 0;
+                    for p in 1..parts {
+                        if load[p] < load[best] {
+                            best = p;
+                        }
+                    }
+                    owner[v as usize] = best as u32;
+                    load[best] += g.degree(v) as u64;
+                }
+            }
+        }
+        let stats = Self::compute_stats(g, &owner, parts);
+        Self { strategy, parts, owner, stats }
+    }
+
+    fn compute_stats(g: &CsrGraph, owner: &[u32], parts: usize) -> PartitionStats {
+        let mut vertices = vec![0usize; parts];
+        let mut edges = vec![0u64; parts];
+        let mut cut_edges = 0u64;
+        for v in 0..g.num_vertices() as u32 {
+            let p = owner[v as usize] as usize;
+            vertices[p] += 1;
+            edges[p] += g.degree(v) as u64;
+            for &dst in g.neighbors(v) {
+                if owner[dst as usize] != owner[v as usize] {
+                    cut_edges += 1;
+                }
+            }
+        }
+        let total_edges = g.num_edges() as u64;
+        let max = edges.iter().copied().max().unwrap_or(0) as f64;
+        let mean = total_edges as f64 / parts as f64;
+        let balance = if mean > 0.0 { max / mean } else { 1.0 };
+        PartitionStats { parts, vertices, edges, cut_edges, total_edges, balance }
+    }
+
+    pub fn strategy(&self) -> PartitionStrategy {
+        self.strategy
+    }
+
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Home partition of vertex `v`.
+    #[inline]
+    pub fn owner(&self, v: u32) -> usize {
+        self.owner[v as usize] as usize
+    }
+
+    pub fn stats(&self) -> &PartitionStats {
+        &self.stats
+    }
+
+    /// Out-degrees of the vertices owned by partition `p` — the input
+    /// for recalibrating `DegreeClasses` per partition.
+    pub fn owned_degrees(&self, g: &CsrGraph, p: usize) -> Vec<usize> {
+        (0..g.num_vertices() as u32)
+            .filter(|&v| self.owner[v as usize] as usize == p)
+            .map(|v| g.degree(v))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, GeneratorParams};
+
+    fn zipf_graph(nodes: usize) -> CsrGraph {
+        generate(&GeneratorParams { nodes, mean_degree: 8.0, ..Default::default() })
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in [PartitionStrategy::Degree, PartitionStrategy::Hash, PartitionStrategy::Off] {
+            assert_eq!(PartitionStrategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(PartitionStrategy::from_name("metis"), None);
+        assert_eq!(PartitionStrategy::default(), PartitionStrategy::Off);
+    }
+
+    #[test]
+    fn off_is_a_single_part_owning_everything() {
+        let g = zipf_graph(500);
+        let p = Partitioning::build(PartitionStrategy::Off, &g, 4);
+        assert_eq!(p.parts(), 1);
+        assert!((0..500u32).all(|v| p.owner(v) == 0));
+        assert_eq!(p.stats().cut_edges, 0);
+        assert_eq!(p.stats().edge_cut_fraction(), 0.0);
+        assert!((p.stats().balance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degree_partition_meets_the_lpt_balance_bound() {
+        // LPT guarantee: when the greedy assigns vertex v to the
+        // lightest part, that part's load is <= the running mean, so
+        // max_load <= mean_load + max_degree. Pin it on a zipf graph
+        // whose hubs make naive round-robin badly unbalanced.
+        let g = zipf_graph(4_000);
+        for parts in [2usize, 3, 4, 7] {
+            let p = Partitioning::build(PartitionStrategy::Degree, &g, parts);
+            let stats = p.stats();
+            let mean = stats.total_edges as f64 / parts as f64;
+            let max_degree =
+                (0..g.num_vertices() as u32).map(|v| g.degree(v)).max().unwrap() as f64;
+            let max_load = *stats.edges.iter().max().unwrap() as f64;
+            assert!(
+                max_load <= mean + max_degree,
+                "parts={parts}: max {max_load} > mean {mean} + max_degree {max_degree}"
+            );
+            assert_eq!(stats.vertices.iter().sum::<usize>(), g.num_vertices());
+            assert_eq!(stats.edges.iter().sum::<u64>(), stats.total_edges);
+            assert!(stats.balance >= 1.0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn degree_beats_hash_on_edge_balance() {
+        let g = zipf_graph(4_000);
+        let deg = Partitioning::build(PartitionStrategy::Degree, &g, 4);
+        let hash = Partitioning::build(PartitionStrategy::Hash, &g, 4);
+        assert!(
+            deg.stats().balance <= hash.stats().balance + 1e-9,
+            "degree balance {} vs hash {}",
+            deg.stats().balance,
+            hash.stats().balance
+        );
+    }
+
+    #[test]
+    fn hash_partition_is_vertex_balanced_and_deterministic() {
+        let g = zipf_graph(2_000);
+        let a = Partitioning::build(PartitionStrategy::Hash, &g, 4);
+        let b = Partitioning::build(PartitionStrategy::Hash, &g, 4);
+        assert_eq!(a.owner, b.owner, "stateless hash must be reproducible");
+        let min = *a.stats().vertices.iter().min().unwrap();
+        let max = *a.stats().vertices.iter().max().unwrap();
+        // 2000 vertices over 4 parts: splitmix spreads within a few
+        // percent of 500 each.
+        assert!(min > 400 && max < 600, "hash spread {min}..{max}");
+    }
+
+    #[test]
+    fn cut_edges_match_a_direct_count() {
+        let g = zipf_graph(600);
+        let p = Partitioning::build(PartitionStrategy::Degree, &g, 3);
+        let mut cut = 0u64;
+        for v in 0..g.num_vertices() as u32 {
+            for &dst in g.neighbors(v) {
+                if p.owner(dst) != p.owner(v) {
+                    cut += 1;
+                }
+            }
+        }
+        assert_eq!(p.stats().cut_edges, cut);
+        assert!(p.stats().edge_cut_fraction() > 0.0, "3 parts must cut something");
+        assert!(p.stats().edge_cut_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn owned_degrees_cover_the_partition() {
+        let g = zipf_graph(800);
+        let p = Partitioning::build(PartitionStrategy::Degree, &g, 4);
+        for part in 0..4 {
+            let ds = p.owned_degrees(&g, part);
+            assert_eq!(ds.len(), p.stats().vertices[part]);
+            assert_eq!(ds.iter().map(|&d| d as u64).sum::<u64>(), p.stats().edges[part]);
+        }
+    }
+
+    #[test]
+    fn single_part_owns_everything_under_any_strategy() {
+        let g = zipf_graph(300);
+        for s in [PartitionStrategy::Degree, PartitionStrategy::Hash] {
+            let p = Partitioning::build(s, &g, 1);
+            assert_eq!(p.parts(), 1);
+            assert_eq!(p.stats().cut_edges, 0);
+            assert!((p.stats().balance - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -15,7 +15,7 @@
 use grip::backend::{BackendChoice, BACKEND_NAME_HELP};
 use grip::config::{GripConfig, ModelConfig};
 use grip::coordinator::{run_workload, Coordinator, ServeConfig};
-use grip::graph::Dataset;
+use grip::graph::{Dataset, PartitionStrategy};
 use grip::greta::{compile, GnnModel, ModelLibrary, ModelSpec, MODEL_NAME_HELP};
 use grip::nodeflow::{Nodeflow, Sampler};
 use grip::repro::ReproCtx;
@@ -31,12 +31,14 @@ fn usage() -> ! {
            repro   --exp <table1|table2|table3|table4|fig2|fig9a|fig9b|fig10a..d|fig11a|fig11b|fig12|fig13a|fig13b|all>\n\
                    [--scale S=0.01] [--targets N=128] [--seed K=17]\n\
            serve   [--model M] [--model-spec FILE.json] [--dataset yt|lj|po|rd] [--requests N=256]\n\
-                   [--scale S=0.01] [--backend B] [--no-numerics]\n\
+                   [--scale S=0.01] [--backend B] [--no-numerics] [--shards K=1]\n\
+                   [--partition degree|hash|off] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
+                   [--partition P1,P2,..=off (degree|hash|off)] [--target-skew S=0 (Zipf exponent)]\n\
                    [--no-batching] [--bursty] [--paper-dims] [--model-spec FILE.json]\n\
-                   [--backend B=fixed] [--seed K=17] [--out PATH]\n\
+                   [--backend B=fixed] [--seed K=17] [--out PATH] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
                    [--submit-lanes W=0 (auto)]\n\
            sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
@@ -51,7 +53,12 @@ fn usage() -> ! {
            --no-numerics is the legacy spelling of --backend timing)\n\
          --prefetch-lanes/--pipeline-depth shape each shard's phase pipeline (edge-centric\n\
            feature-prefetch lanes feeding the vertex engine; --pipeline off = sequential loop;\n\
-           replies are bit-identical either way)"
+           replies are bit-identical either way)\n\
+         --partition shards the graph: degree (LPT degree-balanced) or hash partitions with\n\
+           partition-local feature caches, home-shard routing, and cross-shard boundary\n\
+           fetches; off = one shared queue + cache (examples/SHARDING.md; replies are\n\
+           bit-identical in every mode)\n\
+         --target-skew draws serve-bench targets Zipf(s) instead of uniformly (0 = uniform)"
     );
     std::process::exit(2);
 }
@@ -176,6 +183,34 @@ impl Args {
         Ok(pc)
     }
 
+    /// Parse a single `--partition` strategy (serve; default `off`).
+    fn partition(&self) -> anyhow::Result<PartitionStrategy> {
+        match self.get("partition") {
+            None => Ok(PartitionStrategy::Off),
+            Some(name) => PartitionStrategy::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --partition {name:?}; accepted: degree | hash | off")
+            }),
+        }
+    }
+
+    /// Parse the comma-separated `--partition` sweep list (serve-bench;
+    /// default `off` keeps the PR-5 label set and sweep cost).
+    fn partition_list(&self) -> anyhow::Result<Vec<PartitionStrategy>> {
+        let s = self.get("partition").unwrap_or("off");
+        let mut out = Vec::new();
+        for tok in s.split(',') {
+            let name = tok.trim();
+            let p = PartitionStrategy::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --partition entry {name:?}; accepted: degree | hash | off")
+            })?;
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "--partition list is empty");
+        Ok(out)
+    }
+
     fn dataset(&self) -> Dataset {
         self.get("dataset")
             .map(|s| Dataset::from_name(s).unwrap_or_else(|| usage()))
@@ -232,15 +267,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     });
 
     let pipeline = args.pipeline()?;
+    let partition = args.partition()?;
 
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, 17);
     let num_v = graph.num_vertices();
+    let defaults = ServeConfig::default();
     let cfg = ServeConfig {
         backend,
         pipeline,
+        partition,
+        shards: args.get_usize("shards", defaults.shards),
+        cache_rows: args.get_usize("cache-rows", defaults.cache_rows),
         custom_specs: spec.iter().cloned().collect(),
-        ..Default::default()
+        ..defaults
     };
     let coord = Coordinator::start(graph, 17, cfg)?;
     let (key, model_name) = match &spec {
@@ -307,6 +347,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     } else {
         println!("pipeline off (sequential shard loop)");
     }
+    // Partitioned serving: locality + routing health per partition.
+    if partition != PartitionStrategy::Off {
+        println!(
+            "partition {}: edge-cut {:.1}%, balance {:.2}, cache rows {:?} (total {}), \
+             routed {:?}, boundary fetches {} ({} rows, p99 {:.1} µs)",
+            stats.partition,
+            stats.edge_cut_fraction * 100.0,
+            stats.partition_balance,
+            stats.shard_cache_rows,
+            stats.cache_rows_total,
+            stats.routed_jobs,
+            stats.boundary_fetches,
+            stats.boundary_rows,
+            stats.boundary_fetch_p99_us
+        );
+    }
     if let Some(r) = responses.first() {
         if !r.embedding.is_empty() {
             let norm: f32 = r.embedding.iter().map(|x| x * x).sum::<f32>().sqrt();
@@ -369,6 +425,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         None => (Vec::new(), ModelMix::default()),
     };
     let pipeline = args.pipeline()?;
+    let partitions = args.partition_list()?;
+    let defaults = OpenLoopConfig::default();
     let base = OpenLoopConfig {
         requests,
         mix,
@@ -376,6 +434,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         custom_specs,
         backend,
         pipeline,
+        cache_rows: args.get_usize("cache-rows", defaults.cache_rows),
+        target_skew: args.get_f64("target-skew", 0.0),
         submit_lanes: args.get_usize("submit-lanes", 0),
         batch: if args.has("no-batching") {
             None
@@ -383,34 +443,40 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
             Some(BatchConfig { slo_us, ..Default::default() })
         },
         seed,
-        ..Default::default()
+        ..defaults
     };
 
     println!(
-        "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts, \
-         backend {backend}, pipeline {} ==",
+        "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts x \
+         {} partition strategies, backend {backend}, pipeline {}, target-skew {} ==",
         dataset,
         requests,
         rates.len(),
         shard_counts.len(),
-        pipeline.label()
+        partitions.len(),
+        pipeline.label(),
+        base.target_skew
     );
     let bursty = args.has("bursty");
-    let points = run_sweep(&graph, &rates, &shard_counts, &base, |rate| {
-        if bursty {
-            ArrivalProcess::Bursty {
-                base_rps: rate,
-                burst_rps: rate * 4.0,
-                base_dwell_ms: 200.0,
-                burst_dwell_ms: 50.0,
+    let mut points = Vec::new();
+    for &partition in &partitions {
+        let part_base = OpenLoopConfig { partition, ..base.clone() };
+        points.extend(run_sweep(&graph, &rates, &shard_counts, &part_base, |rate| {
+            if bursty {
+                ArrivalProcess::Bursty {
+                    base_rps: rate,
+                    burst_rps: rate * 4.0,
+                    base_dwell_ms: 200.0,
+                    burst_dwell_ms: 50.0,
+                }
+            } else {
+                ArrivalProcess::Poisson { rate_rps: rate }
             }
-        } else {
-            ArrivalProcess::Poisson { rate_rps: rate }
-        }
-    })?;
+        })?);
+    }
     for (label, r) in &points {
         println!(
-            "{label:<32} offered {:>7.0} rps | e2e p50 {:>9.0} µs p99 {:>9.0} µs | \
+            "{label:<40} offered {:>7.0} rps | e2e p50 {:>9.0} µs p99 {:>9.0} µs | \
              cache hit {:>5.1}% (sim {:>5.1}%) | occ {:.2} stalls p{}/e{} overlap {:>4.1}% | \
              backends [{}]{}",
             r.offered_rps,
@@ -429,8 +495,28 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
                 String::new()
             }
         );
+        if r.stats.partition != "off" {
+            println!(
+                "{:<40} partition {}: cut {:.1}% balance {:.2} | per-shard hit [{}] | \
+                 routed {:?} | boundary {} pulls / {} rows, p99 {:.1} µs",
+                "",
+                r.stats.partition,
+                r.stats.edge_cut_fraction * 100.0,
+                r.stats.partition_balance,
+                r.stats
+                    .shard_cache_hit_rate
+                    .iter()
+                    .map(|h| format!("{:.1}%", h * 100.0))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                r.stats.routed_jobs,
+                r.stats.boundary_fetches,
+                r.stats.boundary_rows,
+                r.stats.boundary_fetch_p99_us
+            );
+        }
     }
-    let sections: Vec<(&str, Vec<(&str, f64)>)> =
+    let sections: Vec<(&str, Vec<(String, f64)>)> =
         points.iter().map(|(label, r)| (label.as_str(), r.metrics())).collect();
     let out_path = std::path::PathBuf::from(
         args.get("out").unwrap_or(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json")),

@@ -59,10 +59,19 @@ impl DegreeClasses {
     /// falls back to the static defaults.
     pub fn from_graph(g: &CsrGraph) -> Self {
         let n = g.num_vertices();
+        Self::from_degrees((0..n as u32).map(|v| g.degree(v)).collect())
+    }
+
+    /// Calibrate breakpoints from an explicit degree sample — the
+    /// partition-local path hands in only the degrees a shard actually
+    /// owns, so "hub" means hub *within that partition* (a degree-
+    /// balanced split concentrates hubs, shifting these quantiles well
+    /// above the whole-graph ones).
+    pub fn from_degrees(mut degrees: Vec<usize>) -> Self {
+        let n = degrees.len();
         if n == 0 {
             return Self::default();
         }
-        let mut degrees: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
         degrees.sort_unstable();
         let q = |p: f64| degrees[((n - 1) as f64 * p) as usize];
         let b1 = q(0.50).max(1);
@@ -141,6 +150,11 @@ impl FeatureCache {
 
     pub fn f_in(&self) -> usize {
         self.f_in
+    }
+
+    /// Maximum resident rows (0 = caching disabled).
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// The degree-class breakpoints this cache protects with.
@@ -385,6 +399,33 @@ mod tests {
         let g = crate::graph::CsrGraph::from_adjacency(Vec::new());
         assert_eq!(DegreeClasses::from_graph(&g), DegreeClasses::default());
         assert_eq!(DegreeClasses::default(), DegreeClasses { b1: 2, b2: 8, b3: 32 });
+    }
+
+    #[test]
+    fn from_degrees_matches_from_graph_and_recalibrates_per_partition() {
+        use crate::graph::{generate, GeneratorParams};
+        let g = generate(&GeneratorParams {
+            nodes: 2_000,
+            mean_degree: 8.0,
+            ..Default::default()
+        });
+        let all: Vec<usize> = (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+        assert_eq!(DegreeClasses::from_degrees(all.clone()), DegreeClasses::from_graph(&g));
+        assert_eq!(DegreeClasses::from_degrees(Vec::new()), DegreeClasses::default());
+        // A hub-only sample must calibrate strictly above the tail-only
+        // sample: "hub" is relative to the partition, not the graph.
+        let mut sorted = all;
+        sorted.sort_unstable();
+        let half = sorted.len() / 2;
+        let tail = DegreeClasses::from_degrees(sorted[..half].to_vec());
+        let head = DegreeClasses::from_degrees(sorted[half..].to_vec());
+        assert!(head.b1 >= tail.b1 && head.b3 > tail.b3, "head {head:?} vs tail {tail:?}");
+    }
+
+    #[test]
+    fn capacity_accessor_reports_the_construction_budget() {
+        assert_eq!(FeatureCache::new(12, 4).capacity(), 12);
+        assert_eq!(FeatureCache::new(0, 4).capacity(), 0);
     }
 
     #[test]

@@ -9,14 +9,14 @@
 //! (`BENCH_serve.json`, `grip serve-bench`).
 
 use super::batcher::BatchConfig;
-use super::loadgen::{generate_arrivals, ArrivalProcess, ModelMix};
+use super::loadgen::{generate_arrivals, ArrivalProcess, ModelMix, TargetDist};
 use super::shards::{PipelineConfig, ServeStats};
 use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
 use crate::coordinator::{
     Coordinator, InferenceRequest, InferenceResponse, LatencyStats, ServeConfig,
 };
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, PartitionStrategy};
 use crate::greta::ModelSpec;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
@@ -49,6 +49,13 @@ pub struct OpenLoopConfig {
     /// the four presets in list order; address them in `mix`).
     pub custom_specs: Vec<ModelSpec>,
     pub cache_rows: usize,
+    /// Graph partitioning across shards (`Off` = shared queue + shared
+    /// cache; `Degree`/`Hash` = routed home shards with partition-local
+    /// caches and boundary fetches).
+    pub partition: PartitionStrategy,
+    /// Target-vertex skew: 0 = uniform targets, otherwise the Zipf
+    /// exponent for [`TargetDist::from_skew`].
+    pub target_skew: f64,
     pub builders: usize,
     /// Pacing lanes submitting the arrival schedule (0 = auto-scale
     /// with the offered rate). One sleep+spin thread saturates around
@@ -73,6 +80,8 @@ impl Default for OpenLoopConfig {
             model_cfg: ModelConfig::paper(),
             custom_specs: Vec::new(),
             cache_rows: 4096,
+            partition: PartitionStrategy::Off,
+            target_skew: 0.0,
             builders: 4,
             submit_lanes: 0,
             seed: 17,
@@ -112,9 +121,11 @@ pub struct OpenLoopReport {
 
 impl OpenLoopReport {
     /// Flatten to `(metric, value)` pairs for
-    /// [`crate::benchutil::write_bench_json`].
-    pub fn metrics(&self) -> Vec<(&'static str, f64)> {
-        vec![
+    /// [`crate::benchutil::write_bench_json`]. Keys are owned strings
+    /// because the partitioned pool contributes per-partition entries
+    /// (`part{i}_hit_rate`, ...) whose names depend on the shard count.
+    pub fn metrics(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = [
             ("offered_rps", self.offered_rps),
             ("achieved_rps", self.achieved_rps),
             ("requests", self.requests as f64),
@@ -140,7 +151,38 @@ impl OpenLoopReport {
             ("engine_stalls", self.stats.engine_stalls as f64),
             ("prefetch_occupancy", self.stats.prefetch_occupancy),
             ("sim_phase_overlap", self.stats.sim_phase_overlap),
+            // Partitioned serving: cut/balance of the partitioning the
+            // pool ran, the cache budget actually resident, and the
+            // cross-shard boundary-fetch traffic (all zero-ish with
+            // --partition off).
+            ("edge_cut_fraction", self.stats.edge_cut_fraction),
+            ("partition_balance", self.stats.partition_balance),
+            ("cache_rows_total", self.stats.cache_rows_total as f64),
+            ("boundary_fetches", self.stats.boundary_fetches as f64),
+            ("boundary_rows", self.stats.boundary_rows as f64),
+            ("boundary_fetch_p99_us", self.stats.boundary_fetch_p99_us),
         ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect();
+        // Per-partition rows only when a partitioning actually ran —
+        // the unpartitioned report keeps its PR-5 key set.
+        if self.stats.partition != "off" {
+            for (i, (&rows, &hit)) in self
+                .stats
+                .shard_cache_rows
+                .iter()
+                .zip(self.stats.shard_cache_hit_rate.iter())
+                .enumerate()
+            {
+                out.push((format!("part{i}_cache_rows"), rows as f64));
+                out.push((format!("part{i}_hit_rate"), hit));
+            }
+            for (i, &jobs) in self.stats.routed_jobs.iter().enumerate() {
+                out.push((format!("part{i}_routed_jobs"), jobs as f64));
+            }
+        }
+        out
     }
 }
 
@@ -171,11 +213,18 @@ fn pace_until(origin: &Instant, due: Duration) {
 /// ~50k rps where one sleep+spin thread used to become the bottleneck.
 /// Request ids, targets, and replies are identical for any lane count.
 pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
-    let arrivals =
-        generate_arrivals(cfg.process, &cfg.mix, cfg.requests, graph.num_vertices(), cfg.seed);
+    let arrivals = generate_arrivals(
+        cfg.process,
+        &cfg.mix,
+        TargetDist::from_skew(cfg.target_skew),
+        cfg.requests,
+        graph.num_vertices(),
+        cfg.seed,
+    );
     let serve = ServeConfig {
         backend: cfg.backend,
         shards: cfg.shards,
+        partition: cfg.partition,
         pipeline: cfg.pipeline,
         batch: cfg.batch,
         grip: cfg.grip.clone(),
@@ -259,7 +308,10 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
 /// [`crate::benchutil::write_bench_json`]. `process_for` maps each
 /// swept rate to its arrival process (Poisson, bursty MMPP, ...), so
 /// `bench_exec` and `grip serve-bench` share one loop and one label
-/// format — labels look like `serve_load/poisson_r100_s4`.
+/// format — labels look like `serve_load/poisson_r100_s4`, gaining a
+/// `_pdegree` / `_phash` suffix only when `base.partition` is on (so
+/// historical unpartitioned labels stay byte-stable in
+/// `BENCH_serve.json`).
 pub fn run_sweep(
     graph: &CsrGraph,
     rates_rps: &[f64],
@@ -272,7 +324,12 @@ pub fn run_sweep(
         for &rate in rates_rps {
             let process = process_for(rate);
             let cfg = OpenLoopConfig { process, shards, ..base.clone() };
-            let label = format!("serve_load/{}_r{}_s{}", process.label(), rate.round(), shards);
+            let part = match base.partition {
+                PartitionStrategy::Off => String::new(),
+                p => format!("_p{}", p.name()),
+            };
+            let label =
+                format!("serve_load/{}_r{}_s{}{}", process.label(), rate.round(), shards, part);
             let report = run_open_loop(graph, &cfg)?;
             out.push((label, report));
         }
@@ -402,6 +459,46 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.embedding, b.embedding, "id {}: pipeline mode changed numerics", a.id);
         }
+    }
+
+    #[test]
+    fn partitioned_report_carries_per_partition_metrics() {
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        let cfg = OpenLoopConfig {
+            partition: PartitionStrategy::Degree,
+            shards: 2,
+            cache_rows: 64,
+            ..tiny_cfg(2_000.0, 24)
+        };
+        let report = run_open_loop(&g, &cfg).unwrap();
+        let metrics = report.metrics();
+        for key in [
+            "edge_cut_fraction",
+            "partition_balance",
+            "cache_rows_total",
+            "boundary_fetches",
+            "boundary_fetch_p99_us",
+            "part0_cache_rows",
+            "part1_cache_rows",
+            "part0_hit_rate",
+            "part1_hit_rate",
+            "part0_routed_jobs",
+            "part1_routed_jobs",
+        ] {
+            assert!(metrics.iter().any(|(k, _)| *k == key), "missing {key}");
+        }
+        let total = metrics.iter().find(|(k, _)| *k == "cache_rows_total").unwrap().1;
+        assert_eq!(total, 64.0, "split caches preserve the total row budget");
+        // The unpartitioned report keeps its key set per-partition-free.
+        let off = run_open_loop(&g, &tiny_cfg(2_000.0, 8)).unwrap();
+        assert!(off.metrics().iter().all(|(k, _)| !k.starts_with("part0_")));
+        // Zipfian targets flow through the same harness deterministically.
+        let zcfg = OpenLoopConfig { target_skew: 1.1, ..tiny_cfg(2_000.0, 8) };
+        let zipf = run_open_loop(&g, &zcfg).unwrap();
+        assert_eq!(zipf.responses.len(), 8);
+        // Partition suffix appears in sweep labels only when enabled.
+        let pts = run_sweep(&g, &[2_000.0], &[2], &cfg, poisson).unwrap();
+        assert!(pts.iter().any(|(l, _)| l == "serve_load/poisson_r2000_s2_pdegree"));
     }
 
     #[test]

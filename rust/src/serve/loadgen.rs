@@ -23,7 +23,11 @@
 //!
 //! Each arrival carries a model drawn from a weighted [`ModelMix`]
 //! (defaults to the paper's four Table-III models, equally weighted)
-//! and a uniformly sampled target vertex.
+//! and a target vertex drawn from a [`TargetDist`] — uniform, or
+//! Zipfian (`--target-skew`) so sweeps exercise hot-vertex partitions
+//! instead of a flat target distribution (the honest setting for
+//! partition-balance numbers: a degree-balanced partitioning only
+//! earns its keep when some vertices are much hotter than others).
 
 use crate::greta::{GnnModel, ModelKey, ALL_MODELS};
 use crate::rng::SplitMix64;
@@ -76,6 +80,42 @@ impl ArrivalProcess {
     }
 }
 
+/// Target-vertex distribution for generated requests.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum TargetDist {
+    /// Every vertex equally likely (the pre-PR-6 behavior).
+    #[default]
+    Uniform,
+    /// Zipf-like skew with exponent `s`: vertex ids are ranked, so low
+    /// ids are the hot head. `s` around 0.8–1.2 matches the access
+    /// skew real serving traces show.
+    Zipf { s: f64 },
+}
+
+impl TargetDist {
+    /// Map a CLI `--target-skew` value: `s <= 0` is uniform; the
+    /// inverse-CDF sampler is singular at `s == 1` (its exponent is
+    /// `1/(1-s)`), so values within 1e-3 of 1.0 are nudged to 1.001.
+    pub fn from_skew(s: f64) -> Self {
+        if s <= 0.0 {
+            TargetDist::Uniform
+        } else if (s - 1.0).abs() < 1e-3 {
+            TargetDist::Zipf { s: 1.001 }
+        } else {
+            TargetDist::Zipf { s }
+        }
+    }
+
+    fn sample(&self, rng: &mut SplitMix64, num_vertices: usize) -> u32 {
+        let n = num_vertices.max(1);
+        match *self {
+            TargetDist::Uniform => rng.gen_range(n) as u32,
+            // gen_zipf returns a rank in [1, n]; rank 1 = vertex 0.
+            TargetDist::Zipf { s } => (rng.gen_zipf(n, s) - 1) as u32,
+        }
+    }
+}
+
 /// Weighted model mix for generated requests. Entries are
 /// [`ModelKey`]s, so a mix can combine presets and registered custom
 /// specs freely.
@@ -119,11 +159,12 @@ fn exp_sample(rng: &mut SplitMix64, mean: f64) -> f64 {
 }
 
 /// Generate the first `n` arrivals of `process` over a graph with
-/// `num_vertices` vertices. Deterministic in `seed`; arrival times are
-/// strictly increasing.
+/// `num_vertices` vertices, targets drawn from `targets`.
+/// Deterministic in `seed`; arrival times are strictly increasing.
 pub fn generate_arrivals(
     process: ArrivalProcess,
     mix: &ModelMix,
+    targets: TargetDist,
     n: usize,
     num_vertices: usize,
     seed: u64,
@@ -139,7 +180,7 @@ pub fn generate_arrivals(
                 out.push(Arrival {
                     t_us,
                     model: mix.pick(&mut rng),
-                    target: rng.gen_range(num_vertices.max(1)) as u32,
+                    target: targets.sample(&mut rng, num_vertices),
                 });
             }
         }
@@ -165,7 +206,7 @@ pub fn generate_arrivals(
                 out.push(Arrival {
                     t_us,
                     model: mix.pick(&mut rng),
-                    target: rng.gen_range(num_vertices.max(1)) as u32,
+                    target: targets.sample(&mut rng, num_vertices),
                 });
             }
         }
@@ -190,20 +231,31 @@ mod tests {
         }
     }
 
+    /// Uniform-target shorthand for the pre-PR-6 call shape.
+    fn gen(
+        process: ArrivalProcess,
+        mix: &ModelMix,
+        n: usize,
+        num_vertices: usize,
+        seed: u64,
+    ) -> Vec<Arrival> {
+        generate_arrivals(process, mix, TargetDist::Uniform, n, num_vertices, seed)
+    }
+
     #[test]
     fn deterministic_in_seed() {
         let mix = ModelMix::default();
-        let a = generate_arrivals(poisson(500.0), &mix, 200, 1000, 7);
-        let b = generate_arrivals(poisson(500.0), &mix, 200, 1000, 7);
+        let a = gen(poisson(500.0), &mix, 200, 1000, 7);
+        let b = gen(poisson(500.0), &mix, 200, 1000, 7);
         assert_eq!(a, b);
-        let c = generate_arrivals(poisson(500.0), &mix, 200, 1000, 8);
+        let c = gen(poisson(500.0), &mix, 200, 1000, 8);
         assert_ne!(a, c, "different seed, different schedule");
     }
 
     #[test]
     fn times_strictly_increasing_and_targets_in_range() {
         for proc in [poisson(800.0), bursty()] {
-            let a = generate_arrivals(proc, &ModelMix::default(), 500, 123, 3);
+            let a = gen(proc, &ModelMix::default(), 500, 123, 3);
             assert_eq!(a.len(), 500);
             for w in a.windows(2) {
                 assert!(w[1].t_us > w[0].t_us);
@@ -215,7 +267,7 @@ mod tests {
     #[test]
     fn poisson_rate_close_to_nominal() {
         let n = 4000;
-        let a = generate_arrivals(poisson(1000.0), &ModelMix::default(), n, 10, 11);
+        let a = gen(poisson(1000.0), &ModelMix::default(), n, 10, 11);
         let measured_rps = (n - 1) as f64 / (a.last().unwrap().t_us - a[0].t_us) * 1e6;
         assert!(
             (measured_rps - 1000.0).abs() < 100.0,
@@ -236,8 +288,8 @@ mod tests {
         };
         let mix = ModelMix::default();
         let mean_rps = bursty().mean_rps();
-        let p = generate_arrivals(poisson(mean_rps), &mix, 3000, 10, 5);
-        let b = generate_arrivals(bursty(), &mix, 3000, 10, 5);
+        let p = gen(poisson(mean_rps), &mix, 3000, 10, 5);
+        let b = gen(bursty(), &mix, 3000, 10, 5);
         assert!(
             cov(&b) > cov(&p) * 1.15,
             "bursty CoV {} should exceed poisson CoV {}",
@@ -257,7 +309,7 @@ mod tests {
     fn model_mix_respects_weights() {
         let mix =
             ModelMix { weights: vec![(GnnModel::Gcn.key(), 3.0), (GnnModel::Gin.key(), 1.0)] };
-        let a = generate_arrivals(poisson(100.0), &mix, 2000, 10, 9);
+        let a = gen(poisson(100.0), &mix, 2000, 10, 9);
         let gcn = a.iter().filter(|x| x.model == GnnModel::Gcn.key()).count();
         let frac = gcn as f64 / a.len() as f64;
         assert!((frac - 0.75).abs() < 0.05, "gcn fraction {frac}");
@@ -267,7 +319,61 @@ mod tests {
     #[test]
     fn single_model_mix() {
         let mix = ModelMix::only(GnnModel::Ggcn);
-        let a = generate_arrivals(poisson(100.0), &mix, 50, 10, 1);
+        let a = gen(poisson(100.0), &mix, 50, 10, 1);
         assert!(a.iter().all(|x| x.model == GnnModel::Ggcn.key()));
+    }
+
+    #[test]
+    fn skew_mapping_handles_the_zipf_singularity() {
+        assert_eq!(TargetDist::from_skew(0.0), TargetDist::Uniform);
+        assert_eq!(TargetDist::from_skew(-1.0), TargetDist::Uniform);
+        assert_eq!(TargetDist::from_skew(1.0), TargetDist::Zipf { s: 1.001 });
+        assert_eq!(TargetDist::from_skew(0.9995), TargetDist::Zipf { s: 1.001 });
+        assert_eq!(TargetDist::from_skew(1.2), TargetDist::Zipf { s: 1.2 });
+        assert_eq!(TargetDist::default(), TargetDist::Uniform);
+    }
+
+    #[test]
+    fn zipf_targets_concentrate_on_the_head() {
+        let n = 10_000usize;
+        let mix = ModelMix::default();
+        let uni =
+            generate_arrivals(poisson(500.0), &mix, TargetDist::Uniform, 4000, n, 21);
+        let zipf = generate_arrivals(
+            poisson(500.0),
+            &mix,
+            TargetDist::from_skew(1.1),
+            4000,
+            n,
+            21,
+        );
+        assert!(zipf.iter().all(|a| (a.target as usize) < n));
+        let head = |a: &[Arrival]| {
+            a.iter().filter(|x| (x.target as usize) < n / 100).count() as f64 / a.len() as f64
+        };
+        // Uniform puts ~1% of traffic on the hottest 1% of vertices;
+        // zipf(1.1) concentrates a large multiple of that.
+        assert!(head(&uni) < 0.05, "uniform head share {}", head(&uni));
+        assert!(
+            head(&zipf) > head(&uni) * 5.0,
+            "zipf head share {} vs uniform {}",
+            head(&zipf),
+            head(&uni)
+        );
+        // Still deterministic in the seed and schedule-compatible: the
+        // arrival times are identical, only targets changed.
+        for (u, z) in uni.iter().zip(zipf.iter()) {
+            assert_eq!(u.t_us, z.t_us);
+            assert_eq!(u.model, z.model);
+        }
+        let zipf2 = generate_arrivals(
+            poisson(500.0),
+            &mix,
+            TargetDist::from_skew(1.1),
+            4000,
+            n,
+            21,
+        );
+        assert_eq!(zipf, zipf2);
     }
 }

@@ -1,6 +1,8 @@
 //! Scale-out serving subsystem (PR 2): open-loop load generation,
 //! SLO-aware dynamic batching, a sharded fixed-point executor pool, and
-//! a shared degree-aware feature cache.
+//! degree-aware feature caches — one shared, or (PR 6,
+//! `--partition degree|hash`) one partition-local cache per shard with
+//! degree-balanced routing and a cross-shard boundary-fetch path.
 //!
 //! The paper's headline claim is 99th-percentile latency under *online
 //! inference load*; this module provides the system layer that claim
@@ -25,9 +27,15 @@
 //!  nodeflow-builder pool (PR 1): parallel sampling + CSR build
 //!      │  built nodeflows
 //!      ▼
+//!  router (with `--partition degree|hash`) — maps each job's
+//!  target vertex to its home shard's bounded queue via the
+//!  graph partitioning (crate::graph::Partitioning); with
+//!  `--partition off` every shard drains one shared queue
+//!      │  routed jobs
+//!      ▼
 //!  shards — executor pool: K phase-decoupled shards. Per shard,
 //!  N prefetch lanes (edge-centric: cycle sim + feature gather
-//!  through the shared cache into pooled StagedFeatures buffers)
+//!  through the shard's cache into pooled StagedFeatures buffers)
 //!  feed a bounded ready queue consumed by the vertex engine —
 //!  the shard's NumericsBackend (crate::backend), built inside
 //!  its own thread: fixed-point, per-shard PJRT clients,
@@ -36,14 +44,20 @@
 //!  engines; `--pipeline off` restores the sequential loop)
 //!      │         │
 //!      │         ▼
-//!      │  feature_cache — one shared degree-aware clock cache of
+//!      │  feature_cache — degree-aware clock cache(s) of
 //!      │  synthesized feature rows (GNNIE-style: high-degree rows
-//!      │  get more second chances); its hit rate is mirrored by
-//!      │  the cycle sim's `cache_features` accounting so host and
-//!      │  simulated locality are directly comparable
+//!      │  get more second chances). Unpartitioned: one shared
+//!      │  cache. Partitioned: one per shard, holding only that
+//!      │  partition's rows (the --cache-rows budget split by
+//!      │  largest remainder, DegreeClasses recalibrated per
+//!      │  partition); remote layer-0 inputs arrive as batched
+//!      │  boundary pulls answered by the owning shard's boundary
+//!      │  service. Hit rates are mirrored by the cycle sim's
+//!      │  `cache_features` accounting so host and simulated
+//!      │  locality are directly comparable
 //!      ▼
 //!  per-request replies → harness percentiles (p50/p99 vs offered
-//!  load, per shard count) → BENCH_serve.json
+//!  load, per shard count × partition strategy) → BENCH_serve.json
 //! ```
 //!
 //! * [`loadgen`] — deterministic Poisson and Markov-modulated (bursty)
@@ -53,9 +67,11 @@
 //! * [`shards`] — the executor pool (one [`crate::backend::NumericsBackend`]
 //!   per shard, backend fallbacks surfaced in [`ServeStats`]) and its
 //!   serving statistics.
-//! * [`feature_cache`] — the shared degree-aware clock cache.
-//! * [`harness`] — open-loop measurement and the rate × shard sweep
-//!   behind `grip serve-bench` and `cargo bench --bench bench_exec`.
+//! * [`feature_cache`] — the degree-aware clock cache (shared or
+//!   partition-local).
+//! * [`harness`] — open-loop measurement and the rate × shard ×
+//!   partition sweep behind `grip serve-bench` and
+//!   `cargo bench --bench bench_exec`.
 
 pub mod batcher;
 pub mod feature_cache;
@@ -66,8 +82,8 @@ pub mod shards;
 pub use batcher::{BatchConfig, Batcher, Pending};
 pub use feature_cache::{DegreeClasses, FeatureCache};
 pub use harness::{poisson, run_open_loop, run_sweep, OpenLoopConfig, OpenLoopReport};
-pub use loadgen::{generate_arrivals, Arrival, ArrivalProcess, ModelMix};
+pub use loadgen::{generate_arrivals, Arrival, ArrivalProcess, ModelMix, TargetDist};
 pub use shards::{
-    fixed_serving_args, CachedFeatures, ExecJob, PipelineConfig, ReplySlot, ServeStats,
-    ShardPool, ShardSpec,
+    fixed_serving_args, split_cache_rows, CachedFeatures, ExecJob, PipelineConfig, ReplySlot,
+    ServeStats, ShardPool, ShardSpec,
 };

@@ -12,13 +12,18 @@
 //!   sequential `--pipeline off` loop (and to the same from-scratch
 //!   reference) for every (lanes, depth), every preset, and a depth-3
 //!   custom spec: scheduling may never change numerics.
+//! * The PR-6 partitioned pool — home-shard routing, partition-local
+//!   caches, cross-shard boundary fetches — is bit-identical to
+//!   `--partition off` and to the from-scratch reference for
+//!   {degree, hash} × {1, 4} shards over every preset plus the depth-3
+//!   spec: locality may never change numerics either.
 
 use grip::backend::BackendChoice;
 use grip::config::ModelConfig;
 use grip::coordinator::{
     Coordinator, InferenceRequest, InferenceResponse, PipelineConfig, ServeConfig,
 };
-use grip::graph::{generate, CsrGraph, GeneratorParams};
+use grip::graph::{generate, CsrGraph, GeneratorParams, PartitionStrategy};
 use grip::greta::{
     compile, execute_model_into, Activate, ExecScratch, GnnModel, LayerSpec, ModelKey,
     ModelLibrary, ModelSpec, PlanArgs, ProgramSpec, ReduceOp,
@@ -28,6 +33,7 @@ use grip::rng::SplitMix64;
 use grip::runtime::fill_feature_row;
 use grip::serve::{
     fixed_serving_args, generate_arrivals, ArrivalProcess, BatchConfig, Batcher, ModelMix,
+    TargetDist,
 };
 
 /// Run `f` over `n` seeded cases.
@@ -67,7 +73,8 @@ fn prop_batcher_never_exceeds_deadline_budget() {
             }
         };
         let n = 120;
-        let arrivals = generate_arrivals(process, &ModelMix::default(), n, 1_000, case);
+        let arrivals =
+            generate_arrivals(process, &ModelMix::default(), TargetDist::Uniform, n, 1_000, case);
 
         // Event-driven virtual-time driver: advance to the next arrival
         // or batcher deadline, offering/dispatching at exact times — the
@@ -286,6 +293,98 @@ fn prop_pipelined_pool_bit_identical_to_sequential_and_reference() {
         execute_model_into(plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
         assert_eq!(
             sequential[i].embedding, out,
+            "request {i} ({}@{t}) diverged from the reference",
+            lib.name(key)
+        );
+    }
+}
+
+// ------------------------- partitioned-pool bit-identity (PR 6)
+
+/// Serve mixed presets + the depth-3 spec through a partitioned pool.
+fn serve_all_partitioned(
+    graph: &CsrGraph,
+    partition: PartitionStrategy,
+    shards: usize,
+    reqs: &[(ModelKey, u32)],
+) -> Vec<InferenceResponse> {
+    let cfg = ServeConfig {
+        partition,
+        cache_rows: 300,
+        custom_specs: vec![depth3_spec()],
+        ..fixed_cfg(shards)
+    };
+    let coord = Coordinator::start(graph.clone(), 11, cfg).unwrap();
+    let pending: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, t))| coord.submit(InferenceRequest::single(i as u64, m, t)).unwrap())
+        .collect();
+    pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect()
+}
+
+#[test]
+fn prop_partitioned_pool_bit_identical_to_off_and_reference() {
+    // THE PR-6 property: routing a job to its target's home shard,
+    // serving layer-0 rows from a partition-local cache, and pulling
+    // remote rows over the boundary-fetch path must be invisible in
+    // every reply — embeddings AND simulated timing — for both
+    // partitioning strategies, at 1 and 4 shards, across all four
+    // presets and the depth-3 custom spec.
+    let graph = serving_graph(21);
+    let mc = small_mc();
+    let weight_seed = ServeConfig::default().weight_seed;
+    let (lib, _) = ModelLibrary::with_customs(&mc, &[depth3_spec()]).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    assert_eq!(keys.len(), 5, "4 presets + tri3");
+    let mut rng = SplitMix64::new(67);
+    let reqs: Vec<(ModelKey, u32)> = (0..30)
+        .map(|i| (keys[i % keys.len()], rng.gen_range(1_500) as u32))
+        .collect();
+
+    let off = serve_all_partitioned(&graph, PartitionStrategy::Off, 4, &reqs);
+    assert!(off.iter().all(|r| !r.timing_only));
+
+    for partition in [PartitionStrategy::Degree, PartitionStrategy::Hash] {
+        for shards in [1usize, 4] {
+            let got = serve_all_partitioned(&graph, partition, shards, &reqs);
+            assert_eq!(got.len(), off.len());
+            for (a, b) in off.iter().zip(got.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.embedding, b.embedding,
+                    "id {}: {partition:?} x {shards} shards changed numerics",
+                    a.id
+                );
+                assert_eq!(
+                    a.accel_us, b.accel_us,
+                    "id {}: {partition:?} x {shards} shards changed timing",
+                    a.id
+                );
+                assert_eq!(a.neighborhood, b.neighborhood);
+            }
+        }
+    }
+
+    // From-scratch single-threaded reference: same sampler seed, same
+    // serving weights, same synthesized features — the partitioned
+    // cache/boundary path introduces no hidden numeric state.
+    let sampler = Sampler::new(11);
+    let mut scratch = ExecScratch::new();
+    let mut out = Vec::new();
+    for (i, &(key, t)) in reqs.iter().enumerate() {
+        let plan = lib.plan(key);
+        let pargs = PlanArgs::resolve(plan, &fixed_serving_args(plan, weight_seed)).unwrap();
+        let nf = Nodeflow::build_layers(&graph, &sampler, &[t], lib.samples(key));
+        let in_dim = plan.layers[0].in_dim;
+        let l0 = &nf.layers[0];
+        let mut h = vec![0f32; l0.num_inputs() * in_dim];
+        for (r, &v) in l0.inputs.iter().enumerate() {
+            fill_feature_row(v, &mut h[r * in_dim..(r + 1) * in_dim]);
+        }
+        execute_model_into(plan, &nf, &h, &pargs, &mut scratch, &mut out).unwrap();
+        assert_eq!(
+            off[i].embedding, out,
             "request {i} ({}@{t}) diverged from the reference",
             lib.name(key)
         );
