@@ -8,6 +8,10 @@ Gated metrics, per section:
   * every key ending in ``_p99_us`` (tail latency)
   * ``steady_state_allocs_per_request`` (the PR-1 zero-alloc criterion)
 
+Schema check, regardless of the baseline: every fresh ``serve_load/``
+section must carry the PR-7 per-stage breakdown (``STAGE_KEYS``) —
+a missing stage key fails the gate even against a null placeholder.
+
 A metric regresses when ``fresh > committed * (1 + threshold)``
 (default threshold 20%). Null committed values are skipped — the
 committed file is still the schema-only placeholder until someone
@@ -25,6 +29,36 @@ import sys
 
 GATED_SUFFIXES = ("_p99_us",)
 GATED_KEYS = ("steady_state_allocs_per_request",)
+
+# The PR-7 per-stage latency breakdown every fresh ``serve_load/``
+# section must carry. Missing keys are schema drift and fail the gate
+# even while the committed baseline is still the null placeholder
+# (the ``_p99_us`` ones regression-gate via GATED_SUFFIXES once real
+# committed numbers land).
+STAGE_KEYS = (
+    "stage_queue_wait_p50_us",
+    "stage_queue_wait_p99_us",
+    "stage_prefetch_local_p50_us",
+    "stage_prefetch_local_p99_us",
+    "stage_boundary_wait_p50_us",
+    "stage_boundary_wait_p99_us",
+    "stage_compute_p50_us",
+    "stage_compute_p99_us",
+    "stage_reply_p50_us",
+    "stage_reply_p99_us",
+)
+
+
+def stage_schema_failures(fresh):
+    """Every fresh serve_load section must expose the stage breakdown."""
+    out = []
+    for section, metrics in fresh.items():
+        if not section.startswith("serve_load/") or not isinstance(metrics, dict):
+            continue
+        for key in STAGE_KEYS:
+            if key not in metrics:
+                out.append(f"{section}: missing per-stage key {key}")
+    return out
 
 
 def is_gated(key):
@@ -60,7 +94,7 @@ def main(argv=None):
 
     compared = 0
     skipped = 0
-    failures = []
+    failures = stage_schema_failures(fresh)
     for section, key, base in gated_metrics(committed):
         if base is None:
             skipped += 1

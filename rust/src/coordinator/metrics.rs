@@ -1,41 +1,97 @@
 //! Latency/throughput metrics for the serving loop (the paper reports
 //! 99th-percentile latency, per MLPerf inference practice [38]).
+//!
+//! The default recorder is backed by the fixed-bucket log₂ streaming
+//! histogram from [`crate::telemetry`]: O(1) record, bounded memory,
+//! and O(buckets) percentile queries — the old implementation kept
+//! every sample forever and cloned + sorted the lot on *every*
+//! percentile call, which on the serving hot path turned each stats
+//! snapshot into an O(n log n) stall. [`LatencyStats::exact`] keeps
+//! the original store-everything nearest-rank behavior for callers
+//! that need exact percentiles (and for pinning the histogram's error
+//! bound by test).
+
+use crate::telemetry::StreamingHistogram;
+
+#[derive(Debug, Clone)]
+enum Backing {
+    /// Bounded-memory log₂ histogram (≈1.6% worst-case quantile
+    /// error, ≤5% pinned by test below).
+    Streaming(StreamingHistogram),
+    /// Store-every-sample nearest-rank (exact, unbounded memory).
+    Exact(Vec<f64>),
+}
 
 /// Online latency recorder with percentile queries.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct LatencyStats {
-    samples_us: Vec<f64>,
+    backing: Backing,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl LatencyStats {
+    /// Streaming-histogram recorder — the default everywhere.
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            backing: Backing::Streaming(StreamingHistogram::new()),
+        }
+    }
+
+    /// Exact nearest-rank recorder (retains every sample; use only
+    /// where exactness beats bounded memory).
+    pub fn exact() -> Self {
+        Self {
+            backing: Backing::Exact(Vec::new()),
+        }
     }
 
     pub fn record(&mut self, us: f64) {
-        self.samples_us.push(us);
+        match &mut self.backing {
+            Backing::Streaming(h) => h.record(us),
+            Backing::Exact(v) => v.push(us),
+        }
     }
 
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        match &self.backing {
+            Backing::Streaming(h) => h.count() as usize,
+            Backing::Exact(v) => v.len(),
+        }
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
+        match &self.backing {
+            Backing::Streaming(h) => h.mean(),
+            Backing::Exact(v) => {
+                if v.is_empty() {
+                    0.0
+                } else {
+                    v.iter().sum::<f64>() / v.len() as f64
+                }
+            }
         }
-        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
     }
 
-    /// Percentile by nearest-rank on a sorted copy (p in [0, 100]).
+    /// Percentile (p in [0, 100]): nearest-rank, exact in exact mode,
+    /// within half a log₂ bucket (≈1.6%) in streaming mode.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
+        match &self.backing {
+            Backing::Streaming(h) => h.percentile(p),
+            Backing::Exact(v) => {
+                if v.is_empty() {
+                    return 0.0;
+                }
+                let mut s = v.clone();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+                s[rank.min(s.len() - 1)]
+            }
         }
-        let mut s = self.samples_us.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
-        s[rank.min(s.len() - 1)]
     }
 
     pub fn p50(&self) -> f64 {
@@ -47,11 +103,45 @@ impl LatencyStats {
     }
 
     pub fn min(&self) -> f64 {
-        self.samples_us.iter().cloned().fold(f64::INFINITY, f64::min)
+        match &self.backing {
+            Backing::Streaming(h) => h.min(),
+            Backing::Exact(v) => v.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
     }
 
     pub fn max(&self) -> f64 {
-        self.samples_us.iter().cloned().fold(0.0, f64::max)
+        match &self.backing {
+            Backing::Streaming(h) => h.max(),
+            Backing::Exact(v) => v.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    /// Fold another recorder's population into this one (streaming
+    /// mode only; exact mode replays samples).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        if let (Backing::Streaming(a), Backing::Streaming(b)) =
+            (&mut self.backing, &other.backing)
+        {
+            a.merge(b);
+            return;
+        }
+        match &other.backing {
+            Backing::Exact(v) => {
+                for &us in v {
+                    self.record(us);
+                }
+            }
+            Backing::Streaming(_) => {
+                // Self is exact here; it cannot absorb a histogram
+                // losslessly — callers merging should use matching
+                // modes. Fold the histogram's percentile grid as an
+                // approximation.
+                for i in 0..other.count() {
+                    let p = 100.0 * i as f64 / other.count().max(1) as f64;
+                    self.record(other.percentile(p));
+                }
+            }
+        }
     }
 }
 
@@ -68,7 +158,8 @@ mod tests {
 
     #[test]
     fn percentiles_ordered() {
-        let mut s = LatencyStats::new();
+        // Exact mode pins the original nearest-rank behavior.
+        let mut s = LatencyStats::exact();
         for i in 1..=1000 {
             s.record(i as f64);
         }
@@ -94,5 +185,47 @@ mod tests {
         s.record(7.5);
         assert_eq!(s.p50(), 7.5);
         assert_eq!(s.p99(), 7.5);
+    }
+
+    /// The satellite requirement: streaming p99 within 5% of exact
+    /// nearest-rank p99 on a heavy-tailed deterministic population.
+    #[test]
+    fn streaming_p99_within_5pct_of_exact() {
+        let mut streaming = LatencyStats::new();
+        let mut exact = LatencyStats::exact();
+        // Deterministic LCG; squaring skews the tail like real
+        // latencies.
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        for _ in 0..20_000 {
+            state = state
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(1_442_695_040_888_963_407);
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+            let us = 50.0 + 100_000.0 * u * u * u;
+            streaming.record(us);
+            exact.record(us);
+        }
+        for p in [50.0, 90.0, 99.0] {
+            let e = exact.percentile(p);
+            let s = streaming.percentile(p);
+            let rel = (s - e).abs() / e;
+            assert!(rel <= 0.05, "p{p}: exact {e} vs streaming {s} (rel {rel})");
+        }
+        assert_eq!(streaming.count(), exact.count());
+        assert!((streaming.mean() - exact.mean()).abs() / exact.mean() < 1e-9);
+    }
+
+    /// Streaming mode keeps percentile ordering and min/max exactness.
+    #[test]
+    fn streaming_percentiles_ordered() {
+        let mut s = LatencyStats::new();
+        for i in 1..=1000 {
+            s.record(i as f64);
+        }
+        assert!(s.p50() <= s.p99());
+        assert!((s.p50() - 500.0).abs() / 500.0 <= 0.05);
+        assert!((s.p99() - 990.0).abs() / 990.0 <= 0.05);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 1000.0);
     }
 }

@@ -68,6 +68,7 @@ use crate::serve::{
     BatchConfig, Batcher, ExecJob, Pending, PipelineConfig, ReplySlot, ServeStats, ShardPool,
     ShardSpec,
 };
+use crate::telemetry::{SpanTrace, Stage, Telemetry};
 use anyhow::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -129,6 +130,9 @@ struct Submission {
     req: InferenceRequest,
     reply: mpsc::Sender<Result<InferenceResponse, String>>,
     t_submit: Instant,
+    /// Lifecycle span for sampled requests (`None` on the unsampled
+    /// fast path).
+    trace: Option<Box<SpanTrace>>,
 }
 
 /// A (possibly coalesced) unit of builder work.
@@ -145,6 +149,7 @@ impl Job {
         req: InferenceRequest,
         reply: mpsc::Sender<Result<InferenceResponse, String>>,
         t_submit: Instant,
+        trace: Option<Box<SpanTrace>>,
     ) -> Job {
         Job {
             model: req.model,
@@ -153,6 +158,7 @@ impl Job {
                 n_targets: req.targets.len(),
                 t_submit,
                 reply,
+                trace,
             }],
             targets: req.targets,
         }
@@ -184,6 +190,7 @@ pub struct Submitter<'a> {
     front: Front,
     library: Arc<ModelLibrary>,
     inflight: Arc<AtomicU64>,
+    telemetry: Telemetry,
     /// Lifetime-only brand (no `&Coordinator` inside — that would cost
     /// `Send`): borrows the coordinator so clones can't escape it.
     _coord: std::marker::PhantomData<&'a ()>,
@@ -198,7 +205,7 @@ impl Submitter<'_> {
         &self,
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
-        submit_via(&self.front, &self.library, &self.inflight, req)
+        submit_via(&self.front, &self.library, &self.inflight, &self.telemetry, req)
     }
 }
 
@@ -208,6 +215,7 @@ fn submit_via(
     front: &Front,
     library: &ModelLibrary,
     inflight: &AtomicU64,
+    telemetry: &Telemetry,
     req: InferenceRequest,
 ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
     ensure!(!req.targets.is_empty(), "request {} has no targets", req.id);
@@ -220,16 +228,25 @@ fn submit_via(
     );
     let (rtx, rrx) = mpsc::channel();
     let t_submit = Instant::now();
+    let trace = telemetry.start_span(req.id);
     match front {
         Front::Direct(tx) => {
+            // No batcher stage: a direct submission is its own admit
+            // and dispatch.
+            let trace = trace.map(|mut t| {
+                let now = telemetry.now_us();
+                t.stamp(Stage::Admit, now);
+                t.stamp(Stage::Dispatch, now);
+                t
+            });
             inflight.fetch_add(1, Ordering::Relaxed);
-            tx.send(Job::single(req, rtx, t_submit)).map_err(|_| {
+            tx.send(Job::single(req, rtx, t_submit, trace)).map_err(|_| {
                 inflight.fetch_sub(1, Ordering::Relaxed);
                 anyhow!("coordinator stopped")
             })?
         }
         Front::Batched(tx) => tx
-            .send(Submission { req, reply: rtx, t_submit })
+            .send(Submission { req, reply: rtx, t_submit, trace })
             .map_err(|_| anyhow!("coordinator stopped"))?,
     }
     Ok(rrx)
@@ -250,6 +267,9 @@ pub struct Coordinator {
     /// executing). The batcher flushes immediately while this is 0 —
     /// batching can only add latency to an idle pipeline.
     inflight: Arc<AtomicU64>,
+    /// Shared observability handle: always-on stage histograms plus
+    /// sampled span traces (see [`ServeConfig::trace_sample`]).
+    telemetry: Telemetry,
 }
 
 /// Configuration of the serving loop.
@@ -304,6 +324,11 @@ pub struct ServeConfig {
     /// address them by the key order they are listed in (presets first)
     /// or by name via [`Coordinator::model_key`].
     pub custom_specs: Vec<ModelSpec>,
+    /// Span-trace sampling: 1-in-N requests carry a full lifecycle
+    /// [`SpanTrace`] (`--trace-sample` on the CLI, 0 disables spans).
+    /// Per-stage histograms record regardless; neither tier touches
+    /// request numerics.
+    pub trace_sample: u64,
 }
 
 impl Default for ServeConfig {
@@ -323,12 +348,13 @@ impl Default for ServeConfig {
             cache_rows: spec.cache_rows,
             weight_seed: spec.weight_seed,
             custom_specs: Vec::new(),
+            trace_sample: 64,
         }
     }
 }
 
 impl ServeConfig {
-    fn shard_spec(&self) -> ShardSpec {
+    fn shard_spec(&self, telemetry: Telemetry) -> ShardSpec {
         ShardSpec {
             shards: self.shards,
             partition: self.partition,
@@ -338,6 +364,7 @@ impl ServeConfig {
             pipeline: self.pipeline,
             cache_rows: self.cache_rows,
             weight_seed: self.weight_seed,
+            telemetry,
         }
     }
 }
@@ -354,6 +381,7 @@ impl Coordinator {
         let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
         let (built_tx, built_rx) = mpsc::sync_channel::<ExecJob>(cfg.built_depth.max(1));
         let jobs = Arc::new(Mutex::new(job_rx));
+        let telemetry = Telemetry::new(cfg.trace_sample);
 
         let mut builders = Vec::new();
         for i in 0..cfg.builders.max(1) {
@@ -362,9 +390,10 @@ impl Coordinator {
             let built_tx = built_tx.clone();
             let sampler = Sampler::new(sampler_seed);
             let library = library.clone();
+            let tel = telemetry.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("grip-nf-builder-{i}"))
-                .spawn(move || builder_loop(&graph, &sampler, &library, &jobs, &built_tx))
+                .spawn(move || builder_loop(&graph, &sampler, &library, &jobs, &built_tx, &tel))
                 .map_err(|e| anyhow!("spawning builder {i}: {e}"))?;
             builders.push(handle);
         }
@@ -373,7 +402,7 @@ impl Coordinator {
 
         let inflight = Arc::new(AtomicU64::new(0));
         let pool = ShardPool::start(
-            &cfg.shard_spec(),
+            &cfg.shard_spec(telemetry.clone()),
             library.clone(),
             graph,
             built_rx,
@@ -406,9 +435,10 @@ impl Coordinator {
             Some(bc) => {
                 let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
                 let gauge = inflight.clone();
+                let tel = telemetry.clone();
                 let handle = std::thread::Builder::new()
                     .name("grip-batcher".into())
-                    .spawn(move || batcher_loop(bc, sub_rx, job_tx, &gauge))
+                    .spawn(move || batcher_loop(bc, sub_rx, job_tx, &gauge, &tel))
                     .map_err(|e| anyhow!("spawning batcher: {e}"))?;
                 (Front::Batched(sub_tx), Some(handle))
             }
@@ -421,6 +451,7 @@ impl Coordinator {
             pool: Some(pool),
             library,
             inflight,
+            telemetry,
         })
     }
 
@@ -431,7 +462,7 @@ impl Coordinator {
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
         let front = self.front.as_ref().ok_or_else(|| anyhow!("coordinator stopped"))?;
-        submit_via(front, &self.library, &self.inflight, req)
+        submit_via(front, &self.library, &self.inflight, &self.telemetry, req)
     }
 
     /// A cloneable, `Send` submission lane over this pipeline — one
@@ -443,6 +474,7 @@ impl Coordinator {
             front: self.front.as_ref().expect("coordinator running").clone(),
             library: self.library.clone(),
             inflight: self.inflight.clone(),
+            telemetry: self.telemetry.clone(),
             _coord: std::marker::PhantomData,
         }
     }
@@ -473,6 +505,12 @@ impl Coordinator {
     /// request key.
     pub fn model_key(&self, name: &str) -> Option<ModelKey> {
         self.library.key(name)
+    }
+
+    /// The coordinator's observability handle: stage histograms, the
+    /// metric registry, and (while sampling is on) collected spans.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 }
 
@@ -507,6 +545,7 @@ fn batcher_loop(
     sub_rx: mpsc::Receiver<Submission>,
     job_tx: mpsc::SyncSender<Job>,
     inflight: &AtomicU64,
+    telemetry: &Telemetry,
 ) {
     let origin = Instant::now();
     let now_us = |origin: &Instant| origin.elapsed().as_secs_f64() * 1e6;
@@ -516,7 +555,7 @@ fn batcher_loop(
     loop {
         // Dispatch everything due before sleeping.
         while let Some((model, batch)) = batcher.pop_due(now_us(&origin)) {
-            if send_coalesced(&job_tx, inflight, model, batch).is_err() {
+            if send_coalesced(&job_tx, inflight, telemetry, model, batch).is_err() {
                 return;
             }
         }
@@ -524,7 +563,7 @@ fn batcher_loop(
         // queueing delay to hide behind — release pending work now.
         while inflight.load(Ordering::Relaxed) == 0 && !batcher.is_empty() {
             let Some((model, batch)) = batcher.pop_all() else { break };
-            if send_coalesced(&job_tx, inflight, model, batch).is_err() {
+            if send_coalesced(&job_tx, inflight, telemetry, model, batch).is_err() {
                 return;
             }
         }
@@ -537,8 +576,11 @@ fn batcher_loop(
             Some(us) => sub_rx.recv_timeout(Duration::from_micros(us.ceil() as u64)),
         };
         match received {
-            Ok(sub) => {
+            Ok(mut sub) => {
                 if sub.req.targets.len() == 1 {
+                    if let Some(t) = sub.trace.as_mut() {
+                        t.stamp(Stage::Admit, telemetry.now_us());
+                    }
                     // Deadline anchored to the caller's submit time, not
                     // the batcher's receive time: backpressure upstream
                     // of this thread must not restart the SLO clock.
@@ -546,9 +588,16 @@ fn batcher_loop(
                         sub.t_submit.saturating_duration_since(origin).as_secs_f64() * 1e6;
                     batcher.offer(sub.req.model, sub, arrival_us);
                 } else {
-                    // Already a batch: pass through.
+                    // Already a batch: pass through (its admit is its
+                    // dispatch).
+                    if let Some(t) = sub.trace.as_mut() {
+                        let now = telemetry.now_us();
+                        t.stamp(Stage::Admit, now);
+                        t.stamp(Stage::Dispatch, now);
+                    }
                     inflight.fetch_add(1, Ordering::Relaxed);
-                    if job_tx.send(Job::single(sub.req, sub.reply, sub.t_submit)).is_err() {
+                    let job = Job::single(sub.req, sub.reply, sub.t_submit, sub.trace);
+                    if job_tx.send(job).is_err() {
                         return;
                     }
                 }
@@ -559,7 +608,7 @@ fn batcher_loop(
     }
     // Shutdown drain: everything still pending goes out immediately.
     while let Some((model, batch)) = batcher.pop_all() {
-        if send_coalesced(&job_tx, inflight, model, batch).is_err() {
+        if send_coalesced(&job_tx, inflight, telemetry, model, batch).is_err() {
             return;
         }
     }
@@ -568,18 +617,25 @@ fn batcher_loop(
 fn send_coalesced(
     job_tx: &mpsc::SyncSender<Job>,
     inflight: &AtomicU64,
+    telemetry: &Telemetry,
     model: ModelKey,
     batch: Vec<Pending<Submission>>,
 ) -> Result<(), ()> {
+    telemetry.batch_size().record_us(batch.len() as f64);
+    let dispatch_us = telemetry.now_us();
     let mut targets = Vec::with_capacity(batch.len());
     let mut members = Vec::with_capacity(batch.len());
     for p in batch {
-        let sub = p.item;
+        let mut sub = p.item;
+        if let Some(t) = sub.trace.as_mut() {
+            t.stamp(Stage::Dispatch, dispatch_us);
+        }
         members.push(ReplySlot {
             id: sub.req.id,
             n_targets: sub.req.targets.len(),
             t_submit: sub.t_submit,
             reply: sub.reply,
+            trace: sub.trace,
         });
         targets.extend_from_slice(&sub.req.targets);
     }
@@ -597,11 +653,12 @@ fn builder_loop(
     library: &ModelLibrary,
     jobs: &Mutex<mpsc::Receiver<Job>>,
     built_tx: &mpsc::SyncSender<ExecJob>,
+    telemetry: &Telemetry,
 ) {
     loop {
         // Hold the lock only while waiting for a job; the build itself
         // runs unlocked so the pool scales.
-        let job = {
+        let mut job = {
             let guard = match jobs.lock() {
                 Ok(g) => g,
                 Err(_) => break,
@@ -612,9 +669,26 @@ fn builder_loop(
             }
         };
         let t_dequeue = Instant::now();
+        let dequeue_us = telemetry.now_us();
+        for m in job.members.iter_mut() {
+            let wait = t_dequeue.saturating_duration_since(m.t_submit);
+            telemetry.stages().queue_wait.record_us(wait.as_secs_f64() * 1e6);
+            if let Some(t) = m.trace.as_mut() {
+                t.stamp(Stage::BuildStart, dequeue_us);
+            }
+        }
         let samples = library.samples(job.model);
         let nf = Nodeflow::build_layers(graph, sampler, &job.targets, samples);
-        let exec = ExecJob { model: job.model, nf, members: job.members, t_dequeue };
+        let t_built = Instant::now();
+        let build_us = t_built.duration_since(t_dequeue).as_secs_f64() * 1e6;
+        telemetry.stages().build.record_us(build_us);
+        let enqueue_us = telemetry.now_us();
+        for m in job.members.iter_mut() {
+            if let Some(t) = m.trace.as_mut() {
+                t.stamp(Stage::RouteEnqueue, enqueue_us);
+            }
+        }
+        let exec = ExecJob { model: job.model, nf, members: job.members, t_dequeue, t_built };
         if built_tx.send(exec).is_err() {
             break;
         }

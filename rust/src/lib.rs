@@ -41,6 +41,11 @@
 //!   queue, mirroring GRIP's edge/vertex phase split) with a shared
 //!   degree-aware feature cache, and the open-loop rate × shard sweep
 //!   behind `grip serve-bench`.
+//! * [`telemetry`] — serving-wide observability: a lock-light registry
+//!   of counters/gauges and fixed-bucket log₂ streaming histograms
+//!   (O(1) record, bounded memory, mergeable across shards), sampled
+//!   per-request `SpanTrace` lifecycle tracing, and exporters for
+//!   Chrome `trace_event` JSON (Perfetto) and Prometheus text.
 //! * [`repro`] — one generator per paper table and figure.
 
 pub mod backend;
@@ -58,5 +63,6 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 
 pub use config::{GripConfig, ModelConfig};

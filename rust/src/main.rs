@@ -34,6 +34,7 @@ fn usage() -> ! {
                    [--scale S=0.01] [--backend B] [--no-numerics] [--shards K=1]\n\
                    [--partition degree|hash|off] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
+                   [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
                    [--partition P1,P2,..=off (degree|hash|off)] [--target-skew S=0 (Zipf exponent)]\n\
@@ -41,6 +42,7 @@ fn usage() -> ! {
                    [--backend B=fixed] [--seed K=17] [--out PATH] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
                    [--submit-lanes W=0 (auto)]\n\
+                   [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
            verify\n\
            info\n\
@@ -58,7 +60,11 @@ fn usage() -> ! {
            partition-local feature caches, home-shard routing, and cross-shard boundary\n\
            fetches; off = one shared queue + cache (examples/SHARDING.md; replies are\n\
            bit-identical in every mode)\n\
-         --target-skew draws serve-bench targets Zipf(s) instead of uniformly (0 = uniform)"
+         --target-skew draws serve-bench targets Zipf(s) instead of uniformly (0 = uniform)\n\
+         --trace-sample traces 1-in-N requests through every pipeline stage (0 = off; stage\n\
+           histograms record regardless; examples/OBSERVABILITY.md); --trace-out writes the\n\
+           sampled spans as Chrome trace_event JSON (load in Perfetto), --metrics-out writes\n\
+           the end-of-run Prometheus text snapshot"
     );
     std::process::exit(2);
 }
@@ -280,6 +286,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         shards: args.get_usize("shards", defaults.shards),
         cache_rows: args.get_usize("cache-rows", defaults.cache_rows),
         custom_specs: spec.iter().cloned().collect(),
+        trace_sample: args.get_usize("trace-sample", defaults.trace_sample as usize) as u64,
         ..defaults
     };
     let coord = Coordinator::start(graph, 17, cfg)?;
@@ -363,6 +370,33 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             stats.boundary_fetch_p99_us
         );
     }
+    // Per-stage latency breakdown from the always-on stage histograms:
+    // where a request's time went, not just how long it took.
+    println!(
+        "stages (p50/p99 µs): queue {:.0}/{:.0} | prefetch-local {:.0}/{:.0} | \
+         boundary {:.0}/{:.0} | compute {:.0}/{:.0} | reply {:.0}/{:.0}",
+        stats.queue_wait_p50_us,
+        stats.queue_wait_p99_us,
+        stats.prefetch_local_p50_us,
+        stats.prefetch_local_p99_us,
+        stats.boundary_wait_p50_us,
+        stats.boundary_wait_p99_us,
+        stats.compute_p50_us,
+        stats.compute_p99_us,
+        stats.reply_p50_us,
+        stats.reply_p99_us
+    );
+    if let Some(path) = args.get("trace-out") {
+        let spans = coord.telemetry().take_spans();
+        let n_spans = spans.len();
+        let groups = vec![(format!("serve/{model_name}"), spans)];
+        std::fs::write(path, grip::telemetry::chrome_trace_json(&groups))?;
+        println!("wrote {path} ({n_spans} spans)");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, stats.render_prometheus(coord.telemetry()))?;
+        println!("wrote {path}");
+    }
     if let Some(r) = responses.first() {
         if !r.embedding.is_empty() {
             let norm: f32 = r.embedding.iter().map(|x| x * x).sum::<f32>().sqrt();
@@ -437,6 +471,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         cache_rows: args.get_usize("cache-rows", defaults.cache_rows),
         target_skew: args.get_f64("target-skew", 0.0),
         submit_lanes: args.get_usize("submit-lanes", 0),
+        trace_sample: args.get_usize("trace-sample", defaults.trace_sample as usize) as u64,
         batch: if args.has("no-batching") {
             None
         } else {
@@ -515,6 +550,16 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
                 r.stats.boundary_fetch_p99_us
             );
         }
+        println!(
+            "{:<40} stages p99 µs: queue {:.0} | prefetch-local {:.0} | boundary {:.0} | \
+             compute {:.0} | reply {:.0}",
+            "",
+            r.stats.queue_wait_p99_us,
+            r.stats.prefetch_local_p99_us,
+            r.stats.boundary_wait_p99_us,
+            r.stats.compute_p99_us,
+            r.stats.reply_p99_us
+        );
     }
     let sections: Vec<(&str, Vec<(String, f64)>)> =
         points.iter().map(|(label, r)| (label.as_str(), r.metrics())).collect();
@@ -523,6 +568,22 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     );
     write_bench_json(&out_path, &sections)?;
     println!("wrote {}", out_path.display());
+    // Exporters: one Chrome-trace process per sweep point; the
+    // Prometheus snapshot is the last point's (each run has its own
+    // registry — merged reporting lives in BENCH_serve.json).
+    if let Some(path) = args.get("trace-out") {
+        let groups: Vec<(String, Vec<grip::telemetry::SpanTrace>)> =
+            points.iter().map(|(l, r)| (l.clone(), r.spans.clone())).collect();
+        let n_spans: usize = groups.iter().map(|(_, s)| s.len()).sum();
+        std::fs::write(path, grip::telemetry::chrome_trace_json(&groups))?;
+        println!("wrote {path} ({n_spans} spans across {} points)", groups.len());
+    }
+    if let Some(path) = args.get("metrics-out") {
+        if let Some((label, last)) = points.last() {
+            std::fs::write(path, &last.prom)?;
+            println!("wrote {path} (snapshot of {label})");
+        }
+    }
     Ok(())
 }
 

@@ -18,6 +18,7 @@ use crate::coordinator::{
 };
 use crate::graph::{CsrGraph, PartitionStrategy};
 use crate::greta::ModelSpec;
+use crate::telemetry::SpanTrace;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -63,6 +64,10 @@ pub struct OpenLoopConfig {
     /// measured load — per-worker lanes (each a cloned
     /// [`crate::coordinator::Submitter`]) keep the schedule honest.
     pub submit_lanes: usize,
+    /// Span-trace sampling: 1-in-N requests carry a lifecycle
+    /// [`SpanTrace`] (0 disables spans; stage histograms always
+    /// record). `--trace-sample` on the CLI.
+    pub trace_sample: u64,
     pub seed: u64,
 }
 
@@ -84,6 +89,7 @@ impl Default for OpenLoopConfig {
             target_skew: 0.0,
             builders: 4,
             submit_lanes: 0,
+            trace_sample: 64,
             seed: 17,
         }
     }
@@ -117,6 +123,11 @@ pub struct OpenLoopReport {
     pub accel: LatencyStats,
     pub stats: ServeStats,
     pub responses: Vec<InferenceResponse>,
+    /// Sampled lifecycle spans drained from the run's telemetry
+    /// (feed [`crate::telemetry::chrome_trace_json`]).
+    pub spans: Vec<SpanTrace>,
+    /// End-of-run Prometheus text snapshot (registry + pool counters).
+    pub prom: String,
 }
 
 impl OpenLoopReport {
@@ -161,6 +172,19 @@ impl OpenLoopReport {
             ("boundary_fetches", self.stats.boundary_fetches as f64),
             ("boundary_rows", self.stats.boundary_rows as f64),
             ("boundary_fetch_p99_us", self.stats.boundary_fetch_p99_us),
+            // Per-stage latency breakdown from the always-on stage
+            // histograms: where a request's time actually went (queue,
+            // local gather, boundary wait, compute, reply fan-out).
+            ("stage_queue_wait_p50_us", self.stats.queue_wait_p50_us),
+            ("stage_queue_wait_p99_us", self.stats.queue_wait_p99_us),
+            ("stage_prefetch_local_p50_us", self.stats.prefetch_local_p50_us),
+            ("stage_prefetch_local_p99_us", self.stats.prefetch_local_p99_us),
+            ("stage_boundary_wait_p50_us", self.stats.boundary_wait_p50_us),
+            ("stage_boundary_wait_p99_us", self.stats.boundary_wait_p99_us),
+            ("stage_compute_p50_us", self.stats.compute_p50_us),
+            ("stage_compute_p99_us", self.stats.compute_p99_us),
+            ("stage_reply_p50_us", self.stats.reply_p50_us),
+            ("stage_reply_p99_us", self.stats.reply_p99_us),
         ]
         .into_iter()
         .map(|(k, v)| (k.to_string(), v))
@@ -232,6 +256,7 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
         custom_specs: cfg.custom_specs.clone(),
         cache_rows: cfg.cache_rows,
         builders: cfg.builders,
+        trace_sample: cfg.trace_sample,
         // Open loop: the submission path must never block, or the
         // schedule silently degrades to closed-loop under overload.
         queue_depth: cfg.requests.max(256),
@@ -287,6 +312,8 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
     }
     let wall_s = origin.elapsed().as_secs_f64();
     let stats = coord.serve_stats();
+    let spans = coord.telemetry().take_spans();
+    let prom = stats.render_prometheus(coord.telemetry());
     drop(coord);
 
     let span_s = arrivals.last().map(|a| a.t_us / 1e6).unwrap_or(0.0);
@@ -300,6 +327,8 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
         accel,
         stats,
         responses,
+        spans,
+        prom,
     })
 }
 
@@ -444,6 +473,26 @@ mod tests {
         {
             assert!(metrics.iter().any(|(k, _)| *k == key), "missing {key}");
         }
+        // The per-stage breakdown is always present, pipelined or not.
+        for key in [
+            "stage_queue_wait_p50_us",
+            "stage_queue_wait_p99_us",
+            "stage_prefetch_local_p50_us",
+            "stage_prefetch_local_p99_us",
+            "stage_boundary_wait_p50_us",
+            "stage_boundary_wait_p99_us",
+            "stage_compute_p50_us",
+            "stage_compute_p99_us",
+            "stage_reply_p50_us",
+            "stage_reply_p99_us",
+        ] {
+            assert!(metrics.iter().any(|(k, _)| *k == key), "missing {key}");
+        }
+        assert!(report.stats.compute_p99_us > 0.0, "compute histogram recorded");
+        // Default 1-in-64 sampling traces at least request id 0.
+        assert!(!report.spans.is_empty(), "sampled spans collected");
+        assert!(report.prom.contains("grip_stage_compute_us_count"));
+        assert!(report.prom.contains("grip_jobs_total 24"));
         // The default pipeline staged every job.
         assert_eq!(report.stats.staged_jobs, 24);
         // And the sequential path reports zero staged jobs.

@@ -72,6 +72,13 @@
 //! * [`harness`] — open-loop measurement and the rate × shard ×
 //!   partition sweep behind `grip serve-bench` and
 //!   `cargo bench --bench bench_exec`.
+//!
+//! Every stage of the diagram above is instrumented through
+//! [`crate::telemetry`]: always-on stage histograms (the per-stage
+//! p50/p99 breakdown in [`ServeStats`] / `BENCH_serve.json`) plus
+//! sampled per-request [`crate::telemetry::SpanTrace`] lifecycle
+//! traces exportable as Chrome `trace_event` JSON and Prometheus text
+//! (`--trace-sample`, `--trace-out`, `--metrics-out`).
 
 pub mod batcher;
 pub mod feature_cache;

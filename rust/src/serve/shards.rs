@@ -94,6 +94,7 @@ use crate::nodeflow::Nodeflow;
 use crate::runtime::{fill_feature_row, FeatureSource};
 use crate::serve::{DegreeClasses, FeatureCache};
 use crate::sim::{simulate, SimResult};
+use crate::telemetry::{SpanTrace, Stage, Telemetry};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -118,6 +119,10 @@ pub struct ReplySlot {
     pub n_targets: usize,
     pub t_submit: Instant,
     pub reply: mpsc::Sender<Result<InferenceResponse, String>>,
+    /// Lifecycle span for sampled requests (`None` on the unsampled
+    /// fast path); stamped as the job moves through the pipeline and
+    /// deposited into the pool's [`Telemetry`] with the reply.
+    pub trace: Option<Box<SpanTrace>>,
 }
 
 /// A unit of executor work: a built nodeflow plus the reply slots of
@@ -129,6 +134,9 @@ pub struct ExecJob {
     pub members: Vec<ReplySlot>,
     /// When a builder dequeued the job (start of service time).
     pub t_dequeue: Instant,
+    /// When the builder finished the nodeflow and enqueued the job
+    /// toward its shard (start of the shard-wait window).
+    pub t_built: Instant,
 }
 
 /// Per-shard phase-decoupling policy: how many edge-centric prefetch
@@ -202,6 +210,9 @@ pub struct ShardSpec {
     pub partition: PartitionStrategy,
     /// Seed of the deterministic fixed-point serving weights.
     pub weight_seed: u64,
+    /// Shared telemetry handle: stage histograms always record; span
+    /// stamping happens only on requests the coordinator sampled.
+    pub telemetry: Telemetry,
 }
 
 /// Largest-remainder split of the total cache-row budget: shard `i`
@@ -225,6 +236,7 @@ impl Default for ShardSpec {
             cache_rows: 4096,
             partition: PartitionStrategy::Off,
             weight_seed: 0x5EED_5E4E,
+            telemetry: Telemetry::default(),
         }
     }
 }
@@ -341,6 +353,24 @@ pub struct ServeStats {
     pub boundary_rows: u64,
     /// p99 of the pull round-trip (µs), 0 when no pull happened.
     pub boundary_fetch_p99_us: f64,
+    /// Per-stage latency breakdown from the pool's always-on stage
+    /// histograms (µs, 0 when the stage never ran): submit → builder
+    /// dequeue…
+    pub queue_wait_p50_us: f64,
+    pub queue_wait_p99_us: f64,
+    /// …feature staging minus boundary wait…
+    pub prefetch_local_p50_us: f64,
+    pub prefetch_local_p99_us: f64,
+    /// …wait on remote boundary rows (0 unpartitioned; previously
+    /// folded into the prefetch window and double-counted there)…
+    pub boundary_wait_p50_us: f64,
+    pub boundary_wait_p99_us: f64,
+    /// …backend execute…
+    pub compute_p50_us: f64,
+    pub compute_p99_us: f64,
+    /// …and reply fan-out.
+    pub reply_p50_us: f64,
+    pub reply_p99_us: f64,
 }
 
 /// The executor pool. Threads drain the `ExecJob` receiver until its
@@ -359,6 +389,7 @@ pub struct ShardPool {
     partition_balance: f64,
     shards: usize,
     pipeline: PipelineConfig,
+    telemetry: Telemetry,
 }
 
 /// Deterministic fixed-point serving weights for `plan` (the Q4.12
@@ -434,16 +465,21 @@ struct RouteCtx {
 /// same custom-dims rule as [`CachedFeatures`]). On a shutdown race a
 /// missing reply just leaves the vertex out of the map and the gather
 /// synthesizes it locally — the bytes are identical either way.
+///
+/// Returns the rows plus the total µs this job spent waiting on its
+/// peers (0 when nothing crossed a partition) — the component the
+/// stage breakdown reports as `boundary_wait`, separate from the local
+/// gather it used to be folded into.
 fn fetch_boundary_rows(
     route: &RouteCtx,
     nf: &Nodeflow,
     in_dim: usize,
     cache_f_in: usize,
     counters: &PoolCounters,
-) -> BoundaryRows {
+) -> (BoundaryRows, f64) {
     let mut out = BoundaryRows { f_in: cache_f_in, ..Default::default() };
     if in_dim != cache_f_in {
-        return out;
+        return (out, 0.0);
     }
     let mut per_peer: Vec<Vec<u32>> = vec![Vec::new(); route.peers.len()];
     for &v in &nf.layers[0].inputs {
@@ -468,6 +504,7 @@ fn fetch_boundary_rows(
             pending.push((vertices, rrx));
         }
     }
+    let had_pulls = !pending.is_empty();
     for (vertices, rrx) in pending {
         if let Ok(rows) = rrx.recv() {
             let base = out.rows.len() / cache_f_in;
@@ -480,7 +517,12 @@ fn fetch_boundary_rows(
             }
         }
     }
-    out
+    let wait_us = if had_pulls {
+        t0.elapsed().as_secs_f64() * 1e6
+    } else {
+        0.0
+    };
+    (out, wait_us)
 }
 
 /// [`FeatureSource`] for a partitioned shard: remote rows come from
@@ -510,6 +552,9 @@ impl FeatureSource for RoutedFeatures<'_> {
 
 /// Stage `nf`'s layer-0 rows: through the boundary-fetch path when the
 /// pool is partitioned, straight through the (shared) cache otherwise.
+/// Returns the µs spent waiting on peers' boundary rows (0 when
+/// unpartitioned) so callers can split the prefetch window into its
+/// local-gather and boundary-wait components.
 fn stage_features(
     staged: &mut StagedFeatures,
     nf: &Nodeflow,
@@ -518,16 +563,19 @@ fn stage_features(
     graph: &CsrGraph,
     route: Option<&RouteCtx>,
     counters: &PoolCounters,
-) {
+) -> f64 {
     match route {
         Some(r) => {
-            let boundary = fetch_boundary_rows(r, nf, in_dim, cache.f_in(), counters);
+            let (boundary, wait_us) =
+                fetch_boundary_rows(r, nf, in_dim, cache.f_in(), counters);
             let mut features = RoutedFeatures { cache, graph, boundary: &boundary };
             staged.stage(nf, in_dim, &mut features);
+            wait_us
         }
         None => {
             let mut features = CachedFeatures { cache, graph };
             staged.stage(nf, in_dim, &mut features);
+            0.0
         }
     }
 }
@@ -554,6 +602,9 @@ struct StagedJob {
     job: ExecJob,
     staged: StagedFeatures,
     sim: SimResult,
+    /// When the prefetch lane finished staging (start of the
+    /// ready-queue wait the engine measures at dequeue).
+    t_staged: Instant,
 }
 
 impl ShardPool {
@@ -771,6 +822,7 @@ impl ShardPool {
             partition_balance,
             shards,
             pipeline: spec.pipeline,
+            telemetry: spec.telemetry.clone(),
         })
     }
 
@@ -823,6 +875,8 @@ impl ShardPool {
                 .name(format!("grip-shard-{shard}-lane-{lane}"))
                 .spawn(move || {
                     prefetch_lane_loop(
+                        shard,
+                        lane,
                         &spec,
                         &library,
                         &graph,
@@ -868,6 +922,7 @@ impl ShardPool {
         let loaded = c.sim_rows_loaded.load(Ordering::Relaxed);
         let occ_samples = c.occupancy_samples.load(Ordering::Relaxed);
         let sim_busy = c.sim_busy_cycles.load(Ordering::Relaxed);
+        let st = self.telemetry.stages();
         let shard_backends =
             self.status.lock().map(|s| s.clone()).unwrap_or_default();
         let cache_hits: u64 = self.caches.iter().map(|c| c.hits()).sum();
@@ -921,7 +976,49 @@ impl ShardPool {
                 .lock()
                 .map(|l| if l.count() > 0 { l.p99() } else { 0.0 })
                 .unwrap_or(0.0),
+            queue_wait_p50_us: st.queue_wait.percentile_us(50.0),
+            queue_wait_p99_us: st.queue_wait.percentile_us(99.0),
+            prefetch_local_p50_us: st.prefetch_local.percentile_us(50.0),
+            prefetch_local_p99_us: st.prefetch_local.percentile_us(99.0),
+            boundary_wait_p50_us: st.boundary_wait.percentile_us(50.0),
+            boundary_wait_p99_us: st.boundary_wait.percentile_us(99.0),
+            compute_p50_us: st.compute.percentile_us(50.0),
+            compute_p99_us: st.compute.percentile_us(99.0),
+            reply_p50_us: st.reply.percentile_us(50.0),
+            reply_p99_us: st.reply.percentile_us(99.0),
         }
+    }
+}
+
+impl ServeStats {
+    /// Full Prometheus text snapshot: the telemetry registry's
+    /// counters, gauges, and stage histograms, followed by the
+    /// pool-level counters this struct carries. The registry holds no
+    /// jobs/cache counters of its own, so nothing renders twice.
+    pub fn render_prometheus(&self, telemetry: &Telemetry) -> String {
+        let mut out = telemetry.render_prometheus();
+        let mut push = |name: &str, ty: &str, v: String| {
+            out.push_str(&format!("# TYPE {name} {ty}\n{name} {v}\n"));
+        };
+        push("grip_jobs_total", "counter", self.jobs.to_string());
+        push("grip_timing_only_jobs_total", "counter", self.timing_only_jobs.to_string());
+        push("grip_backend_fallbacks_total", "counter", self.backend_fallbacks.to_string());
+        push("grip_cache_hits_total", "counter", self.cache_hits.to_string());
+        push("grip_cache_misses_total", "counter", self.cache_misses.to_string());
+        push("grip_cache_hit_rate", "gauge", format!("{:.6}", self.cache_hit_rate));
+        push("grip_staged_jobs_total", "counter", self.staged_jobs.to_string());
+        push("grip_prefetch_stalls_total", "counter", self.prefetch_stalls.to_string());
+        push("grip_engine_stalls_total", "counter", self.engine_stalls.to_string());
+        push("grip_prefetch_occupancy", "gauge", format!("{:.6}", self.prefetch_occupancy));
+        push("grip_boundary_fetches_total", "counter", self.boundary_fetches.to_string());
+        push("grip_boundary_rows_total", "counter", self.boundary_rows.to_string());
+        push(
+            "grip_boundary_fetch_p99_us",
+            "gauge",
+            format!("{:.3}", self.boundary_fetch_p99_us),
+        );
+        push("grip_shards", "gauge", self.shards.to_string());
+        out
     }
 }
 
@@ -1004,6 +1101,8 @@ fn init_engine(shard: usize, spec: &ShardSpec, library: &ModelLibrary) -> ShardE
 /// Exits when the job queue closes (or the engine is gone).
 #[allow(clippy::too_many_arguments)]
 fn prefetch_lane_loop(
+    shard: usize,
+    lane: usize,
     spec: &ShardSpec,
     library: &ModelLibrary,
     graph: &CsrGraph,
@@ -1015,10 +1114,11 @@ fn prefetch_lane_loop(
     ready_gauge: &AtomicU64,
     route: Option<&RouteCtx>,
 ) {
+    let telemetry = &spec.telemetry;
     loop {
         // Hold the queue lock only while waiting; staging runs unlocked
         // so sibling lanes (and sibling shards) overlap.
-        let job = {
+        let mut job = {
             let guard = match rx.lock() {
                 Ok(g) => g,
                 Err(_) => break,
@@ -1028,7 +1128,26 @@ fn prefetch_lane_loop(
                 Err(_) => break,
             }
         };
+        telemetry.stages().shard_wait.record_us(
+            Instant::now().saturating_duration_since(job.t_built).as_secs_f64() * 1e6,
+        );
+        let dequeue_us = telemetry.now_us();
+        for m in job.members.iter_mut() {
+            if let Some(t) = m.trace.as_mut() {
+                t.stamp(Stage::ShardDequeue, dequeue_us);
+                t.shard = Some(shard);
+                t.lane = Some(lane);
+            }
+        }
         let plan = library.plan(job.model);
+        // The edge-centric window opens here: the cycle sim, the
+        // staging-buffer wait, and the gather all run on this lane.
+        let prefetch_start_us = telemetry.now_us();
+        for m in job.members.iter_mut() {
+            if let Some(t) = m.trace.as_mut() {
+                t.stamp(Stage::PrefetchStart, prefetch_start_us);
+            }
+        }
         // Cycle-level accelerator timing runs here too: it only needs
         // (plan, nodeflow), so it belongs off the engine's critical
         // path with the rest of the edge-centric work.
@@ -1045,7 +1164,8 @@ fn prefetch_lane_loop(
                 Err(_) => break,
             }
         };
-        stage_features(
+        let t_stage = Instant::now();
+        let boundary_us = stage_features(
             &mut staged,
             &job.nf,
             plan.layers[0].in_dim,
@@ -1054,10 +1174,20 @@ fn prefetch_lane_loop(
             route,
             counters,
         );
+        let staging_us = t_stage.elapsed().as_secs_f64() * 1e6;
+        telemetry.stages().prefetch_local.record_us((staging_us - boundary_us).max(0.0));
+        telemetry.stages().boundary_wait.record_us(boundary_us);
+        let prefetch_end_us = telemetry.now_us();
+        for m in job.members.iter_mut() {
+            if let Some(t) = m.trace.as_mut() {
+                t.stamp(Stage::PrefetchEnd, prefetch_end_us);
+                t.boundary_wait_us = boundary_us;
+            }
+        }
         // Gauge before send so the engine's decrement can never race
         // below zero; undone on shutdown paths.
         ready_gauge.fetch_add(1, Ordering::Relaxed);
-        match ready_tx.try_send(StagedJob { job, staged, sim }) {
+        match ready_tx.try_send(StagedJob { job, staged, sim, t_staged: Instant::now() }) {
             Ok(()) => {}
             Err(mpsc::TrySendError::Full(sj)) => {
                 // The engine is the bottleneck right now — the phases
@@ -1136,7 +1266,11 @@ fn engine_loop(
         counters.occupancy_sum.fetch_add(queued.min(depth as u64), Ordering::Relaxed);
         counters.occupancy_samples.fetch_add(1, Ordering::Relaxed);
         counters.staged_jobs.fetch_add(1, Ordering::Relaxed);
-        let StagedJob { job, staged, sim } = sj;
+        let StagedJob { job, staged, sim, t_staged } = sj;
+        spec.telemetry
+            .stages()
+            .ready_wait
+            .record_us(t_staged.elapsed().as_secs_f64() * 1e6);
         execute_staged(
             spec,
             counters,
@@ -1190,7 +1324,7 @@ fn shard_loop(
     loop {
         // Hold the queue lock only while waiting; execution runs
         // unlocked so shards overlap.
-        let job = {
+        let mut job = {
             let guard = match rx.lock() {
                 Ok(g) => g,
                 Err(_) => break,
@@ -1200,6 +1334,16 @@ fn shard_loop(
                 Err(_) => break,
             }
         };
+        spec.telemetry.stages().shard_wait.record_us(
+            Instant::now().saturating_duration_since(job.t_built).as_secs_f64() * 1e6,
+        );
+        let dequeue_us = spec.telemetry.now_us();
+        for m in job.members.iter_mut() {
+            if let Some(t) = m.trace.as_mut() {
+                t.stamp(Stage::ShardDequeue, dequeue_us);
+                t.shard = Some(shard);
+            }
+        }
         execute_job(
             spec,
             library,
@@ -1234,11 +1378,32 @@ fn execute_job(
     scratch: &mut BackendScratch,
     staged: &mut StagedFeatures,
     route: Option<&RouteCtx>,
-    job: ExecJob,
+    mut job: ExecJob,
 ) {
+    let telemetry = &spec.telemetry;
     let plan = library.plan(job.model);
+    // Sequential prefetch window: sim + gather back-to-back on the
+    // calling thread (the pipelined path opens it in the lane instead).
+    let prefetch_start_us = telemetry.now_us();
+    for m in job.members.iter_mut() {
+        if let Some(t) = m.trace.as_mut() {
+            t.stamp(Stage::PrefetchStart, prefetch_start_us);
+        }
+    }
     let sim = simulate(&spec.grip, plan, &job.nf);
-    stage_features(staged, &job.nf, plan.layers[0].in_dim, cache, graph, route, counters);
+    let t_stage = Instant::now();
+    let boundary_us =
+        stage_features(staged, &job.nf, plan.layers[0].in_dim, cache, graph, route, counters);
+    let staging_us = t_stage.elapsed().as_secs_f64() * 1e6;
+    telemetry.stages().prefetch_local.record_us((staging_us - boundary_us).max(0.0));
+    telemetry.stages().boundary_wait.record_us(boundary_us);
+    let prefetch_end_us = telemetry.now_us();
+    for m in job.members.iter_mut() {
+        if let Some(t) = m.trace.as_mut() {
+            t.stamp(Stage::PrefetchEnd, prefetch_end_us);
+            t.boundary_wait_us = boundary_us;
+        }
+    }
     execute_staged(spec, counters, backend, prepared, scratch, staged, &sim, job);
 }
 
@@ -1256,10 +1421,17 @@ fn execute_staged(
     sim: &SimResult,
     job: ExecJob,
 ) {
-    let ExecJob { model, nf, members, t_dequeue } = job;
+    let ExecJob { model, nf, mut members, t_dequeue, t_built: _ } = job;
+    let telemetry = &spec.telemetry;
     // This job is now on an engine, not upstream of one (see the
     // engine-stall accounting); the gauge drops again with the replies.
     counters.executing.fetch_add(1, Ordering::Relaxed);
+    let engine_start_us = telemetry.now_us();
+    for m in members.iter_mut() {
+        if let Some(t) = m.trace.as_mut() {
+            t.stamp(Stage::EngineStart, engine_start_us);
+        }
+    }
 
     // 1. Cycle-level accelerator timing (and the sim-side feature-cache
     //    + phase-overlap accounting mirrored into the pool stats).
@@ -1281,7 +1453,10 @@ fn execute_staged(
 
     // 2. Numerics: one backend call, whatever the engine, over the
     //    pre-gathered feature rows.
+    let t_exec = Instant::now();
     let outcome = backend.execute(&prepared[model.index()], &nf, staged, scratch);
+    telemetry.stages().compute.record_us(t_exec.elapsed().as_secs_f64() * 1e6);
+    let engine_end_us = telemetry.now_us();
 
     // 3. Fan out per-member replies (a coalesced batch shares one
     //    nodeflow, one simulated pass, and one embedding buffer).
@@ -1299,25 +1474,36 @@ fn execute_staged(
             }
             let service_us = t_dequeue.elapsed().as_secs_f64() * 1e6;
             let neighborhood = nf.neighborhood_size();
+            let t_reply = Instant::now();
             let mut row = 0usize;
-            for m in members {
+            for mut m in members {
                 let embedding = if timing_only {
                     Vec::new()
                 } else {
                     out.embeddings[row * out.f_out..(row + m.n_targets) * out.f_out].to_vec()
                 };
                 row += m.n_targets;
+                let host_us = m.t_submit.elapsed().as_secs_f64() * 1e6;
+                telemetry.stages().e2e.record_us(host_us);
                 let resp = InferenceResponse {
                     id: m.id,
                     embedding,
                     accel_us,
-                    host_us: m.t_submit.elapsed().as_secs_f64() * 1e6,
+                    host_us,
                     service_us,
                     neighborhood,
                     timing_only,
                 };
+                // Deposit the span before the send: the moment the
+                // reply lands, a caller may drain the span sink.
+                if let Some(mut t) = m.trace.take() {
+                    t.stamp(Stage::EngineEnd, engine_end_us);
+                    t.stamp(Stage::Reply, telemetry.now_us());
+                    telemetry.push_span(t);
+                }
                 let _ = m.reply.send(Ok(resp));
             }
+            telemetry.stages().reply.record_us(t_reply.elapsed().as_secs_f64() * 1e6);
         }
     }
     counters.executing.fetch_sub(1, Ordering::Relaxed);
@@ -1367,8 +1553,10 @@ mod tests {
                 n_targets: targets.len(),
                 t_submit: Instant::now(),
                 reply: rtx,
+                trace: None,
             }],
             t_dequeue: Instant::now(),
+            t_built: Instant::now(),
         })
         .unwrap();
         rrx
@@ -1582,8 +1770,10 @@ mod tests {
                     n_targets: 1,
                     t_submit: Instant::now(),
                     reply: rtx,
+                    trace: None,
                 }],
                 t_dequeue: Instant::now(),
+                t_built: Instant::now(),
             };
             (job, rrx)
         };

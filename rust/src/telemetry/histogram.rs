@@ -1,0 +1,282 @@
+//! Fixed-bucket log₂ streaming histograms — the bounded-memory core
+//! under every latency metric in the serving stack.
+//!
+//! Layout (HDR-histogram style): values are recorded in integer
+//! nanoseconds. The first 32 buckets hold 0..32 ns exactly; every
+//! octave above that is split into 32 linear sub-buckets, so a bucket's
+//! width is always `2^(msb-5)` and the worst-case quantile error is
+//! half a bucket ≈ 1/64 ≈ 1.6% of the value — comfortably inside the
+//! 5% envelope `coordinator::metrics` pins by test. 1920 buckets cover
+//! the full `u64` range, so recording is O(1), memory is bounded, and
+//! two histograms merge by adding counts — the three properties the
+//! old clone-and-sort sample vector lacked.
+
+/// Linear sub-buckets per octave (2^5 = 32).
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS;
+
+/// Total bucket count: 32 exact low buckets + 59 octaves × 32.
+pub const BUCKETS: usize = SUB + (64 - SUB_BITS as usize - 1) * SUB;
+
+/// Bucket index of a nanosecond value. Contiguous and monotone:
+/// `index == v` for `v < 64`, and the top bucket is `BUCKETS - 1`.
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let sub = ((v >> (msb - SUB_BITS)) as usize) & (SUB - 1);
+    SUB + (msb - SUB_BITS) as usize * SUB + sub
+}
+
+/// Inclusive lower bound of a bucket (the inverse of [`bucket_index`]).
+pub fn bucket_low(index: usize) -> u64 {
+    if index < SUB {
+        return index as u64;
+    }
+    let oct = ((index - SUB) / SUB) as u32;
+    let sub = ((index - SUB) % SUB) as u64;
+    let msb = oct + SUB_BITS;
+    (1u64 << msb) + (sub << (msb - SUB_BITS))
+}
+
+/// Width of a bucket in nanoseconds (1 for the exact low buckets).
+pub fn bucket_width(index: usize) -> u64 {
+    if index < SUB {
+        1
+    } else {
+        let msb = ((index - SUB) / SUB) as u32 + SUB_BITS;
+        1u64 << (msb - SUB_BITS)
+    }
+}
+
+/// A bucket's representative value: its midpoint (its low bound for
+/// width-1 buckets, so sub-64 ns values round-trip exactly).
+fn representative(index: usize) -> u64 {
+    bucket_low(index) + (bucket_width(index) - 1) / 2
+}
+
+/// Microseconds → clamped integer nanoseconds (the recording unit).
+fn us_to_ns(us: f64) -> u64 {
+    let ns = (us * 1_000.0).round();
+    if ns.is_finite() && ns > 0.0 {
+        ns as u64
+    } else {
+        0
+    }
+}
+
+/// Single-threaded streaming histogram (microsecond API over the
+/// nanosecond buckets). Backs [`crate::coordinator::LatencyStats`];
+/// the lock-free serving-pipeline variant is
+/// [`crate::telemetry::Histogram`], built on the same bucket math.
+#[derive(Clone, Default)]
+pub struct StreamingHistogram {
+    /// Lazily allocated on first record so an empty recorder costs
+    /// nothing (reports hold many).
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl StreamingHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, us: f64) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+        }
+        self.buckets[bucket_index(us_to_ns(us))] += 1;
+        if self.count == 0 {
+            self.min_us = us;
+            self.max_us = us;
+        } else {
+            self.min_us = self.min_us.min(us);
+            self.max_us = self.max_us.max(us);
+        }
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::INFINITY
+        } else {
+            self.min_us
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_us
+        }
+    }
+
+    /// Nearest-rank percentile (p in [0, 100]) over the bucket
+    /// representatives, clamped to the exactly-tracked [min, max] — so
+    /// a single-sample histogram reports that sample exactly, and the
+    /// worst-case error is half a bucket (≈ 1.6%).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                let us = representative(i) as f64 / 1_000.0;
+                return us.clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Add another histogram's population into this one (cross-shard
+    /// aggregation).
+    pub fn merge(&mut self, other: &StreamingHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+        }
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        if self.count == 0 {
+            self.min_us = other.min_us;
+            self.max_us = other.max_us;
+        } else {
+            self.min_us = self.min_us.min(other.min_us);
+            self.max_us = self.max_us.max(other.max_us);
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+}
+
+impl std::fmt::Debug for StreamingHistogram {
+    /// The bucket vector is 1920 entries — summarize instead of
+    /// spewing it into every report debug dump.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamingHistogram")
+            .field("count", &self.count)
+            .field("min_us", &self.min())
+            .field("max_us", &self.max())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_contiguous_and_monotone() {
+        // Exact region: identity.
+        for v in 0..64u64 {
+            assert_eq!(bucket_index(v), v as usize, "v={v}");
+        }
+        // Monotone non-decreasing, never skipping a bucket, across the
+        // first few octaves.
+        let mut prev = 0usize;
+        for v in 0..100_000u64 {
+            let i = bucket_index(v);
+            assert!(i == prev || i == prev + 1, "v={v}: {prev} -> {i}");
+            prev = i;
+        }
+        // Top of the range still lands inside the table.
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(BUCKETS, 1920);
+    }
+
+    #[test]
+    fn bucket_low_inverts_bucket_index() {
+        for i in 0..BUCKETS {
+            let low = bucket_low(i);
+            assert_eq!(bucket_index(low), i, "bucket {i}");
+            // The last value of the bucket still maps to it.
+            let hi = low + bucket_width(i) - 1;
+            assert_eq!(bucket_index(hi), i, "bucket {i} high end");
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // Midpoint representative: error ≤ half a bucket width, i.e.
+        // ≤ 1/64 of the value above the exact region.
+        for v in [100u64, 999, 12_345, 1_000_000, 987_654_321, u64::MAX / 3] {
+            let rep = representative(bucket_index(v));
+            let err = (rep as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 1.0 / 64.0 + 1e-12, "v={v} rep={rep} err={err}");
+        }
+    }
+
+    #[test]
+    fn percentiles_track_a_uniform_population() {
+        let mut h = StreamingHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9, "sum is tracked exactly");
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 1000.0);
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+        assert!((h.percentile(50.0) - 500.0).abs() / 500.0 <= 0.02);
+        assert!((h.percentile(99.0) - 990.0).abs() / 990.0 <= 0.02);
+    }
+
+    #[test]
+    fn single_sample_is_exact_and_empty_is_zero() {
+        let empty = StreamingHistogram::new();
+        assert_eq!(empty.percentile(99.0), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+        let mut h = StreamingHistogram::new();
+        h.record(7.5);
+        // Clamping to [min, max] makes the one-sample case exact.
+        assert_eq!(h.percentile(50.0), 7.5);
+        assert_eq!(h.percentile(99.0), 7.5);
+    }
+
+    #[test]
+    fn merge_is_sum_of_populations() {
+        let mut a = StreamingHistogram::new();
+        let mut b = StreamingHistogram::new();
+        let mut whole = StreamingHistogram::new();
+        for i in 1..=400 {
+            let v = (i * 37 % 5000) as f64 + 0.5;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.percentile(99.0), whole.percentile(99.0));
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+    }
+}

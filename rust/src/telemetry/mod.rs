@@ -1,0 +1,239 @@
+//! Serving-wide observability: streaming histograms, a metric
+//! registry, and sampled per-request lifecycle traces.
+//!
+//! The design splits telemetry into two tiers with different costs:
+//!
+//! * **Stage histograms** (always on): every pipeline stage records
+//!   its duration into a lock-free log₂ [`Histogram`] — three relaxed
+//!   atomic adds per record, bounded memory, mergeable. These feed the
+//!   per-stage p50/p99 breakdowns in `ServeStats`, the Prometheus
+//!   snapshot, and `BENCH_serve.json`.
+//! * **Span traces** (sampled, default 1-in-64): a sampled request
+//!   carries a [`SpanTrace`] that timestamps each [`Stage`] it passes.
+//!   Collected spans export as Chrome `trace_event` JSON
+//!   ([`chrome_trace_json`]) loadable in Perfetto.
+//!
+//! Neither tier touches request numerics: telemetry observes
+//! timestamps on the side, so replies are bit-identical with tracing
+//! on, off, or at any sample rate (pinned by
+//! `tests/telemetry_props.rs`).
+
+pub mod histogram;
+pub mod registry;
+pub mod span;
+
+pub use histogram::StreamingHistogram;
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use span::{chrome_trace_json, SpanTrace, Stage, STAGES};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Cap on retained sampled spans; beyond it spans are counted as
+/// dropped instead of growing memory without bound.
+const SPAN_CAP: usize = 65_536;
+
+/// Pre-resolved histogram handles for every pipeline stage — the hot
+/// path records through these `Arc`s and never touches the registry
+/// mutex.
+#[derive(Debug, Clone)]
+pub struct StageHistograms {
+    /// Submit → builder dequeue, per request.
+    pub queue_wait: Arc<Histogram>,
+    /// Job build (CSR gather of the batch), per job.
+    pub build: Arc<Histogram>,
+    /// Built job → shard/lane pickup, per job.
+    pub shard_wait: Arc<Histogram>,
+    /// Feature staging minus boundary wait, per job.
+    pub prefetch_local: Arc<Histogram>,
+    /// Wait on remote boundary rows, per job (0 when unpartitioned).
+    pub boundary_wait: Arc<Histogram>,
+    /// Staged job → engine pickup, per job (pipelined mode).
+    pub ready_wait: Arc<Histogram>,
+    /// Backend execute, per job.
+    pub compute: Arc<Histogram>,
+    /// Reply fan-out, per job.
+    pub reply: Arc<Histogram>,
+    /// End-to-end host latency, per request.
+    pub e2e: Arc<Histogram>,
+}
+
+impl StageHistograms {
+    fn new(registry: &Registry) -> Self {
+        Self {
+            queue_wait: registry.histogram("grip_stage_queue_wait_us"),
+            build: registry.histogram("grip_stage_build_us"),
+            shard_wait: registry.histogram("grip_stage_shard_wait_us"),
+            prefetch_local: registry.histogram("grip_stage_prefetch_local_us"),
+            boundary_wait: registry.histogram("grip_stage_boundary_wait_us"),
+            ready_wait: registry.histogram("grip_stage_ready_wait_us"),
+            compute: registry.histogram("grip_stage_compute_us"),
+            reply: registry.histogram("grip_stage_reply_us"),
+            e2e: registry.histogram("grip_stage_e2e_us"),
+        }
+    }
+}
+
+struct Inner {
+    origin: Instant,
+    /// Sample 1-in-N requests for span tracing; 0 disables spans
+    /// entirely. Stage histograms record regardless.
+    sample_every: u64,
+    registry: Registry,
+    stages: StageHistograms,
+    batch_size: Arc<Histogram>,
+    requests: Arc<Counter>,
+    spans_sampled: Arc<Counter>,
+    spans_dropped: Arc<Counter>,
+    spans: Mutex<Vec<SpanTrace>>,
+}
+
+/// Shared telemetry handle, cloned into every pipeline thread.
+/// Cheap to clone (one `Arc`); a default handle has span sampling off
+/// but still collects stage histograms.
+#[derive(Clone)]
+pub struct Telemetry(Arc<Inner>);
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl Telemetry {
+    /// `sample_every` = N samples 1-in-N requests for span tracing;
+    /// 0 turns span tracing off.
+    pub fn new(sample_every: u64) -> Self {
+        let registry = Registry::new();
+        let stages = StageHistograms::new(&registry);
+        let batch_size = registry.histogram("grip_batch_size");
+        let requests = registry.counter("grip_requests_total");
+        let spans_sampled = registry.counter("grip_spans_sampled_total");
+        let spans_dropped = registry.counter("grip_spans_dropped_total");
+        registry.gauge("grip_trace_sample_every").set(sample_every);
+        Self(Arc::new(Inner {
+            origin: Instant::now(),
+            sample_every,
+            registry,
+            stages,
+            batch_size,
+            requests,
+            spans_sampled,
+            spans_dropped,
+            spans: Mutex::new(Vec::new()),
+        }))
+    }
+
+    /// Span tracing off, histograms on — the default for embedded use.
+    pub fn disabled() -> Self {
+        Self::new(0)
+    }
+
+    /// Microseconds since this handle was created (the span timebase).
+    pub fn now_us(&self) -> f64 {
+        self.0.origin.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.0.sample_every
+    }
+
+    /// Count a request arrival and decide whether to trace it. Returns
+    /// a span (with `Arrival` stamped) for sampled requests.
+    pub fn start_span(&self, request_id: u64) -> Option<Box<SpanTrace>> {
+        self.0.requests.inc();
+        if self.0.sample_every == 0 || request_id % self.0.sample_every != 0 {
+            return None;
+        }
+        self.0.spans_sampled.inc();
+        let mut span = Box::new(SpanTrace::new(request_id));
+        span.stamp(Stage::Arrival, self.now_us());
+        Some(span)
+    }
+
+    /// Deposit a completed span into the sink (bounded by `SPAN_CAP`).
+    pub fn push_span(&self, span: Box<SpanTrace>) {
+        let mut spans = self.0.spans.lock().unwrap();
+        if spans.len() >= SPAN_CAP {
+            self.0.spans_dropped.inc();
+            return;
+        }
+        spans.push(*span);
+    }
+
+    /// Drain all collected spans (end-of-run export).
+    pub fn take_spans(&self) -> Vec<SpanTrace> {
+        std::mem::take(&mut *self.0.spans.lock().unwrap())
+    }
+
+    pub fn stages(&self) -> &StageHistograms {
+        &self.0.stages
+    }
+
+    /// Batch-size distribution at dispatch.
+    pub fn batch_size(&self) -> &Arc<Histogram> {
+        &self.0.batch_size
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.0.registry
+    }
+
+    /// Prometheus text snapshot of the registry (counters, gauges,
+    /// stage histograms). `ServeStats::render_prometheus` appends the
+    /// pool-level counters on top of this.
+    pub fn render_prometheus(&self) -> String {
+        self.0.registry.render_prometheus()
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("sample_every", &self.0.sample_every)
+            .field("requests", &self.0.requests.get())
+            .field("spans_sampled", &self.0.spans_sampled.get())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_rate_is_respected() {
+        let t = Telemetry::new(4);
+        let mut sampled = 0;
+        for id in 0..64 {
+            if let Some(span) = t.start_span(id) {
+                sampled += 1;
+                t.push_span(span);
+            }
+        }
+        assert_eq!(sampled, 16);
+        assert_eq!(t.take_spans().len(), 16);
+        assert_eq!(t.registry().counter("grip_requests_total").get(), 64);
+        assert_eq!(t.registry().counter("grip_spans_sampled_total").get(), 16);
+    }
+
+    #[test]
+    fn disabled_records_histograms_but_no_spans() {
+        let t = Telemetry::disabled();
+        assert!(t.start_span(0).is_none());
+        t.stages().compute.record_us(42.0);
+        assert_eq!(t.stages().compute.count(), 1);
+        assert!(t.take_spans().is_empty());
+        let prom = t.render_prometheus();
+        assert!(prom.contains("grip_stage_compute_us_count 1"));
+        assert!(prom.contains("grip_trace_sample_every 0"));
+    }
+
+    #[test]
+    fn now_us_is_monotone() {
+        let t = Telemetry::disabled();
+        let a = t.now_us();
+        let b = t.now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,302 @@
+//! Lock-light metric registry: named counters, gauges, and atomic
+//! log₂ histograms.
+//!
+//! The registry itself is a mutex-guarded name table, but it is only
+//! touched at get-or-create time — callers hold `Arc` handles and the
+//! hot path is a handful of `Relaxed` atomic adds. Histograms share
+//! the bucket math in [`super::histogram`], so a shard-local histogram
+//! and the registry-wide one agree bucket for bucket and merge by
+//! addition.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::histogram::{bucket_index, bucket_low, bucket_width, BUCKETS};
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free log₂ streaming histogram: the multi-threaded sibling of
+/// [`super::histogram::StreamingHistogram`]. Recording is three
+/// `Relaxed` atomic RMWs plus two min/max updates — O(1), bounded
+/// memory, safe to hammer from every shard thread at once. Queries
+/// take a relaxed snapshot; they are meant for end-of-run reporting,
+/// not for reading concurrently-exact counts.
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let buckets: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets: Box<[AtomicU64; BUCKETS]> = buckets
+            .into_boxed_slice()
+            .try_into()
+            .unwrap_or_else(|_| unreachable!("BUCKETS-sized vec"));
+        Self {
+            buckets,
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record a microsecond duration (the unit used across the serving
+    /// stack); negative/NaN inputs clamp to zero.
+    pub fn record_us(&self, us: f64) {
+        let ns = (us * 1_000.0).round();
+        let ns = if ns.is_finite() && ns > 0.0 {
+            ns as u64
+        } else {
+            0
+        };
+        self.record_ns(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1_000.0
+        }
+    }
+
+    pub fn min_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.min_ns.load(Ordering::Relaxed) as f64 / 1_000.0
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1_000.0
+    }
+
+    /// Nearest-rank percentile in microseconds over a relaxed bucket
+    /// snapshot, clamped to the tracked [min, max].
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (n as f64 - 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum > rank {
+                let mid = bucket_low(i) + (bucket_width(i) - 1) / 2;
+                let us = mid as f64 / 1_000.0;
+                return us.clamp(self.min_us(), self.max_us());
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("min_us", &self.min_us())
+            .field("max_us", &self.max_us())
+            .finish()
+    }
+}
+
+/// A named metric held by the registry.
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Name → metric table. The mutex guards registration only; recorded
+/// values live behind the `Arc` handles it gives out, so steady-state
+/// recording never contends on it.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.metrics.lock().unwrap();
+        let entry = map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())));
+        match entry {
+            Metric::Counter(c) => Arc::clone(c),
+            // Name/type collision: hand back a detached metric rather
+            // than panic a serving thread.
+            _ => Arc::new(Counter::default()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.metrics.lock().unwrap();
+        let entry = map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())));
+        match entry {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => Arc::new(Gauge::default()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.metrics.lock().unwrap();
+        let entry = map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())));
+        match entry {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => Arc::new(Histogram::new()),
+        }
+    }
+
+    /// Prometheus text exposition: counters and gauges as plain
+    /// samples, histograms as quantile summaries (`{quantile="0.5"}`,
+    /// `{quantile="0.99"}`, `_sum`, `_count`), sorted by name.
+    pub fn render_prometheus(&self) -> String {
+        let map = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in map.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!(
+                        "# TYPE {name} summary\n\
+                         {name}{{quantile=\"0.5\"}} {:.3}\n\
+                         {name}{{quantile=\"0.99\"}} {:.3}\n\
+                         {name}_sum {:.3}\n\
+                         {name}_count {}\n",
+                        h.percentile_us(50.0),
+                        h.percentile_us(99.0),
+                        h.mean_us() * h.count() as f64,
+                        h.count(),
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_returns_shared_handles() {
+        let reg = Registry::new();
+        let a = reg.counter("grip_requests_total");
+        let b = reg.counter("grip_requests_total");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        let g = reg.gauge("grip_trace_sample_every");
+        g.set(64);
+        assert_eq!(reg.gauge("grip_trace_sample_every").get(), 64);
+    }
+
+    #[test]
+    fn atomic_histogram_matches_streaming_math() {
+        use crate::telemetry::histogram::StreamingHistogram;
+        let h = Histogram::new();
+        let mut s = StreamingHistogram::new();
+        for i in 1..=500 {
+            let v = (i * 131 % 9000) as f64 + 0.25;
+            h.record_us(v);
+            s.record(v);
+        }
+        assert_eq!(h.count(), s.count());
+        for p in [50.0, 90.0, 99.0] {
+            let rel = (h.percentile_us(p) - s.percentile(p)).abs() / s.percentile(p);
+            assert!(rel <= 0.05, "p{p}: atomic vs streaming off by {rel}");
+        }
+    }
+
+    #[test]
+    fn prometheus_render_has_all_sample_kinds() {
+        let reg = Registry::new();
+        reg.counter("grip_requests_total").add(7);
+        reg.gauge("grip_shards").set(4);
+        reg.histogram("grip_stage_e2e_us").record_us(123.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE grip_requests_total counter"));
+        assert!(text.contains("grip_requests_total 7"));
+        assert!(text.contains("grip_shards 4"));
+        assert!(text.contains("grip_stage_e2e_us{quantile=\"0.99\"}"));
+        assert!(text.contains("grip_stage_e2e_us_count 1"));
+    }
+}

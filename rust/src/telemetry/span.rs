@@ -1,0 +1,289 @@
+//! Per-request lifecycle spans and the Chrome `trace_event` exporter.
+//!
+//! A [`SpanTrace`] rides a sampled request through the whole serving
+//! pipeline, collecting one timestamp per [`Stage`]. Stamping is a
+//! plain array store — no allocation, no locking — and untraced
+//! requests carry `None`, so the unsampled path pays a branch.
+//!
+//! [`chrome_trace_json`] renders the collected spans as a Chrome
+//! `trace_event` JSON document (loadable in Perfetto / `about:tracing`)
+//! with one process per sweep point and one timeline lane per pipeline
+//! unit: batcher, builders, each shard's prefetch lanes, each shard's
+//! vertex engine.
+
+/// Pipeline stages in the order a request traverses them. The
+/// monotonicity property test (`tests/telemetry_props.rs`) pins that
+/// stamps appear in exactly this order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Request accepted by the submitter.
+    Arrival,
+    /// Admitted into the batcher's open batch (== Arrival when the
+    /// batcher is disabled).
+    Admit,
+    /// Batch dispatched toward the job builder.
+    Dispatch,
+    /// Job builder dequeued the submission.
+    BuildStart,
+    /// Built `ExecJob` enqueued toward its shard (router enqueue).
+    RouteEnqueue,
+    /// Shard (or prefetch lane) dequeued the job.
+    ShardDequeue,
+    /// Feature staging / gather began.
+    PrefetchStart,
+    /// Feature staging complete (includes any boundary-fetch wait).
+    PrefetchEnd,
+    /// Vertex engine began executing the job.
+    EngineStart,
+    /// Vertex engine finished.
+    EngineEnd,
+    /// Reply delivered to the requester's channel.
+    Reply,
+}
+
+/// Every stage, in pipeline order.
+pub const STAGES: [Stage; 11] = [
+    Stage::Arrival,
+    Stage::Admit,
+    Stage::Dispatch,
+    Stage::BuildStart,
+    Stage::RouteEnqueue,
+    Stage::ShardDequeue,
+    Stage::PrefetchStart,
+    Stage::PrefetchEnd,
+    Stage::EngineStart,
+    Stage::EngineEnd,
+    Stage::Reply,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Arrival => "arrival",
+            Stage::Admit => "admit",
+            Stage::Dispatch => "dispatch",
+            Stage::BuildStart => "build_start",
+            Stage::RouteEnqueue => "route_enqueue",
+            Stage::ShardDequeue => "shard_dequeue",
+            Stage::PrefetchStart => "prefetch_start",
+            Stage::PrefetchEnd => "prefetch_end",
+            Stage::EngineStart => "engine_start",
+            Stage::EngineEnd => "engine_end",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// One sampled request's journey: a timestamp (µs since the telemetry
+/// origin) per stage, plus where it executed. Unset stages are NaN.
+#[derive(Debug, Clone)]
+pub struct SpanTrace {
+    pub request_id: u64,
+    stamps: [f64; STAGES.len()],
+    /// Shard that executed the request (set at dequeue).
+    pub shard: Option<usize>,
+    /// Prefetch lane within the shard (pipelined mode only).
+    pub lane: Option<usize>,
+    /// Portion of the prefetch window spent waiting on remote
+    /// boundary rows (partitioned mode; 0 otherwise).
+    pub boundary_wait_us: f64,
+}
+
+impl SpanTrace {
+    pub fn new(request_id: u64) -> Self {
+        Self {
+            request_id,
+            stamps: [f64::NAN; STAGES.len()],
+            shard: None,
+            lane: None,
+            boundary_wait_us: 0.0,
+        }
+    }
+
+    pub fn stamp(&mut self, stage: Stage, t_us: f64) {
+        self.stamps[stage as usize] = t_us;
+    }
+
+    /// Timestamp of a stage, if it was stamped.
+    pub fn get(&self, stage: Stage) -> Option<f64> {
+        let v = self.stamps[stage as usize];
+        if v.is_nan() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+}
+
+/// Timeline lane (Chrome `tid`) assignment: fixed lanes for the
+/// pre-shard pipeline, a block of 10 per shard beyond that.
+const TID_BATCH: u64 = 1;
+const TID_BUILD: u64 = 2;
+const SHARD_TID_BASE: u64 = 100;
+const SHARD_TID_STRIDE: u64 = 10;
+/// Engine lane offset within a shard's tid block (lanes 0..9 are
+/// prefetch lanes).
+const ENGINE_TID_OFFSET: u64 = 9;
+
+fn push_event(
+    out: &mut String,
+    name: &str,
+    pid: usize,
+    tid: u64,
+    ts: f64,
+    dur: f64,
+    span: &SpanTrace,
+) {
+    out.push_str(&format!(
+        "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
+         \"ts\":{ts:.3},\"dur\":{dur:.3},\"args\":{{\"request_id\":{},\
+         \"shard\":{},\"lane\":{},\"boundary_wait_us\":{:.3}}}}},\n",
+        span.request_id,
+        span.shard.map(|s| s as i64).unwrap_or(-1),
+        span.lane.map(|l| l as i64).unwrap_or(-1),
+        span.boundary_wait_us,
+    ));
+}
+
+fn push_meta(out: &mut String, kind: &str, pid: usize, tid: Option<u64>, label: &str) {
+    let tid_field = tid.map(|t| format!(",\"tid\":{t}")).unwrap_or_default();
+    out.push_str(&format!(
+        "{{\"name\":\"{kind}\",\"ph\":\"M\",\"pid\":{pid}{tid_field},\
+         \"args\":{{\"name\":\"{label}\"}}}},\n"
+    ));
+}
+
+/// Render span groups as a Chrome `trace_event` JSON document. Each
+/// group becomes one process (pid) labeled with the group's name —
+/// `serve-bench` passes one group per sweep point.
+pub fn chrome_trace_json(groups: &[(String, Vec<SpanTrace>)]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (pid, (label, spans)) in groups.iter().enumerate() {
+        push_meta(&mut out, "process_name", pid, None, label);
+        push_meta(&mut out, "thread_name", pid, Some(TID_BATCH), "batcher");
+        push_meta(&mut out, "thread_name", pid, Some(TID_BUILD), "job-builder");
+        let mut named_shards = std::collections::BTreeSet::new();
+        for span in spans {
+            if let Some(shard) = span.shard {
+                let base = SHARD_TID_BASE + shard as u64 * SHARD_TID_STRIDE;
+                if named_shards.insert(shard) {
+                    for lane in 0..ENGINE_TID_OFFSET {
+                        push_meta(
+                            &mut out,
+                            "thread_name",
+                            pid,
+                            Some(base + lane),
+                            &format!("shard{shard}/prefetch-lane{lane}"),
+                        );
+                    }
+                    push_meta(
+                        &mut out,
+                        "thread_name",
+                        pid,
+                        Some(base + ENGINE_TID_OFFSET),
+                        &format!("shard{shard}/vertex-engine"),
+                    );
+                }
+            }
+            emit_span(&mut out, pid, span);
+        }
+    }
+    // Drop the trailing ",\n" (valid even for an empty event list).
+    if out.ends_with(",\n") {
+        out.truncate(out.len() - 2);
+        out.push('\n');
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+fn emit_span(out: &mut String, pid: usize, span: &SpanTrace) {
+    let slice = |a: Stage, b: Stage| -> Option<(f64, f64)> {
+        let start = span.get(a)?;
+        let end = span.get(b)?;
+        Some((start, (end - start).max(0.0)))
+    };
+    if let Some((ts, dur)) = slice(Stage::Arrival, Stage::Dispatch) {
+        push_event(out, "batch", pid, TID_BATCH, ts, dur, span);
+    }
+    if let Some((ts, dur)) = slice(Stage::BuildStart, Stage::RouteEnqueue) {
+        push_event(out, "build", pid, TID_BUILD, ts, dur, span);
+    }
+    if let Some(shard) = span.shard {
+        let base = SHARD_TID_BASE + shard as u64 * SHARD_TID_STRIDE;
+        let lane_tid = base + span.lane.map(|l| l as u64 % ENGINE_TID_OFFSET).unwrap_or(0);
+        if let Some((ts, dur)) = slice(Stage::PrefetchStart, Stage::PrefetchEnd) {
+            push_event(out, "prefetch", pid, lane_tid, ts, dur, span);
+            if span.boundary_wait_us > 0.0 {
+                // Nested slice: the remote-row wait inside the gather.
+                push_event(
+                    out,
+                    "boundary-wait",
+                    pid,
+                    lane_tid,
+                    ts,
+                    span.boundary_wait_us.min(dur),
+                    span,
+                );
+            }
+        }
+        if let Some((ts, dur)) = slice(Stage::EngineStart, Stage::EngineEnd) {
+            push_event(out, "execute", pid, base + ENGINE_TID_OFFSET, ts, dur, span);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_span(id: u64) -> SpanTrace {
+        let mut s = SpanTrace::new(id);
+        for (i, st) in STAGES.iter().enumerate() {
+            s.stamp(*st, 10.0 * (i as f64 + 1.0));
+        }
+        s.shard = Some(1);
+        s.lane = Some(0);
+        s.boundary_wait_us = 4.0;
+        s
+    }
+
+    #[test]
+    fn stamps_round_trip_in_order() {
+        let s = full_span(3);
+        let mut prev = f64::NEG_INFINITY;
+        for st in STAGES {
+            let t = s.get(st).expect("stamped");
+            assert!(t >= prev, "{} out of order", st.name());
+            prev = t;
+        }
+        assert_eq!(SpanTrace::new(9).get(Stage::Reply), None);
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_names_lanes() {
+        let groups = vec![("poisson_r50_s4".to_string(), vec![full_span(0), full_span(64)])];
+        let text = chrome_trace_json(&groups);
+        let doc = crate::runtime::json::parse(&text).expect("valid JSON");
+        let events = doc
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        // 2 spans × (batch, build, prefetch, boundary-wait, execute)
+        // plus metadata records.
+        let slices: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(slices.len(), 10);
+        assert!(text.contains("shard1/vertex-engine"));
+        assert!(text.contains("shard1/prefetch-lane0"));
+        assert!(text.contains("poisson_r50_s4"));
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid_json() {
+        let text = chrome_trace_json(&[]);
+        assert!(crate::runtime::json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,219 @@
+//! Property tests for the PR-7 request-lifecycle telemetry
+//! (hand-rolled seeded cases, same style as `serve_props.rs`).
+//!
+//! * Every sampled span is stamped in exact pipeline order — all
+//!   eleven stages present, timestamps non-decreasing — across
+//!   {pipeline on/off} × {partition degree/off} × {1, 4} shards, and
+//!   the Chrome exporter renders those spans as a parseable
+//!   `trace_event` document with one slice per pipeline unit.
+//! * Telemetry is bit-invisible: any `--trace-sample` (0 = off, 1 =
+//!   every request, the 1-in-64 default) yields replies identical to
+//!   telemetry-off — embeddings AND simulated timing — for all four
+//!   presets plus a depth-3 custom spec. Observation may never change
+//!   numerics.
+
+use grip::backend::BackendChoice;
+use grip::config::ModelConfig;
+use grip::coordinator::{
+    Coordinator, InferenceRequest, InferenceResponse, PipelineConfig, ServeConfig,
+};
+use grip::graph::{generate, CsrGraph, GeneratorParams, PartitionStrategy};
+use grip::greta::{Activate, LayerSpec, ModelKey, ModelLibrary, ModelSpec, ProgramSpec, ReduceOp};
+use grip::rng::SplitMix64;
+use grip::telemetry::{chrome_trace_json, SpanTrace, STAGES};
+
+fn serving_graph(seed: u64) -> CsrGraph {
+    generate(&GeneratorParams { nodes: 1_500, mean_degree: 7.0, seed, ..Default::default() })
+}
+
+fn small_mc() -> ModelConfig {
+    ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+}
+
+fn depth3_spec() -> ModelSpec {
+    ModelSpec::builder("tri3")
+        .layer(LayerSpec::new(8, 6).sample(3).program(
+            ProgramSpec::new("t0")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w0", 8, 6)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(6, 5).sample(2).program(
+            ProgramSpec::new("t1")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w1", 6, 5)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(5, 3).sample(2).program(
+            ProgramSpec::new("t2")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w2", 5, 3)
+                .activate(Activate::Relu),
+        ))
+        .build()
+}
+
+fn telemetry_cfg(
+    shards: usize,
+    pipeline: PipelineConfig,
+    partition: PartitionStrategy,
+    trace_sample: u64,
+) -> ServeConfig {
+    ServeConfig {
+        backend: BackendChoice::Fixed,
+        shards,
+        builders: 3,
+        model_cfg: small_mc(),
+        pipeline,
+        partition,
+        cache_rows: 300,
+        custom_specs: vec![depth3_spec()],
+        trace_sample,
+        ..Default::default()
+    }
+}
+
+/// `n` requests cycling through all five model keys (4 presets +
+/// tri3) with seeded targets.
+fn mixed_reqs(n: usize, seed: u64) -> Vec<(ModelKey, u32)> {
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &[depth3_spec()]).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    assert_eq!(keys.len(), 5, "4 presets + tri3");
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|i| (keys[i % keys.len()], rng.gen_range(1_500) as u32)).collect()
+}
+
+/// Serve `reqs` in order and return (replies, drained spans). Spans
+/// are deposited before each reply is sent, so draining after the
+/// last reply observes every sampled request.
+fn serve_collect(
+    graph: &CsrGraph,
+    cfg: ServeConfig,
+    reqs: &[(ModelKey, u32)],
+) -> (Vec<InferenceResponse>, Vec<SpanTrace>) {
+    let coord = Coordinator::start(graph.clone(), 11, cfg).unwrap();
+    let pending: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, t))| coord.submit(InferenceRequest::single(i as u64, m, t)).unwrap())
+        .collect();
+    let replies = pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let spans = coord.telemetry().take_spans();
+    (replies, spans)
+}
+
+// --------------------------------------------- span stamp monotonicity
+#[test]
+fn prop_span_stamps_are_monotone_across_modes() {
+    // THE tracing property: a request's stamps appear in exactly the
+    // STAGES order regardless of how the pool is configured — phase
+    // decoupling and partition routing reorder *work*, never a single
+    // request's own lifecycle.
+    let graph = serving_graph(31);
+    let reqs = mixed_reqs(20, 53);
+    for pipeline in [PipelineConfig::default(), PipelineConfig::off()] {
+        for partition in [PartitionStrategy::Off, PartitionStrategy::Degree] {
+            for shards in [1usize, 4] {
+                let label = format!(
+                    "pipeline={} partition={} shards={shards}",
+                    pipeline.enabled,
+                    partition.name()
+                );
+                let cfg = telemetry_cfg(shards, pipeline, partition, 1);
+                let (replies, spans) = serve_collect(&graph, cfg, &reqs);
+                assert_eq!(replies.len(), reqs.len(), "{label}: lost replies");
+                assert_eq!(
+                    spans.len(),
+                    reqs.len(),
+                    "{label}: trace-sample 1 must span every request"
+                );
+                for span in &spans {
+                    let id = span.request_id;
+                    let mut prev = f64::NEG_INFINITY;
+                    for st in STAGES {
+                        assert!(
+                            span.get(st).is_some(),
+                            "{label}: request {id} missing stage {}",
+                            st.name()
+                        );
+                        let t = span.get(st).unwrap();
+                        assert!(
+                            t >= prev,
+                            "{label}: request {id} stage {} out of order ({t} < {prev})",
+                            st.name()
+                        );
+                        prev = t;
+                    }
+                    assert!(span.shard.is_some(), "{label}: request {id} executed on no shard");
+                    let shard = span.shard.unwrap();
+                    assert!(shard < shards, "{label}: shard {shard} out of range");
+                    assert_eq!(
+                        span.lane.is_some(),
+                        pipeline.enabled,
+                        "{label}: request {id} lane recorded iff pipelined"
+                    );
+                    assert!(
+                        span.boundary_wait_us >= 0.0,
+                        "{label}: request {id} negative boundary wait"
+                    );
+                    if partition == PartitionStrategy::Off {
+                        assert_eq!(
+                            span.boundary_wait_us, 0.0,
+                            "{label}: request {id} boundary wait without partitioning"
+                        );
+                    }
+                }
+                // The exporter must turn these spans into a
+                // Perfetto-loadable document with per-unit slices.
+                let doc = chrome_trace_json(&[(label.clone(), spans)]);
+                grip::runtime::json::parse(&doc)
+                    .unwrap_or_else(|e| panic!("{label}: invalid trace JSON: {e}"));
+                for slice in ["\"batch\"", "\"build\"", "\"prefetch\"", "\"execute\""] {
+                    assert!(doc.contains(slice), "{label}: missing {slice} slices");
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------- observer bit-identity
+#[test]
+fn prop_replies_bit_identical_for_any_trace_sample() {
+    // THE observability invariant: tracing rides the side of the
+    // pipeline. Sampling every request, 1-in-64, or nothing must
+    // produce byte-for-byte the replies of a telemetry-off run, for
+    // the plain pool and the partitioned 4-shard pool alike.
+    let graph = serving_graph(37);
+    let reqs = mixed_reqs(30, 91);
+    let pools = [
+        (PipelineConfig::default(), PartitionStrategy::Off, 3usize),
+        (PipelineConfig::default(), PartitionStrategy::Degree, 4usize),
+    ];
+    for (pipeline, partition, shards) in pools {
+        let label = format!("partition={} shards={shards}", partition.name());
+        let (base, off_spans) =
+            serve_collect(&graph, telemetry_cfg(shards, pipeline, partition, 0), &reqs);
+        assert!(off_spans.is_empty(), "{label}: trace-sample 0 must collect no spans");
+        for sample in [1u64, 64] {
+            let cfg = telemetry_cfg(shards, pipeline, partition, sample);
+            let (got, spans) = serve_collect(&graph, cfg, &reqs);
+            let expect = (0..reqs.len() as u64).filter(|i| i % sample == 0).count();
+            assert_eq!(spans.len(), expect, "{label}: wrong span count at 1-in-{sample}");
+            assert_eq!(base.len(), got.len(), "{label}: lost replies at 1-in-{sample}");
+            for (a, b) in base.iter().zip(got.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.embedding, b.embedding,
+                    "{label}: id {} trace-sample {sample} changed numerics",
+                    a.id
+                );
+                assert_eq!(
+                    a.accel_us, b.accel_us,
+                    "{label}: id {} trace-sample {sample} changed simulated timing",
+                    a.id
+                );
+                assert_eq!(a.neighborhood, b.neighborhood);
+            }
+        }
+    }
+}
