@@ -9,8 +9,10 @@ Gated metrics, per section:
   * ``steady_state_allocs_per_request`` (the PR-1 zero-alloc criterion)
 
 Schema check, regardless of the baseline: every fresh ``serve_load/``
-section must carry the PR-7 per-stage breakdown (``STAGE_KEYS``) —
-a missing stage key fails the gate even against a null placeholder.
+section must carry the PR-7 per-stage breakdown (``STAGE_KEYS``), and
+every controlled section (label suffix ``_cstatic``/``_cadaptive``)
+must carry the PR-8 control-plane summary (``CONTROL_KEYS``) — a
+missing key fails the gate even against a null placeholder.
 
 A metric regresses when ``fresh > committed * (1 + threshold)``
 (default threshold 20%). Null committed values are skipped — the
@@ -48,9 +50,30 @@ STAGE_KEYS = (
     "stage_reply_p99_us",
 )
 
+# The PR-8 control-plane summary every controlled sweep point must
+# carry. Uncontrolled sections (no ``_cstatic``/``_cadaptive`` label
+# suffix) must NOT grow them: ``--control off`` keeps the historical
+# key set byte-for-byte.
+CONTROL_KEYS = (
+    "control_ticks",
+    "control_actions",
+    "control_lane_actions",
+    "control_depth_actions",
+    "control_window_actions",
+    "control_shard_actions",
+    "control_final_lanes",
+    "control_final_depth",
+    "control_final_window_us",
+    "control_final_active_shards",
+)
+
+CONTROL_SUFFIXES = ("_cstatic", "_cadaptive")
+
 
 def stage_schema_failures(fresh):
-    """Every fresh serve_load section must expose the stage breakdown."""
+    """Every fresh serve_load section must expose the stage breakdown;
+    controlled sections must also expose the control summary, and
+    uncontrolled ones must not."""
     out = []
     for section, metrics in fresh.items():
         if not section.startswith("serve_load/") or not isinstance(metrics, dict):
@@ -58,6 +81,17 @@ def stage_schema_failures(fresh):
         for key in STAGE_KEYS:
             if key not in metrics:
                 out.append(f"{section}: missing per-stage key {key}")
+        if section.endswith(CONTROL_SUFFIXES):
+            for key in CONTROL_KEYS:
+                if key not in metrics:
+                    out.append(f"{section}: missing control-plane key {key}")
+        else:
+            for key in CONTROL_KEYS:
+                if key in metrics:
+                    out.append(
+                        f"{section}: unexpected control-plane key {key} in an "
+                        "uncontrolled section"
+                    )
     return out
 
 

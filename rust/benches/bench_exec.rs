@@ -19,7 +19,8 @@ use grip::greta::{
 };
 use grip::nodeflow::{Nodeflow, Sampler};
 use grip::rng::SplitMix64;
-use grip::serve::{poisson, run_sweep, ModelMix, OpenLoopConfig};
+use grip::control::{ControlConfig, ControlMode};
+use grip::serve::{poisson, run_sweep, ArrivalProcess, ModelMix, OpenLoopConfig};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -190,6 +191,30 @@ fn main() {
             run_sweep(&g_sweep, &[100.0], &[4], &part_base, poisson).expect("partitioned sweep"),
         );
     }
+    // Control-plane points (PR 8): the same Poisson load with the
+    // adaptive controller in the loop (paired against poisson_r100_s4
+    // above), plus a bursty MMPP pair — control off vs adaptive — where
+    // the closed loop actually has load swings to react to. Every
+    // `_cadaptive` section carries the control_* action/knob summary.
+    let bursty = |rate: f64| ArrivalProcess::Bursty {
+        base_rps: rate,
+        burst_rps: rate * 4.0,
+        base_dwell_ms: 200.0,
+        burst_dwell_ms: 50.0,
+    };
+    let adaptive_base = OpenLoopConfig {
+        control: ControlConfig { mode: ControlMode::Adaptive, interval_ms: 5 },
+        ..base.clone()
+    };
+    sweep.extend(
+        run_sweep(&g_sweep, &[100.0], &[4], &adaptive_base, poisson)
+            .expect("adaptive poisson sweep"),
+    );
+    sweep.extend(run_sweep(&g_sweep, &[100.0], &[4], &base, bursty).expect("bursty sweep"));
+    sweep.extend(
+        run_sweep(&g_sweep, &[100.0], &[4], &adaptive_base, bursty)
+            .expect("adaptive bursty sweep"),
+    );
     for (label, r) in &sweep {
         println!(
             "{label:<40} e2e p50 {:>9.0} µs p99 {:>9.0} µs | cache hit {:>5.1}% (sim {:>5.1}%) | cut {:>5.1}% bfetch {}",

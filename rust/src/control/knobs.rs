@@ -1,0 +1,198 @@
+//! Runtime-adjustable scheduling knobs.
+//!
+//! Every knob the control plane can turn lives in one shared
+//! [`Knobs`] cell: the SLO batcher window, the per-shard prefetch
+//! lane count and pipeline depth, and the number of active shards.
+//! Values are plain atomics read per-dispatch / per-job by the
+//! serving threads; each knob carries a construction-time cap that
+//! bounds what the controller may ever set. With control off the caps
+//! equal the configured values, so every gate degenerates to the
+//! pre-control constant and behavior is byte-identical to the
+//! knob-free code.
+//!
+//! Knobs shape *scheduling only* — which thread stages or executes a
+//! job, and when a batch dispatches — never the numerics of a reply.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The four knob identities, used for policy decisions and log lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Knob {
+    /// SLO batcher window (µs between arrival and forced dispatch).
+    BatchWindowUs,
+    /// Prefetch lanes active per shard.
+    PrefetchLanes,
+    /// Ready-queue depth between the lanes and the vertex engine.
+    PipelineDepth,
+    /// Shards actively pulling from the shared queue.
+    ActiveShards,
+}
+
+impl Knob {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Knob::BatchWindowUs => "batch_window_us",
+            Knob::PrefetchLanes => "prefetch_lanes",
+            Knob::PipelineDepth => "pipeline_depth",
+            Knob::ActiveShards => "active_shards",
+        }
+    }
+}
+
+/// Shared atomic knob cells plus their immutable caps. One `Arc<Knobs>`
+/// is threaded into the batcher loop, every shard lane/engine, and the
+/// controller; reads are single `Relaxed` loads.
+#[derive(Debug)]
+pub struct Knobs {
+    window_us: AtomicU64,
+    lanes: AtomicU64,
+    depth: AtomicU64,
+    shards: AtomicU64,
+    /// Widest batcher window the controller may set (µs).
+    pub max_window_us: u64,
+    /// Lane threads spawned per shard (knob gates which are active).
+    pub max_lanes: usize,
+    /// Ready-queue channel capacity (knob narrows the usable depth).
+    pub max_depth: usize,
+    /// Total shards in the pool (knob quiesces the tail).
+    pub max_shards: usize,
+}
+
+impl Default for Knobs {
+    fn default() -> Self {
+        Self::fixed(0.0, 1, 1, 1)
+    }
+}
+
+impl Knobs {
+    /// Caps pinned to the configured values: the control-off (and
+    /// static-policy) shape, where no knob can move.
+    pub fn fixed(window_us: f64, lanes: usize, depth: usize, shards: usize) -> Self {
+        Self::with_caps(window_us, window_us, lanes, lanes, depth, depth, shards, shards)
+    }
+
+    /// Caps widened around the configured starting point so the
+    /// adaptive policy has room to move: lanes up to
+    /// `max(lanes, 4)` (≤ 8), depth up to `4 × depth` (≤ 32), the
+    /// window up to `max_window_us` (the full SLO budget), shards
+    /// down to 1.
+    #[allow(clippy::manual_clamp)]
+    pub fn adaptive(
+        window_us: f64,
+        max_window_us: f64,
+        lanes: usize,
+        depth: usize,
+        shards: usize,
+    ) -> Self {
+        let max_lanes = lanes.max(4).min(8).max(lanes);
+        let max_depth = (depth * 4).min(32).max(depth);
+        Self::with_caps(
+            window_us,
+            max_window_us.max(window_us),
+            lanes,
+            max_lanes,
+            depth,
+            max_depth,
+            shards,
+            shards,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn with_caps(
+        window_us: f64,
+        max_window_us: f64,
+        lanes: usize,
+        max_lanes: usize,
+        depth: usize,
+        max_depth: usize,
+        shards: usize,
+        max_shards: usize,
+    ) -> Self {
+        let to_u64 = |v: f64| if v.is_finite() && v > 0.0 { v.round() as u64 } else { 0 };
+        Self {
+            window_us: AtomicU64::new(to_u64(window_us)),
+            lanes: AtomicU64::new(lanes.max(1) as u64),
+            depth: AtomicU64::new(depth.max(1) as u64),
+            shards: AtomicU64::new(shards.max(1) as u64),
+            max_window_us: to_u64(max_window_us),
+            max_lanes: max_lanes.max(1),
+            max_depth: max_depth.max(1),
+            max_shards: max_shards.max(1),
+        }
+    }
+
+    pub fn window_us(&self) -> f64 {
+        self.window_us.load(Ordering::Relaxed) as f64
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn active_shards(&self) -> usize {
+        self.shards.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn get(&self, k: Knob) -> u64 {
+        match k {
+            Knob::BatchWindowUs => self.window_us.load(Ordering::Relaxed),
+            Knob::PrefetchLanes => self.lanes.load(Ordering::Relaxed),
+            Knob::PipelineDepth => self.depth.load(Ordering::Relaxed),
+            Knob::ActiveShards => self.shards.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Set a knob, clamped into `[min, cap]` (window: `[0, cap]`,
+    /// the rest `[1, cap]`). Returns the value actually stored.
+    pub fn set(&self, k: Knob, v: u64) -> u64 {
+        let (cell, lo, hi) = match k {
+            Knob::BatchWindowUs => (&self.window_us, 0, self.max_window_us),
+            Knob::PrefetchLanes => (&self.lanes, 1, self.max_lanes as u64),
+            Knob::PipelineDepth => (&self.depth, 1, self.max_depth as u64),
+            Knob::ActiveShards => (&self.shards, 1, self.max_shards as u64),
+        };
+        let v = v.clamp(lo, hi.max(lo));
+        cell.store(v, Ordering::Relaxed);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_knobs_cannot_move() {
+        let k = Knobs::fixed(3_500.0, 2, 2, 4);
+        assert_eq!(k.window_us(), 3_500.0);
+        assert_eq!((k.lanes(), k.depth(), k.active_shards()), (2, 2, 4));
+        // Caps equal values: every set clamps back.
+        k.set(Knob::PrefetchLanes, 8);
+        k.set(Knob::PipelineDepth, 8);
+        k.set(Knob::BatchWindowUs, 9_999);
+        assert_eq!((k.lanes(), k.depth()), (2, 2));
+        assert_eq!(k.window_us(), 3_500.0);
+        // Shards may only quiesce down to 1 and back up to the cap.
+        assert_eq!(k.set(Knob::ActiveShards, 0), 1);
+        assert_eq!(k.set(Knob::ActiveShards, 100), 4);
+    }
+
+    #[test]
+    fn adaptive_caps_widen_around_the_configured_point() {
+        let k = Knobs::adaptive(3_500.0, 5_000.0, 2, 2, 4);
+        assert_eq!((k.lanes(), k.depth()), (2, 2), "starts at the configured values");
+        assert_eq!(k.max_lanes, 4);
+        assert_eq!(k.max_depth, 8);
+        assert_eq!(k.max_window_us, 5_000);
+        assert_eq!(k.set(Knob::PrefetchLanes, 9), 4);
+        assert_eq!(k.set(Knob::PipelineDepth, 3), 3);
+        // A configured value above the widening heuristic is its own cap.
+        let wide = Knobs::adaptive(0.0, 0.0, 16, 2, 1);
+        assert_eq!(wide.max_lanes, 16);
+    }
+}

@@ -1,0 +1,407 @@
+//! Adaptive SLO control plane: a closed loop from stage telemetry to
+//! the scheduling knobs.
+//!
+//! A [`Controller`] thread wakes every `interval_ms`, snapshots the
+//! live signals (pool counters via a [`SignalSource`], stage-histogram
+//! percentiles via [`Telemetry`], the in-flight gauge) into a
+//! [`ControlSnapshot`], runs the configured [`ControlMode`]'s policy,
+//! and applies the resulting knob changes through the shared
+//! [`Knobs`] cells the batcher loop and shard lanes read per dispatch.
+//! Every applied action lands in a bounded [`ControlLog`] exported
+//! through `ServeStats`, the Prometheus text, and `BENCH_serve.json`.
+//!
+//! The hard invariant: control reshapes *scheduling only* — lane
+//! activation, queue admission depth, batch dispatch timing, shard
+//! quiescing — never the numerics of a reply. `--control adaptive`
+//! replies are bit-identical to `--control off` (pinned by
+//! `tests/control_props.rs`).
+
+pub mod knobs;
+pub mod policy;
+
+pub use knobs::{Knob, Knobs};
+pub use policy::{AdaptivePolicy, ControlAction, ControlSnapshot, Decision};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::telemetry::Telemetry;
+
+/// Retained control actions; beyond this the oldest entries stay and
+/// later ones are only counted, so a runaway policy can't grow memory.
+pub const CONTROL_LOG_CAP: usize = 256;
+
+/// Which policy the controller runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ControlMode {
+    /// No controller thread at all — the pre-control serving stack.
+    #[default]
+    Off,
+    /// Controller ticks and snapshots but never moves a knob: the
+    /// observation loop without actuation (a deployment canary).
+    Static,
+    /// The hysteresis/AIMD rule set in [`AdaptivePolicy`].
+    Adaptive,
+}
+
+impl ControlMode {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "off" | "none" => Some(Self::Off),
+            "static" => Some(Self::Static),
+            "adaptive" => Some(Self::Adaptive),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Static => "static",
+            Self::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Controller configuration carried through `ServeConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ControlConfig {
+    pub mode: ControlMode,
+    /// Snapshot/decision interval.
+    pub interval_ms: u64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        Self { mode: ControlMode::Off, interval_ms: 50 }
+    }
+}
+
+/// Cumulative pool counters the controller diffs tick over tick.
+/// Implemented by the shard pool's cloneable signal handle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RawSignals {
+    pub jobs: u64,
+    pub staged_jobs: u64,
+    pub prefetch_stalls: u64,
+    pub engine_stalls: u64,
+    /// Mean ready-queue occupancy so far, 0..1 of the depth knob.
+    pub occupancy: f64,
+}
+
+/// Source of [`RawSignals`] — a trait so `control` never depends on
+/// the serving layer that feeds it.
+pub trait SignalSource: Send + 'static {
+    fn sample(&self) -> RawSignals;
+}
+
+/// Bounded, thread-safe action log.
+#[derive(Debug, Default)]
+pub struct ControlLog {
+    entries: Mutex<Vec<ControlAction>>,
+    total: AtomicU64,
+}
+
+impl ControlLog {
+    pub fn push(&self, action: ControlAction) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut entries = self.entries.lock().unwrap();
+        if entries.len() < CONTROL_LOG_CAP {
+            entries.push(action);
+        }
+    }
+
+    /// Every retained action, in application order.
+    pub fn entries(&self) -> Vec<ControlAction> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// Total actions applied, including any beyond the retention cap.
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+}
+
+/// Control-plane summary exported through `ServeStats` (composed by
+/// the coordinator; defaults to the `"off"` shape so pool-only stats
+/// stay unchanged).
+#[derive(Debug, Clone)]
+pub struct ControlStats {
+    pub mode: String,
+    pub ticks: u64,
+    pub actions: u64,
+    pub lane_actions: u64,
+    pub depth_actions: u64,
+    pub window_actions: u64,
+    pub shard_actions: u64,
+    pub final_lanes: u64,
+    pub final_depth: u64,
+    pub final_window_us: f64,
+    pub final_active_shards: u64,
+    /// Rendered `ControlLog` lines (bounded by [`CONTROL_LOG_CAP`]).
+    pub log: Vec<String>,
+}
+
+impl Default for ControlStats {
+    fn default() -> Self {
+        Self {
+            mode: "off".to_string(),
+            ticks: 0,
+            actions: 0,
+            lane_actions: 0,
+            depth_actions: 0,
+            window_actions: 0,
+            shard_actions: 0,
+            final_lanes: 0,
+            final_depth: 0,
+            final_window_us: 0.0,
+            final_active_shards: 0,
+            log: Vec::new(),
+        }
+    }
+}
+
+/// Everything the controller reads besides the pool counters.
+pub struct ControlInputs {
+    pub telemetry: Telemetry,
+    /// Requests admitted but not yet replied (the coordinator gauge).
+    pub inflight: Arc<AtomicU64>,
+    /// SLO budget (µs) the window/margin rules measure against.
+    pub slo_us: f64,
+    /// Pins the shard-quiesce rule off (routed jobs have one home).
+    pub partitioned: bool,
+}
+
+struct Shared {
+    mode: ControlMode,
+    ticks: AtomicU64,
+    log: ControlLog,
+    knobs: Arc<Knobs>,
+}
+
+/// The controller thread handle. Dropping (or [`Controller::stop`])
+/// closes the shutdown channel and joins the thread.
+pub struct Controller {
+    shared: Arc<Shared>,
+    shutdown: Option<mpsc::Sender<()>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Controller {
+    /// Spawn the control loop. `Off` mode is the caller's business —
+    /// don't spawn at all.
+    pub fn spawn(
+        cfg: ControlConfig,
+        knobs: Arc<Knobs>,
+        source: Box<dyn SignalSource>,
+        inputs: ControlInputs,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            mode: cfg.mode,
+            ticks: AtomicU64::new(0),
+            log: ControlLog::default(),
+            knobs: Arc::clone(&knobs),
+        });
+        let (shutdown_tx, shutdown_rx) = mpsc::channel::<()>();
+        let interval = Duration::from_millis(cfg.interval_ms.max(1));
+        let loop_shared = Arc::clone(&shared);
+        let handle = thread::Builder::new()
+            .name("grip-control".to_string())
+            .spawn(move || {
+                control_loop(cfg.mode, interval, knobs, source, inputs, &loop_shared, shutdown_rx)
+            })
+            .expect("spawning grip-control");
+        Self { shared, shutdown: Some(shutdown_tx), handle: Some(handle) }
+    }
+
+    /// Snapshot the control summary for `ServeStats`.
+    pub fn stats(&self) -> ControlStats {
+        let entries = self.shared.log.entries();
+        let count = |k: Knob| entries.iter().filter(|a| a.knob == k).count() as u64;
+        let knobs = &self.shared.knobs;
+        ControlStats {
+            mode: self.shared.mode.label().to_string(),
+            ticks: self.shared.ticks.load(Ordering::Relaxed),
+            actions: self.shared.log.total(),
+            lane_actions: count(Knob::PrefetchLanes),
+            depth_actions: count(Knob::PipelineDepth),
+            window_actions: count(Knob::BatchWindowUs),
+            shard_actions: count(Knob::ActiveShards),
+            final_lanes: knobs.lanes() as u64,
+            final_depth: knobs.depth() as u64,
+            final_window_us: knobs.window_us(),
+            final_active_shards: knobs.active_shards() as u64,
+            log: entries.iter().map(ControlAction::render).collect(),
+        }
+    }
+
+    /// Stop the loop and join the thread (idempotent).
+    pub fn stop(&mut self) {
+        self.shutdown.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Controller {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn control_loop(
+    mode: ControlMode,
+    interval: Duration,
+    knobs: Arc<Knobs>,
+    source: Box<dyn SignalSource>,
+    inputs: ControlInputs,
+    shared: &Shared,
+    shutdown_rx: mpsc::Receiver<()>,
+) {
+    let mut policy = AdaptivePolicy::new();
+    let mut prev = RawSignals::default();
+    let mut tick = 0u64;
+    loop {
+        match shutdown_rx.recv_timeout(interval) {
+            Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        tick += 1;
+        let raw = source.sample();
+        let stages = inputs.telemetry.stages();
+        let snap = ControlSnapshot {
+            tick,
+            t_ms: inputs.telemetry.now_us() / 1_000.0,
+            d_jobs: raw.jobs.saturating_sub(prev.jobs),
+            d_staged_jobs: raw.staged_jobs.saturating_sub(prev.staged_jobs),
+            d_prefetch_stalls: raw.prefetch_stalls.saturating_sub(prev.prefetch_stalls),
+            d_engine_stalls: raw.engine_stalls.saturating_sub(prev.engine_stalls),
+            prefetch_occupancy: raw.occupancy,
+            queue_wait_p99_us: stages.queue_wait.percentile_us(99.0),
+            ready_wait_p99_us: stages.ready_wait.percentile_us(99.0),
+            e2e_p99_us: stages.e2e.percentile_us(99.0),
+            inflight: inputs.inflight.load(Ordering::Relaxed),
+            slo_us: inputs.slo_us,
+            partitioned: inputs.partitioned,
+            lanes: knobs.lanes() as u64,
+            depth: knobs.depth() as u64,
+            window_us: knobs.get(Knob::BatchWindowUs),
+            active_shards: knobs.active_shards() as u64,
+            max_lanes: knobs.max_lanes as u64,
+            max_depth: knobs.max_depth as u64,
+            max_window_us: knobs.max_window_us,
+            max_shards: knobs.max_shards as u64,
+        };
+        prev = raw;
+        shared.ticks.fetch_add(1, Ordering::Relaxed);
+        if mode != ControlMode::Adaptive {
+            continue;
+        }
+        for d in policy.step(&snap) {
+            let from = knobs.get(d.knob);
+            let to = knobs.set(d.knob, d.to);
+            if to == from {
+                continue; // clamped into a no-op: nothing applied
+            }
+            shared.log.push(ControlAction {
+                tick,
+                t_ms: snap.t_ms.round() as u64,
+                knob: d.knob,
+                from,
+                to,
+                why: d.why,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct FixedSignals(RawSignals);
+    impl SignalSource for FixedSignals {
+        fn sample(&self) -> RawSignals {
+            self.0
+        }
+    }
+
+    fn spawn_mode(mode: ControlMode, signals: RawSignals) -> (Controller, Arc<Knobs>) {
+        let knobs = Arc::new(Knobs::adaptive(3_500.0, 5_000.0, 2, 2, 4));
+        let telemetry = Telemetry::disabled();
+        // A huge e2e so far below the SLO that the widen rule fires on
+        // every busy tick.
+        telemetry.stages().e2e.record_us(100.0);
+        let ctl = Controller::spawn(
+            ControlConfig { mode, interval_ms: 1 },
+            Arc::clone(&knobs),
+            Box::new(FixedSignals(signals)),
+            ControlInputs {
+                telemetry,
+                inflight: Arc::new(AtomicU64::new(0)),
+                slo_us: 5_000.0,
+                partitioned: false,
+            },
+        );
+        (ctl, knobs)
+    }
+
+    fn busy() -> RawSignals {
+        RawSignals { jobs: 100, staged_jobs: 100, occupancy: 0.4, ..Default::default() }
+    }
+
+    #[test]
+    fn adaptive_controller_ticks_acts_and_logs() {
+        let (mut ctl, knobs) = spawn_mode(ControlMode::Adaptive, busy());
+        // First busy tick: margin 4900 > 50% of SLO → widen. Counters
+        // are constant after that, so d_jobs = 0 and later ticks idle.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while ctl.stats().actions == 0 && std::time::Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        ctl.stop();
+        let stats = ctl.stats();
+        assert!(stats.ticks >= 1);
+        assert_eq!(stats.mode, "adaptive");
+        assert_eq!(stats.actions, 1, "one busy tick, one widen action");
+        assert_eq!(stats.window_actions, 1);
+        assert_eq!(knobs.get(Knob::BatchWindowUs), 4_000);
+        assert!(stats.log[0].contains("batch_window_us 3500 -> 4000"), "{}", stats.log[0]);
+        assert_eq!(stats.final_window_us, 4_000.0);
+    }
+
+    #[test]
+    fn static_controller_ticks_but_never_moves_a_knob() {
+        let (mut ctl, knobs) = spawn_mode(ControlMode::Static, busy());
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while ctl.stats().ticks < 3 && std::time::Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        ctl.stop();
+        let stats = ctl.stats();
+        assert!(stats.ticks >= 3);
+        assert_eq!(stats.actions, 0);
+        assert_eq!(knobs.get(Knob::BatchWindowUs), 3_500);
+        assert_eq!((knobs.lanes(), knobs.depth(), knobs.active_shards()), (2, 2, 4));
+    }
+
+    #[test]
+    fn control_log_is_bounded() {
+        let log = ControlLog::default();
+        for i in 0..(CONTROL_LOG_CAP as u64 + 50) {
+            log.push(ControlAction {
+                tick: i,
+                t_ms: i,
+                knob: Knob::BatchWindowUs,
+                from: i,
+                to: i + 1,
+                why: "test".into(),
+            });
+        }
+        assert_eq!(log.entries().len(), CONTROL_LOG_CAP);
+        assert_eq!(log.total(), CONTROL_LOG_CAP as u64 + 50);
+    }
+}

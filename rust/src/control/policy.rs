@@ -1,0 +1,409 @@
+//! Control policy: fixed-interval telemetry snapshots in, knob
+//! decisions out.
+//!
+//! [`ControlSnapshot`] is a plain struct of the signals one controller
+//! tick sees — stall/job *deltas* since the previous tick (the pool
+//! counters are cumulative), stage-histogram percentiles, occupancy,
+//! in-flight depth, and the current knob values with their caps.
+//! [`AdaptivePolicy::step`] is a pure-ish function over it (the only
+//! state is hysteresis streaks), so every rule is unit-testable with a
+//! hand-built snapshot.
+//!
+//! Counter semantics (they read inverted at first glance):
+//! `prefetch_stalls` counts a *lane* blocked on a full ready queue —
+//! the engine is the bottleneck; `engine_stalls` counts the *engine*
+//! starved while jobs are in flight upstream — prefetch is the
+//! bottleneck. The lane rule therefore grows lanes on `engine_stalls`
+//! and sheds them on `prefetch_stalls`.
+
+use super::knobs::Knob;
+
+/// One controller tick's view of the serving pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct ControlSnapshot {
+    pub tick: u64,
+    /// Milliseconds since the telemetry origin.
+    pub t_ms: f64,
+    /// Jobs executed since the previous tick.
+    pub d_jobs: u64,
+    /// Jobs staged by prefetch lanes since the previous tick.
+    pub d_staged_jobs: u64,
+    /// Lane-blocked-on-full-ready-queue events since the previous tick.
+    pub d_prefetch_stalls: u64,
+    /// Engine-starved-with-work-upstream events since the previous tick.
+    pub d_engine_stalls: u64,
+    /// Mean ready-queue occupancy, 0..1 of the current depth knob.
+    pub prefetch_occupancy: f64,
+    /// Stage-histogram p99s (cumulative over the run so far).
+    pub queue_wait_p99_us: f64,
+    pub ready_wait_p99_us: f64,
+    pub e2e_p99_us: f64,
+    /// Requests admitted but not yet replied.
+    pub inflight: u64,
+    /// The SLO budget the batcher window burns against.
+    pub slo_us: f64,
+    /// Partitioned pools pin `active_shards`: routed jobs have exactly
+    /// one home shard, so the quiesce rule must not fire.
+    pub partitioned: bool,
+    /// Current knob values.
+    pub lanes: u64,
+    pub depth: u64,
+    pub window_us: u64,
+    pub active_shards: u64,
+    /// Knob caps.
+    pub max_lanes: u64,
+    pub max_depth: u64,
+    pub max_window_us: u64,
+    pub max_shards: u64,
+}
+
+/// One knob change the policy wants applied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decision {
+    pub knob: Knob,
+    pub to: u64,
+    pub why: String,
+}
+
+/// A `Decision` the controller actually applied, with the before/after
+/// values as clamped by the knob caps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ControlAction {
+    pub tick: u64,
+    pub t_ms: u64,
+    pub knob: Knob,
+    pub from: u64,
+    pub to: u64,
+    pub why: String,
+}
+
+impl ControlAction {
+    /// Human-readable log line, the shape exported via `ServeStats`.
+    pub fn render(&self) -> String {
+        format!(
+            "tick {} @ {} ms: {} {} -> {} ({})",
+            self.tick,
+            self.t_ms,
+            self.knob.name(),
+            self.from,
+            self.to,
+            self.why
+        )
+    }
+}
+
+/// Hysteresis/AIMD rule set closing the loop from stage telemetry to
+/// the scheduling knobs. Thresholds are associated consts so the unit
+/// tests pin exactly where each rule triggers.
+#[derive(Debug, Default)]
+pub struct AdaptivePolicy {
+    /// Consecutive low-pressure ticks seen (shard-quiesce hysteresis).
+    low_load_streak: u32,
+}
+
+impl AdaptivePolicy {
+    /// One stall kind must beat the other by this factor before the
+    /// lane rule moves (strictly greater — a 2:1 tie holds still).
+    pub const STALL_DOMINANCE: f64 = 2.0;
+    /// Ready-wait p99 above this fraction of the SLO halves the depth.
+    pub const READY_WAIT_SLO_FRAC: f64 = 0.25;
+    /// Ready-wait p99 below this fraction counts as "small" for growth.
+    pub const READY_WAIT_SMALL_FRAC: f64 = 0.10;
+    /// Occupancy above this grows the depth (when ready-wait is small).
+    pub const OCC_HIGH: f64 = 0.75;
+    /// SLO margin below this fraction halves the batcher window.
+    pub const MARGIN_NARROW_FRAC: f64 = 0.20;
+    /// SLO margin above this fraction widens the window additively.
+    pub const MARGIN_WIDE_FRAC: f64 = 0.50;
+    /// Additive window step, as a fraction of the SLO.
+    pub const WINDOW_STEP_FRAC: f64 = 0.10;
+    /// Occupancy below this counts toward the quiesce streak.
+    pub const QUIESCE_OCC: f64 = 0.10;
+    /// Consecutive low-pressure ticks before one shard quiesces.
+    pub const QUIESCE_STREAK: u32 = 3;
+    /// Queue-wait p99 above this fraction of the SLO is "pressure":
+    /// every quiesced shard reactivates in one tick (fast up, slow
+    /// down).
+    pub const PRESSURE_QUEUE_FRAC: f64 = 0.25;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn step(&mut self, s: &ControlSnapshot) -> Vec<Decision> {
+        let mut out = Vec::new();
+        if s.d_jobs == 0 {
+            // Idle tick: no fresh signal — hold every knob and the
+            // streak where they are.
+            return out;
+        }
+
+        // Rule 1 — prefetch lanes, from stall dominance. See the
+        // module doc for why the counter names point the directions
+        // they do.
+        let (ps, es) = (s.d_prefetch_stalls as f64, s.d_engine_stalls as f64);
+        if es > Self::STALL_DOMINANCE * ps && es > 0.0 && s.lanes < s.max_lanes {
+            out.push(Decision {
+                knob: Knob::PrefetchLanes,
+                to: s.lanes + 1,
+                why: format!("prefetch-bound: Δengine_stalls {es} > {}×Δprefetch_stalls {ps}",
+                    Self::STALL_DOMINANCE),
+            });
+        } else if ps > Self::STALL_DOMINANCE * es && ps > 0.0 && s.lanes > 1 {
+            out.push(Decision {
+                knob: Knob::PrefetchLanes,
+                to: s.lanes - 1,
+                why: format!("engine-bound: Δprefetch_stalls {ps} > {}×Δengine_stalls {es}",
+                    Self::STALL_DOMINANCE),
+            });
+        }
+
+        // Rule 2 — pipeline depth: multiplicative decrease when
+        // ready-wait (staged → engine pickup) eats the SLO, additive
+        // increase when the ready queue runs hot but drains fast.
+        if s.ready_wait_p99_us > Self::READY_WAIT_SLO_FRAC * s.slo_us && s.depth > 1 {
+            out.push(Decision {
+                knob: Knob::PipelineDepth,
+                to: (s.depth / 2).max(1),
+                why: format!(
+                    "ready-wait p99 {:.0} µs > {:.0}% of SLO",
+                    s.ready_wait_p99_us,
+                    Self::READY_WAIT_SLO_FRAC * 100.0
+                ),
+            });
+        } else if s.prefetch_occupancy > Self::OCC_HIGH
+            && s.ready_wait_p99_us < Self::READY_WAIT_SMALL_FRAC * s.slo_us
+            && s.depth < s.max_depth
+        {
+            out.push(Decision {
+                knob: Knob::PipelineDepth,
+                to: s.depth + 1,
+                why: format!(
+                    "occupancy {:.2} > {:.2} with small ready-wait",
+                    s.prefetch_occupancy,
+                    Self::OCC_HIGH
+                ),
+            });
+        }
+
+        // Rule 3 — batcher window AIMD against the measured SLO
+        // margin. `max_window_us == 0` means batching is off.
+        if s.max_window_us > 0 {
+            let margin = s.slo_us - s.e2e_p99_us;
+            if margin < Self::MARGIN_NARROW_FRAC * s.slo_us && s.window_us > 0 {
+                out.push(Decision {
+                    knob: Knob::BatchWindowUs,
+                    to: s.window_us / 2,
+                    why: format!(
+                        "SLO margin {margin:.0} µs < {:.0}% of budget: dispatch sooner",
+                        Self::MARGIN_NARROW_FRAC * 100.0
+                    ),
+                });
+            } else if margin > Self::MARGIN_WIDE_FRAC * s.slo_us && s.window_us < s.max_window_us {
+                let step = ((Self::WINDOW_STEP_FRAC * s.slo_us) as u64).max(1);
+                out.push(Decision {
+                    knob: Knob::BatchWindowUs,
+                    to: (s.window_us + step).min(s.max_window_us),
+                    why: format!(
+                        "SLO margin {margin:.0} µs > {:.0}% of budget: widen for batching",
+                        Self::MARGIN_WIDE_FRAC * 100.0
+                    ),
+                });
+            }
+        }
+
+        // Rule 4 — shard quiesce/reactivate (shared-queue pools only):
+        // K consecutive low-pressure ticks park one shard's lanes; any
+        // pressure signal reactivates everything at once.
+        if !s.partitioned && s.max_shards > 1 {
+            let pressure = s.queue_wait_p99_us > Self::PRESSURE_QUEUE_FRAC * s.slo_us
+                || s.prefetch_occupancy > Self::OCC_HIGH;
+            let calm = s.prefetch_occupancy < Self::QUIESCE_OCC
+                && s.slo_us - s.e2e_p99_us > Self::MARGIN_WIDE_FRAC * s.slo_us;
+            if pressure {
+                self.low_load_streak = 0;
+                if s.active_shards < s.max_shards {
+                    out.push(Decision {
+                        knob: Knob::ActiveShards,
+                        to: s.max_shards,
+                        why: format!(
+                            "pressure (queue p99 {:.0} µs, occ {:.2}): reactivate all shards",
+                            s.queue_wait_p99_us, s.prefetch_occupancy
+                        ),
+                    });
+                }
+            } else if calm {
+                self.low_load_streak += 1;
+                if self.low_load_streak >= Self::QUIESCE_STREAK && s.active_shards > 1 {
+                    self.low_load_streak = 0;
+                    out.push(Decision {
+                        knob: Knob::ActiveShards,
+                        to: s.active_shards - 1,
+                        why: format!(
+                            "{} calm ticks (occ {:.2} < {:.2}): quiesce one shard",
+                            Self::QUIESCE_STREAK,
+                            s.prefetch_occupancy,
+                            Self::QUIESCE_OCC
+                        ),
+                    });
+                }
+            } else {
+                self.low_load_streak = 0;
+            }
+        }
+
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A quiet, healthy snapshot no rule fires on (margin sits between
+    /// the narrow and widen thresholds).
+    fn base() -> ControlSnapshot {
+        ControlSnapshot {
+            tick: 1,
+            d_jobs: 50,
+            d_staged_jobs: 50,
+            prefetch_occupancy: 0.4,
+            queue_wait_p99_us: 100.0,
+            ready_wait_p99_us: 100.0,
+            e2e_p99_us: 3_500.0, // margin 1500 = 30% of SLO: dead zone
+            slo_us: 5_000.0,
+            lanes: 2,
+            depth: 2,
+            window_us: 3_500,
+            active_shards: 4,
+            max_lanes: 4,
+            max_depth: 8,
+            max_window_us: 5_000,
+            max_shards: 4,
+            ..Default::default()
+        }
+    }
+
+    fn decided(p: &mut AdaptivePolicy, s: &ControlSnapshot, knob: Knob) -> Option<u64> {
+        p.step(s).into_iter().find(|d| d.knob == knob).map(|d| d.to)
+    }
+
+    #[test]
+    fn quiet_snapshot_holds_every_knob() {
+        let mut p = AdaptivePolicy::new();
+        assert!(p.step(&base()).is_empty());
+    }
+
+    #[test]
+    fn idle_tick_never_acts() {
+        let mut p = AdaptivePolicy::new();
+        let mut s = base();
+        s.d_jobs = 0;
+        s.d_engine_stalls = 100; // stale signal: must be ignored
+        s.e2e_p99_us = 4_900.0;
+        assert!(p.step(&s).is_empty());
+    }
+
+    #[test]
+    fn engine_stalls_grow_lanes_prefetch_stalls_shrink_them() {
+        let mut p = AdaptivePolicy::new();
+        let mut s = base();
+        // Engine starved (prefetch-bound): grow.
+        s.d_engine_stalls = 9;
+        s.d_prefetch_stalls = 4;
+        assert_eq!(decided(&mut p, &s, Knob::PrefetchLanes), Some(3));
+        // Exactly at the dominance ratio: hysteresis holds still.
+        s.d_engine_stalls = 8;
+        assert_eq!(decided(&mut p, &s, Knob::PrefetchLanes), None);
+        // Lane blocked on the ready queue (engine-bound): shed one.
+        s.d_engine_stalls = 1;
+        s.d_prefetch_stalls = 9;
+        assert_eq!(decided(&mut p, &s, Knob::PrefetchLanes), Some(1));
+        // At the cap the grow side holds.
+        s.d_engine_stalls = 9;
+        s.d_prefetch_stalls = 0;
+        s.lanes = 4;
+        assert_eq!(decided(&mut p, &s, Knob::PrefetchLanes), None);
+    }
+
+    #[test]
+    fn ready_wait_halves_depth_hot_queue_grows_it() {
+        let mut p = AdaptivePolicy::new();
+        let mut s = base();
+        s.depth = 8;
+        s.ready_wait_p99_us = 1_251.0; // > 25% of 5000
+        assert_eq!(decided(&mut p, &s, Knob::PipelineDepth), Some(4), "multiplicative decrease");
+        s.ready_wait_p99_us = 1_250.0; // exactly at the threshold: hold
+        s.prefetch_occupancy = 0.5;
+        assert_eq!(decided(&mut p, &s, Knob::PipelineDepth), None);
+        // Hot but draining fast: additive increase.
+        s.prefetch_occupancy = 0.8;
+        s.ready_wait_p99_us = 400.0; // < 10% of SLO
+        s.depth = 2;
+        assert_eq!(decided(&mut p, &s, Knob::PipelineDepth), Some(3));
+        // Hot but ready-wait not small: hold (the two halves of the
+        // rule must not fight).
+        s.ready_wait_p99_us = 600.0;
+        assert_eq!(decided(&mut p, &s, Knob::PipelineDepth), None);
+    }
+
+    #[test]
+    fn window_aimd_tracks_the_slo_margin() {
+        let mut p = AdaptivePolicy::new();
+        let mut s = base();
+        // Margin burning (< 20% of SLO): multiplicative narrow.
+        s.e2e_p99_us = 4_200.0; // margin 800
+        assert_eq!(decided(&mut p, &s, Knob::BatchWindowUs), Some(1_750));
+        // Comfortable margin (> 50%): additive widen by 10% of SLO.
+        s.e2e_p99_us = 2_000.0; // margin 3000
+        assert_eq!(decided(&mut p, &s, Knob::BatchWindowUs), Some(4_000));
+        // Widen clamps at the cap...
+        s.window_us = 4_800;
+        assert_eq!(decided(&mut p, &s, Knob::BatchWindowUs), Some(5_000));
+        // ...and holds once there.
+        s.window_us = 5_000;
+        assert_eq!(decided(&mut p, &s, Knob::BatchWindowUs), None);
+        // Batching off (cap 0): the rule never fires.
+        s.max_window_us = 0;
+        s.window_us = 0;
+        s.e2e_p99_us = 4_900.0;
+        assert_eq!(decided(&mut p, &s, Knob::BatchWindowUs), None);
+    }
+
+    #[test]
+    fn quiesce_needs_a_streak_reactivate_is_immediate() {
+        let mut p = AdaptivePolicy::new();
+        let mut s = base();
+        s.prefetch_occupancy = 0.05;
+        s.e2e_p99_us = 1_000.0; // margin 4000 > 50%
+        // Two calm ticks: not yet.
+        assert_eq!(decided(&mut p, &s, Knob::ActiveShards), None);
+        assert_eq!(decided(&mut p, &s, Knob::ActiveShards), None);
+        // Third consecutive calm tick quiesces exactly one shard.
+        assert_eq!(decided(&mut p, &s, Knob::ActiveShards), Some(3));
+        // A busy tick in between resets the streak.
+        let mut busy = s.clone();
+        busy.prefetch_occupancy = 0.4;
+        assert_eq!(decided(&mut p, &s, Knob::ActiveShards), None);
+        assert_eq!(decided(&mut p, &s, Knob::ActiveShards), None);
+        assert_eq!(decided(&mut p, &busy, Knob::ActiveShards), None);
+        assert_eq!(decided(&mut p, &s, Knob::ActiveShards), None, "streak was reset");
+        // Pressure reactivates everything in one tick.
+        let mut hot = s.clone();
+        hot.active_shards = 2;
+        hot.queue_wait_p99_us = 1_300.0; // > 25% of SLO
+        assert_eq!(decided(&mut p, &hot, Knob::ActiveShards), Some(4));
+    }
+
+    #[test]
+    fn partitioned_pools_never_quiesce() {
+        let mut p = AdaptivePolicy::new();
+        let mut s = base();
+        s.partitioned = true;
+        s.prefetch_occupancy = 0.0;
+        s.e2e_p99_us = 100.0;
+        for _ in 0..10 {
+            assert_eq!(decided(&mut p, &s, Knob::ActiveShards), None);
+        }
+    }
+}

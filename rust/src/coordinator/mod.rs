@@ -19,7 +19,8 @@ pub use server::{
     ServeConfig, Submitter,
 };
 // Re-exported so serving callers configure batching, the execution
-// engine, and the shard phase pipeline without importing the
-// serve/backend modules separately.
+// engine, the shard phase pipeline, and the control plane without
+// importing the serve/backend/control modules separately.
 pub use crate::backend::BackendChoice;
+pub use crate::control::{ControlConfig, ControlMode};
 pub use crate::serve::{BatchConfig, PipelineConfig, ServeStats};

@@ -60,6 +60,7 @@
 use super::metrics::LatencyStats;
 use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
+use crate::control::{ControlConfig, ControlInputs, ControlMode, Controller, Knobs};
 use crate::graph::{CsrGraph, PartitionStrategy};
 use crate::greta::{ModelKey, ModelLibrary, ModelSpec};
 use crate::nodeflow::{Nodeflow, Sampler};
@@ -270,6 +271,8 @@ pub struct Coordinator {
     /// Shared observability handle: always-on stage histograms plus
     /// sampled span traces (see [`ServeConfig::trace_sample`]).
     telemetry: Telemetry,
+    /// The control-plane thread (`None` with `--control off`).
+    control: Option<Controller>,
 }
 
 /// Configuration of the serving loop.
@@ -329,6 +332,13 @@ pub struct ServeConfig {
     /// Per-stage histograms record regardless; neither tier touches
     /// request numerics.
     pub trace_sample: u64,
+    /// The adaptive SLO control plane (`--control off|static|adaptive`,
+    /// `--control-interval-ms`). `Off` (the default) spawns no
+    /// controller and pins every scheduling knob at its configured
+    /// value — behavior is byte-identical to earlier PRs. Control can
+    /// reshape scheduling only, never numerics: replies are
+    /// bit-identical across modes (`tests/control_props.rs`).
+    pub control: ControlConfig,
 }
 
 impl Default for ServeConfig {
@@ -349,12 +359,13 @@ impl Default for ServeConfig {
             weight_seed: spec.weight_seed,
             custom_specs: Vec::new(),
             trace_sample: 64,
+            control: ControlConfig::default(),
         }
     }
 }
 
 impl ServeConfig {
-    fn shard_spec(&self, telemetry: Telemetry) -> ShardSpec {
+    fn shard_spec(&self, telemetry: Telemetry, knobs: Arc<Knobs>) -> ShardSpec {
         ShardSpec {
             shards: self.shards,
             partition: self.partition,
@@ -365,7 +376,32 @@ impl ServeConfig {
             cache_rows: self.cache_rows,
             weight_seed: self.weight_seed,
             telemetry,
+            knobs: Some(knobs),
         }
+    }
+
+    /// Build the shared knob cells for this configuration: fixed caps
+    /// (no knob can move) unless the adaptive policy runs, in which
+    /// case the caps widen around the configured starting point and
+    /// the window may grow up to the full SLO budget.
+    fn build_knobs(&self) -> (Arc<Knobs>, f64) {
+        let (window_us, slo_us, max_window_us) = match &self.batch {
+            Some(b) => ((b.slo_us - b.margin_us).max(0.0), b.slo_us, b.slo_us),
+            // No batcher: the window knob is inert (cap 0 keeps the
+            // policy's window rule off); the SLO default only scales
+            // the depth/quiesce thresholds.
+            None => (0.0, 5_000.0, 0.0),
+        };
+        let lanes = self.pipeline.prefetch_lanes.max(1);
+        let depth = self.pipeline.depth.max(1);
+        let shards = self.shards.max(1);
+        let knobs = match self.control.mode {
+            ControlMode::Adaptive => {
+                Knobs::adaptive(window_us, max_window_us, lanes, depth, shards)
+            }
+            _ => Knobs::fixed(window_us, lanes, depth, shards),
+        };
+        (Arc::new(knobs), slo_us)
     }
 }
 
@@ -401,13 +437,29 @@ impl Coordinator {
         drop(built_tx);
 
         let inflight = Arc::new(AtomicU64::new(0));
+        let (knobs, slo_us) = cfg.build_knobs();
         let pool = ShardPool::start(
-            &cfg.shard_spec(telemetry.clone()),
+            &cfg.shard_spec(telemetry.clone(), knobs.clone()),
             library.clone(),
             graph,
             built_rx,
             inflight.clone(),
         )?;
+
+        let control = match cfg.control.mode {
+            ControlMode::Off => None,
+            _ => Some(Controller::spawn(
+                cfg.control,
+                knobs.clone(),
+                Box::new(pool.signals()),
+                ControlInputs {
+                    telemetry: telemetry.clone(),
+                    inflight: inflight.clone(),
+                    slo_us,
+                    partitioned: cfg.partition != PartitionStrategy::Off,
+                },
+            )),
+        };
 
         // Batched-request padding satellite: on the PJRT path, clamp the
         // batcher's max_batch to the AOT artifacts' padded batch
@@ -436,9 +488,17 @@ impl Coordinator {
                 let (sub_tx, sub_rx) = mpsc::channel::<Submission>();
                 let gauge = inflight.clone();
                 let tel = telemetry.clone();
+                // The batcher re-reads the window knob each pass only
+                // when a controller is running; with `--control off`
+                // its window stays the exact f64 the config implies
+                // (the knob cell stores a rounded µs value).
+                let window_knobs =
+                    (cfg.control.mode != ControlMode::Off).then(|| knobs.clone());
                 let handle = std::thread::Builder::new()
                     .name("grip-batcher".into())
-                    .spawn(move || batcher_loop(bc, sub_rx, job_tx, &gauge, &tel))
+                    .spawn(move || {
+                        batcher_loop(bc, sub_rx, job_tx, &gauge, &tel, window_knobs.as_deref())
+                    })
                     .map_err(|e| anyhow!("spawning batcher: {e}"))?;
                 (Front::Batched(sub_tx), Some(handle))
             }
@@ -452,6 +512,7 @@ impl Coordinator {
             library,
             inflight,
             telemetry,
+            control,
         })
     }
 
@@ -485,10 +546,15 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("pipeline dropped"))?.map_err(|e| anyhow!(e))
     }
 
-    /// Serving statistics snapshot: jobs, timing-only count, and the
-    /// host/simulated feature-cache hit rates.
+    /// Serving statistics snapshot: jobs, timing-only count, the
+    /// host/simulated feature-cache hit rates, and (when a controller
+    /// is running) the control-plane summary.
     pub fn serve_stats(&self) -> ServeStats {
-        self.pool.as_ref().map(|p| p.stats()).unwrap_or_default()
+        let mut stats = self.pool.as_ref().map(|p| p.stats()).unwrap_or_default();
+        if let Some(c) = &self.control {
+            stats.control = c.stats();
+        }
+        stats
     }
 
     /// Executor shards actually running.
@@ -516,10 +582,16 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // Closing the front door unwinds the pipeline stage by stage:
-        // the batcher drains its pending requests and exits, closing
-        // the job queue; builders see a closed receiver and exit, which
-        // closes the built channel; the shard pool drains and joins.
+        // Stop the controller first so no knob moves mid-teardown,
+        // then close the front door to unwind the pipeline stage by
+        // stage: the batcher drains its pending requests and exits,
+        // closing the job queue; builders see a closed receiver and
+        // exit, which closes the built channel; the shard pool drains
+        // and joins.
+        if let Some(c) = self.control.as_mut() {
+            c.stop();
+        }
+        drop(self.control.take());
         drop(self.front.take());
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
@@ -546,6 +618,7 @@ fn batcher_loop(
     job_tx: mpsc::SyncSender<Job>,
     inflight: &AtomicU64,
     telemetry: &Telemetry,
+    knobs: Option<&Knobs>,
 ) {
     let origin = Instant::now();
     let now_us = |origin: &Instant| origin.elapsed().as_secs_f64() * 1e6;
@@ -553,6 +626,12 @@ fn batcher_loop(
     let mut open = true;
 
     loop {
+        // Control plane: pick up the current window knob before
+        // dispatching (applies to new offers only — queued deadlines
+        // stand, so a narrowing never strands an admitted request).
+        if let Some(k) = knobs {
+            batcher.set_window_us(k.window_us());
+        }
         // Dispatch everything due before sleeping.
         while let Some((model, batch)) = batcher.pop_due(now_us(&origin)) {
             if send_coalesced(&job_tx, inflight, telemetry, model, batch).is_err() {
@@ -1039,6 +1118,40 @@ mod tests {
             assert_eq!(r.embedding.len(), small_mc().f_out);
             assert!(!r.timing_only);
         }
+    }
+
+    #[test]
+    fn adaptive_control_serves_bit_identically_and_reports_stats() {
+        // End-to-end spot check (the full mode × preset × shard ×
+        // partition matrix lives in tests/control_props.rs): an
+        // adaptive controller over a batched pipeline must not change
+        // one reply bit, and its summary must land in serve_stats.
+        let g = graph();
+        let off = Coordinator::start(g.clone(), 7, fixed_cfg(2)).unwrap();
+        let want: Vec<InferenceResponse> = (0..12u32)
+            .map(|i| off.infer(InferenceRequest::single(i as u64, GnnModel::Gcn, i * 53)).unwrap())
+            .collect();
+        assert_eq!(off.serve_stats().control.mode, "off");
+        drop(off);
+
+        let cfg = ServeConfig {
+            batch: Some(BatchConfig { slo_us: 20_000.0, margin_us: 5_000.0, max_batch: 4 }),
+            control: ControlConfig { mode: ControlMode::Adaptive, interval_ms: 1 },
+            ..fixed_cfg(2)
+        };
+        let coord = Coordinator::start(g, 7, cfg).unwrap();
+        for (i, w) in want.iter().enumerate() {
+            let r = coord
+                .infer(InferenceRequest::single(i as u64, GnnModel::Gcn, i as u32 * 53))
+                .unwrap();
+            assert_eq!(r.embedding, w.embedding, "id {i}: control changed numerics");
+            assert_eq!(r.accel_us, w.accel_us, "id {i}: control changed sim timing");
+        }
+        let s = coord.serve_stats();
+        assert_eq!(s.control.mode, "adaptive");
+        assert!(s.control.ticks > 0, "controller ticked during serving");
+        assert!(s.control.final_lanes >= 1 && s.control.final_depth >= 1);
+        assert_eq!(s.control.log.len() as u64, s.control.actions.min(256));
     }
 
     #[test]

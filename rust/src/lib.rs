@@ -41,6 +41,12 @@
 //!   queue, mirroring GRIP's edge/vertex phase split) with a shared
 //!   degree-aware feature cache, and the open-loop rate × shard sweep
 //!   behind `grip serve-bench`.
+//! * [`control`] — the adaptive SLO control plane: a controller thread
+//!   closing the loop from stage telemetry (stall deltas, occupancy,
+//!   p99s) to runtime scheduling knobs (batcher window, prefetch
+//!   lanes, pipeline depth, active shards) via a hysteresis/AIMD
+//!   policy — reshaping scheduling only, never numerics
+//!   (`--control off|static|adaptive`).
 //! * [`telemetry`] — serving-wide observability: a lock-light registry
 //!   of counters/gauges and fixed-bucket log₂ streaming histograms
 //!   (O(1) record, bounded memory, mergeable across shards), sampled
@@ -52,6 +58,7 @@ pub mod backend;
 pub mod baseline;
 pub mod benchutil;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod energy;
 pub mod fixed;

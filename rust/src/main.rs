@@ -14,7 +14,7 @@
 
 use grip::backend::{BackendChoice, BACKEND_NAME_HELP};
 use grip::config::{GripConfig, ModelConfig};
-use grip::coordinator::{run_workload, Coordinator, ServeConfig};
+use grip::coordinator::{run_workload, ControlConfig, ControlMode, Coordinator, ServeConfig};
 use grip::graph::{Dataset, PartitionStrategy};
 use grip::greta::{compile, GnnModel, ModelLibrary, ModelSpec, MODEL_NAME_HELP};
 use grip::nodeflow::{Nodeflow, Sampler};
@@ -34,6 +34,7 @@ fn usage() -> ! {
                    [--scale S=0.01] [--backend B] [--no-numerics] [--shards K=1]\n\
                    [--partition degree|hash|off] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
+                   [--control off|static|adaptive] [--control-interval-ms T=50]\n\
                    [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
@@ -41,6 +42,7 @@ fn usage() -> ! {
                    [--no-batching] [--bursty] [--paper-dims] [--model-spec FILE.json]\n\
                    [--backend B=fixed] [--seed K=17] [--out PATH] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
+                   [--control C1,C2,..=off (off|static|adaptive)] [--control-interval-ms T=50]\n\
                    [--submit-lanes W=0 (auto)]\n\
                    [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
@@ -60,6 +62,11 @@ fn usage() -> ! {
            partition-local feature caches, home-shard routing, and cross-shard boundary\n\
            fetches; off = one shared queue + cache (examples/SHARDING.md; replies are\n\
            bit-identical in every mode)\n\
+         --control runs the adaptive SLO control plane (examples/CONTROL.md): off = no\n\
+           controller (default; historical behavior), static = controller observes and logs\n\
+           but holds every knob, adaptive = hysteresis/AIMD policy retunes batcher window,\n\
+           prefetch lanes, pipeline depth, and active shards from stage telemetry; replies\n\
+           are bit-identical in every mode (serve-bench accepts a comma list to sweep)\n\
          --target-skew draws serve-bench targets Zipf(s) instead of uniformly (0 = uniform)\n\
          --trace-sample traces 1-in-N requests through every pipeline stage (0 = off; stage\n\
            histograms record regardless; examples/OBSERVABILITY.md); --trace-out writes the\n\
@@ -189,6 +196,40 @@ impl Args {
         Ok(pc)
     }
 
+    /// Parse the single-mode `--control` + `--control-interval-ms`
+    /// pair (serve; default `off` spawns no controller).
+    fn control_cfg(&self) -> anyhow::Result<ControlConfig> {
+        let mode = match self.get("control") {
+            None => ControlMode::Off,
+            Some(name) => ControlMode::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --control {name:?}; accepted: off | static | adaptive")
+            })?,
+        };
+        let interval_ms = self.get_usize("control-interval-ms", 50) as u64;
+        anyhow::ensure!(interval_ms >= 1, "--control-interval-ms wants a positive integer");
+        Ok(ControlConfig { mode, interval_ms })
+    }
+
+    /// Parse the comma-separated `--control` sweep list (serve-bench;
+    /// default `off` keeps the historical label set and sweep cost).
+    fn control_list(&self) -> anyhow::Result<Vec<ControlMode>> {
+        let s = self.get("control").unwrap_or("off");
+        let mut out = Vec::new();
+        for tok in s.split(',') {
+            let name = tok.trim();
+            let m = ControlMode::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown --control entry {name:?}; accepted: off | static | adaptive"
+                )
+            })?;
+            if !out.contains(&m) {
+                out.push(m);
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "--control list is empty");
+        Ok(out)
+    }
+
     /// Parse a single `--partition` strategy (serve; default `off`).
     fn partition(&self) -> anyhow::Result<PartitionStrategy> {
         match self.get("partition") {
@@ -274,6 +315,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let pipeline = args.pipeline()?;
     let partition = args.partition()?;
+    let control = args.control_cfg()?;
 
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, 17);
@@ -283,6 +325,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         backend,
         pipeline,
         partition,
+        control,
         shards: args.get_usize("shards", defaults.shards),
         cache_rows: args.get_usize("cache-rows", defaults.cache_rows),
         custom_specs: spec.iter().cloned().collect(),
@@ -369,6 +412,33 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             stats.boundary_rows,
             stats.boundary_fetch_p99_us
         );
+    }
+    // Control-plane summary: what the controller saw and did (knob
+    // moves reshape scheduling only — replies stay bit-identical).
+    if control.mode != ControlMode::Off {
+        let c = &stats.control;
+        println!(
+            "control {} (tick {} ms): {} ticks, {} actions (lanes {} / depth {} / window {} / \
+             shards {}), final lanes {} depth {} window {:.0} µs active shards {}",
+            c.mode,
+            control.interval_ms,
+            c.ticks,
+            c.actions,
+            c.lane_actions,
+            c.depth_actions,
+            c.window_actions,
+            c.shard_actions,
+            c.final_lanes,
+            c.final_depth,
+            c.final_window_us,
+            c.final_active_shards
+        );
+        for line in c.log.iter().take(8) {
+            println!("  {line}");
+        }
+        if c.log.len() > 8 {
+            println!("  ... and {} more actions", c.log.len() - 8);
+        }
     }
     // Per-stage latency breakdown from the always-on stage histograms:
     // where a request's time went, not just how long it took.
@@ -460,6 +530,12 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     };
     let pipeline = args.pipeline()?;
     let partitions = args.partition_list()?;
+    let controls = args.control_list()?;
+    let control_interval_ms = {
+        let v = args.get_usize("control-interval-ms", 50) as u64;
+        anyhow::ensure!(v >= 1, "--control-interval-ms wants a positive integer");
+        v
+    };
     let defaults = OpenLoopConfig::default();
     let base = OpenLoopConfig {
         requests,
@@ -483,31 +559,39 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
 
     println!(
         "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts x \
-         {} partition strategies, backend {backend}, pipeline {}, target-skew {} ==",
+         {} partition strategies x {} control modes, backend {backend}, pipeline {}, \
+         target-skew {} ==",
         dataset,
         requests,
         rates.len(),
         shard_counts.len(),
         partitions.len(),
+        controls.len(),
         pipeline.label(),
         base.target_skew
     );
     let bursty = args.has("bursty");
     let mut points = Vec::new();
     for &partition in &partitions {
-        let part_base = OpenLoopConfig { partition, ..base.clone() };
-        points.extend(run_sweep(&graph, &rates, &shard_counts, &part_base, |rate| {
-            if bursty {
-                ArrivalProcess::Bursty {
-                    base_rps: rate,
-                    burst_rps: rate * 4.0,
-                    base_dwell_ms: 200.0,
-                    burst_dwell_ms: 50.0,
+        for &cmode in &controls {
+            let point_base = OpenLoopConfig {
+                partition,
+                control: ControlConfig { mode: cmode, interval_ms: control_interval_ms },
+                ..base.clone()
+            };
+            points.extend(run_sweep(&graph, &rates, &shard_counts, &point_base, |rate| {
+                if bursty {
+                    ArrivalProcess::Bursty {
+                        base_rps: rate,
+                        burst_rps: rate * 4.0,
+                        base_dwell_ms: 200.0,
+                        burst_dwell_ms: 50.0,
+                    }
+                } else {
+                    ArrivalProcess::Poisson { rate_rps: rate }
                 }
-            } else {
-                ArrivalProcess::Poisson { rate_rps: rate }
-            }
-        })?);
+            })?);
+        }
     }
     for (label, r) in &points {
         println!(
@@ -548,6 +632,24 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
                 r.stats.boundary_fetches,
                 r.stats.boundary_rows,
                 r.stats.boundary_fetch_p99_us
+            );
+        }
+        if r.stats.control.mode != "off" {
+            println!(
+                "{:<40} control {}: {} ticks / {} actions (lanes {} depth {} window {} \
+                 shards {}) | final lanes {} depth {} window {:.0} µs shards {}",
+                "",
+                r.stats.control.mode,
+                r.stats.control.ticks,
+                r.stats.control.actions,
+                r.stats.control.lane_actions,
+                r.stats.control.depth_actions,
+                r.stats.control.window_actions,
+                r.stats.control.shard_actions,
+                r.stats.control.final_lanes,
+                r.stats.control.final_depth,
+                r.stats.control.final_window_us,
+                r.stats.control.final_active_shards
             );
         }
         println!(

@@ -59,22 +59,41 @@ pub struct Pending<T> {
 /// knowledge of how many models the serving library holds.
 pub struct Batcher<T> {
     cfg: BatchConfig,
+    /// Dispatch window applied to newly offered requests, µs. Starts
+    /// at `(slo_us - margin_us).max(0)` and is runtime-adjustable
+    /// ([`Batcher::set_window_us`]) so the control plane can trade
+    /// batching efficiency against SLO margin without restarting.
+    window_us: f64,
     /// One FIFO per model, indexed by [`ModelKey::index`].
     queues: Vec<VecDeque<Pending<T>>>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(cfg: BatchConfig) -> Self {
-        Self { cfg, queues: Vec::new() }
+        let window_us = (cfg.slo_us - cfg.margin_us).max(0.0);
+        Self { cfg, window_us, queues: Vec::new() }
     }
 
     pub fn config(&self) -> BatchConfig {
         self.cfg
     }
 
+    pub fn window_us(&self) -> f64 {
+        self.window_us
+    }
+
+    /// Adjust the dispatch window. Applies to requests offered from
+    /// now on; already-queued deadlines stand (so a narrowing can
+    /// never push an admitted request past the budget it was given).
+    pub fn set_window_us(&mut self, window_us: f64) {
+        if window_us.is_finite() {
+            self.window_us = window_us.max(0.0);
+        }
+    }
+
     /// Queue a single-target request arriving at `now_us`.
     pub fn offer(&mut self, model: ModelKey, item: T, now_us: f64) {
-        let headroom = (self.cfg.slo_us - self.cfg.margin_us).max(0.0);
+        let headroom = self.window_us;
         let i = model.index();
         if i >= self.queues.len() {
             self.queues.resize_with(i + 1, VecDeque::new);
@@ -232,6 +251,27 @@ mod tests {
         b.offer(GnnModel::Gcn.key(), 1u64, 42.0);
         assert_eq!(b.next_deadline(), Some(42.0), "no headroom left");
         assert!(b.pop_due(42.0).is_some());
+    }
+
+    #[test]
+    fn runtime_window_applies_to_new_offers_only() {
+        let mut b = Batcher::new(cfg(1000.0, 200.0, 8));
+        assert_eq!(b.window_us(), 800.0);
+        b.offer(GnnModel::Gcn.key(), 1u64, 0.0);
+        b.set_window_us(100.0);
+        b.offer(GnnModel::Gcn.key(), 2u64, 50.0);
+        // The queued deadline (800) stands; the new offer got 50+100.
+        assert_eq!(b.next_deadline(), Some(800.0));
+        let (_, batch) = b.pop_due(800.0).expect("due");
+        assert_eq!(
+            batch.iter().map(|p| p.dispatch_by_us).collect::<Vec<_>>(),
+            vec![800.0, 150.0]
+        );
+        // Negative/NaN inputs clamp instead of corrupting deadlines.
+        b.set_window_us(-5.0);
+        assert_eq!(b.window_us(), 0.0);
+        b.set_window_us(f64::NAN);
+        assert_eq!(b.window_us(), 0.0);
     }
 
     #[test]

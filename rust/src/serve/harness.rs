@@ -13,6 +13,7 @@ use super::loadgen::{generate_arrivals, ArrivalProcess, ModelMix, TargetDist};
 use super::shards::{PipelineConfig, ServeStats};
 use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
+use crate::control::{ControlConfig, ControlMode};
 use crate::coordinator::{
     Coordinator, InferenceRequest, InferenceResponse, LatencyStats, ServeConfig,
 };
@@ -44,6 +45,10 @@ pub struct OpenLoopConfig {
     pub pipeline: PipelineConfig,
     /// Optional SLO-aware dynamic batching policy.
     pub batch: Option<BatchConfig>,
+    /// Control plane over the scheduling knobs (`--control
+    /// off|static|adaptive`). `Off` (the default) spawns no controller
+    /// and leaves every historical invocation byte-for-byte unchanged.
+    pub control: ControlConfig,
     pub grip: GripConfig,
     pub model_cfg: ModelConfig,
     /// Custom model specs to register with the coordinator (keys follow
@@ -81,6 +86,7 @@ impl Default for OpenLoopConfig {
             backend: BackendChoice::Fixed,
             pipeline: PipelineConfig::default(),
             batch: None,
+            control: ControlConfig::default(),
             grip: GripConfig::paper(),
             model_cfg: ModelConfig::paper(),
             custom_specs: Vec::new(),
@@ -206,6 +212,21 @@ impl OpenLoopReport {
                 out.push((format!("part{i}_routed_jobs"), jobs as f64));
             }
         }
+        // Control-plane summary only when a controller actually ran —
+        // `--control off` reports keep their historical key set.
+        if self.stats.control.mode != "off" {
+            let c = &self.stats.control;
+            out.push(("control_ticks".to_string(), c.ticks as f64));
+            out.push(("control_actions".to_string(), c.actions as f64));
+            out.push(("control_lane_actions".to_string(), c.lane_actions as f64));
+            out.push(("control_depth_actions".to_string(), c.depth_actions as f64));
+            out.push(("control_window_actions".to_string(), c.window_actions as f64));
+            out.push(("control_shard_actions".to_string(), c.shard_actions as f64));
+            out.push(("control_final_lanes".to_string(), c.final_lanes as f64));
+            out.push(("control_final_depth".to_string(), c.final_depth as f64));
+            out.push(("control_final_window_us".to_string(), c.final_window_us));
+            out.push(("control_final_active_shards".to_string(), c.final_active_shards as f64));
+        }
         out
     }
 }
@@ -251,6 +272,7 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
         partition: cfg.partition,
         pipeline: cfg.pipeline,
         batch: cfg.batch,
+        control: cfg.control,
         grip: cfg.grip.clone(),
         model_cfg: cfg.model_cfg,
         custom_specs: cfg.custom_specs.clone(),
@@ -338,8 +360,9 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
 /// swept rate to its arrival process (Poisson, bursty MMPP, ...), so
 /// `bench_exec` and `grip serve-bench` share one loop and one label
 /// format — labels look like `serve_load/poisson_r100_s4`, gaining a
-/// `_pdegree` / `_phash` suffix only when `base.partition` is on (so
-/// historical unpartitioned labels stay byte-stable in
+/// `_pdegree` / `_phash` suffix only when `base.partition` is on and a
+/// `_cstatic` / `_cadaptive` suffix only when `base.control` is on (so
+/// historical unpartitioned, uncontrolled labels stay byte-stable in
 /// `BENCH_serve.json`).
 pub fn run_sweep(
     graph: &CsrGraph,
@@ -357,8 +380,18 @@ pub fn run_sweep(
                 PartitionStrategy::Off => String::new(),
                 p => format!("_p{}", p.name()),
             };
-            let label =
-                format!("serve_load/{}_r{}_s{}{}", process.label(), rate.round(), shards, part);
+            let ctl = match base.control.mode {
+                ControlMode::Off => String::new(),
+                m => format!("_c{}", m.label()),
+            };
+            let label = format!(
+                "serve_load/{}_r{}_s{}{}{}",
+                process.label(),
+                rate.round(),
+                shards,
+                part,
+                ctl
+            );
             let report = run_open_loop(graph, &cfg)?;
             out.push((label, report));
         }
@@ -548,6 +581,43 @@ mod tests {
         // Partition suffix appears in sweep labels only when enabled.
         let pts = run_sweep(&g, &[2_000.0], &[2], &cfg, poisson).unwrap();
         assert!(pts.iter().any(|(l, _)| l == "serve_load/poisson_r2000_s2_pdegree"));
+    }
+
+    #[test]
+    fn control_report_gates_keys_and_labels() {
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        // Off (default): no control_* keys, historical label.
+        let off = run_open_loop(&g, &tiny_cfg(2_000.0, 12)).unwrap();
+        assert!(off.metrics().iter().all(|(k, _)| !k.starts_with("control_")));
+        // Adaptive: summary keys present, label gains the _c suffix.
+        let cfg = OpenLoopConfig {
+            control: ControlConfig { mode: ControlMode::Adaptive, interval_ms: 5 },
+            batch: Some(BatchConfig { slo_us: 20_000.0, margin_us: 5_000.0, max_batch: 4 }),
+            ..tiny_cfg(2_000.0, 24)
+        };
+        let report = run_open_loop(&g, &cfg).unwrap();
+        assert_eq!(report.responses.len(), 24);
+        let metrics = report.metrics();
+        for key in [
+            "control_ticks",
+            "control_actions",
+            "control_lane_actions",
+            "control_depth_actions",
+            "control_window_actions",
+            "control_shard_actions",
+            "control_final_lanes",
+            "control_final_depth",
+            "control_final_window_us",
+            "control_final_active_shards",
+        ] {
+            assert!(metrics.iter().any(|(k, _)| *k == key), "missing {key}");
+        }
+        assert!(
+            metrics.iter().any(|(k, &v)| *k == "control_final_lanes" && v >= 1.0),
+            "final lane knob reported"
+        );
+        let pts = run_sweep(&g, &[2_000.0], &[1], &cfg, poisson).unwrap();
+        assert!(pts.iter().any(|(l, _)| l == "serve_load/poisson_r2000_s1_cadaptive"));
     }
 
     #[test]

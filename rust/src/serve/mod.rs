@@ -91,6 +91,6 @@ pub use feature_cache::{DegreeClasses, FeatureCache};
 pub use harness::{poisson, run_open_loop, run_sweep, OpenLoopConfig, OpenLoopReport};
 pub use loadgen::{generate_arrivals, Arrival, ArrivalProcess, ModelMix, TargetDist};
 pub use shards::{
-    fixed_serving_args, split_cache_rows, CachedFeatures, ExecJob, PipelineConfig, ReplySlot,
-    ServeStats, ShardPool, ShardSpec,
+    fixed_serving_args, split_cache_rows, CachedFeatures, ExecJob, PipelineConfig, PoolSignals,
+    ReplySlot, ServeStats, ShardPool, ShardSpec,
 };

@@ -87,6 +87,7 @@ use crate::backend::{
     StagedFeatures,
 };
 use crate::config::{GripConfig, ModelConfig};
+use crate::control::{ControlStats, Knobs, RawSignals, SignalSource};
 use crate::coordinator::{InferenceResponse, LatencyStats};
 use crate::graph::{CsrGraph, PartitionStrategy, Partitioning};
 use crate::greta::{exec_test_args, ExecArgs, ModelKey, ModelLibrary, ModelPlan, SelfScale};
@@ -99,7 +100,7 @@ use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Depth of each home shard's routed job queue (partitioned mode): the
 /// router parks at most this many built jobs at a hot shard before
@@ -111,6 +112,20 @@ const ROUTE_QUEUE_DEPTH: usize = 64;
 /// batched request (one per peer per job), so this bounds outstanding
 /// cross-shard chatter, not rows.
 const BOUNDARY_QUEUE_DEPTH: usize = 64;
+
+/// How long a knob-parked lane/shard thread sleeps between `try_recv`
+/// polls of its job queue. Short enough that a reactivated thread is
+/// back inside one controller tick.
+const PARK_POLL: Duration = Duration::from_micros(200);
+
+/// Poll interval of the pipeline-depth admission gate (engaged only
+/// when the depth knob sits below the channel's capacity cap).
+const GATE_POLL: Duration = Duration::from_micros(50);
+
+/// Bounded iterations of the depth gate before the lane falls through
+/// to the channel's own backpressure — a wedged engine must never spin
+/// a lane forever, and the channel (sized at the cap) still bounds it.
+const GATE_SPIN_LIMIT: usize = 20_000;
 
 /// One original caller's stake in a (possibly coalesced) job: its id,
 /// how many of the job's targets are its, and where to send the reply.
@@ -213,6 +228,11 @@ pub struct ShardSpec {
     /// Shared telemetry handle: stage histograms always record; span
     /// stamping happens only on requests the coordinator sampled.
     pub telemetry: Telemetry,
+    /// Runtime scheduling knobs shared with the control plane. `None`
+    /// (every pre-control caller) derives fixed knobs from the
+    /// pipeline/shard fields, whose caps pin every value — behavior is
+    /// then byte-identical to the knob-free pool.
+    pub knobs: Option<Arc<Knobs>>,
 }
 
 /// Largest-remainder split of the total cache-row budget: shard `i`
@@ -237,6 +257,7 @@ impl Default for ShardSpec {
             partition: PartitionStrategy::Off,
             weight_seed: 0x5EED_5E4E,
             telemetry: Telemetry::default(),
+            knobs: None,
         }
     }
 }
@@ -371,6 +392,9 @@ pub struct ServeStats {
     /// …and reply fan-out.
     pub reply_p50_us: f64,
     pub reply_p99_us: f64,
+    /// Control-plane summary, composed by the coordinator (the pool
+    /// itself reports the default `"off"` shape).
+    pub control: ControlStats,
 }
 
 /// The executor pool. Threads drain the `ExecJob` receiver until its
@@ -388,8 +412,36 @@ pub struct ShardPool {
     edge_cut_fraction: f64,
     partition_balance: f64,
     shards: usize,
-    pipeline: PipelineConfig,
     telemetry: Telemetry,
+    knobs: Arc<Knobs>,
+}
+
+/// A cloneable handle over the pool's raw control signals: the
+/// controller samples it once per tick without `PoolCounters` (private
+/// to this module) ever leaving it.
+#[derive(Clone)]
+pub struct PoolSignals {
+    counters: Arc<PoolCounters>,
+    knobs: Arc<Knobs>,
+}
+
+impl SignalSource for PoolSignals {
+    fn sample(&self) -> RawSignals {
+        let c = &self.counters;
+        let samples = c.occupancy_samples.load(Ordering::Relaxed);
+        RawSignals {
+            jobs: c.jobs.load(Ordering::Relaxed),
+            staged_jobs: c.staged_jobs.load(Ordering::Relaxed),
+            prefetch_stalls: c.prefetch_stalls.load(Ordering::Relaxed),
+            engine_stalls: c.engine_stalls.load(Ordering::Relaxed),
+            occupancy: if samples > 0 {
+                c.occupancy_sum.load(Ordering::Relaxed) as f64
+                    / (samples as f64 * self.knobs.depth().max(1) as f64)
+            } else {
+                0.0
+            },
+        }
+    }
 }
 
 /// Deterministic fixed-point serving weights for `plan` (the Q4.12
@@ -631,6 +683,16 @@ impl ShardPool {
         inflight: Arc<AtomicU64>,
     ) -> Result<ShardPool> {
         let shards = spec.shards.max(1);
+        // Control-off callers get fixed knobs pinned to the configured
+        // point: every knob read degenerates to the old constant.
+        let knobs = spec.knobs.clone().unwrap_or_else(|| {
+            Arc::new(Knobs::fixed(
+                0.0,
+                spec.pipeline.prefetch_lanes.max(1),
+                spec.pipeline.depth.max(1),
+                shards,
+            ))
+        });
         let partitioning = match spec.partition {
             PartitionStrategy::Off => None,
             s => Some(Arc::new(Partitioning::build(s, &graph, shards))),
@@ -766,6 +828,7 @@ impl ShardPool {
                     &shard_rxs[i],
                     route,
                     &inflight,
+                    &knobs,
                     &mut threads,
                 )?;
             } else {
@@ -778,6 +841,7 @@ impl ShardPool {
                 let rx = shard_rxs[i].clone();
                 let inflight = inflight.clone();
                 let init_tx = init_tx.clone();
+                let knobs = knobs.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("grip-shard-{i}"))
                     .spawn(move || {
@@ -793,6 +857,7 @@ impl ShardPool {
                             &rx,
                             route.as_ref(),
                             &inflight,
+                            &knobs,
                         )
                     })
                     .map_err(|e| anyhow!("spawning shard {i}: {e}"))?;
@@ -821,18 +886,24 @@ impl ShardPool {
             edge_cut_fraction,
             partition_balance,
             shards,
-            pipeline: spec.pipeline,
             telemetry: spec.telemetry.clone(),
+            knobs,
         })
     }
 
-    /// Spawn one phase-decoupled shard: `lanes` prefetch threads over
-    /// the shared job queue, a bounded ready queue, and the engine
-    /// thread that owns the backend. A free-list channel recycles
-    /// `lanes + depth + 1` [`StagedFeatures`] buffers (every buffer a
-    /// lane can hold + every queue slot + the one in the engine), so
-    /// staging is allocation-free in steady state and the lanes can
-    /// never outrun the pool.
+    /// Spawn one phase-decoupled shard: prefetch threads over the
+    /// shared job queue, a bounded ready queue, and the engine thread
+    /// that owns the backend. Lane threads are spawned and the ready
+    /// channel sized at the **knob caps** (`Knobs::max_lanes` /
+    /// `Knobs::max_depth`) so the controller can widen either knob
+    /// without respawning anything; lanes beyond the current knob park
+    /// themselves and a narrowed depth gates admission before the
+    /// channel. With fixed knobs the caps equal the configured values
+    /// and both gates vanish. A free-list channel recycles
+    /// `max_lanes + max_depth + 1` [`StagedFeatures`] buffers (every
+    /// buffer a lane can hold + every queue slot + the one in the
+    /// engine), so staging is allocation-free in steady state and the
+    /// lanes can never outrun the pool.
     #[allow(clippy::too_many_arguments)]
     fn spawn_pipelined_shard(
         shard: usize,
@@ -846,10 +917,11 @@ impl ShardPool {
         rx: &Arc<Mutex<mpsc::Receiver<ExecJob>>>,
         route: Option<RouteCtx>,
         inflight: &Arc<AtomicU64>,
+        knobs: &Arc<Knobs>,
         threads: &mut Vec<std::thread::JoinHandle<()>>,
     ) -> Result<()> {
-        let lanes = spec.pipeline.prefetch_lanes.max(1);
-        let depth = spec.pipeline.depth.max(1);
+        let lanes = knobs.max_lanes.max(1);
+        let depth = knobs.max_depth.max(1);
         let (ready_tx, ready_rx) = mpsc::sync_channel::<StagedJob>(depth);
         let (free_tx, free_rx) = mpsc::channel::<StagedFeatures>();
         for _ in 0..(lanes + depth + 1) {
@@ -871,6 +943,7 @@ impl ShardPool {
             let free_rx = free_rx.clone();
             let ready_gauge = ready_gauge.clone();
             let route = route.clone();
+            let knobs = knobs.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("grip-shard-{shard}-lane-{lane}"))
                 .spawn(move || {
@@ -887,6 +960,7 @@ impl ShardPool {
                         &free_rx,
                         &ready_gauge,
                         route.as_ref(),
+                        &knobs,
                     )
                 })
                 .map_err(|e| anyhow!("spawning shard {shard} lane {lane}: {e}"))?;
@@ -899,12 +973,13 @@ impl ShardPool {
         let status_e = status.clone();
         let init_tx = init_tx.clone();
         let inflight = inflight.clone();
+        let knobs_e = knobs.clone();
         let handle = std::thread::Builder::new()
             .name(format!("grip-shard-{shard}-engine"))
             .spawn(move || {
                 engine_loop(
                     shard, &spec_e, &library_e, &counters_e, &status_e, init_tx, ready_rx,
-                    free_tx, &ready_gauge, &inflight, depth,
+                    free_tx, &ready_gauge, &inflight, &knobs_e,
                 )
             })
             .map_err(|e| anyhow!("spawning shard {shard} engine: {e}"))?;
@@ -914,6 +989,17 @@ impl ShardPool {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// The shared knob cells this pool's lanes and engines read.
+    pub fn knobs(&self) -> Arc<Knobs> {
+        self.knobs.clone()
+    }
+
+    /// A cloneable [`SignalSource`] over this pool's counters for the
+    /// control plane.
+    pub fn signals(&self) -> PoolSignals {
+        PoolSignals { counters: self.counters.clone(), knobs: self.knobs.clone() }
     }
 
     pub fn stats(&self) -> ServeStats {
@@ -951,9 +1037,11 @@ impl ShardPool {
             staged_jobs: c.staged_jobs.load(Ordering::Relaxed),
             prefetch_stalls: c.prefetch_stalls.load(Ordering::Relaxed),
             engine_stalls: c.engine_stalls.load(Ordering::Relaxed),
+            // Normalized by the *current* depth knob (== the configured
+            // `pipeline.depth` whenever control is off or static).
             prefetch_occupancy: if occ_samples > 0 {
                 c.occupancy_sum.load(Ordering::Relaxed) as f64
-                    / (occ_samples as f64 * self.pipeline.depth.max(1) as f64)
+                    / (occ_samples as f64 * self.knobs.depth().max(1) as f64)
             } else {
                 0.0
             },
@@ -1018,6 +1106,21 @@ impl ServeStats {
             format!("{:.3}", self.boundary_fetch_p99_us),
         );
         push("grip_shards", "gauge", self.shards.to_string());
+        // Control-plane series render only when a controller ran, so
+        // `--control off` output stays byte-identical to earlier PRs.
+        if self.control.mode != "off" {
+            let c = &self.control;
+            push("grip_control_ticks_total", "counter", c.ticks.to_string());
+            push("grip_control_actions_total", "counter", c.actions.to_string());
+            push("grip_control_lane_actions_total", "counter", c.lane_actions.to_string());
+            push("grip_control_depth_actions_total", "counter", c.depth_actions.to_string());
+            push("grip_control_window_actions_total", "counter", c.window_actions.to_string());
+            push("grip_control_shard_actions_total", "counter", c.shard_actions.to_string());
+            push("grip_control_lanes", "gauge", c.final_lanes.to_string());
+            push("grip_control_depth", "gauge", c.final_depth.to_string());
+            push("grip_control_window_us", "gauge", format!("{:.3}", c.final_window_us));
+            push("grip_control_active_shards", "gauge", c.final_active_shards.to_string());
+        }
         out
     }
 }
@@ -1092,13 +1195,48 @@ fn init_engine(shard: usize, spec: &ShardSpec, library: &ModelLibrary) -> ShardE
     }
 }
 
+/// Pull the next job off a (locked, shared) queue. An *active* thread
+/// blocks on the channel, exactly the pre-control behavior; a *parked*
+/// one — gated off by the lane or active-shards knob — polls with
+/// `try_recv` instead. Work a parked thread happens to catch is still
+/// served in full (a best-effort steal never changes any reply bytes;
+/// parking only sheds standing concurrency), but an empty queue sends
+/// it back to a short off-lock sleep. A thread that un-parks between
+/// polls falls through to the blocking arm on its next pass. Returns
+/// `None` when the channel closes.
+fn next_job(
+    rx: &Mutex<mpsc::Receiver<ExecJob>>,
+    parked: impl Fn() -> bool,
+) -> Option<ExecJob> {
+    loop {
+        let guard = rx.lock().ok()?;
+        if parked() {
+            match guard.try_recv() {
+                Ok(j) => return Some(j),
+                Err(mpsc::TryRecvError::Empty) => {
+                    drop(guard);
+                    std::thread::sleep(PARK_POLL);
+                    continue;
+                }
+                Err(mpsc::TryRecvError::Disconnected) => return None,
+            }
+        }
+        return match guard.recv() {
+            Ok(j) => Some(j),
+            Err(_) => None,
+        };
+    }
+}
+
 /// One edge-centric prefetch lane: pull a built nodeflow off the
 /// shard's queue (shared across shards, or this shard's routed home
 /// queue when partitioned), run its cycle sim, gather its layer-0
 /// feature rows — through the shared cache, or through the local cache
 /// + boundary pulls when partitioned — into a pooled [`StagedFeatures`]
 /// buffer, and queue the staged job for this shard's vertex engine.
-/// Exits when the job queue closes (or the engine is gone).
+/// Lanes at or beyond the lane knob (or on a knob-quiesced shard) park
+/// via [`next_job`]'s polling arm. Exits when the job queue closes (or
+/// the engine is gone).
 #[allow(clippy::too_many_arguments)]
 fn prefetch_lane_loop(
     shard: usize,
@@ -1113,20 +1251,17 @@ fn prefetch_lane_loop(
     free_rx: &Mutex<mpsc::Receiver<StagedFeatures>>,
     ready_gauge: &AtomicU64,
     route: Option<&RouteCtx>,
+    knobs: &Knobs,
 ) {
     let telemetry = &spec.telemetry;
     loop {
         // Hold the queue lock only while waiting; staging runs unlocked
         // so sibling lanes (and sibling shards) overlap.
-        let mut job = {
-            let guard = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => break,
-            };
-            match guard.recv() {
-                Ok(j) => j,
-                Err(_) => break,
-            }
+        let mut job = match next_job(rx, || {
+            lane >= knobs.lanes() || shard >= knobs.active_shards()
+        }) {
+            Some(j) => j,
+            None => break,
         };
         telemetry.stages().shard_wait.record_us(
             Instant::now().saturating_duration_since(job.t_built).as_secs_f64() * 1e6,
@@ -1184,6 +1319,26 @@ fn prefetch_lane_loop(
                 t.boundary_wait_us = boundary_us;
             }
         }
+        // Depth knob: the ready channel is sized at the cap, so a
+        // narrowed knob gates admission here instead. Engaged only
+        // when the knob sits below the cap (control off: knob == cap,
+        // the gate vanishes and the `try_send` below keeps the
+        // original stall accounting). Bounded so a wedged engine can't
+        // spin a lane forever — past the limit the send falls through
+        // to the channel's own backpressure.
+        if knobs.depth() < knobs.max_depth {
+            let mut stalled = false;
+            for _ in 0..GATE_SPIN_LIMIT {
+                if (ready_gauge.load(Ordering::Relaxed) as usize) < knobs.depth() {
+                    break;
+                }
+                if !stalled {
+                    counters.prefetch_stalls.fetch_add(1, Ordering::Relaxed);
+                    stalled = true;
+                }
+                std::thread::sleep(GATE_POLL);
+            }
+        }
         // Gauge before send so the engine's decrement can never race
         // below zero; undone on shutdown paths.
         ready_gauge.fetch_add(1, Ordering::Relaxed);
@@ -1222,7 +1377,7 @@ fn engine_loop(
     free_tx: mpsc::Sender<StagedFeatures>,
     ready_gauge: &AtomicU64,
     inflight: &AtomicU64,
-    depth: usize,
+    knobs: &Knobs,
 ) {
     let mut engine = init_engine(shard, spec, library);
     if engine.fell_back {
@@ -1260,10 +1415,11 @@ fn engine_loop(
             Err(mpsc::TryRecvError::Disconnected) => break,
         };
         // Occupancy sample: staged jobs still waiting after this one
-        // (clamped to the queue depth — a lane mid-handoff can push
-        // the gauge one over).
+        // (clamped to the current depth knob — a lane mid-handoff can
+        // push the gauge one over).
         let queued = ready_gauge.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
-        counters.occupancy_sum.fetch_add(queued.min(depth as u64), Ordering::Relaxed);
+        let depth = knobs.depth().max(1) as u64;
+        counters.occupancy_sum.fetch_add(queued.min(depth), Ordering::Relaxed);
         counters.occupancy_samples.fetch_add(1, Ordering::Relaxed);
         counters.staged_jobs.fetch_add(1, Ordering::Relaxed);
         let StagedJob { job, staged, sim, t_staged } = sj;
@@ -1306,6 +1462,7 @@ fn shard_loop(
     rx: &Mutex<mpsc::Receiver<ExecJob>>,
     route: Option<&RouteCtx>,
     inflight: &AtomicU64,
+    knobs: &Knobs,
 ) {
     let mut engine = init_engine(shard, spec, library);
     if engine.fell_back {
@@ -1323,16 +1480,11 @@ fn shard_loop(
 
     loop {
         // Hold the queue lock only while waiting; execution runs
-        // unlocked so shards overlap.
-        let mut job = {
-            let guard = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => break,
-            };
-            match guard.recv() {
-                Ok(j) => j,
-                Err(_) => break,
-            }
+        // unlocked so shards overlap. A knob-quiesced shard parks on
+        // the polling arm instead of camping on the blocking recv.
+        let mut job = match next_job(rx, || shard >= knobs.active_shards()) {
+            Some(j) => j,
+            None => break,
         };
         spec.telemetry.stages().shard_wait.record_us(
             Instant::now().saturating_duration_since(job.t_built).as_secs_f64() * 1e6,
@@ -1672,6 +1824,39 @@ mod tests {
                 assert_eq!(a.accel_us, b.accel_us, "id {}: timing changed", a.id);
                 assert_eq!(a.neighborhood, b.neighborhood);
             }
+        }
+    }
+
+    #[test]
+    fn knob_narrowed_pool_stays_bit_identical() {
+        // Every control gate at once: lanes knob below the spawn cap
+        // (lane 1+ parks and polls), depth knob below the channel cap
+        // (the admission gate engages), active-shards knob at 1 (shard
+        // 1 parks). Replies must still match the ungated pool bit for
+        // bit — parking sheds concurrency, never changes bytes.
+        use crate::control::Knob;
+        let ids: Vec<u32> = (0..24).map(|i| i * 17 % 2000).collect();
+        let base = ShardSpec {
+            shards: 2,
+            model_cfg: small_mc(),
+            backend: BackendChoice::Fixed,
+            cache_rows: 256,
+            pipeline: PipelineConfig::lanes_depth(2, 2),
+            ..Default::default()
+        };
+        let (want, _) = run_pool_spec(base.clone(), &ids);
+        let knobs = Arc::new(Knobs::adaptive(0.0, 0.0, 2, 2, 2));
+        knobs.set(Knob::PrefetchLanes, 1);
+        knobs.set(Knob::PipelineDepth, 1);
+        knobs.set(Knob::ActiveShards, 1);
+        let spec = ShardSpec { knobs: Some(knobs), ..base };
+        let (got, stats) = run_pool_spec(spec, &ids);
+        assert_eq!(stats.staged_jobs, ids.len() as u64, "all jobs served through the pipeline");
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.embedding, b.embedding, "id {}: knob gating changed numerics", a.id);
+            assert_eq!(a.accel_us, b.accel_us);
+            assert_eq!(a.neighborhood, b.neighborhood);
         }
     }
 

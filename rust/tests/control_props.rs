@@ -1,0 +1,212 @@
+//! Property tests for the PR-8 adaptive SLO control plane (hand-rolled
+//! seeded cases, same style as `serve_props.rs`).
+//!
+//! THE control invariant: the controller may reshape *scheduling* —
+//! batcher window, prefetch lanes, pipeline depth, active shards — but
+//! never numerics. Replies under `--control static` and `--control
+//! adaptive` must be bit-identical (embeddings AND simulated timing) to
+//! `--control off` across every preset plus a depth-3 custom spec, at
+//! {1, 4} shards, with the phase pipeline on and off, and with graph
+//! partitioning off and on. The policy's per-rule trigger thresholds
+//! are pinned separately by the unit tests in `src/control/policy.rs`;
+//! this file pins the end-to-end property those rules must preserve.
+//!
+//! The unbatched matrix demands full bit-identity (embedding, simulated
+//! accelerator timing, neighborhood). The batched case compares
+//! embeddings per request id only: a coalesced batch's `accel_us` is
+//! the shared multi-target nodeflow's, so it depends on real-time batch
+//! composition — which varies run to run even with control off —
+//! while embeddings are batch-invariant (pinned by the coordinator's
+//! `batched_reply_matches_unbatched_bit_for_bit`).
+
+use grip::backend::BackendChoice;
+use grip::config::ModelConfig;
+use grip::coordinator::{
+    BatchConfig, ControlConfig, ControlMode, Coordinator, InferenceRequest, InferenceResponse,
+    PipelineConfig, ServeConfig,
+};
+use grip::graph::{generate, CsrGraph, GeneratorParams, PartitionStrategy};
+use grip::greta::{Activate, LayerSpec, ModelKey, ModelLibrary, ModelSpec, ProgramSpec, ReduceOp};
+use grip::rng::SplitMix64;
+
+fn serving_graph(seed: u64) -> CsrGraph {
+    generate(&GeneratorParams { nodes: 1_500, mean_degree: 7.0, seed, ..Default::default() })
+}
+
+fn small_mc() -> ModelConfig {
+    ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+}
+
+/// A depth-3 mean-aggregate spec (8 → 6 → 5 → 3), as in
+/// `serve_props.rs` — deeper-than-preset coverage for the controller.
+fn depth3_spec() -> ModelSpec {
+    ModelSpec::builder("tri3")
+        .layer(LayerSpec::new(8, 6).sample(3).program(
+            ProgramSpec::new("t0")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w0", 8, 6)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(6, 5).sample(2).program(
+            ProgramSpec::new("t1")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w1", 6, 5)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(5, 3).sample(2).program(
+            ProgramSpec::new("t2")
+                .reduce(ReduceOp::Mean)
+                .transform("t_w2", 5, 3)
+                .activate(Activate::Relu),
+        ))
+        .build()
+}
+
+fn mixed_reqs(lib_seed: u64, n: usize) -> (Vec<ModelKey>, Vec<(ModelKey, u32)>) {
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &[depth3_spec()]).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    assert_eq!(keys.len(), 5, "4 presets + tri3");
+    let mut rng = SplitMix64::new(lib_seed);
+    let reqs = (0..n).map(|i| (keys[i % keys.len()], rng.gen_range(1_500) as u32)).collect();
+    (keys, reqs)
+}
+
+/// Serve `reqs` (mixed presets + the depth-3 spec) with the given
+/// control mode over one scheduling shape. A 1 ms tick gives the
+/// adaptive policy real opportunities to move knobs while the requests
+/// are in flight; returns the replies in request order plus the run's
+/// control summary.
+fn serve_controlled(
+    graph: &CsrGraph,
+    mode: ControlMode,
+    shards: usize,
+    pipeline: PipelineConfig,
+    partition: PartitionStrategy,
+    batch: Option<BatchConfig>,
+    reqs: &[(ModelKey, u32)],
+) -> (Vec<InferenceResponse>, grip::control::ControlStats) {
+    let cfg = ServeConfig {
+        backend: BackendChoice::Fixed,
+        shards,
+        builders: 3,
+        model_cfg: small_mc(),
+        pipeline,
+        partition,
+        cache_rows: 300,
+        batch,
+        control: ControlConfig { mode, interval_ms: 1 },
+        custom_specs: vec![depth3_spec()],
+        ..Default::default()
+    };
+    let coord = Coordinator::start(graph.clone(), 11, cfg).unwrap();
+    let pending: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, t))| coord.submit(InferenceRequest::single(i as u64, m, t)).unwrap())
+        .collect();
+    let responses = pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let control = coord.serve_stats().control;
+    (responses, control)
+}
+
+#[test]
+fn prop_control_modes_bit_identical_across_scheduling_shapes() {
+    let graph = serving_graph(29);
+    let (_, reqs) = mixed_reqs(83, 25);
+
+    for (pipeline, pname) in
+        [(PipelineConfig::default(), "pipeline-on"), (PipelineConfig::off(), "pipeline-off")]
+    {
+        for partition in [PartitionStrategy::Off, PartitionStrategy::Degree] {
+            for shards in [1usize, 4] {
+                let (off, off_stats) = serve_controlled(
+                    &graph,
+                    ControlMode::Off,
+                    shards,
+                    pipeline,
+                    partition,
+                    None,
+                    &reqs,
+                );
+                assert!(off.iter().all(|r| !r.timing_only));
+                assert_eq!(off_stats.mode, "off");
+                assert_eq!(off_stats.ticks, 0, "off spawns no controller");
+
+                for mode in [ControlMode::Static, ControlMode::Adaptive] {
+                    let (got, stats) = serve_controlled(
+                        &graph, mode, shards, pipeline, partition, None, &reqs,
+                    );
+                    let shape = format!("{mode:?}/{pname}/{partition:?}/s{shards}");
+                    assert_eq!(got.len(), off.len(), "{shape}");
+                    for (a, b) in off.iter().zip(got.iter()) {
+                        assert_eq!(a.id, b.id, "{shape}");
+                        assert_eq!(
+                            a.embedding, b.embedding,
+                            "id {}: {shape} changed numerics",
+                            a.id
+                        );
+                        assert_eq!(
+                            a.accel_us, b.accel_us,
+                            "id {}: {shape} changed simulated timing",
+                            a.id
+                        );
+                        assert_eq!(a.neighborhood, b.neighborhood, "{shape}");
+                    }
+                    assert_eq!(stats.mode, mode.label(), "{shape}");
+                    if mode == ControlMode::Static {
+                        assert_eq!(stats.actions, 0, "{shape}: static holds every knob");
+                    }
+                    // Knob readouts always land in the final shape —
+                    // even when no action fired, the controller reports
+                    // where the knobs ended up.
+                    assert!(stats.final_lanes >= 1 && stats.final_depth >= 1, "{shape}");
+                    assert!(stats.final_active_shards >= 1, "{shape}");
+                    assert_eq!(stats.log.len() as u64, stats.actions.min(256), "{shape}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_control_modes_preserve_embeddings_under_batching() {
+    // With the SLO batcher in the loop the window knob is live too
+    // (adaptive runs widen/narrow it against measured deadline margin);
+    // embeddings per request id must still match control-off exactly.
+    let graph = serving_graph(31);
+    let (_, reqs) = mixed_reqs(59, 30);
+    let batch = Some(BatchConfig { slo_us: 10_000.0, margin_us: 2_000.0, max_batch: 4 });
+
+    let (off, _) = serve_controlled(
+        &graph,
+        ControlMode::Off,
+        2,
+        PipelineConfig::default(),
+        PartitionStrategy::Off,
+        batch,
+        &reqs,
+    );
+    assert!(off.iter().all(|r| !r.timing_only));
+    for mode in [ControlMode::Static, ControlMode::Adaptive] {
+        let (got, stats) = serve_controlled(
+            &graph,
+            mode,
+            2,
+            PipelineConfig::default(),
+            PartitionStrategy::Off,
+            batch,
+            &reqs,
+        );
+        assert_eq!(got.len(), off.len());
+        for (a, b) in off.iter().zip(got.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.embedding, b.embedding,
+                "id {}: {mode:?} batching changed numerics",
+                a.id
+            );
+        }
+        assert_eq!(stats.mode, mode.label());
+        assert!(stats.ticks > 0, "{mode:?}: controller ticked while serving");
+    }
+}
