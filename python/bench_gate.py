@@ -26,6 +26,7 @@ Stdlib-only on purpose: the CI bench job runs it with a bare python3.
 
 import argparse
 import json
+import re
 import sys
 
 
@@ -69,11 +70,31 @@ CONTROL_KEYS = (
 
 CONTROL_SUFFIXES = ("_cstatic", "_cadaptive")
 
+# The PR-9 weight-residency summary every byte-budgeted sweep point
+# must carry. Budgeted sections are labelled ``_w{bytes}b_e{policy}``;
+# unbudgeted ones (the unlimited eager store) must NOT grow residency
+# keys: budget 0 keeps the historical key set byte-for-byte.
+RESIDENCY_KEYS = (
+    "residency_budget_bytes",
+    "residency_hits",
+    "residency_misses",
+    "residency_hit_rate",
+    "residency_evictions",
+    "residency_resident_bytes",
+    "residency_resident_models",
+    "residency_prepare_failures",
+    "residency_prepare_p50_us",
+    "residency_prepare_p99_us",
+)
+
+RESIDENCY_LABEL_RE = re.compile(r"_w\d+b_e(lru|cost|size-aware)(_|$)")
+
 
 def stage_schema_failures(fresh):
     """Every fresh serve_load section must expose the stage breakdown;
-    controlled sections must also expose the control summary, and
-    uncontrolled ones must not."""
+    controlled sections must also expose the control summary (and
+    budgeted ones the residency summary), while uncontrolled /
+    unbudgeted ones must not."""
     out = []
     for section, metrics in fresh.items():
         if not section.startswith("serve_load/") or not isinstance(metrics, dict):
@@ -81,7 +102,9 @@ def stage_schema_failures(fresh):
         for key in STAGE_KEYS:
             if key not in metrics:
                 out.append(f"{section}: missing per-stage key {key}")
-        if section.endswith(CONTROL_SUFFIXES):
+        # Substring, not endswith: a controlled section may also carry
+        # the PR-9 ``_w{bytes}b_e{policy}`` residency suffix after it.
+        if any(sfx in section for sfx in CONTROL_SUFFIXES):
             for key in CONTROL_KEYS:
                 if key not in metrics:
                     out.append(f"{section}: missing control-plane key {key}")
@@ -91,6 +114,17 @@ def stage_schema_failures(fresh):
                     out.append(
                         f"{section}: unexpected control-plane key {key} in an "
                         "uncontrolled section"
+                    )
+        if RESIDENCY_LABEL_RE.search(section):
+            for key in RESIDENCY_KEYS:
+                if key not in metrics:
+                    out.append(f"{section}: missing weight-residency key {key}")
+        else:
+            for key in RESIDENCY_KEYS:
+                if key in metrics:
+                    out.append(
+                        f"{section}: unexpected weight-residency key {key} in an "
+                        "unbudgeted section"
                     )
     return out
 

@@ -18,6 +18,7 @@ use grip::greta::{
     PlanArgs,
 };
 use grip::nodeflow::{Nodeflow, Sampler};
+use grip::residency::EvictPolicy;
 use grip::rng::SplitMix64;
 use grip::control::{ControlConfig, ControlMode};
 use grip::serve::{poisson, run_sweep, ArrivalProcess, ModelMix, OpenLoopConfig};
@@ -215,6 +216,28 @@ fn main() {
         run_sweep(&g_sweep, &[100.0], &[4], &adaptive_base, bursty)
             .expect("adaptive bursty sweep"),
     );
+    // Weight-residency points (PR 9): a 6-tenant zoo under Zipf skew,
+    // unbudgeted (eager store baseline, no residency_* keys) and under a
+    // tight 4 KiB budget — 1 KiB per shard after the split — with the
+    // lru and cost policies. At these dims every preset outweighs its
+    // shard share (passthrough) while the tenant models page in and out;
+    // the `_w…b_e…` sections carry hit/miss/eviction counters and
+    // prepare latency percentiles. Replies stay bit-identical throughout
+    // (tests/residency_props.rs pins that).
+    let tenant_base = OpenLoopConfig { tenants: 6, tenant_skew: 1.1, ..base.clone() };
+    sweep.extend(
+        run_sweep(&g_sweep, &[100.0], &[4], &tenant_base, poisson).expect("tenant-zoo sweep"),
+    );
+    for policy in [EvictPolicy::Lru, EvictPolicy::Cost] {
+        let paged = OpenLoopConfig {
+            weight_budget_bytes: 4 << 10,
+            evict: policy,
+            ..tenant_base.clone()
+        };
+        sweep.extend(
+            run_sweep(&g_sweep, &[100.0], &[4], &paged, poisson).expect("residency sweep"),
+        );
+    }
     for (label, r) in &sweep {
         println!(
             "{label:<40} e2e p50 {:>9.0} µs p99 {:>9.0} µs | cache hit {:>5.1}% (sim {:>5.1}%) | cut {:>5.1}% bfetch {}",

@@ -64,6 +64,7 @@ use crate::control::{ControlConfig, ControlInputs, ControlMode, Controller, Knob
 use crate::graph::{CsrGraph, PartitionStrategy};
 use crate::greta::{ModelKey, ModelLibrary, ModelSpec};
 use crate::nodeflow::{Nodeflow, Sampler};
+use crate::residency::{EvictPolicy, ResidencyConfig};
 use crate::runtime::Manifest;
 use crate::serve::{
     BatchConfig, Batcher, ExecJob, Pending, PipelineConfig, ReplySlot, ServeStats, ShardPool,
@@ -339,6 +340,17 @@ pub struct ServeConfig {
     /// reshape scheduling only, never numerics: replies are
     /// bit-identical across modes (`tests/control_props.rs`).
     pub control: ControlConfig,
+    /// Weight-residency budget in bytes, split across shards like
+    /// `cache_rows` (`--weight-budget-bytes`, 0 = unlimited: every
+    /// model's weights are prepared eagerly and stay resident, the
+    /// historical behavior). Budgeted shards page prepared models in
+    /// on demand and evict under [`ServeConfig::evict`]; replies stay
+    /// bit-identical for any budget (`tests/residency_props.rs`).
+    pub weight_budget_bytes: usize,
+    /// Eviction policy of the budgeted weight store
+    /// (`--evict lru|cost|size-aware`). Inert when
+    /// `weight_budget_bytes` is 0.
+    pub evict: EvictPolicy,
 }
 
 impl Default for ServeConfig {
@@ -360,6 +372,8 @@ impl Default for ServeConfig {
             custom_specs: Vec::new(),
             trace_sample: 64,
             control: ControlConfig::default(),
+            weight_budget_bytes: 0,
+            evict: EvictPolicy::default(),
         }
     }
 }
@@ -375,6 +389,10 @@ impl ServeConfig {
             pipeline: self.pipeline,
             cache_rows: self.cache_rows,
             weight_seed: self.weight_seed,
+            residency: ResidencyConfig {
+                budget_bytes: self.weight_budget_bytes,
+                policy: self.evict,
+            },
             telemetry,
             knobs: Some(knobs),
         }
@@ -1081,6 +1099,50 @@ mod tests {
         assert_eq!(s.routed_jobs.iter().sum::<u64>(), 12, "every job went through the router");
         assert_eq!(s.cache_rows_total, 256, "budget preserved across the split");
         assert_eq!(s.shard_cache_rows.len(), 2);
+    }
+
+    #[test]
+    fn budgeted_residency_serves_bit_identically() {
+        // End-to-end through the coordinator: a weight budget that fits
+        // barely one preset at a time pages models constantly under a
+        // round-robin mix — and must not move one reply bit versus the
+        // unlimited (eager) store.
+        use crate::greta::ALL_MODELS;
+        use crate::residency::plan_weight_bytes;
+        let g = graph();
+        let off = Coordinator::start(g.clone(), 7, fixed_cfg(1)).unwrap();
+        let want: Vec<InferenceResponse> = (0..12usize)
+            .map(|i| {
+                off.infer(InferenceRequest::single(i as u64, ALL_MODELS[i % 4], i as u32 * 41))
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(off.serve_stats().residency_budget_bytes, 0, "unlimited by default");
+        drop(off);
+
+        let lib = ModelLibrary::presets(&small_mc());
+        let seed = ServeConfig::default().weight_seed;
+        let max = lib.keys().map(|k| plan_weight_bytes(&lib, k, seed)).max().unwrap();
+        let cfg = ServeConfig {
+            weight_budget_bytes: max + 1,
+            evict: EvictPolicy::Cost,
+            ..fixed_cfg(1)
+        };
+        let coord = Coordinator::start(g, 7, cfg).unwrap();
+        for (i, w) in want.iter().enumerate() {
+            let r = coord
+                .infer(InferenceRequest::single(i as u64, ALL_MODELS[i % 4], i as u32 * 41))
+                .unwrap();
+            assert_eq!(r.embedding, w.embedding, "id {i}: paging changed numerics");
+            assert_eq!(r.accel_us, w.accel_us, "id {i}: paging changed sim timing");
+        }
+        let s = coord.serve_stats();
+        assert_eq!(s.residency_policy, "cost");
+        assert!(s.residency_evictions >= 1, "tight budget must evict");
+        assert!(s.residency_misses >= 4, "every model pages in at least once");
+        assert!(s.residency_resident_bytes <= (max + 1) as u64);
+        assert_eq!(s.residency_prepare_failures, 0);
+        assert_eq!(s.backend_fallbacks, 0, "paging is not a fallback");
     }
 
     #[test]

@@ -52,6 +52,11 @@
 //!   (O(1) record, bounded memory, mergeable across shards), sampled
 //!   per-request `SpanTrace` lifecycle tracing, and exporters for
 //!   Chrome `trace_event` JSON (Perfetto) and Prometheus text.
+//! * [`residency`] — the per-shard weight-residency manager: a
+//!   byte-budgeted store of prepared models (GRIP's dedicated
+//!   weight-memory subsystem, host side) paging tenants in and out
+//!   under a multi-tenant mix with pluggable eviction
+//!   (`--weight-budget-bytes`, `--evict lru|cost|size-aware`).
 //! * [`repro`] — one generator per paper table and figure.
 
 pub mod backend;
@@ -66,6 +71,7 @@ pub mod graph;
 pub mod greta;
 pub mod nodeflow;
 pub mod repro;
+pub mod residency;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

@@ -14,11 +14,14 @@
 
 use grip::backend::{BackendChoice, BACKEND_NAME_HELP};
 use grip::config::{GripConfig, ModelConfig};
-use grip::coordinator::{run_workload, ControlConfig, ControlMode, Coordinator, ServeConfig};
+use grip::coordinator::{
+    run_workload, ControlConfig, ControlMode, Coordinator, InferenceRequest, ServeConfig,
+};
 use grip::graph::{Dataset, PartitionStrategy};
-use grip::greta::{compile, GnnModel, ModelLibrary, ModelSpec, MODEL_NAME_HELP};
+use grip::greta::{compile, GnnModel, ModelKey, ModelLibrary, ModelSpec, MODEL_NAME_HELP};
 use grip::nodeflow::{Nodeflow, Sampler};
 use grip::repro::ReproCtx;
+use grip::residency::EvictPolicy;
 use grip::rng::SplitMix64;
 use grip::runtime::{Executor, Manifest};
 use grip::sim::simulate;
@@ -35,6 +38,8 @@ fn usage() -> ! {
                    [--partition degree|hash|off] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
                    [--control off|static|adaptive] [--control-interval-ms T=50]\n\
+                   [--tenants N=0] [--weight-budget-bytes B=0 (unlimited)]\n\
+                   [--evict lru|cost|size-aware]\n\
                    [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
@@ -43,6 +48,8 @@ fn usage() -> ! {
                    [--backend B=fixed] [--seed K=17] [--out PATH] [--cache-rows N]\n\
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
                    [--control C1,C2,..=off (off|static|adaptive)] [--control-interval-ms T=50]\n\
+                   [--tenants N=0] [--tenant-skew S=0 (Zipf exponent over models)]\n\
+                   [--weight-budgets B1,B2,..=0] [--evict E1,E2,..=lru (lru|cost|size-aware)]\n\
                    [--submit-lanes W=0 (auto)]\n\
                    [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
@@ -68,6 +75,15 @@ fn usage() -> ! {
            prefetch lanes, pipeline depth, and active shards from stage telemetry; replies\n\
            are bit-identical in every mode (serve-bench accepts a comma list to sweep)\n\
          --target-skew draws serve-bench targets Zipf(s) instead of uniformly (0 = uniform)\n\
+         --tenants registers N generated tenant models alongside the four presets and spreads\n\
+           the request mix across every model (examples/TENANCY.md); --tenant-skew draws the\n\
+           per-request model Zipf(s) over keys, hottest first (0 = equal weight) — arrival\n\
+           times and targets never move, only the model column\n\
+         --weight-budget-bytes caps each pool's prepared-weight bytes (split across shards\n\
+           like --cache-rows); models page in on demand and evict under --evict (lru, cost =\n\
+           cheapest bytes x prepare-cost per age, size-aware = largest first); 0 = unlimited\n\
+           eager store (historical behavior); replies are bit-identical for any budget\n\
+           (serve-bench sweeps comma lists via --weight-budgets and --evict)\n\
          --trace-sample traces 1-in-N requests through every pipeline stage (0 = off; stage\n\
            histograms record regardless; examples/OBSERVABILITY.md); --trace-out writes the\n\
            sampled spans as Chrome trace_event JSON (load in Perfetto), --metrics-out writes\n\
@@ -230,6 +246,35 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the single `--evict` policy (serve; default LRU — inert
+    /// unless `--weight-budget-bytes` is set).
+    fn evict(&self) -> anyhow::Result<EvictPolicy> {
+        match self.get("evict") {
+            None => Ok(EvictPolicy::default()),
+            Some(name) => EvictPolicy::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --evict {name:?}; accepted: lru | cost | size-aware")
+            }),
+        }
+    }
+
+    /// Parse the comma-separated `--evict` sweep list (serve-bench;
+    /// default `lru`).
+    fn evict_list(&self) -> anyhow::Result<Vec<EvictPolicy>> {
+        let s = self.get("evict").unwrap_or("lru");
+        let mut out = Vec::new();
+        for tok in s.split(',') {
+            let name = tok.trim();
+            let p = EvictPolicy::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --evict entry {name:?}; accepted: lru | cost | size-aware")
+            })?;
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "--evict list is empty");
+        Ok(out)
+    }
+
     /// Parse a single `--partition` strategy (serve; default `off`).
     fn partition(&self) -> anyhow::Result<PartitionStrategy> {
         match self.get("partition") {
@@ -316,11 +361,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let pipeline = args.pipeline()?;
     let partition = args.partition()?;
     let control = args.control_cfg()?;
+    let tenants = args.get_usize("tenants", 0);
+    let weight_budget_bytes = args.get_usize("weight-budget-bytes", 0);
+    let evict = args.evict()?;
 
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, 17);
     let num_v = graph.num_vertices();
     let defaults = ServeConfig::default();
+    let mut custom_specs: Vec<ModelSpec> = spec.iter().cloned().collect();
+    custom_specs.extend(grip::residency::tenant_zoo(tenants, &defaults.model_cfg));
     let cfg = ServeConfig {
         backend,
         pipeline,
@@ -328,8 +378,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         control,
         shards: args.get_usize("shards", defaults.shards),
         cache_rows: args.get_usize("cache-rows", defaults.cache_rows),
-        custom_specs: spec.iter().cloned().collect(),
+        custom_specs,
         trace_sample: args.get_usize("trace-sample", defaults.trace_sample as usize) as u64,
+        weight_budget_bytes,
+        evict,
         ..defaults
     };
     let coord = Coordinator::start(graph, 17, cfg)?;
@@ -341,10 +393,45 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut rng = SplitMix64::new(99);
     let targets: Vec<u32> = (0..n).map(|_| rng.gen_range(num_v) as u32).collect();
     let t0 = std::time::Instant::now();
-    let (accel, host, responses) = run_workload(&coord, key, &targets)?;
+    // Multi-tenant mix: round-robin the request stream over every
+    // registered model (presets + spec + zoo) so the weight store pages
+    // under live traffic; without --tenants the historical single-model
+    // workload runs unchanged.
+    let (accel, host, responses) = if tenants > 0 {
+        let keys: Vec<ModelKey> =
+            (0..coord.library().len()).map(ModelKey::from_index).collect();
+        let mut pending = Vec::with_capacity(targets.len());
+        for (i, &t) in targets.iter().enumerate() {
+            pending.push(coord.submit(InferenceRequest::single(
+                i as u64,
+                keys[i % keys.len()],
+                t,
+            ))?);
+        }
+        let mut accel = grip::coordinator::LatencyStats::new();
+        let mut host = grip::coordinator::LatencyStats::new();
+        let mut responses = Vec::with_capacity(pending.len());
+        for rx in pending {
+            let r = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("pipeline dropped"))?
+                .map_err(|e| anyhow::anyhow!(e))?;
+            accel.record(r.accel_us);
+            host.record(r.host_us);
+            responses.push(r);
+        }
+        (accel, host, responses)
+    } else {
+        run_workload(&coord, key, &targets)?
+    };
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("== serve: {model_name} on {dataset:?}, {n} requests ==");
+    let mix_name = if tenants > 0 {
+        format!("{model_name} + {tenants}-tenant zoo (round-robin over {} models)", coord.library().len())
+    } else {
+        model_name.clone()
+    };
+    println!("== serve: {mix_name} on {dataset:?}, {n} requests ==");
     println!(
         "accelerator latency (simulated): p50 {:.1} µs  p99 {:.1} µs  mean {:.1} µs",
         accel.p50(),
@@ -439,6 +526,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         if c.log.len() > 8 {
             println!("  ... and {} more actions", c.log.len() - 8);
         }
+    }
+    // Weight-residency health: how the byte-budgeted store paged under
+    // the mix (absent with the unlimited eager store).
+    if stats.residency_budget_bytes > 0 {
+        println!(
+            "residency {} (budget {} B): hit rate {:.1}% ({} hits / {} misses), {} evictions, \
+             resident {} B / {} models, prepare p50 {:.0} µs p99 {:.0} µs{}",
+            stats.residency_policy,
+            stats.residency_budget_bytes,
+            stats.residency_hit_rate * 100.0,
+            stats.residency_hits,
+            stats.residency_misses,
+            stats.residency_evictions,
+            stats.residency_resident_bytes,
+            stats.residency_resident_models,
+            stats.residency_prepare_p50_us,
+            stats.residency_prepare_p99_us,
+            if stats.residency_prepare_failures > 0 {
+                format!(" — {} prepare failure(s)", stats.residency_prepare_failures)
+            } else {
+                String::new()
+            }
+        );
     }
     // Per-stage latency breakdown from the always-on stage histograms:
     // where a request's time went, not just how long it took.
@@ -536,6 +646,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(v >= 1, "--control-interval-ms wants a positive integer");
         v
     };
+    let budgets = parse_budget_list(args.get("weight-budgets").unwrap_or("0"))?;
+    let evicts = args.evict_list()?;
     let defaults = OpenLoopConfig::default();
     let base = OpenLoopConfig {
         requests,
@@ -546,6 +658,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         pipeline,
         cache_rows: args.get_usize("cache-rows", defaults.cache_rows),
         target_skew: args.get_f64("target-skew", 0.0),
+        tenants: args.get_usize("tenants", 0),
+        tenant_skew: args.get_f64("tenant-skew", 0.0),
         submit_lanes: args.get_usize("submit-lanes", 0),
         trace_sample: args.get_usize("trace-sample", defaults.trace_sample as usize) as u64,
         batch: if args.has("no-batching") {
@@ -559,38 +673,51 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
 
     println!(
         "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts x \
-         {} partition strategies x {} control modes, backend {backend}, pipeline {}, \
-         target-skew {} ==",
+         {} partition strategies x {} control modes x {} weight budgets, backend {backend}, \
+         pipeline {}, target-skew {}, tenants {} (skew {}) ==",
         dataset,
         requests,
         rates.len(),
         shard_counts.len(),
         partitions.len(),
         controls.len(),
+        budgets.len(),
         pipeline.label(),
-        base.target_skew
+        base.target_skew,
+        base.tenants,
+        base.tenant_skew
     );
     let bursty = args.has("bursty");
     let mut points = Vec::new();
     for &partition in &partitions {
         for &cmode in &controls {
-            let point_base = OpenLoopConfig {
-                partition,
-                control: ControlConfig { mode: cmode, interval_ms: control_interval_ms },
-                ..base.clone()
-            };
-            points.extend(run_sweep(&graph, &rates, &shard_counts, &point_base, |rate| {
-                if bursty {
-                    ArrivalProcess::Bursty {
-                        base_rps: rate,
-                        burst_rps: rate * 4.0,
-                        base_dwell_ms: 200.0,
-                        burst_dwell_ms: 50.0,
-                    }
-                } else {
-                    ArrivalProcess::Poisson { rate_rps: rate }
+            for &budget in &budgets {
+                // Eviction is inert without a budget: the 0-budget
+                // point runs once, keeping its historical label.
+                let policies: &[EvictPolicy] =
+                    if budget == 0 { std::slice::from_ref(&evicts[0]) } else { &evicts };
+                for &policy in policies {
+                    let point_base = OpenLoopConfig {
+                        partition,
+                        control: ControlConfig { mode: cmode, interval_ms: control_interval_ms },
+                        weight_budget_bytes: budget,
+                        evict: policy,
+                        ..base.clone()
+                    };
+                    points.extend(run_sweep(&graph, &rates, &shard_counts, &point_base, |rate| {
+                        if bursty {
+                            ArrivalProcess::Bursty {
+                                base_rps: rate,
+                                burst_rps: rate * 4.0,
+                                base_dwell_ms: 200.0,
+                                burst_dwell_ms: 50.0,
+                            }
+                        } else {
+                            ArrivalProcess::Poisson { rate_rps: rate }
+                        }
+                    })?);
                 }
-            })?);
+            }
         }
     }
     for (label, r) in &points {
@@ -632,6 +759,28 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
                 r.stats.boundary_fetches,
                 r.stats.boundary_rows,
                 r.stats.boundary_fetch_p99_us
+            );
+        }
+        if r.stats.residency_budget_bytes > 0 {
+            println!(
+                "{:<40} residency {}: budget {} B | hit {:.1}% ({} hits / {} misses) | \
+                 {} evictions | resident {} B / {} models | prepare p50 {:.0} µs p99 {:.0} µs{}",
+                "",
+                r.stats.residency_policy,
+                r.stats.residency_budget_bytes,
+                r.stats.residency_hit_rate * 100.0,
+                r.stats.residency_hits,
+                r.stats.residency_misses,
+                r.stats.residency_evictions,
+                r.stats.residency_resident_bytes,
+                r.stats.residency_resident_models,
+                r.stats.residency_prepare_p50_us,
+                r.stats.residency_prepare_p99_us,
+                if r.stats.residency_prepare_failures > 0 {
+                    format!(" | {} prepare failure(s)", r.stats.residency_prepare_failures)
+                } else {
+                    String::new()
+                }
             );
         }
         if r.stats.control.mode != "off" {
@@ -687,6 +836,24 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Parse a comma-separated byte-count list ("0,65536"). Unlike
+/// [`parse_list`] zero is legal — budget 0 means the unlimited eager
+/// store — and duplicates collapse so one sweep point runs per budget.
+fn parse_budget_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let v: usize = tok
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad byte-count entry {tok:?} in {s:?}"))?;
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "--weight-budgets list is empty");
+    Ok(out)
 }
 
 /// Parse a comma-separated numeric list ("25,50,100"). Rejects — rather

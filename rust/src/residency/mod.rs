@@ -1,0 +1,627 @@
+//! Per-shard weight-residency manager: GRIP's dedicated weight-memory
+//! subsystem, host side.
+//!
+//! The paper's vertex unit wins by keeping model weights resident in a
+//! dedicated on-chip weight buffer and tiling vertices through it, so
+//! every weight fetched from DRAM is reused across the whole tile
+//! (Sec. V-C). The serving stack until now assumed the host-side
+//! analogue was free: every registered model's [`PreparedModel`]
+//! (quantized weights, device-resident PJRT buffers) stayed resident on
+//! every shard forever. That cannot hold for a multi-tenant model zoo
+//! whose prepared weights exceed the weight budget — ROADMAP item 5(b).
+//!
+//! [`ResidencyManager`] owns a byte-budgeted store of prepared models
+//! for one shard. The **total** budget (`--weight-budget-bytes`) is
+//! split across shards by largest remainder — [`split_weight_budget`],
+//! the same rounding rule as `--cache-rows` — so total resident weight
+//! memory is invariant under the shard sweep. A lookup hit serves from
+//! the resident set; a miss runs [`NumericsBackend::prepare`]
+//! **on demand**, charging the real quantization/upload cost to that
+//! request's latency window, then admits the model, evicting residents
+//! per the configured [`EvictPolicy`] until the shard is back under
+//! budget. A model too large for the shard's whole budget is served
+//! *pass-through*: prepared, executed, and dropped, never admitted — so
+//! the budget invariant (Σ resident bytes ≤ budget) holds at all times.
+//!
+//! Residency moves **when** weights are prepared, never **what** they
+//! compute: the serving weights are a pure function of (plan, seed)
+//! (`fixed_serving_args`), so a re-prepared model is bit-identical to
+//! the evicted one and replies are invariant across budgets and
+//! policies (`tests/residency_props.rs`).
+//!
+//! A prepare failure under paging is **per-request, per-tenant**: the
+//! slot stays empty, the failure is counted
+//! ([`ResidencyCounters::prepare_failures`], surfaced through
+//! `ServeStats::backend_fallbacks`), and the *next* request for that
+//! tenant retries — one transient backend hiccup no longer writes a
+//! tenant (or a whole shard) off permanently.
+
+use crate::backend::{NumericsBackend, PreparedModel};
+use crate::config::ModelConfig;
+use crate::greta::{
+    Activate, LayerSpec, ModelKey, ModelLibrary, ModelSpec, ProgramSpec, ReduceOp,
+};
+use crate::serve::fixed_serving_args;
+use crate::telemetry::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Pluggable eviction policy (`--evict lru|cost|size-aware`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictPolicy {
+    /// Evict the least-recently-used resident model.
+    #[default]
+    Lru,
+    /// Cost-aware: weigh bytes × observed re-prepare time against
+    /// recency — evict the resident minimizing
+    /// `(bytes × prepare_µs) / age`, so small, cheap-to-re-prepare,
+    /// cold models go first and big expensive ones are protected.
+    Cost,
+    /// Evict the largest resident model (ties broken by recency) —
+    /// frees the most budget per eviction.
+    SizeAware,
+}
+
+impl EvictPolicy {
+    /// Parse a CLI `--evict` value.
+    pub fn from_name(s: &str) -> Option<EvictPolicy> {
+        match s {
+            "lru" => Some(EvictPolicy::Lru),
+            "cost" => Some(EvictPolicy::Cost),
+            "size-aware" | "size" => Some(EvictPolicy::SizeAware),
+            _ => None,
+        }
+    }
+
+    /// The CLI name (also the serve-bench section-label fragment).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::Cost => "cost",
+            EvictPolicy::SizeAware => "size-aware",
+        }
+    }
+}
+
+/// Residency policy for one pool: the **total** byte budget (0 =
+/// unlimited, the pre-zoo behavior: every model prepared eagerly at
+/// startup and never evicted) and the eviction policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResidencyConfig {
+    /// Total prepared-weight budget in bytes across all shards
+    /// (`--weight-budget-bytes`; 0 disables paging).
+    pub budget_bytes: usize,
+    /// Victim selection when a shard is over budget.
+    pub policy: EvictPolicy,
+}
+
+impl ResidencyConfig {
+    /// Whether paging is on (a 0 budget keeps the eager resident-forever
+    /// store, and none of the `residency_*` metrics are emitted).
+    pub fn budgeted(&self) -> bool {
+        self.budget_bytes > 0
+    }
+}
+
+/// Largest-remainder split of the total weight budget across shards:
+/// shard `i` gets `budget/shards`, plus one of the `budget % shards`
+/// remainder bytes if `i < budget % shards` — sums to exactly `budget`
+/// for every shard count, the same invariant rule as
+/// `split_cache_rows`.
+pub fn split_weight_budget(budget_bytes: usize, shards: usize) -> Vec<usize> {
+    let shards = shards.max(1);
+    (0..shards)
+        .map(|i| budget_bytes / shards + usize::from(i < budget_bytes % shards))
+        .collect()
+}
+
+/// Estimated bytes a prepared `plan` occupies: the f32 footprint of
+/// every serving argument (weights, biases, scalars) the plan resolves.
+/// Backends quantize or pad differently (Q4.12 halves it, PJRT uploads
+/// device buffers), but the *relative* sizes — what admission and
+/// eviction decisions need — track this estimate for all of them, and
+/// it is computable without touching a backend.
+pub fn plan_weight_bytes(library: &ModelLibrary, key: ModelKey, weight_seed: u64) -> usize {
+    fixed_serving_args(library.plan(key), weight_seed)
+        .values()
+        .map(|(_, data)| data.len() * std::mem::size_of::<f32>())
+        .sum()
+}
+
+/// Pool-wide residency telemetry, shared by every shard's manager and
+/// snapshotted into `ServeStats`. Deliberately **not** registered in
+/// the shared telemetry [`Registry`](crate::telemetry::Registry):
+/// the registry renders everything it holds, and `residency_*` series
+/// must not leak into unbudgeted runs' Prometheus output (the
+/// bench-gate schema check is bidirectional).
+#[derive(Debug, Default)]
+pub struct ResidencyCounters {
+    /// Lookups served from the resident set.
+    pub hits: AtomicU64,
+    /// Lookups that ran an on-demand `prepare` (incl. pass-through).
+    pub misses: AtomicU64,
+    /// Residents evicted to make room.
+    pub evictions: AtomicU64,
+    /// On-demand prepares that failed (per-request; the tenant's slot
+    /// stays empty and the next request retries).
+    pub prepare_failures: AtomicU64,
+    /// Current resident bytes, summed across shards (a gauge).
+    pub resident_bytes: AtomicU64,
+    /// Currently resident models, summed across shards (a gauge).
+    pub resident_models: AtomicU64,
+    /// On-demand prepare latency (µs) — the paging cost each miss
+    /// charges to its request.
+    pub prepare_lat: Histogram,
+}
+
+impl ResidencyCounters {
+    /// Hit fraction over all lookups (0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed);
+        let m = self.misses.load(Ordering::Relaxed);
+        if h + m > 0 {
+            h as f64 / (h + m) as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One resident model and the metadata eviction decides on.
+struct Resident {
+    prepared: PreparedModel,
+    bytes: usize,
+    /// Lookup tick of the last use (recency).
+    last_use: u64,
+    /// Observed µs of this model's most recent prepare.
+    prepare_us: f64,
+}
+
+/// Byte-budgeted store of [`PreparedModel`]s for **one shard**. Lives
+/// on the shard's engine thread next to its (non-`Send`) backend; all
+/// cross-thread visibility goes through the shared
+/// [`ResidencyCounters`].
+pub struct ResidencyManager {
+    /// This shard's slice of the total budget.
+    budget_bytes: usize,
+    policy: EvictPolicy,
+    /// Slot per library model, indexed by `ModelKey::index()`.
+    slots: Vec<Option<Resident>>,
+    /// Estimated bytes per library model (same index).
+    model_bytes: Vec<usize>,
+    /// Holds a pass-through prepare (model larger than the whole shard
+    /// budget) for the duration of one execute; never counted resident.
+    passthrough: Option<PreparedModel>,
+    resident_bytes: usize,
+    tick: u64,
+    counters: Arc<ResidencyCounters>,
+}
+
+impl ResidencyManager {
+    /// An empty manager for one shard. `budget_bytes` is this shard's
+    /// slice (one element of [`split_weight_budget`]), not the total.
+    pub fn new(
+        budget_bytes: usize,
+        policy: EvictPolicy,
+        library: &ModelLibrary,
+        weight_seed: u64,
+        counters: Arc<ResidencyCounters>,
+    ) -> ResidencyManager {
+        let model_bytes = library
+            .keys()
+            .map(|k| plan_weight_bytes(library, k, weight_seed))
+            .collect::<Vec<_>>();
+        ResidencyManager {
+            budget_bytes,
+            policy,
+            slots: (0..model_bytes.len()).map(|_| None).collect(),
+            model_bytes,
+            passthrough: None,
+            resident_bytes: 0,
+            tick: 0,
+            counters,
+        }
+    }
+
+    /// Σ resident bytes on this shard (the budget-accounting invariant:
+    /// always ≤ `budget_bytes`).
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Whether `key` is currently resident on this shard.
+    pub fn is_resident(&self, key: ModelKey) -> bool {
+        self.slots.get(key.index()).is_some_and(|s| s.is_some())
+    }
+
+    /// Test/calibration hook: override the observed prepare cost the
+    /// cost-aware policy weighs (wall-clock measurements are
+    /// nondeterministic; hand-crafted eviction-order tests pin it).
+    pub fn note_prepare_us(&mut self, key: ModelKey, us: f64) {
+        if let Some(Some(r)) = self.slots.get_mut(key.index()) {
+            r.prepare_us = us;
+        }
+    }
+
+    /// Serve `key` from the resident set, or page it in: run
+    /// `backend.prepare` with the pool's deterministic serving weights
+    /// (charging the cost to the caller — i.e. to the request whose
+    /// miss this is), evict per policy until within budget, admit. A
+    /// model bigger than the whole shard budget is served pass-through
+    /// without admission. On a prepare failure the slot stays empty
+    /// (the next lookup retries) and the error is returned for the
+    /// caller to reply + count.
+    pub fn lookup_or_prepare(
+        &mut self,
+        key: ModelKey,
+        backend: &mut dyn NumericsBackend,
+        library: &ModelLibrary,
+        weight_seed: u64,
+    ) -> Result<&PreparedModel, String> {
+        self.tick += 1;
+        let idx = key.index();
+        if self.slots[idx].is_some() {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            let r = self.slots[idx].as_mut().expect("checked resident");
+            r.last_use = self.tick;
+            return Ok(&self.slots[idx].as_ref().expect("checked resident").prepared);
+        }
+
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = library.plan(key);
+        let args = fixed_serving_args(plan, weight_seed);
+        let t0 = Instant::now();
+        let prepared = backend.prepare(plan, &args).map_err(|e| {
+            self.counters.prepare_failures.fetch_add(1, Ordering::Relaxed);
+            format!("preparing {}: {e}", library.name(key))
+        })?;
+        let prepare_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.counters.prepare_lat.record_us(prepare_us);
+
+        let bytes = self.model_bytes[idx];
+        if bytes > self.budget_bytes {
+            // Larger than everything this shard may hold: serve it
+            // without admitting, so Σ resident bytes stays ≤ budget.
+            self.passthrough = Some(prepared);
+            return Ok(self.passthrough.as_ref().expect("just stored"));
+        }
+        while self.resident_bytes + bytes > self.budget_bytes {
+            let victim = self.pick_victim().expect("over budget implies a resident victim");
+            self.evict(victim);
+        }
+        self.resident_bytes += bytes;
+        self.counters.resident_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.counters.resident_models.fetch_add(1, Ordering::Relaxed);
+        self.slots[idx] =
+            Some(Resident { prepared, bytes, last_use: self.tick, prepare_us });
+        Ok(&self.slots[idx].as_ref().expect("just admitted").prepared)
+    }
+
+    /// The next victim under the configured policy, or `None` when
+    /// nothing is resident. Deterministic: scores tie-break on the
+    /// lowest slot index via strict `<`.
+    fn pick_victim(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(r) = slot else { continue };
+            let age = (self.tick - r.last_use).max(1) as f64;
+            // Lower score = better victim.
+            let score = match self.policy {
+                EvictPolicy::Lru => r.last_use as f64,
+                EvictPolicy::Cost => (r.bytes as f64 * r.prepare_us.max(1e-3)) / age,
+                // Negated so the *largest* resident scores lowest;
+                // recency breaks byte ties (older = lower).
+                EvictPolicy::SizeAware => -(r.bytes as f64) + r.last_use as f64 * 1e-9,
+            };
+            if best.is_none_or(|(_, s)| score < s) {
+                best = Some((i, score));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn evict(&mut self, idx: usize) {
+        if let Some(r) = self.slots[idx].take() {
+            self.resident_bytes -= r.bytes;
+            self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            self.counters.resident_bytes.fetch_sub(r.bytes as u64, Ordering::Relaxed);
+            self.counters.resident_models.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A deterministic zoo of `n` tenant [`ModelSpec`]s (`tenant0` …) for
+/// multi-tenant serving experiments (`--tenants N` registers these on
+/// top of the four paper presets). Depth alternates 2/3 and the hidden
+/// dims vary with the tenant index, so the zoo spans a spread of
+/// prepared-weight sizes — exercising every eviction policy — while
+/// staying small enough to serve in CI. Dims are deliberately unrelated
+/// to [`ModelConfig`]: tenant rows bypass the feature caches like any
+/// custom-dims spec.
+pub fn tenant_zoo(n: usize, _mc: &ModelConfig) -> Vec<ModelSpec> {
+    (0..n)
+        .map(|i| {
+            let f_in = 6 + (i % 3) * 2; // 6 / 8 / 10
+            let hid = 4 + (i % 5) * 2; // 4 / 6 / 8 / 10 / 12
+            let f_out = 3 + i % 2; // 3 / 4
+            let mut b = ModelSpec::builder(format!("tenant{i}")).layer(
+                LayerSpec::new(f_in, hid).sample(3).program(
+                    ProgramSpec::new(format!("t{i}_l0"))
+                        .reduce(ReduceOp::Mean)
+                        .transform(format!("t{i}_w0"), f_in, hid)
+                        .activate(Activate::Relu),
+                ),
+            );
+            if i % 2 == 1 {
+                b = b.layer(LayerSpec::new(hid, hid).sample(2).program(
+                    ProgramSpec::new(format!("t{i}_l1"))
+                        .reduce(ReduceOp::Mean)
+                        .transform(format!("t{i}_w1"), hid, hid)
+                        .activate(Activate::Relu),
+                ));
+            }
+            b.layer(LayerSpec::new(hid, f_out).sample(2).program(
+                ProgramSpec::new(format!("t{i}_out"))
+                    .reduce(ReduceOp::Mean)
+                    .transform(format!("t{i}_wout"), hid, f_out)
+                    .activate(Activate::Relu),
+            ))
+            .build()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendOutput, FixedPointBackend, StagedFeatures};
+    use crate::greta::{ExecArgs, ModelPlan};
+    use crate::nodeflow::Nodeflow;
+    use anyhow::{anyhow, Result};
+
+    fn small_mc() -> ModelConfig {
+        ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+    }
+
+    fn lib() -> ModelLibrary {
+        ModelLibrary::presets(&small_mc())
+    }
+
+    const SEED: u64 = 0x5EED_5E4E;
+
+    fn manager(budget: usize, policy: EvictPolicy, library: &ModelLibrary) -> ResidencyManager {
+        ResidencyManager::new(budget, policy, library, SEED, Arc::new(ResidencyCounters::default()))
+    }
+
+    #[test]
+    fn split_weight_budget_is_exact_for_every_shard_count() {
+        for budget in [0usize, 1, 7, 4096, 65_537] {
+            for shards in 1..=8 {
+                let split = split_weight_budget(budget, shards);
+                assert_eq!(split.len(), shards);
+                assert_eq!(split.iter().sum::<usize>(), budget, "{budget} across {shards}");
+                let (min, max) =
+                    (split.iter().min().unwrap(), split.iter().max().unwrap());
+                assert!(max - min <= 1, "largest remainder keeps shards within 1 byte");
+            }
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [EvictPolicy::Lru, EvictPolicy::Cost, EvictPolicy::SizeAware] {
+            assert_eq!(EvictPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(EvictPolicy::from_name("size"), Some(EvictPolicy::SizeAware));
+        assert_eq!(EvictPolicy::from_name("fifo"), None);
+    }
+
+    #[test]
+    fn budget_accounting_invariant_holds_under_a_random_trace() {
+        // Σ resident bytes ≤ budget after every single lookup, for a
+        // trace that churns all four presets through a budget sized to
+        // hold roughly two of them.
+        let library = lib();
+        let keys: Vec<ModelKey> = library.keys().collect();
+        let sizes: Vec<usize> =
+            keys.iter().map(|&k| plan_weight_bytes(&library, k, SEED)).collect();
+        assert!(sizes.iter().all(|&b| b > 0), "presets have weights");
+        let budget = sizes.iter().max().unwrap() * 2 + 1;
+        let mut backend = FixedPointBackend::default();
+        let mut m = manager(budget, EvictPolicy::Lru, &library);
+        let mut rng = crate::rng::SplitMix64::new(0xFACE);
+        for step in 0..200 {
+            let k = keys[rng.gen_range(keys.len())];
+            m.lookup_or_prepare(k, &mut backend, &library, SEED).expect("fixed prepare");
+            assert!(
+                m.resident_bytes() <= budget,
+                "step {step}: resident {} > budget {budget}",
+                m.resident_bytes()
+            );
+            let gauge = m.counters.resident_bytes.load(Ordering::Relaxed) as usize;
+            assert_eq!(gauge, m.resident_bytes(), "gauge drifted from the ledger");
+        }
+        let c = &m.counters;
+        assert!(c.hits.load(Ordering::Relaxed) > 0);
+        assert!(c.evictions.load(Ordering::Relaxed) > 0, "tight budget must evict");
+        assert!(c.prepare_lat.count() >= c.evictions.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn unlimited_manager_never_evicts() {
+        let library = lib();
+        let keys: Vec<ModelKey> = library.keys().collect();
+        let total: usize =
+            keys.iter().map(|&k| plan_weight_bytes(&library, k, SEED)).sum();
+        let mut backend = FixedPointBackend::default();
+        let mut m = manager(total, EvictPolicy::Lru, &library);
+        for _ in 0..3 {
+            for &k in &keys {
+                m.lookup_or_prepare(k, &mut backend, &library, SEED).unwrap();
+            }
+        }
+        assert_eq!(m.counters.evictions.load(Ordering::Relaxed), 0);
+        assert_eq!(m.resident_bytes(), total);
+        assert_eq!(m.counters.misses.load(Ordering::Relaxed), keys.len() as u64);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_resident() {
+        // Budget fits exactly two presets (0 and 1 — GCN/SAGE share a
+        // footprint under small_mc). Touch A, B, re-touch A, then admit
+        // C: LRU must evict B and keep {A, C}.
+        let library = lib();
+        let keys: Vec<ModelKey> = library.keys().collect();
+        let (a, b, c) = (keys[0], keys[1], keys[2]);
+        let ba = plan_weight_bytes(&library, a, SEED);
+        let bb = plan_weight_bytes(&library, b, SEED);
+        let bc = plan_weight_bytes(&library, c, SEED);
+        let budget = (ba + bb).max(ba + bc).max(bb + bc);
+        let mut backend = FixedPointBackend::default();
+        let mut m = manager(budget, EvictPolicy::Lru, &library);
+        m.lookup_or_prepare(a, &mut backend, &library, SEED).unwrap();
+        m.lookup_or_prepare(b, &mut backend, &library, SEED).unwrap();
+        m.lookup_or_prepare(a, &mut backend, &library, SEED).unwrap();
+        m.lookup_or_prepare(c, &mut backend, &library, SEED).unwrap();
+        assert!(m.is_resident(a), "recently touched survivor evicted");
+        assert!(!m.is_resident(b), "LRU victim kept");
+        assert!(m.is_resident(c));
+        assert_eq!(m.counters.evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn cost_policy_protects_the_expensive_model() {
+        // Same trace as the LRU test but with pinned prepare costs: A
+        // is dirt cheap to re-prepare, B is expensive. Even though A is
+        // the more recently used of the two, cost-aware eviction
+        // sacrifices A ((bytes × prepare) / age is lowest) where LRU
+        // would have evicted B.
+        let library = lib();
+        let keys: Vec<ModelKey> = library.keys().collect();
+        let (a, b, c) = (keys[0], keys[1], keys[2]);
+        let ba = plan_weight_bytes(&library, a, SEED);
+        let bb = plan_weight_bytes(&library, b, SEED);
+        let bc = plan_weight_bytes(&library, c, SEED);
+        // Fits any two of the three, never all three — admitting C
+        // evicts exactly one resident, whichever it is.
+        let budget = (ba + bb).max(ba + bc).max(bb + bc);
+        let mut backend = FixedPointBackend::default();
+        let mut m = manager(budget, EvictPolicy::Cost, &library);
+        m.lookup_or_prepare(a, &mut backend, &library, SEED).unwrap();
+        m.lookup_or_prepare(b, &mut backend, &library, SEED).unwrap();
+        m.lookup_or_prepare(a, &mut backend, &library, SEED).unwrap();
+        m.note_prepare_us(a, 1.0);
+        m.note_prepare_us(b, 1_000_000.0);
+        m.lookup_or_prepare(c, &mut backend, &library, SEED).unwrap();
+        assert!(!m.is_resident(a), "cheap model kept over the expensive one");
+        assert!(m.is_resident(b), "expensive re-prepare evicted");
+        assert!(m.is_resident(c));
+    }
+
+    #[test]
+    fn size_aware_policy_evicts_the_largest_resident() {
+        // GGCN (3 gate transforms) dwarfs GCN under small_mc. Admit
+        // both, touch GGCN last (the LRU survivor), then force an
+        // eviction: size-aware must still sacrifice GGCN.
+        let library = lib();
+        let keys: Vec<ModelKey> = library.keys().collect();
+        let sizes: Vec<usize> =
+            keys.iter().map(|&k| plan_weight_bytes(&library, k, SEED)).collect();
+        let biggest = (0..keys.len()).max_by_key(|&i| sizes[i]).unwrap();
+        let smallest = (0..keys.len()).min_by_key(|&i| sizes[i]).unwrap();
+        assert_ne!(biggest, smallest);
+        assert!(sizes[biggest] > sizes[smallest], "presets must differ in size");
+        let third = (0..keys.len()).find(|&i| i != biggest && i != smallest).unwrap();
+        let budget = sizes[biggest] + sizes[smallest].max(sizes[third]);
+        let mut backend = FixedPointBackend::default();
+        let mut m = manager(budget, EvictPolicy::SizeAware, &library);
+        m.lookup_or_prepare(keys[smallest], &mut backend, &library, SEED).unwrap();
+        m.lookup_or_prepare(keys[biggest], &mut backend, &library, SEED).unwrap();
+        m.lookup_or_prepare(keys[third], &mut backend, &library, SEED).unwrap();
+        assert!(!m.is_resident(keys[biggest]), "largest resident kept");
+        assert!(m.is_resident(keys[smallest]));
+        assert!(m.is_resident(keys[third]));
+    }
+
+    #[test]
+    fn oversized_model_passes_through_without_admission() {
+        let library = lib();
+        let keys: Vec<ModelKey> = library.keys().collect();
+        let mut backend = FixedPointBackend::default();
+        // Budget below every model: every lookup is a pass-through miss.
+        let mut m = manager(16, EvictPolicy::Lru, &library);
+        for &k in &keys {
+            m.lookup_or_prepare(k, &mut backend, &library, SEED).unwrap();
+            assert_eq!(m.resident_bytes(), 0);
+            assert!(!m.is_resident(k));
+        }
+        assert_eq!(m.counters.evictions.load(Ordering::Relaxed), 0);
+        assert_eq!(m.counters.misses.load(Ordering::Relaxed), keys.len() as u64);
+    }
+
+    /// A backend whose first `fail_n` prepares fail — the transient
+    /// fault the per-tenant retry path must absorb.
+    struct FlakyBackend {
+        inner: FixedPointBackend,
+        fail_n: usize,
+    }
+
+    impl NumericsBackend for FlakyBackend {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+
+        fn prepare(&mut self, plan: &ModelPlan, args: &ExecArgs) -> Result<PreparedModel> {
+            if self.fail_n > 0 {
+                self.fail_n -= 1;
+                return Err(anyhow!("transient prepare fault"));
+            }
+            self.inner.prepare(plan, args)
+        }
+
+        fn execute<'s>(
+            &mut self,
+            prepared: &PreparedModel,
+            nf: &Nodeflow,
+            features: &StagedFeatures,
+            scratch: &'s mut crate::backend::BackendScratch,
+        ) -> Result<BackendOutput<'s>> {
+            self.inner.execute(prepared, nf, features, scratch)
+        }
+    }
+
+    #[test]
+    fn transient_prepare_failure_is_per_request_and_recoverable() {
+        let library = lib();
+        let key = library.keys().next().unwrap();
+        let mut backend = FlakyBackend { inner: FixedPointBackend::default(), fail_n: 1 };
+        let mut m = manager(1 << 20, EvictPolicy::Lru, &library);
+        let err = m
+            .lookup_or_prepare(key, &mut backend, &library, SEED)
+            .expect_err("first prepare faults");
+        assert!(err.contains("transient"), "{err}");
+        assert_eq!(m.counters.prepare_failures.load(Ordering::Relaxed), 1);
+        assert!(!m.is_resident(key), "failed slot must stay empty, not poisoned");
+        // The very next request for the same tenant retries and serves.
+        m.lookup_or_prepare(key, &mut backend, &library, SEED)
+            .expect("retry succeeds after the transient fault");
+        assert!(m.is_resident(key));
+    }
+
+    #[test]
+    fn tenant_zoo_specs_register_and_span_sizes() {
+        let mc = small_mc();
+        let zoo = tenant_zoo(6, &mc);
+        assert_eq!(zoo.len(), 6);
+        let (library, keys) = ModelLibrary::with_customs(&mc, &zoo).unwrap();
+        assert_eq!(library.len(), 10, "4 presets + 6 tenants");
+        let sizes: Vec<usize> =
+            keys.iter().map(|&k| plan_weight_bytes(&library, k, SEED)).collect();
+        assert!(sizes.iter().all(|&b| b > 0));
+        assert!(
+            sizes.iter().max() > sizes.iter().min(),
+            "zoo must span prepared-weight sizes for the eviction policies"
+        );
+    }
+}

@@ -9,7 +9,7 @@
 //! (`BENCH_serve.json`, `grip serve-bench`).
 
 use super::batcher::BatchConfig;
-use super::loadgen::{generate_arrivals, ArrivalProcess, ModelMix, TargetDist};
+use super::loadgen::{generate_arrivals_mixed, ArrivalProcess, ModelMix, TargetDist, TenantMix};
 use super::shards::{PipelineConfig, ServeStats};
 use crate::backend::BackendChoice;
 use crate::config::{GripConfig, ModelConfig};
@@ -18,7 +18,8 @@ use crate::coordinator::{
     Coordinator, InferenceRequest, InferenceResponse, LatencyStats, ServeConfig,
 };
 use crate::graph::{CsrGraph, PartitionStrategy};
-use crate::greta::ModelSpec;
+use crate::greta::{ModelKey, ModelSpec};
+use crate::residency::{tenant_zoo, EvictPolicy};
 use crate::telemetry::SpanTrace;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
@@ -62,6 +63,24 @@ pub struct OpenLoopConfig {
     /// Target-vertex skew: 0 = uniform targets, otherwise the Zipf
     /// exponent for [`TargetDist::from_skew`].
     pub target_skew: f64,
+    /// Multi-tenant model zoo: 0 (the default) serves `mix` unchanged;
+    /// N > 0 registers N generated tenant specs
+    /// ([`crate::residency::tenant_zoo`]) alongside the four presets
+    /// and replaces `mix` with a tenant sampler spanning every
+    /// registered model (`--tenants` on the CLI).
+    pub tenants: usize,
+    /// Tenant popularity skew: 0 = equal-weight tenants, otherwise the
+    /// Zipf exponent over model keys, hottest first
+    /// ([`TenantMix::from_skew`]; `--tenant-skew`). Arrival times and
+    /// targets are invariant across skews — only the model column
+    /// changes.
+    pub tenant_skew: f64,
+    /// Per-pool weight-residency budget in bytes, split across shards
+    /// (0 = unlimited, the historical eager store;
+    /// `--weight-budget-bytes`).
+    pub weight_budget_bytes: usize,
+    /// Eviction policy of the budgeted weight store (`--evict`).
+    pub evict: EvictPolicy,
     pub builders: usize,
     /// Pacing lanes submitting the arrival schedule (0 = auto-scale
     /// with the offered rate). One sleep+spin thread saturates around
@@ -93,6 +112,10 @@ impl Default for OpenLoopConfig {
             cache_rows: 4096,
             partition: PartitionStrategy::Off,
             target_skew: 0.0,
+            tenants: 0,
+            tenant_skew: 0.0,
+            weight_budget_bytes: 0,
+            evict: EvictPolicy::default(),
             builders: 4,
             submit_lanes: 0,
             trace_sample: 64,
@@ -212,6 +235,21 @@ impl OpenLoopReport {
                 out.push((format!("part{i}_routed_jobs"), jobs as f64));
             }
         }
+        // Weight-residency summary only when a byte budget actually
+        // constrained the store — unlimited (eager) reports keep their
+        // historical key set.
+        if self.stats.residency_budget_bytes > 0 {
+            out.push(("residency_budget_bytes".to_string(), self.stats.residency_budget_bytes as f64));
+            out.push(("residency_hits".to_string(), self.stats.residency_hits as f64));
+            out.push(("residency_misses".to_string(), self.stats.residency_misses as f64));
+            out.push(("residency_hit_rate".to_string(), self.stats.residency_hit_rate));
+            out.push(("residency_evictions".to_string(), self.stats.residency_evictions as f64));
+            out.push(("residency_resident_bytes".to_string(), self.stats.residency_resident_bytes as f64));
+            out.push(("residency_resident_models".to_string(), self.stats.residency_resident_models as f64));
+            out.push(("residency_prepare_failures".to_string(), self.stats.residency_prepare_failures as f64));
+            out.push(("residency_prepare_p50_us".to_string(), self.stats.residency_prepare_p50_us));
+            out.push(("residency_prepare_p99_us".to_string(), self.stats.residency_prepare_p99_us));
+        }
         // Control-plane summary only when a controller actually ran —
         // `--control off` reports keep their historical key set.
         if self.stats.control.mode != "off" {
@@ -258,9 +296,21 @@ fn pace_until(origin: &Instant, due: Duration) {
 /// ~50k rps where one sleep+spin thread used to become the bottleneck.
 /// Request ids, targets, and replies are identical for any lane count.
 pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
-    let arrivals = generate_arrivals(
+    // Multi-tenant zoo: generated tenant specs register after the four
+    // presets (and any caller customs), and the arrival sampler spans
+    // every key — hottest tenant first. With `tenants` 0 the wrapped
+    // equal path is draw-for-draw the classic `generate_arrivals`.
+    let mut custom_specs = cfg.custom_specs.clone();
+    let mix = if cfg.tenants > 0 {
+        custom_specs.extend(tenant_zoo(cfg.tenants, &cfg.model_cfg));
+        let keys = (0..4 + custom_specs.len()).map(ModelKey::from_index).collect();
+        TenantMix::from_skew(keys, cfg.tenant_skew)
+    } else {
+        TenantMix::Weighted(cfg.mix.clone())
+    };
+    let arrivals = generate_arrivals_mixed(
         cfg.process,
-        &cfg.mix,
+        &mix,
         TargetDist::from_skew(cfg.target_skew),
         cfg.requests,
         graph.num_vertices(),
@@ -275,8 +325,10 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
         control: cfg.control,
         grip: cfg.grip.clone(),
         model_cfg: cfg.model_cfg,
-        custom_specs: cfg.custom_specs.clone(),
+        custom_specs,
         cache_rows: cfg.cache_rows,
+        weight_budget_bytes: cfg.weight_budget_bytes,
+        evict: cfg.evict,
         builders: cfg.builders,
         trace_sample: cfg.trace_sample,
         // Open loop: the submission path must never block, or the
@@ -360,10 +412,12 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
 /// swept rate to its arrival process (Poisson, bursty MMPP, ...), so
 /// `bench_exec` and `grip serve-bench` share one loop and one label
 /// format — labels look like `serve_load/poisson_r100_s4`, gaining a
-/// `_pdegree` / `_phash` suffix only when `base.partition` is on and a
-/// `_cstatic` / `_cadaptive` suffix only when `base.control` is on (so
-/// historical unpartitioned, uncontrolled labels stay byte-stable in
-/// `BENCH_serve.json`).
+/// `_pdegree` / `_phash` suffix only when `base.partition` is on, a
+/// `_cstatic` / `_cadaptive` suffix only when `base.control` is on, a
+/// `_t{n}z{skew}` suffix only when a tenant zoo is registered, and a
+/// `_w{bytes}b_e{policy}` suffix only when a weight budget constrains
+/// the store (so historical unpartitioned, uncontrolled, untenanted
+/// labels stay byte-stable in `BENCH_serve.json`).
 pub fn run_sweep(
     graph: &CsrGraph,
     rates_rps: &[f64],
@@ -384,13 +438,25 @@ pub fn run_sweep(
                 ControlMode::Off => String::new(),
                 m => format!("_c{}", m.label()),
             };
+            let ten = if base.tenants > 0 {
+                format!("_t{}z{:.1}", base.tenants, base.tenant_skew)
+            } else {
+                String::new()
+            };
+            let res = if base.weight_budget_bytes > 0 {
+                format!("_w{}b_e{}", base.weight_budget_bytes, base.evict.name())
+            } else {
+                String::new()
+            };
             let label = format!(
-                "serve_load/{}_r{}_s{}{}{}",
+                "serve_load/{}_r{}_s{}{}{}{}{}",
                 process.label(),
                 rate.round(),
                 shards,
                 part,
-                ctl
+                ctl,
+                ten,
+                res
             );
             let report = run_open_loop(graph, &cfg)?;
             out.push((label, report));
@@ -618,6 +684,92 @@ mod tests {
         );
         let pts = run_sweep(&g, &[2_000.0], &[1], &cfg, poisson).unwrap();
         assert!(pts.iter().any(|(l, _)| l == "serve_load/poisson_r2000_s1_cadaptive"));
+    }
+
+    #[test]
+    fn residency_report_gates_keys_and_labels() {
+        use crate::greta::ModelLibrary;
+        use crate::residency::plan_weight_bytes;
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        // Unlimited (default): no residency_* keys, no residency series.
+        let off = run_open_loop(&g, &tiny_cfg(2_000.0, 8)).unwrap();
+        assert!(off.metrics().iter().all(|(k, _)| !k.starts_with("residency_")));
+        assert!(!off.prom.contains("grip_residency_"));
+
+        // A budget that fits barely one model at a time over a 3-tenant
+        // zoo with a skewed mix: models page constantly.
+        let base = tiny_cfg(2_000.0, 32);
+        let zoo = tenant_zoo(3, &base.model_cfg);
+        let (lib, _) = ModelLibrary::with_customs(&base.model_cfg, &zoo).unwrap();
+        let seed = ServeConfig::default().weight_seed;
+        let max = lib.keys().map(|k| plan_weight_bytes(&lib, k, seed)).max().unwrap();
+        let cfg = OpenLoopConfig {
+            tenants: 3,
+            tenant_skew: 1.1,
+            weight_budget_bytes: max + 1,
+            ..base
+        };
+        let report = run_open_loop(&g, &cfg).unwrap();
+        assert_eq!(report.responses.len(), 32);
+        assert!(report.responses.iter().all(|r| !r.timing_only), "every tenant serves numerics");
+        let metrics = report.metrics();
+        for key in [
+            "residency_budget_bytes",
+            "residency_hits",
+            "residency_misses",
+            "residency_hit_rate",
+            "residency_evictions",
+            "residency_resident_bytes",
+            "residency_resident_models",
+            "residency_prepare_failures",
+            "residency_prepare_p50_us",
+            "residency_prepare_p99_us",
+        ] {
+            assert!(metrics.iter().any(|(k, _)| *k == key), "missing {key}");
+        }
+        assert!(report.stats.residency_evictions >= 1, "tight budget must evict");
+        assert!(report.stats.residency_misses >= 2, "distinct tenants page in");
+        assert_eq!(report.stats.residency_prepare_failures, 0);
+        assert!(report.prom.contains("grip_residency_hits_total"));
+        assert!(report.prom.contains("grip_residency_evictions_total"));
+        // Sweep labels gain the tenant and budget suffixes only here.
+        let pts = run_sweep(&g, &[2_000.0], &[1], &cfg, poisson).unwrap();
+        let want = format!("serve_load/poisson_r2000_s1_t3z1.1_w{}b_elru", max + 1);
+        assert!(
+            pts.iter().any(|(l, _)| *l == want),
+            "missing label {want}; got {:?}",
+            pts.iter().map(|(l, _)| l.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn tenant_mix_keeps_schedule_invariant_and_pages_bit_identically() {
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        // Same seed, tenants on vs off: only the model column moves, so
+        // per-id targets (and thus reply shapes) stay aligned across
+        // budgets — pin replies across all three eviction policies.
+        let base = OpenLoopConfig { tenants: 4, tenant_skew: 1.1, ..tiny_cfg(2_000.0, 24) };
+        let unlimited = run_open_loop(&g, &base).unwrap();
+        assert_eq!(unlimited.stats.residency_budget_bytes, 0);
+        for policy in [EvictPolicy::Lru, EvictPolicy::Cost, EvictPolicy::SizeAware] {
+            let cfg = OpenLoopConfig {
+                weight_budget_bytes: 16 << 10,
+                evict: policy,
+                ..base.clone()
+            };
+            let paged = run_open_loop(&g, &cfg).unwrap();
+            assert_eq!(paged.responses.len(), unlimited.responses.len());
+            for (a, b) in unlimited.responses.iter().zip(paged.responses.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.embedding, b.embedding,
+                    "id {}: {} paging changed numerics",
+                    a.id,
+                    policy.name()
+                );
+                assert_eq!(a.accel_us, b.accel_us, "id {}: paging changed sim timing", a.id);
+            }
+        }
     }
 
     #[test]

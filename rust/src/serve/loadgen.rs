@@ -151,6 +151,55 @@ impl ModelMix {
     }
 }
 
+/// Tenant-skewed model sampler (`--tenants` + `--tenant-skew`): which
+/// model each arrival requests, with the per-tenant popularity skew a
+/// multi-tenant zoo actually sees. Both variants consume **exactly one
+/// rng draw per request** — a weighted pick is one `gen_f64`, a Zipf
+/// pick is one `gen_zipf` (itself one `gen_f64`, the PR-6 inverse-CDF
+/// sampler) — so for a given seed the arrival *times* and *targets*
+/// are bit-identical across every skew setting; only the model column
+/// changes. That is what lets residency sweeps attribute hit-rate
+/// movement to the skew alone.
+#[derive(Debug, Clone)]
+pub enum TenantMix {
+    /// Weighted pick (the classic [`ModelMix`] path; equal weights =
+    /// skew 0).
+    Weighted(ModelMix),
+    /// Zipf-ranked pick over an ordered key list: rank 1 = `keys[0]`,
+    /// the hottest tenant. `s` around 1 matches real multi-tenant
+    /// traffic, where a few models dominate and a long tail churns.
+    Zipf { keys: Vec<ModelKey>, s: f64 },
+}
+
+impl TenantMix {
+    /// Map a CLI `--tenant-skew` over an ordered key list: `s <= 0` is
+    /// the equal-weight mix; values within 1e-3 of the inverse-CDF
+    /// singularity at `s == 1` are nudged to 1.001 (the same rule as
+    /// [`TargetDist::from_skew`]).
+    pub fn from_skew(keys: Vec<ModelKey>, s: f64) -> TenantMix {
+        if s <= 0.0 {
+            TenantMix::Weighted(ModelMix {
+                weights: keys.into_iter().map(|k| (k, 1.0)).collect(),
+            })
+        } else if (s - 1.0).abs() < 1e-3 {
+            TenantMix::Zipf { keys, s: 1.001 }
+        } else {
+            TenantMix::Zipf { keys, s }
+        }
+    }
+
+    fn pick(&self, rng: &mut SplitMix64) -> ModelKey {
+        match self {
+            TenantMix::Weighted(mix) => mix.pick(rng),
+            TenantMix::Zipf { keys, s } => {
+                // gen_zipf returns a rank in [1, n]; rank 1 = keys[0].
+                let rank = rng.gen_zipf(keys.len().max(1), *s);
+                keys.get(rank - 1).copied().unwrap_or(GnnModel::Gcn.key())
+            }
+        }
+    }
+}
+
 /// Exponential variate with the given mean (inverse-CDF; deterministic
 /// from the rng stream).
 fn exp_sample(rng: &mut SplitMix64, mean: f64) -> f64 {
@@ -164,6 +213,28 @@ fn exp_sample(rng: &mut SplitMix64, mean: f64) -> f64 {
 pub fn generate_arrivals(
     process: ArrivalProcess,
     mix: &ModelMix,
+    targets: TargetDist,
+    n: usize,
+    num_vertices: usize,
+    seed: u64,
+) -> Vec<Arrival> {
+    generate_arrivals_mixed(
+        process,
+        &TenantMix::Weighted(mix.clone()),
+        targets,
+        n,
+        num_vertices,
+        seed,
+    )
+}
+
+/// [`generate_arrivals`] with a [`TenantMix`] model sampler — the
+/// multi-tenant entry point. Both mix variants cost one rng draw per
+/// arrival (see [`TenantMix`]), so the schedule's times and targets
+/// are invariant under the tenant-skew setting.
+pub fn generate_arrivals_mixed(
+    process: ArrivalProcess,
+    mix: &TenantMix,
     targets: TargetDist,
     n: usize,
     num_vertices: usize,
@@ -331,6 +402,77 @@ mod tests {
         assert_eq!(TargetDist::from_skew(0.9995), TargetDist::Zipf { s: 1.001 });
         assert_eq!(TargetDist::from_skew(1.2), TargetDist::Zipf { s: 1.2 });
         assert_eq!(TargetDist::default(), TargetDist::Uniform);
+    }
+
+    #[test]
+    fn tenant_skew_changes_only_the_model_column() {
+        // The satellite-1 guarantee: one rng draw per request whatever
+        // the tenant mix, so arrival times AND targets are identical
+        // across skews — only which tenant each request asks for moves.
+        let keys: Vec<ModelKey> = (0..6).map(ModelKey::from_index).collect();
+        let n = 10_000usize;
+        let flat = generate_arrivals_mixed(
+            poisson(500.0),
+            &TenantMix::from_skew(keys.clone(), 0.0),
+            TargetDist::from_skew(1.1),
+            4000,
+            n,
+            21,
+        );
+        let skewed = generate_arrivals_mixed(
+            poisson(500.0),
+            &TenantMix::from_skew(keys.clone(), 1.1),
+            TargetDist::from_skew(1.1),
+            4000,
+            n,
+            21,
+        );
+        for (f, s) in flat.iter().zip(skewed.iter()) {
+            assert_eq!(f.t_us, s.t_us, "tenant skew changed an arrival time");
+            assert_eq!(f.target, s.target, "tenant skew changed a target draw");
+        }
+        // The classic weighted path and the TenantMix wrapper are the
+        // same stream: ModelMix::default() == equal-weight TenantMix
+        // over the same keys.
+        let preset_keys: Vec<ModelKey> = ALL_MODELS.iter().map(|m| m.key()).collect();
+        let classic = generate_arrivals(
+            poisson(500.0),
+            &ModelMix::default(),
+            TargetDist::Uniform,
+            500,
+            n,
+            9,
+        );
+        let wrapped = generate_arrivals_mixed(
+            poisson(500.0),
+            &TenantMix::from_skew(preset_keys, 0.0),
+            TargetDist::Uniform,
+            500,
+            n,
+            9,
+        );
+        assert_eq!(classic, wrapped);
+        // Zipf(1.1) concentrates picks on the rank-1 tenant well above
+        // its 1/6 flat share.
+        let head = |a: &[Arrival]| {
+            a.iter().filter(|x| x.model == keys[0]).count() as f64 / a.len() as f64
+        };
+        assert!(head(&flat) < 0.25, "flat head share {}", head(&flat));
+        assert!(
+            head(&skewed) > head(&flat) * 2.0,
+            "zipf head share {} vs flat {}",
+            head(&skewed),
+            head(&flat)
+        );
+        // And the singularity nudge applies to tenant skews too.
+        match TenantMix::from_skew(keys.clone(), 1.0) {
+            TenantMix::Zipf { s, .. } => assert!((s - 1.001).abs() < 1e-12),
+            TenantMix::Weighted(_) => panic!("skew 1.0 must be Zipf"),
+        }
+        match TenantMix::from_skew(keys, -0.5) {
+            TenantMix::Weighted(m) => assert_eq!(m.weights.len(), 6),
+            TenantMix::Zipf { .. } => panic!("non-positive skew must be weighted"),
+        }
     }
 
     #[test]

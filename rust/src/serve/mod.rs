@@ -89,7 +89,10 @@ pub mod shards;
 pub use batcher::{BatchConfig, Batcher, Pending};
 pub use feature_cache::{DegreeClasses, FeatureCache};
 pub use harness::{poisson, run_open_loop, run_sweep, OpenLoopConfig, OpenLoopReport};
-pub use loadgen::{generate_arrivals, Arrival, ArrivalProcess, ModelMix, TargetDist};
+pub use loadgen::{
+    generate_arrivals, generate_arrivals_mixed, Arrival, ArrivalProcess, ModelMix, TargetDist,
+    TenantMix,
+};
 pub use shards::{
     fixed_serving_args, split_cache_rows, CachedFeatures, ExecJob, PipelineConfig, PoolSignals,
     ReplySlot, ServeStats, ShardPool, ShardSpec,

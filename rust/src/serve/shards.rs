@@ -92,6 +92,7 @@ use crate::coordinator::{InferenceResponse, LatencyStats};
 use crate::graph::{CsrGraph, PartitionStrategy, Partitioning};
 use crate::greta::{exec_test_args, ExecArgs, ModelKey, ModelLibrary, ModelPlan, SelfScale};
 use crate::nodeflow::Nodeflow;
+use crate::residency::{split_weight_budget, ResidencyConfig, ResidencyCounters, ResidencyManager};
 use crate::runtime::{fill_feature_row, FeatureSource};
 use crate::serve::{DegreeClasses, FeatureCache};
 use crate::sim::{simulate, SimResult};
@@ -225,6 +226,13 @@ pub struct ShardSpec {
     pub partition: PartitionStrategy,
     /// Seed of the deterministic fixed-point serving weights.
     pub weight_seed: u64,
+    /// Weight-residency policy (`--weight-budget-bytes` + `--evict`).
+    /// A 0 budget keeps the pre-zoo behavior: every model prepared
+    /// eagerly at startup and resident forever. Budgeted, the **total**
+    /// budget is split across shards by largest remainder (like
+    /// `cache_rows`) and each vertex engine pages prepared models
+    /// in/out through its own [`ResidencyManager`].
+    pub residency: ResidencyConfig,
     /// Shared telemetry handle: stage histograms always record; span
     /// stamping happens only on requests the coordinator sampled.
     pub telemetry: Telemetry,
@@ -256,6 +264,7 @@ impl Default for ShardSpec {
             cache_rows: 4096,
             partition: PartitionStrategy::Off,
             weight_seed: 0x5EED_5E4E,
+            residency: ResidencyConfig::default(),
             telemetry: Telemetry::default(),
             knobs: None,
         }
@@ -392,6 +401,32 @@ pub struct ServeStats {
     /// …and reply fan-out.
     pub reply_p50_us: f64,
     pub reply_p99_us: f64,
+    /// Weight-residency summary (all zero with an unlimited budget —
+    /// `residency_budget_bytes == 0` is the gate every exporter keys
+    /// on, so unbudgeted output stays byte-identical to earlier PRs).
+    /// Total prepared-weight budget across shards (0 = paging off).
+    pub residency_budget_bytes: u64,
+    /// Eviction policy name (`""` when paging is off).
+    pub residency_policy: String,
+    /// Lookups served from a shard's resident set.
+    pub residency_hits: u64,
+    /// Lookups that ran an on-demand prepare.
+    pub residency_misses: u64,
+    /// `hits / (hits + misses)` (0 before any lookup).
+    pub residency_hit_rate: f64,
+    /// Residents evicted to make room.
+    pub residency_evictions: u64,
+    /// Current resident bytes, summed across shards (≤ budget always).
+    pub residency_resident_bytes: u64,
+    /// Currently resident models, summed across shards.
+    pub residency_resident_models: u64,
+    /// On-demand prepares that failed (also folded into
+    /// `backend_fallbacks` — the per-tenant path).
+    pub residency_prepare_failures: u64,
+    /// On-demand prepare latency percentiles (µs) — the paging cost a
+    /// miss charges to its request.
+    pub residency_prepare_p50_us: f64,
+    pub residency_prepare_p99_us: f64,
     /// Control-plane summary, composed by the coordinator (the pool
     /// itself reports the default `"off"` shape).
     pub control: ControlStats,
@@ -405,6 +440,9 @@ pub struct ShardPool {
     /// per shard; capacities always sum to `ShardSpec::cache_rows`.
     caches: Vec<Arc<FeatureCache>>,
     counters: Arc<PoolCounters>,
+    /// Shared weight-residency telemetry (all zero when unbudgeted).
+    res_counters: Arc<ResidencyCounters>,
+    residency: ResidencyConfig,
     status: Arc<Mutex<Vec<String>>>,
     /// Jobs routed to each home shard (zeros when unpartitioned).
     routed: Arc<Vec<AtomicU64>>,
@@ -698,6 +736,7 @@ impl ShardPool {
             s => Some(Arc::new(Partitioning::build(s, &graph, shards))),
         };
         let counters = Arc::new(PoolCounters::default());
+        let res_counters = Arc::new(ResidencyCounters::default());
         let status = Arc::new(Mutex::new(vec![String::from("starting"); shards]));
         let routed: Arc<Vec<AtomicU64>> =
             Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
@@ -823,6 +862,7 @@ impl ShardPool {
                     &graph,
                     &shard_caches[i],
                     &counters,
+                    &res_counters,
                     &status,
                     &init_tx,
                     &shard_rxs[i],
@@ -837,6 +877,7 @@ impl ShardPool {
                 let graph = graph.clone();
                 let cache = shard_caches[i].clone();
                 let counters = counters.clone();
+                let res_counters = res_counters.clone();
                 let status = status.clone();
                 let rx = shard_rxs[i].clone();
                 let inflight = inflight.clone();
@@ -852,6 +893,7 @@ impl ShardPool {
                             &graph,
                             &cache,
                             &counters,
+                            &res_counters,
                             &status,
                             init_tx,
                             &rx,
@@ -880,6 +922,8 @@ impl ShardPool {
             threads,
             caches,
             counters,
+            res_counters,
+            residency: spec.residency,
             status,
             routed,
             partition: spec.partition,
@@ -912,6 +956,7 @@ impl ShardPool {
         graph: &Arc<CsrGraph>,
         cache: &Arc<FeatureCache>,
         counters: &Arc<PoolCounters>,
+        res_counters: &Arc<ResidencyCounters>,
         status: &Arc<Mutex<Vec<String>>>,
         init_tx: &mpsc::Sender<()>,
         rx: &Arc<Mutex<mpsc::Receiver<ExecJob>>>,
@@ -970,6 +1015,7 @@ impl ShardPool {
         let spec_e = spec.clone();
         let library_e = library.clone();
         let counters_e = counters.clone();
+        let res_counters_e = res_counters.clone();
         let status_e = status.clone();
         let init_tx = init_tx.clone();
         let inflight = inflight.clone();
@@ -978,8 +1024,8 @@ impl ShardPool {
             .name(format!("grip-shard-{shard}-engine"))
             .spawn(move || {
                 engine_loop(
-                    shard, &spec_e, &library_e, &counters_e, &status_e, init_tx, ready_rx,
-                    free_tx, &ready_gauge, &inflight, &knobs_e,
+                    shard, &spec_e, &library_e, &counters_e, &res_counters_e, &status_e,
+                    init_tx, ready_rx, free_tx, &ready_gauge, &inflight, &knobs_e,
                 )
             })
             .map_err(|e| anyhow!("spawning shard {shard} engine: {e}"))?;
@@ -1009,6 +1055,7 @@ impl ShardPool {
         let occ_samples = c.occupancy_samples.load(Ordering::Relaxed);
         let sim_busy = c.sim_busy_cycles.load(Ordering::Relaxed);
         let st = self.telemetry.stages();
+        let rc = &self.res_counters;
         let shard_backends =
             self.status.lock().map(|s| s.clone()).unwrap_or_default();
         let cache_hits: u64 = self.caches.iter().map(|c| c.hits()).sum();
@@ -1064,6 +1111,21 @@ impl ShardPool {
                 .lock()
                 .map(|l| if l.count() > 0 { l.p99() } else { 0.0 })
                 .unwrap_or(0.0),
+            residency_budget_bytes: self.residency.budget_bytes as u64,
+            residency_policy: if self.residency.budgeted() {
+                self.residency.policy.name().to_string()
+            } else {
+                String::new()
+            },
+            residency_hits: rc.hits.load(Ordering::Relaxed),
+            residency_misses: rc.misses.load(Ordering::Relaxed),
+            residency_hit_rate: rc.hit_rate(),
+            residency_evictions: rc.evictions.load(Ordering::Relaxed),
+            residency_resident_bytes: rc.resident_bytes.load(Ordering::Relaxed),
+            residency_resident_models: rc.resident_models.load(Ordering::Relaxed),
+            residency_prepare_failures: rc.prepare_failures.load(Ordering::Relaxed),
+            residency_prepare_p50_us: rc.prepare_lat.percentile_us(50.0),
+            residency_prepare_p99_us: rc.prepare_lat.percentile_us(99.0),
             queue_wait_p50_us: st.queue_wait.percentile_us(50.0),
             queue_wait_p99_us: st.queue_wait.percentile_us(99.0),
             prefetch_local_p50_us: st.prefetch_local.percentile_us(50.0),
@@ -1106,6 +1168,53 @@ impl ServeStats {
             format!("{:.3}", self.boundary_fetch_p99_us),
         );
         push("grip_shards", "gauge", self.shards.to_string());
+        // Residency series render only when paging is on (budget > 0),
+        // so unbudgeted Prometheus output stays byte-identical to
+        // earlier PRs — the bench-gate schema check is bidirectional.
+        if self.residency_budget_bytes > 0 {
+            push(
+                "grip_residency_budget_bytes",
+                "gauge",
+                self.residency_budget_bytes.to_string(),
+            );
+            push("grip_residency_hits_total", "counter", self.residency_hits.to_string());
+            push("grip_residency_misses_total", "counter", self.residency_misses.to_string());
+            push(
+                "grip_residency_hit_rate",
+                "gauge",
+                format!("{:.6}", self.residency_hit_rate),
+            );
+            push(
+                "grip_residency_evictions_total",
+                "counter",
+                self.residency_evictions.to_string(),
+            );
+            push(
+                "grip_residency_resident_bytes",
+                "gauge",
+                self.residency_resident_bytes.to_string(),
+            );
+            push(
+                "grip_residency_resident_models",
+                "gauge",
+                self.residency_resident_models.to_string(),
+            );
+            push(
+                "grip_residency_prepare_failures_total",
+                "counter",
+                self.residency_prepare_failures.to_string(),
+            );
+            push(
+                "grip_residency_prepare_p50_us",
+                "gauge",
+                format!("{:.3}", self.residency_prepare_p50_us),
+            );
+            push(
+                "grip_residency_prepare_p99_us",
+                "gauge",
+                format!("{:.3}", self.residency_prepare_p99_us),
+            );
+        }
         // Control-plane series render only when a controller ran, so
         // `--control off` output stays byte-identical to earlier PRs.
         if self.control.mode != "off" {
@@ -1159,19 +1268,82 @@ fn prepare_all(
         .collect()
 }
 
+/// One shard's prepared-model store: every model eagerly resident
+/// forever (the pre-zoo behavior, budget 0), or the byte-budgeted
+/// paging [`ResidencyManager`] (`--weight-budget-bytes > 0`). Both
+/// hand [`execute_staged`] the same deterministic [`PreparedModel`]
+/// bytes — residency moves *when* prepare runs, never *what* executes.
+enum WeightStore {
+    Eager(Vec<PreparedModel>),
+    Managed(ResidencyManager),
+}
+
+impl WeightStore {
+    /// Resolve `key` to its prepared state: an indexed slot (eager) or
+    /// a residency lookup that may page the model in on `backend`
+    /// (managed). `Err` carries the per-request prepare failure for the
+    /// caller to reply + count — the slot stays empty and the tenant's
+    /// next request retries.
+    fn resolve(
+        &mut self,
+        key: ModelKey,
+        backend: &mut dyn NumericsBackend,
+        library: &ModelLibrary,
+        weight_seed: u64,
+    ) -> Result<&PreparedModel, String> {
+        match self {
+            WeightStore::Eager(prepared) => Ok(&prepared[key.index()]),
+            WeightStore::Managed(m) => m.lookup_or_prepare(key, backend, library, weight_seed),
+        }
+    }
+}
+
 /// Build + prepare this shard's backend, degrading to the factory's
-/// timing-only fallback on failure. Returns the engine, its prepared
-/// models, and the status string for [`ServeStats::shard_backends`];
+/// timing-only fallback on failure. Returns the engine, its weight
+/// store, and the status string for [`ServeStats::shard_backends`];
 /// `fell_back` drives the `backend_fallbacks` counter.
 struct ShardEngine {
     backend: Box<dyn NumericsBackend>,
-    prepared: Vec<PreparedModel>,
+    store: WeightStore,
     status: String,
     fell_back: bool,
 }
 
-fn init_engine(shard: usize, spec: &ShardSpec, library: &ModelLibrary) -> ShardEngine {
+fn init_engine(
+    shard: usize,
+    spec: &ShardSpec,
+    library: &ModelLibrary,
+    res_counters: &Arc<ResidencyCounters>,
+) -> ShardEngine {
     let factory = BackendFactory::new(spec.backend);
+    if spec.residency.budgeted() {
+        // Budgeted: nothing prepares at startup — models page in on
+        // demand, so a prepare failure is per-request (counted into
+        // `backend_fallbacks` at the miss) instead of writing the
+        // whole shard off before it served anything.
+        let budget = split_weight_budget(spec.residency.budget_bytes, spec.shards.max(1))[shard];
+        let store = || {
+            WeightStore::Managed(ResidencyManager::new(
+                budget,
+                spec.residency.policy,
+                library,
+                spec.weight_seed,
+                res_counters.clone(),
+            ))
+        };
+        return match factory.build(shard) {
+            Ok(backend) => {
+                let status = backend.name().to_string();
+                ShardEngine { backend, store: store(), status, fell_back: false }
+            }
+            Err(e) => ShardEngine {
+                backend: factory.fallback(),
+                store: store(),
+                status: format!("timing-only (fallback: {e})"),
+                fell_back: true,
+            },
+        };
+    }
     let attempt = factory.build(shard).and_then(|mut backend| {
         let prepared = prepare_all(backend.as_mut(), library, spec.weight_seed)?;
         Ok((backend, prepared))
@@ -1179,7 +1351,7 @@ fn init_engine(shard: usize, spec: &ShardSpec, library: &ModelLibrary) -> ShardE
     match attempt {
         Ok((backend, prepared)) => {
             let status = backend.name().to_string();
-            ShardEngine { backend, prepared, status, fell_back: false }
+            ShardEngine { backend, store: WeightStore::Eager(prepared), status, fell_back: false }
         }
         Err(e) => {
             let mut backend = factory.fallback();
@@ -1187,7 +1359,7 @@ fn init_engine(shard: usize, spec: &ShardSpec, library: &ModelLibrary) -> ShardE
                 .expect("timing-only prepare is infallible");
             ShardEngine {
                 backend,
-                prepared,
+                store: WeightStore::Eager(prepared),
                 status: format!("timing-only (fallback: {e})"),
                 fell_back: true,
             }
@@ -1371,6 +1543,7 @@ fn engine_loop(
     spec: &ShardSpec,
     library: &ModelLibrary,
     counters: &PoolCounters,
+    res_counters: &Arc<ResidencyCounters>,
     status: &Mutex<Vec<String>>,
     init_tx: mpsc::Sender<()>,
     ready_rx: mpsc::Receiver<StagedJob>,
@@ -1379,7 +1552,7 @@ fn engine_loop(
     inflight: &AtomicU64,
     knobs: &Knobs,
 ) {
-    let mut engine = init_engine(shard, spec, library);
+    let mut engine = init_engine(shard, spec, library, res_counters);
     if engine.fell_back {
         counters.backend_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
@@ -1429,9 +1602,10 @@ fn engine_loop(
             .record_us(t_staged.elapsed().as_secs_f64() * 1e6);
         execute_staged(
             spec,
+            library,
             counters,
             engine.backend.as_mut(),
-            &engine.prepared,
+            &mut engine.store,
             &mut scratch,
             &staged,
             &sim,
@@ -1457,6 +1631,7 @@ fn shard_loop(
     graph: &CsrGraph,
     cache: &FeatureCache,
     counters: &PoolCounters,
+    res_counters: &Arc<ResidencyCounters>,
     status: &Mutex<Vec<String>>,
     init_tx: mpsc::Sender<()>,
     rx: &Mutex<mpsc::Receiver<ExecJob>>,
@@ -1464,7 +1639,7 @@ fn shard_loop(
     inflight: &AtomicU64,
     knobs: &Knobs,
 ) {
-    let mut engine = init_engine(shard, spec, library);
+    let mut engine = init_engine(shard, spec, library, res_counters);
     if engine.fell_back {
         counters.backend_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
@@ -1503,7 +1678,7 @@ fn shard_loop(
             cache,
             counters,
             engine.backend.as_mut(),
-            &engine.prepared,
+            &mut engine.store,
             &mut scratch,
             &mut staged,
             route,
@@ -1526,7 +1701,7 @@ fn execute_job(
     cache: &FeatureCache,
     counters: &PoolCounters,
     backend: &mut dyn NumericsBackend,
-    prepared: &[PreparedModel],
+    store: &mut WeightStore,
     scratch: &mut BackendScratch,
     staged: &mut StagedFeatures,
     route: Option<&RouteCtx>,
@@ -1556,7 +1731,7 @@ fn execute_job(
             t.boundary_wait_us = boundary_us;
         }
     }
-    execute_staged(spec, counters, backend, prepared, scratch, staged, &sim, job);
+    execute_staged(spec, library, counters, backend, store, scratch, staged, &sim, job);
 }
 
 /// The vertex-centric phase: account the job's (already-run) cycle
@@ -1565,9 +1740,10 @@ fn execute_job(
 #[allow(clippy::too_many_arguments)]
 fn execute_staged(
     spec: &ShardSpec,
+    library: &ModelLibrary,
     counters: &PoolCounters,
     backend: &mut dyn NumericsBackend,
-    prepared: &[PreparedModel],
+    store: &mut WeightStore,
     scratch: &mut BackendScratch,
     staged: &StagedFeatures,
     sim: &SimResult,
@@ -1603,14 +1779,32 @@ fn execute_staged(
         Ordering::Relaxed,
     );
 
-    // 2. Numerics: one backend call, whatever the engine, over the
+    // 2. Weight residency: resolve the model's prepared state — an
+    //    indexed slot (eager), or a residency lookup that may page the
+    //    model in right here, charging the prepare cost to this
+    //    request. A paging prepare failure is per-request: error
+    //    replies fan out, `backend_fallbacks` counts it, and the
+    //    tenant's next request retries an empty slot.
+    let prepared = match store.resolve(model, backend, library, spec.weight_seed) {
+        Ok(p) => p,
+        Err(e) => {
+            counters.backend_fallbacks.fetch_add(1, Ordering::Relaxed);
+            for m in members {
+                let _ = m.reply.send(Err(e.clone()));
+            }
+            counters.executing.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+    };
+
+    // 3. Numerics: one backend call, whatever the engine, over the
     //    pre-gathered feature rows.
     let t_exec = Instant::now();
-    let outcome = backend.execute(&prepared[model.index()], &nf, staged, scratch);
+    let outcome = backend.execute(prepared, &nf, staged, scratch);
     telemetry.stages().compute.record_us(t_exec.elapsed().as_secs_f64() * 1e6);
     let engine_end_us = telemetry.now_us();
 
-    // 3. Fan out per-member replies (a coalesced batch shares one
+    // 4. Fan out per-member replies (a coalesced batch shares one
     //    nodeflow, one simulated pass, and one embedding buffer).
     match outcome {
         Err(e) => {
@@ -1934,11 +2128,13 @@ mod tests {
         let spec = ShardSpec { model_cfg: mc, ..Default::default() };
         let library = ModelLibrary::presets(&mc);
         let mut fixed: Box<dyn NumericsBackend> = Box::new(FixedPointBackend::new());
-        let prepared_fx =
-            prepare_all(fixed.as_mut(), &library, spec.weight_seed).unwrap();
+        let mut store_fx = WeightStore::Eager(
+            prepare_all(fixed.as_mut(), &library, spec.weight_seed).unwrap(),
+        );
         let mut timing: Box<dyn NumericsBackend> = Box::new(TimingOnlyBackend);
-        let prepared_t =
-            prepare_all(timing.as_mut(), &library, spec.weight_seed).unwrap();
+        let mut store_t = WeightStore::Eager(
+            prepare_all(timing.as_mut(), &library, spec.weight_seed).unwrap(),
+        );
         let cache = FeatureCache::new(64, mc.f_in);
         let counters = PoolCounters::default();
         let mut scratch = BackendScratch::new();
@@ -1966,7 +2162,7 @@ mod tests {
         // 1. A numeric job fills the shared embedding buffer.
         let (job, rx1) = mk_job(0);
         execute_job(
-            &spec, &library, &g, &cache, &counters, fixed.as_mut(), &prepared_fx,
+            &spec, &library, &g, &cache, &counters, fixed.as_mut(), &mut store_fx,
             &mut scratch, &mut staged, None, job,
         );
         let r1 = rx1.recv().unwrap().unwrap();
@@ -1975,7 +2171,7 @@ mod tests {
         // 2. A timing-only job reusing the same scratch must reply empty.
         let (job, rx2) = mk_job(1);
         execute_job(
-            &spec, &library, &g, &cache, &counters, timing.as_mut(), &prepared_t,
+            &spec, &library, &g, &cache, &counters, timing.as_mut(), &mut store_t,
             &mut scratch, &mut staged, None, job,
         );
         let r2 = rx2.recv().unwrap().unwrap();
@@ -2139,6 +2335,117 @@ mod tests {
                 assert_eq!(a.accel_us, b.accel_us);
                 assert_eq!(a.neighborhood, b.neighborhood);
             }
+        }
+    }
+
+    /// Serve a round-robin multi-model mix (all four presets) through
+    /// a pool — the residency tests need lookups that churn more than
+    /// one model per shard.
+    fn run_pool_mixed(spec: ShardSpec, ids: &[u32]) -> (Vec<InferenceResponse>, ServeStats) {
+        use crate::greta::ALL_MODELS;
+        let g = graph();
+        let mc = spec.model_cfg;
+        let (tx, rx) = mpsc::channel();
+        let library = Arc::new(ModelLibrary::presets(&mc));
+        let pool = ShardPool::start(&spec, library, g.clone(), rx, gauge(ids.len())).unwrap();
+        let replies: Vec<_> = ids
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| submit(&tx, &g, &mc, ALL_MODELS[i % ALL_MODELS.len()], i as u64, &[t]))
+            .collect();
+        drop(tx);
+        let out: Vec<InferenceResponse> =
+            replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        let stats = pool.stats();
+        drop(pool);
+        (out, stats)
+    }
+
+    #[test]
+    fn budgeted_pool_is_bit_identical_and_evicts() {
+        use crate::residency::{plan_weight_bytes, EvictPolicy};
+        let mc = small_mc();
+        let library = ModelLibrary::presets(&mc);
+        // Tight: fits the largest preset plus a sliver, so a 4-model
+        // round robin must churn. Unlimited (0) is the baseline.
+        let max_bytes = library
+            .keys()
+            .map(|k| plan_weight_bytes(&library, k, ShardSpec::default().weight_seed))
+            .max()
+            .unwrap();
+        let ids: Vec<u32> = (0..24).map(|i| i * 13 % 2000).collect();
+        let base = ShardSpec {
+            shards: 1,
+            model_cfg: mc,
+            backend: BackendChoice::Fixed,
+            cache_rows: 256,
+            ..Default::default()
+        };
+        let (want, base_stats) = run_pool_mixed(base.clone(), &ids);
+        assert_eq!(base_stats.residency_budget_bytes, 0);
+        assert_eq!(base_stats.residency_misses, 0, "unbudgeted pool never pages");
+        assert_eq!(base_stats.residency_policy, "");
+        for policy in [EvictPolicy::Lru, EvictPolicy::Cost, EvictPolicy::SizeAware] {
+            let spec = ShardSpec {
+                residency: ResidencyConfig { budget_bytes: max_bytes + 1, policy },
+                ..base.clone()
+            };
+            let (got, stats) = run_pool_mixed(spec, &ids);
+            assert!(stats.residency_evictions >= 1, "{policy:?}: tight budget must evict");
+            assert!(stats.residency_misses >= 4, "{policy:?}: every preset pages in at least once");
+            assert!(
+                stats.residency_resident_bytes <= stats.residency_budget_bytes,
+                "{policy:?}: resident {} > budget {}",
+                stats.residency_resident_bytes,
+                stats.residency_budget_bytes
+            );
+            assert_eq!(stats.residency_policy, policy.name());
+            assert_eq!(stats.residency_prepare_failures, 0);
+            assert!(stats.residency_prepare_p99_us > 0.0, "{policy:?}: prepare cost recorded");
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.embedding, b.embedding, "id {}: paging changed numerics", a.id);
+                assert_eq!(a.accel_us, b.accel_us);
+                assert_eq!(a.neighborhood, b.neighborhood);
+            }
+        }
+    }
+
+    #[test]
+    fn residency_series_render_only_when_budgeted() {
+        let ids: Vec<u32> = (0..8).map(|i| i * 13 % 2000).collect();
+        let base = ShardSpec {
+            shards: 1,
+            model_cfg: small_mc(),
+            backend: BackendChoice::Fixed,
+            cache_rows: 64,
+            ..Default::default()
+        };
+        let (_, off) = run_pool_mixed(base.clone(), &ids);
+        let prom_off = off.render_prometheus(&Telemetry::default());
+        assert!(
+            !prom_off.contains("grip_residency_"),
+            "unbudgeted Prometheus output must not leak residency series"
+        );
+        let spec = ShardSpec {
+            residency: ResidencyConfig { budget_bytes: 1 << 20, ..Default::default() },
+            ..base
+        };
+        let (_, on) = run_pool_mixed(spec, &ids);
+        let prom_on = on.render_prometheus(&Telemetry::default());
+        for series in [
+            "grip_residency_budget_bytes",
+            "grip_residency_hits_total",
+            "grip_residency_misses_total",
+            "grip_residency_hit_rate",
+            "grip_residency_evictions_total",
+            "grip_residency_resident_bytes",
+            "grip_residency_resident_models",
+            "grip_residency_prepare_failures_total",
+            "grip_residency_prepare_p50_us",
+            "grip_residency_prepare_p99_us",
+        ] {
+            assert!(prom_on.contains(series), "missing {series}");
         }
     }
 

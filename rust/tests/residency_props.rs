@@ -1,0 +1,186 @@
+//! Property tests for the PR-9 weight-residency manager (hand-rolled
+//! seeded cases, same style as `serve_props.rs`; the offline crate set
+//! has no `proptest`).
+//!
+//! THE property: paging prepared models in and out of a byte-budgeted
+//! per-shard store moves *when* `prepare` runs, never *what* executes.
+//! For the same request stream — all four presets plus a generated
+//! multi-tenant zoo — replies must be bit-identical (embeddings AND
+//! simulated timing) across {unlimited, tight} budgets × every eviction
+//! policy × {1, 4} shards, while the tight single-shard store actually
+//! pages (misses, evictions, bounded resident bytes).
+
+use grip::backend::BackendChoice;
+use grip::config::ModelConfig;
+use grip::coordinator::{Coordinator, InferenceRequest, InferenceResponse, ServeConfig};
+use grip::graph::{generate, CsrGraph, GeneratorParams};
+use grip::greta::{ModelKey, ModelLibrary};
+use grip::residency::{plan_weight_bytes, split_weight_budget, tenant_zoo, EvictPolicy};
+use grip::rng::SplitMix64;
+
+fn serving_graph(seed: u64) -> CsrGraph {
+    generate(&GeneratorParams { nodes: 1_500, mean_degree: 7.0, seed, ..Default::default() })
+}
+
+fn small_mc() -> ModelConfig {
+    ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+}
+
+/// Serve `reqs` through a fixed-point pool with the given weight budget
+/// and eviction policy, a 3-tenant zoo registered after the presets.
+fn serve_all_budgeted(
+    graph: &CsrGraph,
+    budget_bytes: usize,
+    policy: EvictPolicy,
+    shards: usize,
+    reqs: &[(ModelKey, u32)],
+) -> (Vec<InferenceResponse>, grip::serve::ServeStats) {
+    let cfg = ServeConfig {
+        backend: BackendChoice::Fixed,
+        shards,
+        builders: 3,
+        model_cfg: small_mc(),
+        custom_specs: tenant_zoo(3, &small_mc()),
+        weight_budget_bytes: budget_bytes,
+        evict: policy,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(graph.clone(), 11, cfg).unwrap();
+    let pending: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, t))| coord.submit(InferenceRequest::single(i as u64, m, t)).unwrap())
+        .collect();
+    let responses = pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let stats = coord.serve_stats();
+    (responses, stats)
+}
+
+/// The largest single prepared model in the 4-preset + 3-tenant library
+/// — a budget of `max + 1` admits any one model but never two.
+fn one_model_budget() -> usize {
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &tenant_zoo(3, &small_mc())).unwrap();
+    let seed = ServeConfig::default().weight_seed;
+    lib.keys().map(|k| plan_weight_bytes(&lib, k, seed)).max().unwrap() + 1
+}
+
+#[test]
+fn prop_paging_is_bit_identical_across_budgets_policies_and_shards() {
+    let graph = serving_graph(29);
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &tenant_zoo(3, &small_mc())).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    assert_eq!(keys.len(), 7, "4 presets + 3 tenants");
+    let mut rng = SplitMix64::new(83);
+    let reqs: Vec<(ModelKey, u32)> = (0..42)
+        .map(|i| (keys[i % keys.len()], rng.gen_range(1_500) as u32))
+        .collect();
+
+    // Baseline: the unlimited eager store (budget 0), single shard.
+    let (want, base_stats) = serve_all_budgeted(&graph, 0, EvictPolicy::Lru, 1, &reqs);
+    assert!(want.iter().all(|r| !r.timing_only), "every tenant serves numerics");
+    assert_eq!(base_stats.residency_budget_bytes, 0);
+    assert_eq!(base_stats.residency_misses, 0, "eager store never pages");
+    assert_eq!(base_stats.residency_evictions, 0);
+    assert_eq!(base_stats.residency_policy, "", "no policy without a budget");
+
+    let tight = one_model_budget();
+    for policy in [EvictPolicy::Lru, EvictPolicy::Cost, EvictPolicy::SizeAware] {
+        for shards in [1usize, 4] {
+            // Scale the budget so each shard's split still fits exactly
+            // one model — the maximum paging pressure at any width.
+            let budget = tight * shards;
+            let (got, stats) = serve_all_budgeted(&graph, budget, policy, shards, &reqs);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.embedding, b.embedding,
+                    "id {}: {} x {shards} shards changed numerics",
+                    a.id,
+                    policy.name()
+                );
+                assert_eq!(
+                    a.accel_us, b.accel_us,
+                    "id {}: {} x {shards} shards changed timing",
+                    a.id,
+                    policy.name()
+                );
+                assert_eq!(a.neighborhood, b.neighborhood);
+                assert!(!b.timing_only);
+            }
+            assert_eq!(stats.residency_policy, policy.name());
+            assert_eq!(stats.residency_budget_bytes, budget as u64);
+            assert!(
+                stats.residency_misses >= keys.len() as u64,
+                "{} x {shards}: every model pages in at least once (got {} misses)",
+                policy.name(),
+                stats.residency_misses
+            );
+            assert!(
+                stats.residency_evictions >= 1,
+                "{} x {shards}: a one-model budget must evict",
+                policy.name()
+            );
+            assert!(
+                stats.residency_resident_bytes <= budget as u64,
+                "{} x {shards}: resident bytes {} exceed the budget {budget}",
+                policy.name(),
+                stats.residency_resident_bytes
+            );
+            assert_eq!(stats.residency_prepare_failures, 0);
+            assert_eq!(stats.backend_fallbacks, 0, "paging is not a fallback");
+            assert_eq!(
+                stats.residency_hits + stats.residency_misses,
+                reqs.len() as u64,
+                "{} x {shards}: every job looked its model up exactly once",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_split_weight_budget_conserves_bytes() {
+    // The shard split mirrors split_cache_rows: largest remainder,
+    // total conserved, shares within one byte of each other.
+    let mut rng = SplitMix64::new(0x5EED_B4D9);
+    for case in 0..200 {
+        let budget = rng.gen_range(1 << 20) + 1;
+        let shards = rng.gen_range(8) + 1;
+        let split = split_weight_budget(budget, shards);
+        assert_eq!(split.len(), shards, "case {case}");
+        assert_eq!(split.iter().sum::<usize>(), budget, "case {case}: bytes lost in the split");
+        let min = *split.iter().min().unwrap();
+        let max = *split.iter().max().unwrap();
+        assert!(max - min <= 1, "case {case}: uneven split {split:?}");
+    }
+    assert_eq!(split_weight_budget(0, 4), vec![0; 4], "budget 0 splits to 0 everywhere");
+}
+
+#[test]
+fn prop_generous_budget_stops_evicting_but_replies_never_move() {
+    // Between "fits one model" and "fits everything" the only visible
+    // change is counter traffic: a budget covering the whole zoo admits
+    // every model once and never evicts, and replies still match the
+    // eager store bit for bit.
+    let graph = serving_graph(31);
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &tenant_zoo(3, &small_mc())).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    let seed = ServeConfig::default().weight_seed;
+    let total: usize = lib.keys().map(|k| plan_weight_bytes(&lib, k, seed)).sum();
+    let mut rng = SplitMix64::new(59);
+    let reqs: Vec<(ModelKey, u32)> = (0..21)
+        .map(|i| (keys[i % keys.len()], rng.gen_range(1_500) as u32))
+        .collect();
+
+    let (want, _) = serve_all_budgeted(&graph, 0, EvictPolicy::Lru, 1, &reqs);
+    let (got, stats) = serve_all_budgeted(&graph, total, EvictPolicy::Lru, 1, &reqs);
+    for (a, b) in want.iter().zip(got.iter()) {
+        assert_eq!(a.embedding, b.embedding, "id {}: generous budget changed numerics", a.id);
+        assert_eq!(a.accel_us, b.accel_us);
+    }
+    assert_eq!(stats.residency_evictions, 0, "everything fits: nothing to evict");
+    assert_eq!(stats.residency_misses, keys.len() as u64, "each model prepared exactly once");
+    assert_eq!(stats.residency_resident_models, keys.len() as u64);
+    assert_eq!(stats.residency_resident_bytes, total as u64);
+}
