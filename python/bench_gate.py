@@ -89,6 +89,29 @@ RESIDENCY_KEYS = (
 
 RESIDENCY_LABEL_RE = re.compile(r"_w\d+b_e(lru|cost|size-aware)(_|$)")
 
+# The PR-10 activation-memo summary every memoized sweep point must
+# carry. Memoized sections are labelled ``_m{rows}``; unmemoized ones
+# (``--memo-rows 0``) must NOT grow memo keys — the off baseline keeps
+# the historical key set byte-for-byte. ``staged_rows`` is deliberately
+# NOT in this tuple: it is always-on (memo on or off) so the pruning
+# delta stays visible side by side, and lives in STAGE-adjacent keys
+# every section carries.
+MEMO_KEYS = (
+    "memo_rows_total",
+    "memo_hits",
+    "memo_misses",
+    "memo_hit_rate",
+    "memo_deposits",
+    "memo_evictions",
+    "memo_resident_rows",
+    "memo_resident_bytes",
+    "memo_pruned_vertices",
+    "memo_pruned_edges",
+    "memo_dedup_hits",
+)
+
+MEMO_LABEL_RE = re.compile(r"_m\d+(_|$)")
+
 
 def stage_schema_failures(fresh):
     """Every fresh serve_load section must expose the stage breakdown;
@@ -125,6 +148,17 @@ def stage_schema_failures(fresh):
                     out.append(
                         f"{section}: unexpected weight-residency key {key} in an "
                         "unbudgeted section"
+                    )
+        if MEMO_LABEL_RE.search(section):
+            for key in MEMO_KEYS:
+                if key not in metrics:
+                    out.append(f"{section}: missing activation-memo key {key}")
+        else:
+            for key in MEMO_KEYS:
+                if key in metrics:
+                    out.append(
+                        f"{section}: unexpected activation-memo key {key} in an "
+                        "unmemoized section"
                     )
     return out
 

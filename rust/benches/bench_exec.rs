@@ -238,6 +238,19 @@ fn main() {
             run_sweep(&g_sweep, &[100.0], &[4], &paged, poisson).expect("residency sweep"),
         );
     }
+    // Activation-memo points (PR 10): Zipf-skewed targets concentrate
+    // requests on a handful of hubs — exactly where cross-request reuse
+    // lives — paired memo-off vs a 4096-row budget at the same load.
+    // The `_m4096` section carries memo hit/prune counters plus the
+    // always-on staged_rows, whose delta against the `_z1.1` baseline
+    // is the measured work reduction. Replies stay bit-identical
+    // throughout (tests/memo_props.rs pins that).
+    let zipf_base = OpenLoopConfig { target_skew: 1.1, ..base.clone() };
+    sweep.extend(
+        run_sweep(&g_sweep, &[100.0], &[4], &zipf_base, poisson).expect("zipf-target sweep"),
+    );
+    let memo_base = OpenLoopConfig { memo_rows: 4096, ..zipf_base.clone() };
+    sweep.extend(run_sweep(&g_sweep, &[100.0], &[4], &memo_base, poisson).expect("memo sweep"));
     for (label, r) in &sweep {
         println!(
             "{label:<40} e2e p50 {:>9.0} µs p99 {:>9.0} µs | cache hit {:>5.1}% (sim {:>5.1}%) | cut {:>5.1}% bfetch {}",

@@ -45,7 +45,7 @@ fn main() {
                 let mut staged = StagedFeatures::new();
                 staged.stage(&nf, mc.f_in, &mut store);
                 bench(&format!("backend_pjrt/{name}"), 3, 20, || {
-                    be.execute(&prepared, &nf, &staged, &mut scratch).unwrap().embeddings.len()
+                    be.execute(&prepared, &nf, &staged, &mut scratch, None).unwrap().embeddings.len()
                 });
             }
         }

@@ -3,8 +3,8 @@
 //! shard loop (pinned by `tests/backend_conformance.rs` and
 //! `tests/serve_props.rs`).
 
-use super::{BackendOutput, Numerics, NumericsBackend, PreparedModel, StagedFeatures};
-use crate::greta::{execute_model_into, ExecArgs, ModelPlan, PlanArgs};
+use super::{BackendOutput, MemoCtx, Numerics, NumericsBackend, PreparedModel, StagedFeatures};
+use crate::greta::{execute_model_into_memo, ExecArgs, ModelPlan, PlanArgs};
 use crate::nodeflow::Nodeflow;
 use anyhow::{anyhow, Result};
 
@@ -44,11 +44,13 @@ impl NumericsBackend for FixedPointBackend {
         nf: &Nodeflow,
         features: &StagedFeatures,
         scratch: &'s mut super::BackendScratch,
+        memo: Option<MemoCtx<'_>>,
     ) -> Result<BackendOutput<'s>> {
         let pargs: &PlanArgs = prepared.state()?;
         let plan = prepared.plan();
         let h = features.rows_for(nf, plan.layers[0].in_dim)?;
-        execute_model_into(plan, nf, h, pargs, &mut scratch.exec, &mut scratch.emb)
+        let splice = memo.map(|m| (m.plan, m.harvest));
+        execute_model_into_memo(plan, nf, h, pargs, &mut scratch.exec, &mut scratch.emb, splice)
             .map_err(|e| anyhow!("{}: {e}", plan.name))?;
         Ok(BackendOutput {
             embeddings: &scratch.emb,

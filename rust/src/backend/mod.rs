@@ -59,7 +59,7 @@ pub use reference::ReferenceBackend;
 
 use crate::config::GripConfig;
 use crate::greta::{ExecArgs, ExecScratch, ModelPlan};
-use crate::nodeflow::Nodeflow;
+use crate::nodeflow::{MemoHarvest, MemoPlan, Nodeflow};
 use crate::runtime::{FeatureSource, Manifest, MarshalScratch};
 use anyhow::{anyhow, Result};
 use std::any::Any;
@@ -241,6 +241,18 @@ impl StagedFeatures {
     }
 }
 
+/// Activation-memo context for one `execute` call (PR 10): the
+/// build-time splice plan (cached rows to inject, rows to copy back
+/// out) plus the harvest buffer the backend fills with freshly
+/// computed interior-layer rows for deposit. Only engines with an
+/// exact Q4.12 interior representation honor it (fixed, reference);
+/// float/timing engines ignore it — the serving layer never constructs
+/// one for them, so replies stay bit-identical either way.
+pub struct MemoCtx<'a> {
+    pub plan: &'a MemoPlan,
+    pub harvest: &'a mut MemoHarvest,
+}
+
 /// A per-shard execution engine. One backend instance serves one shard
 /// thread; it is constructed there by the [`BackendFactory`], prepares
 /// every library model once, then executes jobs for the lifetime of
@@ -274,12 +286,16 @@ pub trait NumericsBackend {
     /// member order). `features` carries the job's pre-gathered layer-0
     /// rows — the edge-centric phase already ran, possibly on another
     /// thread; `scratch` is this shard's reusable working memory.
+    /// `memo`, when present, splices cached interior-layer rows in and
+    /// harvests fresh ones out ([`MemoCtx`]); engines without exact
+    /// fixed-point interiors ignore it.
     fn execute<'s>(
         &mut self,
         prepared: &PreparedModel,
         nf: &Nodeflow,
         features: &StagedFeatures,
         scratch: &'s mut BackendScratch,
+        memo: Option<MemoCtx<'_>>,
     ) -> Result<BackendOutput<'s>>;
 }
 
@@ -303,6 +319,7 @@ impl NumericsBackend for TimingOnlyBackend {
         _nf: &Nodeflow,
         _features: &StagedFeatures,
         scratch: &'s mut BackendScratch,
+        _memo: Option<MemoCtx<'_>>,
     ) -> Result<BackendOutput<'s>> {
         scratch.emb.clear();
         Ok(BackendOutput { embeddings: &scratch.emb, f_out: 0, numerics: Numerics::TimingOnly })
@@ -456,7 +473,7 @@ mod tests {
         // Dirty the shared embedding buffer first: a timing-only reply
         // must never leak a previous job's numbers.
         scratch.emb.extend_from_slice(&[1.0, 2.0, 3.0]);
-        let out = be.execute(&prepared, &nf, &staged, &mut scratch).unwrap();
+        let out = be.execute(&prepared, &nf, &staged, &mut scratch, None).unwrap();
         assert_eq!(out.numerics, Numerics::TimingOnly);
         assert!(!out.numerics.is_numeric());
         assert!(out.embeddings.is_empty());

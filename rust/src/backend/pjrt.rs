@@ -133,6 +133,9 @@ impl NumericsBackend for PjrtBackend {
         nf: &Nodeflow,
         features: &StagedFeatures,
         scratch: &'s mut super::BackendScratch,
+        // Float interiors are not Q4.12-exact; the serving layer never
+        // passes a memo context to this engine.
+        _memo: Option<super::MemoCtx<'_>>,
     ) -> Result<BackendOutput<'s>> {
         let state: &PjrtModel = prepared.state()?;
         let (full, b1) = match state {

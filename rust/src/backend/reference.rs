@@ -4,8 +4,8 @@
 //! Q4.12 semantics — `tests/backend_conformance.rs` pins the
 //! fixed-point hot path bit-identical to this.
 
-use super::{BackendOutput, Numerics, NumericsBackend, PreparedModel, StagedFeatures};
-use crate::greta::{execute_model_ref, ExecArgs, ModelPlan};
+use super::{BackendOutput, MemoCtx, Numerics, NumericsBackend, PreparedModel, StagedFeatures};
+use crate::greta::{execute_model_ref_memo, ExecArgs, ModelPlan};
 use crate::nodeflow::Nodeflow;
 use anyhow::{anyhow, Result};
 
@@ -44,11 +44,13 @@ impl NumericsBackend for ReferenceBackend {
         nf: &Nodeflow,
         features: &StagedFeatures,
         scratch: &'s mut super::BackendScratch,
+        memo: Option<MemoCtx<'_>>,
     ) -> Result<BackendOutput<'s>> {
         let args: &ExecArgs = prepared.state()?;
         let plan = prepared.plan();
         let h = features.rows_for(nf, plan.layers[0].in_dim)?;
-        let out = execute_model_ref(plan, nf, h, args)
+        let splice = memo.map(|m| (m.plan, m.harvest));
+        let out = execute_model_ref_memo(plan, nf, h, args, splice)
             .map_err(|e| anyhow!("{}: {e}", plan.name))?;
         scratch.emb.clear();
         scratch.emb.extend_from_slice(&out);

@@ -67,8 +67,8 @@ use crate::nodeflow::{Nodeflow, Sampler};
 use crate::residency::{EvictPolicy, ResidencyConfig};
 use crate::runtime::Manifest;
 use crate::serve::{
-    BatchConfig, Batcher, ExecJob, Pending, PipelineConfig, ReplySlot, ServeStats, ShardPool,
-    ShardSpec,
+    BatchConfig, Batcher, ExecJob, MemoRouter, Pending, PipelineConfig, ReplySlot, ServeStats,
+    ShardPool, ShardSpec,
 };
 use crate::telemetry::{SpanTrace, Stage, Telemetry};
 use anyhow::{anyhow, ensure, Result};
@@ -351,6 +351,17 @@ pub struct ServeConfig {
     /// (`--evict lru|cost|size-aware`). Inert when
     /// `weight_budget_bytes` is 0.
     pub evict: EvictPolicy,
+    /// Cross-request hub-embedding memo budget, in cached interior-layer
+    /// rows across the pool (`--memo-rows`, 0 = off, the default).
+    /// Split across partitioned shards like `cache_rows`; builders
+    /// consult the target's home-shard cache while sampling and prune
+    /// the whole subtree under a memo-hit vertex, and engines deposit
+    /// freshly computed hub rows back. Exact reuse, not approximation:
+    /// a hit returns the very Q4.12 bytes the executor would have
+    /// produced, so embeddings are bit-identical for any budget
+    /// (`tests/memo_props.rs`); only the fixed-point and reference
+    /// backends memoize.
+    pub memo_rows: usize,
 }
 
 impl Default for ServeConfig {
@@ -374,6 +385,7 @@ impl Default for ServeConfig {
             control: ControlConfig::default(),
             weight_budget_bytes: 0,
             evict: EvictPolicy::default(),
+            memo_rows: 0,
         }
     }
 }
@@ -393,6 +405,7 @@ impl ServeConfig {
                 budget_bytes: self.weight_budget_bytes,
                 policy: self.evict,
             },
+            memo_rows: self.memo_rows,
             telemetry,
             knobs: Some(knobs),
         }
@@ -437,6 +450,22 @@ impl Coordinator {
         let jobs = Arc::new(Mutex::new(job_rx));
         let telemetry = Telemetry::new(cfg.trace_sample);
 
+        let inflight = Arc::new(AtomicU64::new(0));
+        let (knobs, slo_us) = cfg.build_knobs();
+        // The pool starts before the builder threads: builders consult
+        // the pool's memo caches (through the router) while sampling,
+        // so the caches must exist first. Teardown order is unchanged —
+        // builders still exit on job-queue close, which closes the
+        // built channel and drains the pool.
+        let pool = ShardPool::start(
+            &cfg.shard_spec(telemetry.clone(), knobs.clone()),
+            library.clone(),
+            graph.clone(),
+            built_rx,
+            inflight.clone(),
+        )?;
+        let memo_router = pool.memo_router();
+
         let mut builders = Vec::new();
         for i in 0..cfg.builders.max(1) {
             let graph = graph.clone();
@@ -445,24 +474,17 @@ impl Coordinator {
             let sampler = Sampler::new(sampler_seed);
             let library = library.clone();
             let tel = telemetry.clone();
+            let router = memo_router.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("grip-nf-builder-{i}"))
-                .spawn(move || builder_loop(&graph, &sampler, &library, &jobs, &built_tx, &tel))
+                .spawn(move || {
+                    builder_loop(&graph, &sampler, &library, &router, &jobs, &built_tx, &tel)
+                })
                 .map_err(|e| anyhow!("spawning builder {i}: {e}"))?;
             builders.push(handle);
         }
         // The shard pool's channel closes when the last builder exits.
         drop(built_tx);
-
-        let inflight = Arc::new(AtomicU64::new(0));
-        let (knobs, slo_us) = cfg.build_knobs();
-        let pool = ShardPool::start(
-            &cfg.shard_spec(telemetry.clone(), knobs.clone()),
-            library.clone(),
-            graph,
-            built_rx,
-            inflight.clone(),
-        )?;
 
         let control = match cfg.control.mode {
             ControlMode::Off => None,
@@ -748,6 +770,7 @@ fn builder_loop(
     graph: &CsrGraph,
     sampler: &Sampler,
     library: &ModelLibrary,
+    memo: &Option<MemoRouter>,
     jobs: &Mutex<mpsc::Receiver<Job>>,
     built_tx: &mpsc::SyncSender<ExecJob>,
     telemetry: &Telemetry,
@@ -775,7 +798,20 @@ fn builder_loop(
             }
         }
         let samples = library.samples(job.model);
-        let nf = Nodeflow::build_layers(graph, sampler, &job.targets, samples);
+        // With memoization on, probe the target's home-shard cache (the
+        // same routing the built job will take, so the builder reads
+        // exactly the cache its executor deposits into) and prune the
+        // subtree under every hit.
+        let (nf, memo_plan) = match memo {
+            Some(router) => Nodeflow::build_layers_memo(
+                graph,
+                sampler,
+                &job.targets,
+                samples,
+                Some(&router.scope(job.model, job.targets[0])),
+            ),
+            None => Nodeflow::build_layers_memo(graph, sampler, &job.targets, samples, None),
+        };
         let t_built = Instant::now();
         let build_us = t_built.duration_since(t_dequeue).as_secs_f64() * 1e6;
         telemetry.stages().build.record_us(build_us);
@@ -785,7 +821,14 @@ fn builder_loop(
                 t.stamp(Stage::RouteEnqueue, enqueue_us);
             }
         }
-        let exec = ExecJob { model: job.model, nf, members: job.members, t_dequeue, t_built };
+        let exec = ExecJob {
+            model: job.model,
+            nf,
+            members: job.members,
+            t_dequeue,
+            t_built,
+            memo: if memo_plan.is_empty() { None } else { Some(memo_plan) },
+        };
         if built_tx.send(exec).is_err() {
             break;
         }
@@ -1143,6 +1186,58 @@ mod tests {
         assert!(s.residency_resident_bytes <= (max + 1) as u64);
         assert_eq!(s.residency_prepare_failures, 0);
         assert_eq!(s.backend_fallbacks, 0, "paging is not a fallback");
+    }
+
+    #[test]
+    fn memoized_coordinator_serves_bit_identically_and_hits() {
+        // End-to-end through the coordinator: the memo cache may only
+        // reshape the nodeflow (subtree pruning), never the reply
+        // bytes. Repeated hub targets guarantee interior-layer hits
+        // (hubs sit in the top degree classes, so admission holds),
+        // and the pruned nodeflow can only shrink the simulated
+        // accelerator pass.
+        let g = graph();
+        let mut hubs: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        hubs.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+        hubs.truncate(4);
+        let reqs: Vec<u32> = hubs.iter().chain(hubs.iter()).copied().collect();
+
+        let off = Coordinator::start(g.clone(), 7, fixed_cfg(1)).unwrap();
+        let want: Vec<InferenceResponse> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| off.infer(InferenceRequest::single(i as u64, GnnModel::Gcn, v)).unwrap())
+            .collect();
+        let base = off.serve_stats();
+        assert_eq!(base.memo_rows_total, 0, "memo off by default");
+        assert_eq!(base.memo_hits + base.memo_deposits, 0);
+        drop(off);
+
+        let cfg = ServeConfig { memo_rows: 4096, ..fixed_cfg(1) };
+        let coord = Coordinator::start(g, 7, cfg).unwrap();
+        for (i, w) in want.iter().enumerate() {
+            let r = coord
+                .infer(InferenceRequest::single(i as u64, GnnModel::Gcn, reqs[i]))
+                .unwrap();
+            assert_eq!(r.embedding, w.embedding, "id {i}: memoization changed numerics");
+            assert!(
+                r.accel_us <= w.accel_us,
+                "id {i}: a pruned nodeflow cannot cost more sim time"
+            );
+        }
+        let s = coord.serve_stats();
+        assert_eq!(s.memo_rows_total, 4096);
+        assert!(s.memo_deposits > 0, "first pass deposits hub rows");
+        assert!(s.memo_hits > 0, "second pass over the same hubs must hit");
+        assert!(s.memo_hit_rate > 0.0);
+        assert!(s.memo_pruned_vertices > 0, "a hit prunes its subtree");
+        assert!(s.memo_pruned_edges > 0);
+        assert!(
+            s.staged_rows < base.staged_rows,
+            "pruned subtrees stage fewer feature rows ({} vs {})",
+            s.staged_rows,
+            base.staged_rows
+        );
     }
 
     #[test]

@@ -31,7 +31,7 @@ use super::ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
 use super::program::{ModelPlan, Program, Src};
 use crate::config::GripConfig;
 use crate::fixed::{Fx16, LutConfig, TwoLevelLut};
-use crate::nodeflow::{Nodeflow, NodeflowLayer};
+use crate::nodeflow::{HarvestRow, MemoHarvest, MemoPlan, Nodeflow, NodeflowLayer};
 
 /// Execution errors (argument resolution / shape mismatches).
 #[derive(Debug)]
@@ -280,6 +280,48 @@ pub fn execute_model_into(
     scratch: &mut ExecScratch,
     out: &mut Vec<f32>,
 ) -> Result<(), ExecError> {
+    execute_model_into_memo(plan, nf, h, pargs, scratch, out, None)
+}
+
+/// Overwrite memo-hit rows of a just-computed layer output with their
+/// cached values, then copy out the rows the cache wants deposited.
+///
+/// A memo-hit row was left at reduce-identity garbage by the pruned
+/// nodeflow (its sampling was skipped, so it has zero in-edges); the
+/// splice happens *before* the next layer consumes the matrix, so every
+/// downstream value is computed from exact inputs. Inject and harvest
+/// rows are disjoint (see [`MemoPlan`]), so harvested rows are always
+/// freshly computed, never garbage — by induction the whole execution
+/// is bit-identical to the unpruned one.
+fn splice_memo(m: &mut Matrix, li: usize, plan: &MemoPlan, harvest: &mut MemoHarvest) {
+    let li = li as u32;
+    for inj in plan.inject.iter().filter(|r| r.layer == li) {
+        debug_assert_eq!(inj.values.len(), m.cols, "memo row dim");
+        m.row_mut(inj.row as usize).copy_from_slice(&inj.values);
+    }
+    for slot in plan.harvest.iter().filter(|s| s.layer == li) {
+        harvest.rows.push(HarvestRow {
+            layer: slot.layer,
+            vertex: slot.vertex,
+            degree: slot.degree,
+            values: m.row(slot.row as usize).to_vec(),
+        });
+    }
+}
+
+/// [`execute_model_into`] with activation memoization: interior-layer
+/// outputs listed in the [`MemoPlan`] are spliced in from the cache
+/// (hits) or copied out for deposit (admissible misses) as each layer
+/// completes. `memo = None` is exactly the plain executor.
+pub fn execute_model_into_memo(
+    plan: &ModelPlan,
+    nf: &Nodeflow,
+    h: &[f32],
+    pargs: &PlanArgs,
+    scratch: &mut ExecScratch,
+    out: &mut Vec<f32>,
+    mut memo: Option<(&MemoPlan, &mut MemoHarvest)>,
+) -> Result<(), ExecError> {
     assert_eq!(plan.layers.len(), nf.layers.len(), "plan/nodeflow layer count");
     let l0 = &nf.layers[0];
     let in_dim = plan.layers[0].in_dim;
@@ -305,9 +347,12 @@ pub fn execute_model_into(
             )?;
             outputs.push(result);
         }
-        let next = outputs.swap_remove(lp.output_program);
+        let mut next = outputs.swap_remove(lp.output_program);
         // The layer output has V rows = next layer's U rows.
         debug_assert_eq!(next.rows, nl.num_outputs);
+        if let Some((mplan, hv)) = memo.as_mut() {
+            splice_memo(&mut next, li, mplan, hv);
+        }
         for m in outputs.drain(..) {
             scratch.give(m.data);
         }
@@ -556,6 +601,19 @@ pub fn execute_model_ref(
     h: &[f32],
     args: &Args,
 ) -> Result<Vec<f32>, ExecError> {
+    execute_model_ref_memo(plan, nf, h, args, None)
+}
+
+/// [`execute_model_ref`] with the same memo splice as
+/// [`execute_model_into_memo`] — keeps the reference backend usable as
+/// a second independent witness that memoized replies are bit-exact.
+pub fn execute_model_ref_memo(
+    plan: &ModelPlan,
+    nf: &Nodeflow,
+    h: &[f32],
+    args: &Args,
+    mut memo: Option<(&MemoPlan, &mut MemoHarvest)>,
+) -> Result<Vec<f32>, ExecError> {
     assert_eq!(plan.layers.len(), nf.layers.len(), "plan/nodeflow layer count");
     let sigmoid = TwoLevelLut::new(LutConfig::sigmoid());
 
@@ -568,7 +626,7 @@ pub fn execute_model_ref(
         data: h.iter().map(|&x| Fx16::from_f32(x)).collect(),
     };
 
-    for (lp, nl) in plan.layers.iter().zip(nf.layers.iter()) {
+    for (li, (lp, nl)) in plan.layers.iter().zip(nf.layers.iter()).enumerate() {
         let mut outputs: Vec<Matrix> = Vec::with_capacity(lp.programs.len());
         for prog in &lp.programs {
             let out = run_program_ref(prog, nl, &features, &outputs, args, &sigmoid)?;
@@ -576,6 +634,9 @@ pub fn execute_model_ref(
         }
         features = outputs.swap_remove(lp.output_program);
         debug_assert_eq!(features.rows, nl.num_outputs);
+        if let Some((mplan, hv)) = memo.as_mut() {
+            splice_memo(&mut features, li, mplan, hv);
+        }
     }
 
     Ok(features.data.iter().map(|x| x.to_f32()).collect())
@@ -902,6 +963,96 @@ mod tests {
             execute_model_into(&plan, &nf, &h, &pargs, &mut scratch, &mut again).unwrap();
             assert_eq!(again, first);
         }
+    }
+
+    #[test]
+    fn memo_inject_and_harvest_reproduce_baseline() {
+        use crate::nodeflow::MemoProbe;
+        use crate::runtime::fill_feature_row;
+        let mc = small_mc();
+        let g = generate(&GeneratorParams { nodes: 500, mean_degree: 6.0, ..Default::default() });
+        let sampler = Sampler::new(3);
+        let samples = [mc.sample1, mc.sample2];
+        let plan = compile(GnnModel::Gcn, &mc);
+        let args = weights_for(GnnModel::Gcn, &mc);
+        let pargs = PlanArgs::resolve(&plan, &args).unwrap();
+        // Vertex-keyed features (as staging synthesizes them), so the
+        // pruned nodeflow's smaller input set stays consistent.
+        let feats = |nf: &Nodeflow| -> Vec<f32> {
+            let mut h = vec![0f32; nf.layers[0].num_inputs() * mc.f_in];
+            for (i, &v) in nf.layers[0].inputs.iter().enumerate() {
+                fill_feature_row(v, &mut h[i * mc.f_in..(i + 1) * mc.f_in]);
+            }
+            h
+        };
+
+        // Pass 1 (cold cache): harvest every interior row.
+        struct HarvestAll;
+        impl MemoProbe for HarvestAll {
+            fn admits(&self, _l: usize, _v: u32, _d: usize) -> bool {
+                true
+            }
+            fn lookup(&self, _l: usize, _v: u32) -> Option<Vec<Fx16>> {
+                None
+            }
+        }
+        let (nf, mplan) =
+            Nodeflow::build_layers_memo(&g, &sampler, &[17], &samples, Some(&HarvestAll));
+        let h = feats(&nf);
+        let mut scratch = ExecScratch::new();
+        let mut want = Vec::new();
+        let mut harvest = MemoHarvest::default();
+        execute_model_into_memo(
+            &plan,
+            &nf,
+            &h,
+            &pargs,
+            &mut scratch,
+            &mut want,
+            Some((&mplan, &mut harvest)),
+        )
+        .unwrap();
+        assert!(!harvest.rows.is_empty());
+
+        // Pass 2 (warm cache): replay with every interior row cached —
+        // the whole input layer's sampling is pruned away.
+        struct Replay(HashMap<(u32, u32), Vec<Fx16>>);
+        impl MemoProbe for Replay {
+            fn admits(&self, _l: usize, _v: u32, _d: usize) -> bool {
+                true
+            }
+            fn lookup(&self, l: usize, v: u32) -> Option<Vec<Fx16>> {
+                self.0.get(&(l as u32, v)).cloned()
+            }
+        }
+        let map: HashMap<(u32, u32), Vec<Fx16>> =
+            harvest.rows.iter().map(|r| ((r.layer, r.vertex), r.values.clone())).collect();
+        let (nf2, mplan2) =
+            Nodeflow::build_layers_memo(&g, &sampler, &[17], &samples, Some(&Replay(map)));
+        assert!(mplan2.pruned_vertices > 0);
+        assert!(mplan2.harvest.is_empty(), "all interior rows hit");
+        assert!(nf2.layers[0].edges.is_empty(), "every interior output pruned");
+        assert!(nf2.total_edges() < nf.total_edges());
+        assert!(nf2.neighborhood_size() <= nf.neighborhood_size());
+        let h2 = feats(&nf2);
+        let mut got = Vec::new();
+        let mut hv2 = MemoHarvest::default();
+        execute_model_into_memo(
+            &plan,
+            &nf2,
+            &h2,
+            &pargs,
+            &mut scratch,
+            &mut got,
+            Some((&mplan2, &mut hv2)),
+        )
+        .unwrap();
+        assert_eq!(got, want, "cached-row replay must be bit-identical");
+        // The reference executor agrees over the same pruned flow.
+        let mut hv3 = MemoHarvest::default();
+        let got_ref =
+            execute_model_ref_memo(&plan, &nf2, &h2, &args, Some((&mplan2, &mut hv3))).unwrap();
+        assert_eq!(got_ref, want);
     }
 
     #[test]

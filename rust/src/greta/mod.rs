@@ -24,8 +24,8 @@ mod program;
 mod spec;
 
 pub use exec::{
-    exec_test_args, execute_model, execute_model_into, execute_model_ref, Args as ExecArgs,
-    ExecError, ExecScratch, PlanArgs,
+    exec_test_args, execute_model, execute_model_into, execute_model_into_memo, execute_model_ref,
+    execute_model_ref_memo, Args as ExecArgs, ExecError, ExecScratch, PlanArgs,
 };
 pub use ops::{Activate, Domain, GatherOp, ReduceOp, SelfScale};
 pub use program::{

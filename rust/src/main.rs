@@ -39,7 +39,7 @@ fn usage() -> ! {
                    [--pipeline on|off] [--prefetch-lanes N=2] [--pipeline-depth K=2]\n\
                    [--control off|static|adaptive] [--control-interval-ms T=50]\n\
                    [--tenants N=0] [--weight-budget-bytes B=0 (unlimited)]\n\
-                   [--evict lru|cost|size-aware]\n\
+                   [--evict lru|cost|size-aware] [--memo-rows N=0 (off)]\n\
                    [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            serve-bench  [--dataset yt|lj|po|rd] [--scale S=0.01] [--requests N=160]\n\
                    [--rates R1,R2,..=25,50,100] [--shards S1,S2,..=1,4] [--slo-us U=5000]\n\
@@ -50,6 +50,7 @@ fn usage() -> ! {
                    [--control C1,C2,..=off (off|static|adaptive)] [--control-interval-ms T=50]\n\
                    [--tenants N=0] [--tenant-skew S=0 (Zipf exponent over models)]\n\
                    [--weight-budgets B1,B2,..=0] [--evict E1,E2,..=lru (lru|cost|size-aware)]\n\
+                   [--memo-rows B1,B2,..=0 (row budgets; 0 = off)]\n\
                    [--submit-lanes W=0 (auto)]\n\
                    [--trace-sample N=64] [--trace-out FILE.json] [--metrics-out FILE.prom]\n\
            sim     [--model M] [--model-spec FILE.json] [--dataset D] [--scale S]\n\
@@ -84,6 +85,11 @@ fn usage() -> ! {
            cheapest bytes x prepare-cost per age, size-aware = largest first); 0 = unlimited\n\
            eager store (historical behavior); replies are bit-identical for any budget\n\
            (serve-bench sweeps comma lists via --weight-budgets and --evict)\n\
+         --memo-rows caps the cross-request hub-embedding memo cache in cached interior-layer\n\
+           rows (examples/MEMOIZATION.md): builders reuse exact Q4.12 activations for hot\n\
+           high-degree vertices and prune the whole sampled subtree under each hit; exact\n\
+           reuse, so replies are bit-identical for any budget; 0 = off (historical behavior);\n\
+           only the fixed/reference backends memoize (serve-bench sweeps a comma list)\n\
          --trace-sample traces 1-in-N requests through every pipeline stage (0 = off; stage\n\
            histograms record regardless; examples/OBSERVABILITY.md); --trace-out writes the\n\
            sampled spans as Chrome trace_event JSON (load in Perfetto), --metrics-out writes\n\
@@ -364,6 +370,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let tenants = args.get_usize("tenants", 0);
     let weight_budget_bytes = args.get_usize("weight-budget-bytes", 0);
     let evict = args.evict()?;
+    let memo_rows = args.get_usize("memo-rows", 0);
 
     eprintln!("generating {dataset:?} graph (scale {scale}) ...");
     let graph = dataset.generate(scale, 17);
@@ -382,6 +389,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         trace_sample: args.get_usize("trace-sample", defaults.trace_sample as usize) as u64,
         weight_budget_bytes,
         evict,
+        memo_rows,
         ..defaults
     };
     let coord = Coordinator::start(graph, 17, cfg)?;
@@ -550,6 +558,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
         );
     }
+    // Memoization health: exact activation reuse and how much sampling
+    // work the pruned subtrees saved (absent with --memo-rows 0).
+    if stats.memo_rows_total > 0 {
+        println!(
+            "memo {} rows: hit rate {:.1}% ({} hits / {} misses), {} deposits / {} evictions, \
+             resident {} rows ({} B), pruned {} vertices / {} edges, dedup {} — staged {} rows",
+            stats.memo_rows_total,
+            stats.memo_hit_rate * 100.0,
+            stats.memo_hits,
+            stats.memo_misses,
+            stats.memo_deposits,
+            stats.memo_evictions,
+            stats.memo_resident_rows,
+            stats.memo_resident_bytes,
+            stats.memo_pruned_vertices,
+            stats.memo_pruned_edges,
+            stats.memo_dedup_hits,
+            stats.staged_rows
+        );
+    }
     // Per-stage latency breakdown from the always-on stage histograms:
     // where a request's time went, not just how long it took.
     println!(
@@ -648,6 +676,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     };
     let budgets = parse_budget_list(args.get("weight-budgets").unwrap_or("0"))?;
     let evicts = args.evict_list()?;
+    let memo_budgets = parse_budget_list(args.get("memo-rows").unwrap_or("0"))?;
     let defaults = OpenLoopConfig::default();
     let base = OpenLoopConfig {
         requests,
@@ -673,8 +702,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
 
     println!(
         "== serve-bench: {:?} scale {scale}, {} requests/point, {} rates x {} shard counts x \
-         {} partition strategies x {} control modes x {} weight budgets, backend {backend}, \
-         pipeline {}, target-skew {}, tenants {} (skew {}) ==",
+         {} partition strategies x {} control modes x {} weight budgets x {} memo budgets, \
+         backend {backend}, pipeline {}, target-skew {}, tenants {} (skew {}) ==",
         dataset,
         requests,
         rates.len(),
@@ -682,6 +711,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         partitions.len(),
         controls.len(),
         budgets.len(),
+        memo_budgets.len(),
         pipeline.label(),
         base.target_skew,
         base.tenants,
@@ -697,25 +727,37 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
                 let policies: &[EvictPolicy] =
                     if budget == 0 { std::slice::from_ref(&evicts[0]) } else { &evicts };
                 for &policy in policies {
-                    let point_base = OpenLoopConfig {
-                        partition,
-                        control: ControlConfig { mode: cmode, interval_ms: control_interval_ms },
-                        weight_budget_bytes: budget,
-                        evict: policy,
-                        ..base.clone()
-                    };
-                    points.extend(run_sweep(&graph, &rates, &shard_counts, &point_base, |rate| {
-                        if bursty {
-                            ArrivalProcess::Bursty {
-                                base_rps: rate,
-                                burst_rps: rate * 4.0,
-                                base_dwell_ms: 200.0,
-                                burst_dwell_ms: 50.0,
-                            }
-                        } else {
-                            ArrivalProcess::Poisson { rate_rps: rate }
-                        }
-                    })?);
+                    for &memo in &memo_budgets {
+                        let point_base = OpenLoopConfig {
+                            partition,
+                            control: ControlConfig {
+                                mode: cmode,
+                                interval_ms: control_interval_ms,
+                            },
+                            weight_budget_bytes: budget,
+                            evict: policy,
+                            memo_rows: memo,
+                            ..base.clone()
+                        };
+                        points.extend(run_sweep(
+                            &graph,
+                            &rates,
+                            &shard_counts,
+                            &point_base,
+                            |rate| {
+                                if bursty {
+                                    ArrivalProcess::Bursty {
+                                        base_rps: rate,
+                                        burst_rps: rate * 4.0,
+                                        base_dwell_ms: 200.0,
+                                        burst_dwell_ms: 50.0,
+                                    }
+                                } else {
+                                    ArrivalProcess::Poisson { rate_rps: rate }
+                                }
+                            },
+                        )?);
+                    }
                 }
             }
         }
@@ -783,6 +825,26 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
                 }
             );
         }
+        if r.stats.memo_rows_total > 0 {
+            println!(
+                "{:<40} memo {} rows: hit {:.1}% ({} hits / {} misses) | {} deposits / {} \
+                 evictions | resident {} rows ({} B) | pruned {} v / {} e | dedup {} | \
+                 staged {} rows",
+                "",
+                r.stats.memo_rows_total,
+                r.stats.memo_hit_rate * 100.0,
+                r.stats.memo_hits,
+                r.stats.memo_misses,
+                r.stats.memo_deposits,
+                r.stats.memo_evictions,
+                r.stats.memo_resident_rows,
+                r.stats.memo_resident_bytes,
+                r.stats.memo_pruned_vertices,
+                r.stats.memo_pruned_edges,
+                r.stats.memo_dedup_hits,
+                r.stats.staged_rows
+            );
+        }
         if r.stats.control.mode != "off" {
             println!(
                 "{:<40} control {}: {} ticks / {} actions (lanes {} depth {} window {} \
@@ -838,21 +900,23 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Parse a comma-separated byte-count list ("0,65536"). Unlike
-/// [`parse_list`] zero is legal — budget 0 means the unlimited eager
-/// store — and duplicates collapse so one sweep point runs per budget.
+/// Parse a comma-separated budget list ("0,65536") — bytes for
+/// `--weight-budgets`, rows for `--memo-rows`. Unlike [`parse_list`]
+/// zero is legal — budget 0 means the feature is off (unlimited eager
+/// store / no memo cache) — and duplicates collapse so one sweep point
+/// runs per budget.
 fn parse_budget_list(s: &str) -> anyhow::Result<Vec<usize>> {
     let mut out = Vec::new();
     for tok in s.split(',') {
         let v: usize = tok
             .trim()
             .parse()
-            .map_err(|_| anyhow::anyhow!("bad byte-count entry {tok:?} in {s:?}"))?;
+            .map_err(|_| anyhow::anyhow!("bad budget entry {tok:?} in {s:?}"))?;
         if !out.contains(&v) {
             out.push(v);
         }
     }
-    anyhow::ensure!(!out.is_empty(), "--weight-budgets list is empty");
+    anyhow::ensure!(!out.is_empty(), "budget list is empty");
     Ok(out)
 }
 

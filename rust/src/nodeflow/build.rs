@@ -10,8 +10,108 @@
 
 use super::sampler::Sampler;
 use crate::config::ModelConfig;
+use crate::fixed::Fx16;
 use crate::graph::CsrGraph;
-use std::collections::HashMap;
+use std::cell::RefCell;
+
+/// Consulted during nodeflow construction for cross-request activation
+/// memoization (PR 10). Implemented by the serving layer's memo cache
+/// (`serve::MemoScope`) so the nodeflow crate stays independent of the
+/// cache policy: the builder only needs "would you store this vertex's
+/// layer output?" and "do you have it right now?".
+///
+/// Soundness rests on sampler purity: `Sampler::sample` is
+/// deterministic per `(vertex, fanout, layer)`, and serving weights are
+/// derived from a seed, so the post-layer embedding of a vertex is a
+/// pure function of `(plan, weight_seed, layer, vertex)` — a cached row
+/// is bit-for-bit the row the executor would have produced.
+pub trait MemoProbe {
+    /// Would a freshly computed row for `vertex` at `layer` be admitted?
+    /// (Degree-class gate; misses that pass become harvest slots.)
+    fn admits(&self, layer: usize, vertex: u32, degree: usize) -> bool;
+    /// The exact cached post-`layer` row for `vertex`, if resident.
+    fn lookup(&self, layer: usize, vertex: u32) -> Option<Vec<Fx16>>;
+}
+
+/// One memo hit: the executor must overwrite output `row` of `layer`
+/// with `values` instead of trusting the (pruned, garbage) computed row.
+#[derive(Debug, Clone)]
+pub struct MemoRow {
+    pub layer: u32,
+    pub row: u32,
+    pub values: Vec<Fx16>,
+}
+
+/// One memo miss that passed admission: after executing `layer`, the
+/// freshly computed output `row` (vertex `vertex`, graph out-degree
+/// `degree`) should be deposited back into the cache.
+#[derive(Debug, Clone)]
+pub struct MemoSlot {
+    pub layer: u32,
+    pub row: u32,
+    pub vertex: u32,
+    pub degree: u32,
+}
+
+/// Everything the executor needs to splice cached activations into one
+/// nodeflow's execution, plus the build-side pruning telemetry.
+///
+/// `inject` and `harvest` rows are disjoint by construction (a vertex
+/// either hit — injected, subtree pruned — or missed — harvested).
+#[derive(Debug, Clone, Default)]
+pub struct MemoPlan {
+    pub inject: Vec<MemoRow>,
+    pub harvest: Vec<MemoSlot>,
+    /// Output vertices whose sampling (and therefore whole subtree
+    /// expansion) was skipped because their row was cached.
+    pub pruned_vertices: u64,
+    /// Sampled edges *directly* skipped at memo-hit vertices. The
+    /// transitive subtree saving is larger (unexpanded sources never
+    /// enter U, so outer layers shrink too) and shows up in the
+    /// staged-rows delta rather than this counter.
+    pub pruned_edges: u64,
+    /// Repeated within-request neighbor expansions answered by the
+    /// epoch-stamped dedup buffer instead of a hash probe.
+    pub dedup_hits: u64,
+}
+
+impl MemoPlan {
+    pub fn is_empty(&self) -> bool {
+        self.inject.is_empty() && self.harvest.is_empty()
+    }
+}
+
+/// Freshly computed interior-layer rows collected by the executor for
+/// deposit into the memo cache (one entry per satisfied [`MemoSlot`]).
+#[derive(Debug, Default)]
+pub struct MemoHarvest {
+    pub rows: Vec<HarvestRow>,
+}
+
+#[derive(Debug)]
+pub struct HarvestRow {
+    pub layer: u32,
+    pub vertex: u32,
+    pub degree: u32,
+    pub values: Vec<Fx16>,
+}
+
+/// Per-thread epoch-stamped dedup buffer for `build_layers` (PR 10).
+/// Replaces the per-layer `HashMap<u32, u32>` u-index: membership is
+/// one array read (`stamp[v] == epoch`), and "clearing" between layers
+/// is an epoch bump instead of an O(n) reset or reallocation. Sized to
+/// the graph once per thread and reused across every request that
+/// thread builds.
+struct BuildScratch {
+    stamp: Vec<u32>,
+    slot: Vec<u32>,
+    epoch: u32,
+}
+
+thread_local! {
+    static BUILD_SCRATCH: RefCell<BuildScratch> =
+        RefCell::new(BuildScratch { stamp: Vec::new(), slot: Vec::new(), epoch: 0 });
+}
 
 /// One message-passing layer's bipartite structure.
 ///
@@ -139,33 +239,116 @@ impl Nodeflow {
         targets: &[u32],
         samples: &[usize],
     ) -> Self {
+        Self::build_layers_memo(g, sampler, targets, samples, None).0
+    }
+
+    /// [`Nodeflow::build_layers`] with an optional activation-memo
+    /// probe. Interior layers (every `li` with `li + 1 <
+    /// samples.len()`; the final layer's outputs are the reply itself)
+    /// consult the probe per output vertex:
+    ///
+    /// * **hit** — the vertex's sampling is skipped entirely, pruning
+    ///   its whole subtree (the skipped sources never enter U, so every
+    ///   outer layer shrinks too). Its V-row, left as reduce-identity
+    ///   garbage by the executor, is overwritten by the recorded
+    ///   [`MemoRow`]. Edges *other* outputs draw to the vertex still
+    ///   read its U-row normally, so it keeps expanding at outer layers
+    ///   — correctness never depends on who else sampled it.
+    /// * **admissible miss** — a [`MemoSlot`] records where the freshly
+    ///   computed row will live so the executor can deposit it back.
+    ///
+    /// With `probe = None` this is exactly the historical builder
+    /// (first-touch U ordering is preserved bit-for-bit by the epoch
+    /// dedup buffer, which replaces the old per-layer hash map).
+    pub fn build_layers_memo(
+        g: &CsrGraph,
+        sampler: &Sampler,
+        targets: &[u32],
+        samples: &[usize],
+        probe: Option<&dyn MemoProbe>,
+    ) -> (Self, MemoPlan) {
         assert!(!samples.is_empty(), "nodeflow needs at least one layer");
+        let mut plan = MemoPlan::default();
         // Build from the innermost layer (V = targets) outward; each
         // layer's input set becomes the next-outer layer's output set.
-        let mut layers_rev: Vec<NodeflowLayer> = Vec::with_capacity(samples.len());
-        let mut v: Vec<u32> = targets.to_vec();
-        for (li, &fanout) in samples.iter().enumerate().rev() {
-            let mut u = v.clone();
-            let mut u_index: HashMap<u32, u32> = HashMap::new();
-            for (i, &t) in u.iter().enumerate() {
-                u_index.insert(t, i as u32);
+        let nf = BUILD_SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            let n = g.num_vertices();
+            if scratch.stamp.len() < n {
+                scratch.stamp.resize(n, 0);
+                scratch.slot.resize(n, 0);
             }
-            let mut edges: Vec<(u32, u32)> = Vec::new();
-            for (vi, &t) in v.iter().enumerate() {
-                for s in sampler.sample(g, t, fanout, li) {
-                    let idx = *u_index.entry(s).or_insert_with(|| {
-                        u.push(s);
-                        (u.len() - 1) as u32
-                    });
-                    edges.push((idx, vi as u32));
+            let mut layers_rev: Vec<NodeflowLayer> = Vec::with_capacity(samples.len());
+            let mut v: Vec<u32> = targets.to_vec();
+            for (li, &fanout) in samples.iter().enumerate().rev() {
+                scratch.epoch = scratch.epoch.wrapping_add(1);
+                if scratch.epoch == 0 {
+                    // u32 epoch wrapped: hard-reset the stamps once every
+                    // ~4B layers so stale stamps can't alias.
+                    scratch.stamp.iter_mut().for_each(|s| *s = 0);
+                    scratch.epoch = 1;
                 }
+                let epoch = scratch.epoch;
+                let stamp = &mut scratch.stamp;
+                let slot = &mut scratch.slot;
+                let mut u = v.clone();
+                for (i, &t) in u.iter().enumerate() {
+                    // Duplicate targets: last occurrence wins, matching
+                    // the historical HashMap::insert behavior.
+                    stamp[t as usize] = epoch;
+                    slot[t as usize] = i as u32;
+                }
+                let mut edges: Vec<(u32, u32)> = Vec::new();
+                let interior = li + 1 < samples.len();
+                for (vi, &t) in v.iter().enumerate() {
+                    if interior {
+                        if let Some(p) = probe {
+                            let degree = g.degree(t);
+                            if p.admits(li, t, degree) {
+                                if let Some(values) = p.lookup(li, t) {
+                                    plan.inject.push(MemoRow {
+                                        layer: li as u32,
+                                        row: vi as u32,
+                                        values,
+                                    });
+                                    plan.pruned_vertices += 1;
+                                    if degree > 0 {
+                                        plan.pruned_edges += fanout as u64;
+                                    }
+                                    continue;
+                                }
+                                plan.harvest.push(MemoSlot {
+                                    layer: li as u32,
+                                    row: vi as u32,
+                                    vertex: t,
+                                    degree: degree as u32,
+                                });
+                            }
+                        }
+                    }
+                    for s in sampler.sample(g, t, fanout, li) {
+                        let su = s as usize;
+                        let idx = if stamp[su] == epoch {
+                            plan.dedup_hits += 1;
+                            slot[su]
+                        } else {
+                            stamp[su] = epoch;
+                            let i = u.len() as u32;
+                            slot[su] = i;
+                            u.push(s);
+                            i
+                        };
+                        edges.push((idx, vi as u32));
+                    }
+                }
+                let layer = NodeflowLayer::new(u, v.len(), edges);
+                v = layer.inputs.clone();
+                layers_rev.push(layer);
             }
-            let layer = NodeflowLayer::new(u, v.len(), edges);
-            v = layer.inputs.clone();
-            layers_rev.push(layer);
-        }
-        layers_rev.reverse();
-        Nodeflow { layers: layers_rev, targets: targets.to_vec() }
+            layers_rev.reverse();
+            Nodeflow { layers: layers_rev, targets: targets.to_vec() }
+        });
+        (nf, plan)
     }
 
     /// Unique vertices read at the input layer — the "neighborhood size"
@@ -386,6 +569,78 @@ mod tests {
         // Reuse for a different layer/norm also matches the fresh path.
         nf.to_dense_into(1, 8, 16, NormKind::Sum, &mut buf);
         assert_eq!(buf, nf.to_dense(1, 8, 16, NormKind::Sum));
+    }
+
+    #[test]
+    fn memo_off_build_is_identical_and_counts_dedup() {
+        let (g, s, mc) = setup();
+        let a = Nodeflow::build(&g, &s, &[7, 21, 90], &mc);
+        let (b, plan) =
+            Nodeflow::build_layers_memo(&g, &s, &[7, 21, 90], &[mc.sample1, mc.sample2], None);
+        assert_eq!(a.targets, b.targets);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.inputs, lb.inputs, "epoch dedup must preserve first-touch order");
+            assert_eq!(la.num_outputs, lb.num_outputs);
+            assert_eq!(la.edges, lb.edges);
+        }
+        assert!(plan.is_empty(), "no probe, no inject/harvest");
+        assert_eq!(plan.pruned_vertices, 0);
+        assert!(
+            plan.dedup_hits > 0,
+            "25/10 replacement sampling on a zipf graph must repeat sources"
+        );
+    }
+
+    #[test]
+    fn memo_hit_prunes_subtree_and_miss_records_harvest() {
+        let (g, s, mc) = setup();
+        let samples = [mc.sample1, mc.sample2];
+        let base = Nodeflow::build_layers(&g, &s, &[42], &samples);
+        // Interior layer 0's outputs are the 1-hop set (incl. the
+        // target); "cache" one non-target output with out-edges.
+        let l0 = &base.layers[0];
+        let hit = (1..l0.num_outputs)
+            .map(|i| l0.inputs[i])
+            .find(|&v| g.degree(v) > 0)
+            .expect("some sampled neighbor has out-edges");
+        struct Probe {
+            hit: u32,
+            row: Vec<Fx16>,
+        }
+        impl MemoProbe for Probe {
+            fn admits(&self, _layer: usize, _v: u32, degree: usize) -> bool {
+                degree > 0
+            }
+            fn lookup(&self, _layer: usize, v: u32) -> Option<Vec<Fx16>> {
+                if v == self.hit {
+                    Some(self.row.clone())
+                } else {
+                    None
+                }
+            }
+        }
+        let probe = Probe { hit, row: vec![Fx16(7); 4] };
+        let (nf, plan) = Nodeflow::build_layers_memo(&g, &s, &[42], &samples, Some(&probe));
+        // Exactly one hit (V entries are unique for a single target),
+        // recorded at the interior layer with its fanout pruned.
+        assert_eq!(plan.pruned_vertices, 1);
+        assert_eq!(plan.pruned_edges, mc.sample1 as u64);
+        assert_eq!(plan.inject.len(), 1);
+        let inj = &plan.inject[0];
+        assert_eq!(inj.layer, 0);
+        assert_eq!(nf.layers[0].inputs[inj.row as usize], hit);
+        // The hit row's sampling was skipped: zero in-edges, and the
+        // layer lost exactly that vertex's fanout.
+        assert_eq!(nf.layers[0].in_degree(inj.row as usize), 0);
+        assert_eq!(nf.layers[0].edges.len() + mc.sample1, base.layers[0].edges.len());
+        assert!(nf.neighborhood_size() <= base.neighborhood_size());
+        // The final layer is never consulted, so its structure and the
+        // reply targets are untouched.
+        assert_eq!(nf.layers[1].edges, base.layers[1].edges);
+        assert_eq!(nf.targets, base.targets);
+        // Admissible misses became harvest slots (never for the hit).
+        assert!(!plan.harvest.is_empty());
+        assert!(plan.harvest.iter().all(|h| h.layer == 0 && h.vertex != hit));
     }
 
     #[test]

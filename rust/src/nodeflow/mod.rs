@@ -13,6 +13,9 @@ mod build;
 mod partition;
 mod sampler;
 
-pub use build::{Nodeflow, NodeflowLayer, NormKind};
+pub use build::{
+    HarvestRow, MemoHarvest, MemoPlan, MemoProbe, MemoRow, MemoSlot, Nodeflow, NodeflowLayer,
+    NormKind,
+};
 pub use partition::{PartitionedLayer, Block};
 pub use sampler::Sampler;

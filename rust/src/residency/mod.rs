@@ -586,8 +586,9 @@ mod tests {
             nf: &Nodeflow,
             features: &StagedFeatures,
             scratch: &'s mut crate::backend::BackendScratch,
+            memo: Option<crate::backend::MemoCtx<'_>>,
         ) -> Result<BackendOutput<'s>> {
-            self.inner.execute(prepared, nf, features, scratch)
+            self.inner.execute(prepared, nf, features, scratch, memo)
         }
     }
 

@@ -81,7 +81,9 @@ impl DegreeClasses {
     }
 
     /// Protection level for an out-degree: hubs get more second chances.
-    fn class(&self, degree: usize) -> u8 {
+    /// Public so other degree-aware caches (the activation memo cache)
+    /// share one notion of "hub" per graph/partition.
+    pub fn class(&self, degree: usize) -> u8 {
         if degree <= self.b1 {
             1
         } else if degree <= self.b2 {

@@ -81,6 +81,11 @@ pub struct OpenLoopConfig {
     pub weight_budget_bytes: usize,
     /// Eviction policy of the budgeted weight store (`--evict`).
     pub evict: EvictPolicy,
+    /// Cross-request hub-embedding memo budget in cached interior-layer
+    /// rows across the pool (`--memo-rows`, 0 = off). Exact activation
+    /// reuse: replies are bit-identical for any budget; only the
+    /// fixed-point and reference backends memoize.
+    pub memo_rows: usize,
     pub builders: usize,
     /// Pacing lanes submitting the arrival schedule (0 = auto-scale
     /// with the offered rate). One sleep+spin thread saturates around
@@ -116,6 +121,7 @@ impl Default for OpenLoopConfig {
             tenant_skew: 0.0,
             weight_budget_bytes: 0,
             evict: EvictPolicy::default(),
+            memo_rows: 0,
             builders: 4,
             submit_lanes: 0,
             trace_sample: 64,
@@ -187,6 +193,11 @@ impl OpenLoopReport {
             // alongside the cycle sim's overlap fraction for the same
             // jobs (host vs on-chip phase overlap, side by side).
             ("staged_jobs", self.stats.staged_jobs as f64),
+            // Layer-0 feature rows actually staged for execution —
+            // memoized subtree pruning shows up here as a drop at
+            // equal load (always reported, so the delta is visible
+            // against memo-off runs).
+            ("staged_rows", self.stats.staged_rows as f64),
             ("prefetch_stalls", self.stats.prefetch_stalls as f64),
             ("engine_stalls", self.stats.engine_stalls as f64),
             ("prefetch_occupancy", self.stats.prefetch_occupancy),
@@ -249,6 +260,21 @@ impl OpenLoopReport {
             out.push(("residency_prepare_failures".to_string(), self.stats.residency_prepare_failures as f64));
             out.push(("residency_prepare_p50_us".to_string(), self.stats.residency_prepare_p50_us));
             out.push(("residency_prepare_p99_us".to_string(), self.stats.residency_prepare_p99_us));
+        }
+        // Memoization summary only when a memo budget is configured —
+        // `--memo-rows 0` reports keep their historical key set.
+        if self.stats.memo_rows_total > 0 {
+            out.push(("memo_rows_total".to_string(), self.stats.memo_rows_total as f64));
+            out.push(("memo_hits".to_string(), self.stats.memo_hits as f64));
+            out.push(("memo_misses".to_string(), self.stats.memo_misses as f64));
+            out.push(("memo_hit_rate".to_string(), self.stats.memo_hit_rate));
+            out.push(("memo_deposits".to_string(), self.stats.memo_deposits as f64));
+            out.push(("memo_evictions".to_string(), self.stats.memo_evictions as f64));
+            out.push(("memo_resident_rows".to_string(), self.stats.memo_resident_rows as f64));
+            out.push(("memo_resident_bytes".to_string(), self.stats.memo_resident_bytes as f64));
+            out.push(("memo_pruned_vertices".to_string(), self.stats.memo_pruned_vertices as f64));
+            out.push(("memo_pruned_edges".to_string(), self.stats.memo_pruned_edges as f64));
+            out.push(("memo_dedup_hits".to_string(), self.stats.memo_dedup_hits as f64));
         }
         // Control-plane summary only when a controller actually ran —
         // `--control off` reports keep their historical key set.
@@ -329,6 +355,7 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
         cache_rows: cfg.cache_rows,
         weight_budget_bytes: cfg.weight_budget_bytes,
         evict: cfg.evict,
+        memo_rows: cfg.memo_rows,
         builders: cfg.builders,
         trace_sample: cfg.trace_sample,
         // Open loop: the submission path must never block, or the
@@ -414,10 +441,12 @@ pub fn run_open_loop(graph: &CsrGraph, cfg: &OpenLoopConfig) -> Result<OpenLoopR
 /// format — labels look like `serve_load/poisson_r100_s4`, gaining a
 /// `_pdegree` / `_phash` suffix only when `base.partition` is on, a
 /// `_cstatic` / `_cadaptive` suffix only when `base.control` is on, a
-/// `_t{n}z{skew}` suffix only when a tenant zoo is registered, and a
+/// `_t{n}z{skew}` suffix only when a tenant zoo is registered, a
 /// `_w{bytes}b_e{policy}` suffix only when a weight budget constrains
-/// the store (so historical unpartitioned, uncontrolled, untenanted
-/// labels stay byte-stable in `BENCH_serve.json`).
+/// the store, a `_z{skew}` suffix only when targets are Zipf-skewed,
+/// and a `_m{rows}` suffix only when a memo budget is configured (so
+/// historical unpartitioned, uncontrolled, untenanted labels stay
+/// byte-stable in `BENCH_serve.json`).
 pub fn run_sweep(
     graph: &CsrGraph,
     rates_rps: &[f64],
@@ -448,15 +477,27 @@ pub fn run_sweep(
             } else {
                 String::new()
             };
+            let skew = if base.target_skew > 0.0 {
+                format!("_z{:.1}", base.target_skew)
+            } else {
+                String::new()
+            };
+            let memo = if base.memo_rows > 0 {
+                format!("_m{}", base.memo_rows)
+            } else {
+                String::new()
+            };
             let label = format!(
-                "serve_load/{}_r{}_s{}{}{}{}{}",
+                "serve_load/{}_r{}_s{}{}{}{}{}{}{}",
                 process.label(),
                 rate.round(),
                 shards,
                 part,
                 ctl,
                 ten,
-                res
+                res,
+                skew,
+                memo
             );
             let report = run_open_loop(graph, &cfg)?;
             out.push((label, report));
@@ -740,6 +781,69 @@ mod tests {
             "missing label {want}; got {:?}",
             pts.iter().map(|(l, _)| l.clone()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn memo_report_gates_keys_and_labels() {
+        let g = generate(&GeneratorParams { nodes: 1_000, mean_degree: 6.0, ..Default::default() });
+        // Off (default): no memo_* keys, no memo series — but the
+        // always-on staged_rows metric reports regardless.
+        let off = run_open_loop(&g, &tiny_cfg(2_000.0, 12)).unwrap();
+        assert!(off.metrics().iter().all(|(k, _)| !k.starts_with("memo_")));
+        assert!(!off.prom.contains("grip_memo_"));
+        assert!(
+            off.metrics().iter().any(|(k, &v)| *k == "staged_rows" && v > 0.0),
+            "staged_rows reports even with memo off"
+        );
+
+        // Memoized Zipf-skewed run vs the identical memo-off schedule:
+        // the memo budget may only reshape nodeflows, never replies.
+        let base = OpenLoopConfig { target_skew: 1.1, ..tiny_cfg(2_000.0, 32) };
+        let plain = run_open_loop(&g, &base).unwrap();
+        let cfg = OpenLoopConfig { memo_rows: 4096, ..base.clone() };
+        let report = run_open_loop(&g, &cfg).unwrap();
+        assert_eq!(report.responses.len(), 32);
+        for (a, b) in plain.responses.iter().zip(report.responses.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.embedding, b.embedding, "id {}: memoization changed numerics", a.id);
+            assert!(
+                b.accel_us <= a.accel_us,
+                "id {}: a pruned nodeflow cannot cost more sim time",
+                a.id
+            );
+        }
+        assert!(
+            report.stats.staged_rows <= plain.stats.staged_rows,
+            "pruning can only reduce staged feature rows"
+        );
+        let metrics = report.metrics();
+        for key in [
+            "memo_rows_total",
+            "memo_hits",
+            "memo_misses",
+            "memo_hit_rate",
+            "memo_deposits",
+            "memo_evictions",
+            "memo_resident_rows",
+            "memo_resident_bytes",
+            "memo_pruned_vertices",
+            "memo_pruned_edges",
+            "memo_dedup_hits",
+        ] {
+            assert!(metrics.iter().any(|(k, _)| *k == key), "missing {key}");
+        }
+        assert!(report.prom.contains("grip_memo_rows_total"));
+        assert!(report.prom.contains("grip_memo_hit_rate"));
+        assert!(report.prom.contains("grip_staged_rows_total"));
+        // Sweep labels gain the skew and memo suffixes only here.
+        let pts = run_sweep(&g, &[2_000.0], &[1], &cfg, poisson).unwrap();
+        assert!(
+            pts.iter().any(|(l, _)| l == "serve_load/poisson_r2000_s1_z1.1_m4096"),
+            "got {:?}",
+            pts.iter().map(|(l, _)| l.clone()).collect::<Vec<_>>()
+        );
+        let zonly = run_sweep(&g, &[2_000.0], &[1], &base, poisson).unwrap();
+        assert!(zonly.iter().any(|(l, _)| l == "serve_load/poisson_r2000_s1_z1.1"));
     }
 
     #[test]

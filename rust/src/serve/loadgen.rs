@@ -231,7 +231,10 @@ pub fn generate_arrivals(
 /// [`generate_arrivals`] with a [`TenantMix`] model sampler — the
 /// multi-tenant entry point. Both mix variants cost one rng draw per
 /// arrival (see [`TenantMix`]), so the schedule's times and targets
-/// are invariant under the tenant-skew setting.
+/// are invariant under the tenant-skew setting. Per arrival the draw
+/// order is gap → target → model (targets before any model draw): the
+/// target column — the input the memo cache keys on — can never move
+/// because a downstream mix option toggled.
 pub fn generate_arrivals_mixed(
     process: ArrivalProcess,
     mix: &TenantMix,
@@ -248,11 +251,13 @@ pub fn generate_arrivals_mixed(
             let mean_gap_us = 1e6 / rate_rps.max(1e-9);
             while out.len() < n {
                 t_us += exp_sample(&mut rng, mean_gap_us);
-                out.push(Arrival {
-                    t_us,
-                    model: mix.pick(&mut rng),
-                    target: targets.sample(&mut rng, num_vertices),
-                });
+                // Draw order is gap → target → model, each costing
+                // exactly one rng advance: the memo-relevant target
+                // column comes before any per-request model draw, so
+                // schedules stay draw-for-draw aligned across every
+                // mix/skew/memo knob combination.
+                let target = targets.sample(&mut rng, num_vertices);
+                out.push(Arrival { t_us, model: mix.pick(&mut rng), target });
             }
         }
         ArrivalProcess::Bursty { base_rps, burst_rps, base_dwell_ms, burst_dwell_ms } => {
@@ -274,11 +279,10 @@ pub fn generate_arrivals_mixed(
                     continue;
                 }
                 t_us += gap;
-                out.push(Arrival {
-                    t_us,
-                    model: mix.pick(&mut rng),
-                    target: targets.sample(&mut rng, num_vertices),
-                });
+                // Same draw discipline as the Poisson arm: gap →
+                // target → model, one rng advance each.
+                let target = targets.sample(&mut rng, num_vertices);
+                out.push(Arrival { t_us, model: mix.pick(&mut rng), target });
             }
         }
     }

@@ -1,0 +1,385 @@
+//! Cross-request activation memoization (PR 10): a degree-aware clock
+//! cache of *interior-layer embeddings*, the dual of GRIP's
+//! vertex-tiling. Vertex tiling increases **weight** reuse within one
+//! execution; this cache adds **activation** reuse across executions —
+//! on a static graph with seed-derived serving weights, the post-layer
+//! Q4.12 row of any interior vertex is a pure function of
+//! `(ModelKey, weight_seed, layer, vertex)` (the sampler draws
+//! deterministically per vertex/layer), so high-degree hubs that land
+//! in almost every sampled nodeflow need only be computed once.
+//!
+//! Exactness is structural, not approximate: the cache stores the
+//! post-program Q4.12 rows the fixed-point executor produced, and a
+//! hit is spliced back in bit-for-bit ([`crate::nodeflow::MemoPlan`]),
+//! so replies are identical with the cache on, off, tight, or
+//! thrashing. What a hit *changes* is work: the nodeflow builder
+//! prunes the hit vertex's whole sampling subtree — fewer edges
+//! gathered, fewer layer-0 rows staged, smaller matmuls.
+//!
+//! Policy mirrors the feature cache ([`super::feature_cache`]):
+//! clock/second-chance eviction with degree-weighted lives. Admission
+//! is stricter — only the top two [`DegreeClasses`] (degree above the
+//! calibrated p75) may enter, because a tail vertex's embedding is
+//! nearly never re-requested while it costs the same bytes as a hub's.
+//! One instance per partition when serving partitioned (budget split
+//! like `--cache-rows`), one shared instance otherwise.
+
+use super::feature_cache::DegreeClasses;
+use crate::fixed::Fx16;
+use crate::greta::ModelKey;
+use crate::nodeflow::{MemoHarvest, MemoProbe};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Bytes per cached value (one Q4.12 `Fx16`).
+pub const MEMO_VALUE_BYTES: u64 = 2;
+
+/// Minimum [`DegreeClasses::class`] admitted: hubs only (class 3 and 4,
+/// i.e. degree above the calibrated p75).
+pub const MEMO_MIN_CLASS: u8 = 3;
+
+/// Full cache key: embeddings are pure in all four components, and all
+/// four are necessary — two weight seeds (or two models) must never
+/// share an entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MemoKey {
+    pub model: ModelKey,
+    pub seed: u64,
+    pub layer: u32,
+    pub vertex: u32,
+}
+
+struct Slot {
+    key: MemoKey,
+    /// Second-chance lives; refreshed to the degree class on hit,
+    /// decremented by the clock hand.
+    lives: u8,
+    class: u8,
+    row: Vec<Fx16>,
+}
+
+struct Inner {
+    index: HashMap<MemoKey, usize>,
+    slots: Vec<Slot>,
+    hand: usize,
+    /// Σ row lengths over resident slots (rows vary in width per
+    /// model/layer), for byte accounting.
+    resident_values: u64,
+}
+
+/// Degree-aware clock cache of interior-layer Q4.12 embedding rows.
+/// See the module docs for the policy and exactness argument.
+pub struct MemoCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    classes: DegreeClasses,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    deposits: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl MemoCache {
+    /// A cache holding at most `capacity` rows, admitting only vertices
+    /// whose degree class under `classes` is ≥ [`MEMO_MIN_CLASS`].
+    /// `capacity == 0` disables memoization entirely (no admission, no
+    /// counters — the `--memo-rows 0` baseline).
+    pub fn with_classes(capacity: usize, classes: DegreeClasses) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                index: HashMap::with_capacity(capacity),
+                slots: Vec::with_capacity(capacity),
+                hand: 0,
+                resident_values: 0,
+            }),
+            capacity,
+            classes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            deposits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Maximum resident rows (0 = memoization disabled).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn classes(&self) -> DegreeClasses {
+        self.classes
+    }
+
+    /// Hub-only admission gate: would a row for a vertex of this
+    /// out-degree be stored at all?
+    pub fn admits(&self, degree: usize) -> bool {
+        self.capacity > 0 && self.classes.class(degree) >= MEMO_MIN_CLASS
+    }
+
+    /// The exact cached row, if resident. A hit refreshes the slot's
+    /// second-chance lives; a miss only counts (the deposit comes later
+    /// from the executor's harvest).
+    pub fn lookup(&self, key: MemoKey) -> Option<Vec<Fx16>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().expect("memo cache poisoned");
+        if let Some(&si) = inner.index.get(&key) {
+            let slot = &mut inner.slots[si];
+            slot.lives = slot.lives.max(slot.class);
+            let row = slot.row.clone();
+            drop(inner);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(row);
+        }
+        drop(inner);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Offer a freshly computed row under the degree-weighted clock
+    /// policy (same single-probe second-chance as the feature cache:
+    /// the resident under the hand is evicted only if its lives do not
+    /// exceed the candidate's class, else it loses one life and the
+    /// candidate is bypassed). Duplicate keys are dropped — the first
+    /// deposit already holds the (identical, pure) value.
+    pub fn insert(&self, key: MemoKey, degree: usize, row: Vec<Fx16>) {
+        if !self.admits(degree) {
+            return;
+        }
+        let class = self.classes.class(degree);
+        let mut inner = self.inner.lock().expect("memo cache poisoned");
+        if inner.index.contains_key(&key) {
+            return;
+        }
+        if inner.slots.len() < self.capacity {
+            let si = inner.slots.len();
+            inner.resident_values += row.len() as u64;
+            inner.slots.push(Slot { key, lives: class, class, row });
+            inner.index.insert(key, si);
+            drop(inner);
+            self.deposits.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let hand = inner.hand;
+        inner.hand = (inner.hand + 1) % inner.slots.len();
+        if inner.slots[hand].lives <= class {
+            let old_key = inner.slots[hand].key;
+            let old_len = inner.slots[hand].row.len() as u64;
+            inner.index.remove(&old_key);
+            inner.resident_values = inner.resident_values - old_len + row.len() as u64;
+            let slot = &mut inner.slots[hand];
+            slot.key = key;
+            slot.lives = class;
+            slot.class = class;
+            slot.row = row;
+            inner.index.insert(key, hand);
+            drop(inner);
+            self.deposits.fetch_add(1, Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        } else {
+            inner.slots[hand].lives -= 1;
+        }
+    }
+
+    /// Move an executor harvest into the cache (one insert per row).
+    pub fn deposit(&self, model: ModelKey, seed: u64, harvest: MemoHarvest) {
+        for r in harvest.rows {
+            let key = MemoKey { model, seed, layer: r.layer, vertex: r.vertex };
+            self.insert(key, r.degree as usize, r.values);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn deposits(&self) -> u64 {
+        self.deposits.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Hit fraction over the cache's lifetime (0.0 when untouched).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m > 0.0 {
+            h / (h + m)
+        } else {
+            0.0
+        }
+    }
+
+    /// Rows currently resident.
+    pub fn resident_rows(&self) -> usize {
+        self.inner.lock().expect("memo cache poisoned").slots.len()
+    }
+
+    /// Bytes currently resident (2 bytes per Q4.12 value; row widths
+    /// vary per model/layer).
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().expect("memo cache poisoned").resident_values * MEMO_VALUE_BYTES
+    }
+}
+
+/// One request's view of a [`MemoCache`]: the cache handle plus the
+/// `(model, weight_seed)` key context, presented to the nodeflow
+/// builder as a [`MemoProbe`]. Keeps the nodeflow crate ignorant of
+/// cache policy and key layout.
+pub struct MemoScope<'a> {
+    cache: &'a MemoCache,
+    model: ModelKey,
+    seed: u64,
+}
+
+impl<'a> MemoScope<'a> {
+    pub fn new(cache: &'a MemoCache, model: ModelKey, seed: u64) -> Self {
+        Self { cache, model, seed }
+    }
+}
+
+impl MemoProbe for MemoScope<'_> {
+    fn admits(&self, _layer: usize, _vertex: u32, degree: usize) -> bool {
+        self.cache.admits(degree)
+    }
+
+    fn lookup(&self, layer: usize, vertex: u32) -> Option<Vec<Fx16>> {
+        self.cache.lookup(MemoKey {
+            model: self.model,
+            seed: self.seed,
+            layer: layer as u32,
+            vertex,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes() -> DegreeClasses {
+        // b1/b2/b3 = 2/8/32: class 3 starts above degree 8.
+        DegreeClasses::default()
+    }
+
+    fn key(seed: u64, layer: u32, vertex: u32) -> MemoKey {
+        MemoKey { model: ModelKey::from_index(0), seed, layer, vertex }
+    }
+
+    fn row(tag: i16) -> Vec<Fx16> {
+        vec![Fx16(tag); 4]
+    }
+
+    #[test]
+    fn hub_only_admission() {
+        let c = MemoCache::with_classes(8, classes());
+        assert!(!c.admits(1), "tail (class 1) never admitted");
+        assert!(!c.admits(8), "class 2 never admitted");
+        assert!(c.admits(9), "class 3 admitted");
+        assert!(c.admits(1000), "class 4 admitted");
+        c.insert(key(0, 0, 1), 1, row(1));
+        assert_eq!(c.resident_rows(), 0, "tail insert is dropped");
+        c.insert(key(0, 0, 2), 100, row(2));
+        assert_eq!(c.resident_rows(), 1);
+        assert_eq!(c.deposits(), 1);
+        assert_eq!(c.resident_bytes(), 4 * MEMO_VALUE_BYTES);
+    }
+
+    #[test]
+    fn lookup_returns_exact_bytes_and_counts() {
+        let c = MemoCache::with_classes(8, classes());
+        c.insert(key(7, 1, 42), 50, row(1234));
+        assert_eq!(c.lookup(key(7, 1, 42)), Some(row(1234)));
+        assert_eq!(c.lookup(key(7, 1, 43)), None);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_seeds_never_share_an_entry() {
+        let c = MemoCache::with_classes(8, classes());
+        c.insert(key(1, 0, 9), 100, row(11));
+        c.insert(key(2, 0, 9), 100, row(22));
+        assert_eq!(c.lookup(key(1, 0, 9)), Some(row(11)));
+        assert_eq!(c.lookup(key(2, 0, 9)), Some(row(22)));
+        assert_eq!(c.resident_rows(), 2, "distinct seeds occupy distinct slots");
+        // Same isolation across layers and models.
+        assert_eq!(c.lookup(key(1, 1, 9)), None);
+        let other_model = MemoKey { model: ModelKey::from_index(1), ..key(1, 0, 9) };
+        assert_eq!(c.lookup(other_model), None);
+    }
+
+    #[test]
+    fn duplicate_deposit_is_dropped() {
+        let c = MemoCache::with_classes(8, classes());
+        c.insert(key(0, 0, 5), 100, row(1));
+        c.insert(key(0, 0, 5), 100, row(2));
+        assert_eq!(c.deposits(), 1);
+        assert_eq!(c.lookup(key(0, 0, 5)), Some(row(1)), "first (pure) value wins");
+    }
+
+    #[test]
+    fn zero_capacity_disables_everything() {
+        let c = MemoCache::with_classes(0, classes());
+        assert!(!c.admits(10_000));
+        c.insert(key(0, 0, 1), 10_000, row(1));
+        assert_eq!(c.lookup(key(0, 0, 1)), None);
+        assert_eq!(c.hits() + c.misses() + c.deposits(), 0, "off = no counters");
+        assert_eq!(c.resident_rows(), 0);
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn clock_eviction_bounds_residency_and_tracks_bytes() {
+        let c = MemoCache::with_classes(2, classes());
+        for v in 0..10u32 {
+            c.insert(key(0, 0, v), 9, row(v as i16));
+        }
+        assert_eq!(c.resident_rows(), 2, "never exceeds capacity");
+        assert!(c.evictions() > 0, "equal-class inserts must turn the cache over");
+        assert_eq!(c.resident_bytes(), 2 * 4 * MEMO_VALUE_BYTES);
+        // Higher-class (hub) rows resist eviction by equal-or-lower
+        // candidates for `class` hand passes.
+        let c2 = MemoCache::with_classes(1, classes());
+        c2.insert(key(0, 0, 1), 1000, row(1)); // class 4
+        c2.insert(key(0, 0, 2), 9, row(2)); // class 3: bypassed 1st try
+        assert_eq!(c2.lookup(key(0, 0, 1)), Some(row(1)));
+        assert_eq!(c2.lookup(key(0, 0, 2)), None);
+    }
+
+    #[test]
+    fn scope_probe_translates_layer_and_vertex() {
+        let c = MemoCache::with_classes(4, classes());
+        let m = ModelKey::from_index(3);
+        c.insert(MemoKey { model: m, seed: 99, layer: 1, vertex: 7 }, 100, row(5));
+        let scope = MemoScope::new(&c, m, 99);
+        assert!(MemoProbe::admits(&scope, 1, 7, 100));
+        assert!(!MemoProbe::admits(&scope, 1, 7, 2));
+        assert_eq!(MemoProbe::lookup(&scope, 1, 7), Some(row(5)));
+        assert_eq!(MemoProbe::lookup(&scope, 0, 7), None, "layer is part of the key");
+        let wrong_seed = MemoScope::new(&c, m, 98);
+        assert_eq!(MemoProbe::lookup(&wrong_seed, 1, 7), None);
+    }
+
+    #[test]
+    fn deposit_moves_harvest_rows_under_admission() {
+        use crate::nodeflow::HarvestRow;
+        let c = MemoCache::with_classes(8, classes());
+        let mut h = MemoHarvest::default();
+        h.rows.push(HarvestRow { layer: 0, vertex: 1, degree: 100, values: row(1) });
+        h.rows.push(HarvestRow { layer: 0, vertex: 2, degree: 1, values: row(2) });
+        let m = ModelKey::from_index(0);
+        c.deposit(m, 5, h);
+        assert_eq!(c.resident_rows(), 1, "tail harvest row filtered at deposit");
+        assert_eq!(c.lookup(MemoKey { model: m, seed: 5, layer: 0, vertex: 1 }), Some(row(1)));
+    }
+}

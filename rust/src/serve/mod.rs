@@ -84,6 +84,7 @@ pub mod batcher;
 pub mod feature_cache;
 pub mod harness;
 pub mod loadgen;
+pub mod memo_cache;
 pub mod shards;
 
 pub use batcher::{BatchConfig, Batcher, Pending};
@@ -93,7 +94,8 @@ pub use loadgen::{
     generate_arrivals, generate_arrivals_mixed, Arrival, ArrivalProcess, ModelMix, TargetDist,
     TenantMix,
 };
+pub use memo_cache::{MemoCache, MemoKey, MemoScope, MEMO_MIN_CLASS, MEMO_VALUE_BYTES};
 pub use shards::{
-    fixed_serving_args, split_cache_rows, CachedFeatures, ExecJob, PipelineConfig, PoolSignals,
-    ReplySlot, ServeStats, ShardPool, ShardSpec,
+    fixed_serving_args, split_cache_rows, CachedFeatures, ExecJob, MemoRouter, PipelineConfig,
+    PoolSignals, ReplySlot, ServeStats, ShardPool, ShardSpec,
 };

@@ -83,7 +83,7 @@
 //! while sibling models keep serving.)
 
 use crate::backend::{
-    BackendChoice, BackendFactory, BackendScratch, NumericsBackend, PreparedModel,
+    BackendChoice, BackendFactory, BackendScratch, MemoCtx, NumericsBackend, PreparedModel,
     StagedFeatures,
 };
 use crate::config::{GripConfig, ModelConfig};
@@ -91,10 +91,10 @@ use crate::control::{ControlStats, Knobs, RawSignals, SignalSource};
 use crate::coordinator::{InferenceResponse, LatencyStats};
 use crate::graph::{CsrGraph, PartitionStrategy, Partitioning};
 use crate::greta::{exec_test_args, ExecArgs, ModelKey, ModelLibrary, ModelPlan, SelfScale};
-use crate::nodeflow::Nodeflow;
+use crate::nodeflow::{MemoHarvest, MemoPlan, Nodeflow};
 use crate::residency::{split_weight_budget, ResidencyConfig, ResidencyCounters, ResidencyManager};
 use crate::runtime::{fill_feature_row, FeatureSource};
-use crate::serve::{DegreeClasses, FeatureCache};
+use crate::serve::{DegreeClasses, FeatureCache, MemoCache, MemoScope};
 use crate::sim::{simulate, SimResult};
 use crate::telemetry::{SpanTrace, Stage, Telemetry};
 use anyhow::{anyhow, Result};
@@ -153,6 +153,11 @@ pub struct ExecJob {
     /// When the builder finished the nodeflow and enqueued the job
     /// toward its shard (start of the shard-wait window).
     pub t_built: Instant,
+    /// Activation-memo splice plan recorded while `nf` was built
+    /// (`None` when memoization is off or nothing hit/harvested): rows
+    /// to inject in place of pruned subtrees, plus slots to harvest
+    /// back into the cache after execution.
+    pub memo: Option<MemoPlan>,
 }
 
 /// Per-shard phase-decoupling policy: how many edge-centric prefetch
@@ -221,6 +226,13 @@ pub struct ShardSpec {
     /// so total resident feature memory is invariant under the shard
     /// sweep.
     pub cache_rows: usize,
+    /// **Total** activation-memo capacity in rows (0 disables
+    /// cross-request memoization — the default, byte-identical to
+    /// earlier PRs). Split across shards like `cache_rows` when
+    /// partitioned; one shared cache otherwise. Only exact-Q4.12
+    /// engines (`fixed`, `reference`) memoize — float and timing-only
+    /// backends ignore the budget entirely.
+    pub memo_rows: usize,
     /// Vertex partitioning across shards (`Off` = the legacy shared
     /// queue + shared cache pool).
     pub partition: PartitionStrategy,
@@ -253,6 +265,34 @@ pub fn split_cache_rows(rows: usize, shards: usize) -> Vec<usize> {
     (0..shards).map(|i| rows / shards + usize::from(i < rows % shards)).collect()
 }
 
+/// The builders' handle to the pool's activation-memo caches
+/// (`--memo-rows > 0` with an exact-Q4.12 backend): maps a job's target
+/// vertex to the [`MemoCache`] of its home shard — the same
+/// `Partitioning::owner` routing the job itself will take, so a
+/// builder only ever consults the cache its executor deposits into.
+/// Unpartitioned pools hold one shared cache.
+#[derive(Clone)]
+pub struct MemoRouter {
+    caches: Vec<Arc<MemoCache>>,
+    partition: Option<Arc<Partitioning>>,
+    weight_seed: u64,
+}
+
+impl MemoRouter {
+    fn cache_for(&self, target: u32) -> &Arc<MemoCache> {
+        match &self.partition {
+            Some(p) => &self.caches[p.owner(target)],
+            None => &self.caches[0],
+        }
+    }
+
+    /// A [`crate::nodeflow::MemoProbe`] over the home-shard cache of
+    /// `target`, keyed by `(model, weight_seed)`.
+    pub fn scope(&self, model: ModelKey, target: u32) -> MemoScope<'_> {
+        MemoScope::new(self.cache_for(target), model, self.weight_seed)
+    }
+}
+
 impl Default for ShardSpec {
     fn default() -> Self {
         Self {
@@ -262,6 +302,7 @@ impl Default for ShardSpec {
             backend: BackendChoice::TimingOnly,
             pipeline: PipelineConfig::default(),
             cache_rows: 4096,
+            memo_rows: 0,
             partition: PartitionStrategy::Off,
             weight_seed: 0x5EED_5E4E,
             residency: ResidencyConfig::default(),
@@ -306,6 +347,17 @@ struct PoolCounters {
     /// cycles and total phase-busy cycles across simulated jobs.
     sim_overlap_cycles: AtomicU64,
     sim_busy_cycles: AtomicU64,
+    /// Feature rows actually gathered at layer 0 across jobs (the
+    /// denominator memoization shrinks: a pruned subtree's sources
+    /// never reach the staging gather).
+    staged_rows: AtomicU64,
+    /// Interior output vertices whose sampling was skipped on a memo
+    /// hit, the directly skipped sampled edges, and the within-request
+    /// repeat expansions answered by the builder's epoch-dedup buffer
+    /// (all folded from per-job [`MemoPlan`]s; zero with memo off).
+    memo_pruned_vertices: AtomicU64,
+    memo_pruned_edges: AtomicU64,
+    memo_dedup_hits: AtomicU64,
     /// Batched cross-partition pulls issued (one per remote peer per
     /// job) and the feature rows they carried.
     boundary_fetches: AtomicU64,
@@ -427,6 +479,38 @@ pub struct ServeStats {
     /// miss charges to its request.
     pub residency_prepare_p50_us: f64,
     pub residency_prepare_p99_us: f64,
+    /// Layer-0 feature rows gathered across all jobs (always reported;
+    /// the staged-row delta is how memoization's transitive subtree
+    /// pruning shows up side by side with the cycle sim).
+    pub staged_rows: u64,
+    /// Activation-memo summary (all zero with `--memo-rows 0`, the gate
+    /// every exporter keys on — memo-off output stays byte-identical to
+    /// earlier PRs). Total memo capacity in rows across shards.
+    pub memo_rows_total: usize,
+    /// Per-cache memo capacity: one entry per shard when partitioned, a
+    /// single entry otherwise. Sums to `memo_rows_total`.
+    pub shard_memo_rows: Vec<usize>,
+    /// Builder-side lookups that returned a cached interior row
+    /// (pruning its subtree), and those that missed.
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+    /// `hits / (hits + misses)` (0 before any lookup).
+    pub memo_hit_rate: f64,
+    /// Freshly computed interior rows deposited by the executors.
+    pub memo_deposits: u64,
+    /// Resident rows evicted by the clock hand to make room.
+    pub memo_evictions: u64,
+    /// Rows / bytes currently resident across the memo caches.
+    pub memo_resident_rows: u64,
+    pub memo_resident_bytes: u64,
+    /// Interior vertices whose sampling was skipped on a hit, and the
+    /// sampled edges directly skipped there (the transitive saving is
+    /// the `staged_rows` delta).
+    pub memo_pruned_vertices: u64,
+    pub memo_pruned_edges: u64,
+    /// Within-request repeat neighbor expansions answered by the
+    /// builder's epoch-stamped dedup buffer.
+    pub memo_dedup_hits: u64,
     /// Control-plane summary, composed by the coordinator (the pool
     /// itself reports the default `"off"` shape).
     pub control: ControlStats,
@@ -439,6 +523,11 @@ pub struct ShardPool {
     /// One shared cache (unpartitioned) or one partition-local cache
     /// per shard; capacities always sum to `ShardSpec::cache_rows`.
     caches: Vec<Arc<FeatureCache>>,
+    /// Activation-memo caches, laid out like `caches` (empty when
+    /// memoization is off); capacities sum to `ShardSpec::memo_rows`.
+    memo_caches: Vec<Arc<MemoCache>>,
+    /// The builders' routing handle over `memo_caches` (`None` = off).
+    memo_router: Option<MemoRouter>,
     counters: Arc<PoolCounters>,
     /// Shared weight-residency telemetry (all zero when unbudgeted).
     res_counters: Arc<ResidencyCounters>,
@@ -654,6 +743,12 @@ fn stage_features(
     route: Option<&RouteCtx>,
     counters: &PoolCounters,
 ) -> f64 {
+    // Every layer-0 input becomes one gathered feature row; the memo
+    // path's transitive subtree pruning shows up as this counter
+    // growing slower for the same request stream.
+    counters
+        .staged_rows
+        .fetch_add(nf.layers[0].num_inputs() as u64, Ordering::Relaxed);
     match route {
         Some(r) => {
             let (boundary, wait_us) =
@@ -735,6 +830,56 @@ impl ShardPool {
             PartitionStrategy::Off => None,
             s => Some(Arc::new(Partitioning::build(s, &graph, shards))),
         };
+        // Activation-memo caches: laid out exactly like the feature
+        // caches (largest-remainder split per partition, or one shared
+        // instance), but only for exact-Q4.12 engines — a float or
+        // timing-only backend never produces rows a splice could reuse
+        // bit-for-bit, so its pool carries no memo state at all.
+        let memo_active = spec.memo_rows > 0
+            && matches!(spec.backend, BackendChoice::Fixed | BackendChoice::Reference);
+        let memo_caches: Vec<Arc<MemoCache>> = if !memo_active {
+            Vec::new()
+        } else if let Some(part) = &partitioning {
+            split_cache_rows(spec.memo_rows, shards)
+                .into_iter()
+                .enumerate()
+                .map(|(i, cap)| {
+                    let classes = if cap > 0 {
+                        DegreeClasses::from_degrees(part.owned_degrees(&graph, i))
+                    } else {
+                        DegreeClasses::default()
+                    };
+                    Arc::new(MemoCache::with_classes(cap, classes))
+                })
+                .collect()
+        } else {
+            vec![Arc::new(MemoCache::with_classes(
+                spec.memo_rows,
+                DegreeClasses::from_graph(&graph),
+            ))]
+        };
+        let memo_router = if memo_caches.is_empty() {
+            None
+        } else {
+            Some(MemoRouter {
+                caches: memo_caches.clone(),
+                partition: partitioning.clone(),
+                weight_seed: spec.weight_seed,
+            })
+        };
+        // Shard i's engine deposits into (and its builder-side scope
+        // reads from) the same cache the router picks for its targets.
+        let shard_memo: Vec<Option<Arc<MemoCache>>> = (0..shards)
+            .map(|i| {
+                if memo_caches.is_empty() {
+                    None
+                } else if partitioning.is_some() {
+                    Some(memo_caches[i].clone())
+                } else {
+                    Some(memo_caches[0].clone())
+                }
+            })
+            .collect();
         let counters = Arc::new(PoolCounters::default());
         let res_counters = Arc::new(ResidencyCounters::default());
         let status = Arc::new(Mutex::new(vec![String::from("starting"); shards]));
@@ -861,6 +1006,7 @@ impl ShardPool {
                     &library,
                     &graph,
                     &shard_caches[i],
+                    &shard_memo[i],
                     &counters,
                     &res_counters,
                     &status,
@@ -876,6 +1022,7 @@ impl ShardPool {
                 let library = library.clone();
                 let graph = graph.clone();
                 let cache = shard_caches[i].clone();
+                let memo = shard_memo[i].clone();
                 let counters = counters.clone();
                 let res_counters = res_counters.clone();
                 let status = status.clone();
@@ -892,6 +1039,7 @@ impl ShardPool {
                             &library,
                             &graph,
                             &cache,
+                            memo.as_deref(),
                             &counters,
                             &res_counters,
                             &status,
@@ -921,6 +1069,8 @@ impl ShardPool {
         Ok(ShardPool {
             threads,
             caches,
+            memo_caches,
+            memo_router,
             counters,
             res_counters,
             residency: spec.residency,
@@ -955,6 +1105,7 @@ impl ShardPool {
         library: &Arc<ModelLibrary>,
         graph: &Arc<CsrGraph>,
         cache: &Arc<FeatureCache>,
+        memo: &Option<Arc<MemoCache>>,
         counters: &Arc<PoolCounters>,
         res_counters: &Arc<ResidencyCounters>,
         status: &Arc<Mutex<Vec<String>>>,
@@ -1014,6 +1165,7 @@ impl ShardPool {
 
         let spec_e = spec.clone();
         let library_e = library.clone();
+        let memo_e = memo.clone();
         let counters_e = counters.clone();
         let res_counters_e = res_counters.clone();
         let status_e = status.clone();
@@ -1024,8 +1176,9 @@ impl ShardPool {
             .name(format!("grip-shard-{shard}-engine"))
             .spawn(move || {
                 engine_loop(
-                    shard, &spec_e, &library_e, &counters_e, &res_counters_e, &status_e,
-                    init_tx, ready_rx, free_tx, &ready_gauge, &inflight, &knobs_e,
+                    shard, &spec_e, &library_e, memo_e.as_deref(), &counters_e,
+                    &res_counters_e, &status_e, init_tx, ready_rx, free_tx, &ready_gauge,
+                    &inflight, &knobs_e,
                 )
             })
             .map_err(|e| anyhow!("spawning shard {shard} engine: {e}"))?;
@@ -1035,6 +1188,14 @@ impl ShardPool {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// The builders' handle to the activation-memo caches (`None` with
+    /// `--memo-rows 0` or a non-exact backend). Consulting it during
+    /// nodeflow construction is what turns cached rows into pruned
+    /// subtrees.
+    pub fn memo_router(&self) -> Option<MemoRouter> {
+        self.memo_router.clone()
     }
 
     /// The shared knob cells this pool's lanes and engines read.
@@ -1063,6 +1224,11 @@ impl ShardPool {
         let shard_cache_rows: Vec<usize> =
             self.caches.iter().map(|c| c.capacity()).collect();
         let cache_rows_total = shard_cache_rows.iter().sum();
+        let memo_hits: u64 = self.memo_caches.iter().map(|c| c.hits()).sum();
+        let memo_misses: u64 = self.memo_caches.iter().map(|c| c.misses()).sum();
+        let shard_memo_rows: Vec<usize> =
+            self.memo_caches.iter().map(|c| c.capacity()).collect();
+        let memo_rows_total: usize = shard_memo_rows.iter().sum();
         ServeStats {
             shards: self.shards,
             jobs: c.jobs.load(Ordering::Relaxed),
@@ -1126,6 +1292,27 @@ impl ShardPool {
             residency_prepare_failures: rc.prepare_failures.load(Ordering::Relaxed),
             residency_prepare_p50_us: rc.prepare_lat.percentile_us(50.0),
             residency_prepare_p99_us: rc.prepare_lat.percentile_us(99.0),
+            staged_rows: c.staged_rows.load(Ordering::Relaxed),
+            memo_rows_total,
+            shard_memo_rows,
+            memo_hits,
+            memo_misses,
+            memo_hit_rate: if memo_hits + memo_misses > 0 {
+                memo_hits as f64 / (memo_hits + memo_misses) as f64
+            } else {
+                0.0
+            },
+            memo_deposits: self.memo_caches.iter().map(|c| c.deposits()).sum(),
+            memo_evictions: self.memo_caches.iter().map(|c| c.evictions()).sum(),
+            memo_resident_rows: self
+                .memo_caches
+                .iter()
+                .map(|c| c.resident_rows() as u64)
+                .sum(),
+            memo_resident_bytes: self.memo_caches.iter().map(|c| c.resident_bytes()).sum(),
+            memo_pruned_vertices: c.memo_pruned_vertices.load(Ordering::Relaxed),
+            memo_pruned_edges: c.memo_pruned_edges.load(Ordering::Relaxed),
+            memo_dedup_hits: c.memo_dedup_hits.load(Ordering::Relaxed),
             queue_wait_p50_us: st.queue_wait.percentile_us(50.0),
             queue_wait_p99_us: st.queue_wait.percentile_us(99.0),
             prefetch_local_p50_us: st.prefetch_local.percentile_us(50.0),
@@ -1157,6 +1344,7 @@ impl ServeStats {
         push("grip_cache_misses_total", "counter", self.cache_misses.to_string());
         push("grip_cache_hit_rate", "gauge", format!("{:.6}", self.cache_hit_rate));
         push("grip_staged_jobs_total", "counter", self.staged_jobs.to_string());
+        push("grip_staged_rows_total", "counter", self.staged_rows.to_string());
         push("grip_prefetch_stalls_total", "counter", self.prefetch_stalls.to_string());
         push("grip_engine_stalls_total", "counter", self.engine_stalls.to_string());
         push("grip_prefetch_occupancy", "gauge", format!("{:.6}", self.prefetch_occupancy));
@@ -1213,6 +1401,34 @@ impl ServeStats {
                 "grip_residency_prepare_p99_us",
                 "gauge",
                 format!("{:.3}", self.residency_prepare_p99_us),
+            );
+        }
+        // Activation-memo series render only when a memo budget is on
+        // (`memo_rows_total > 0`, the same gating convention as
+        // residency) — `--memo-rows 0` output stays byte-identical.
+        if self.memo_rows_total > 0 {
+            push("grip_memo_rows_total", "gauge", self.memo_rows_total.to_string());
+            push("grip_memo_hits_total", "counter", self.memo_hits.to_string());
+            push("grip_memo_misses_total", "counter", self.memo_misses.to_string());
+            push("grip_memo_hit_rate", "gauge", format!("{:.6}", self.memo_hit_rate));
+            push("grip_memo_deposits_total", "counter", self.memo_deposits.to_string());
+            push("grip_memo_evictions_total", "counter", self.memo_evictions.to_string());
+            push("grip_memo_resident_rows", "gauge", self.memo_resident_rows.to_string());
+            push("grip_memo_resident_bytes", "gauge", self.memo_resident_bytes.to_string());
+            push(
+                "grip_memo_pruned_vertices_total",
+                "counter",
+                self.memo_pruned_vertices.to_string(),
+            );
+            push(
+                "grip_memo_pruned_edges_total",
+                "counter",
+                self.memo_pruned_edges.to_string(),
+            );
+            push(
+                "grip_memo_dedup_hits_total",
+                "counter",
+                self.memo_dedup_hits.to_string(),
             );
         }
         // Control-plane series render only when a controller ran, so
@@ -1542,6 +1758,7 @@ fn engine_loop(
     shard: usize,
     spec: &ShardSpec,
     library: &ModelLibrary,
+    memo: Option<&MemoCache>,
     counters: &PoolCounters,
     res_counters: &Arc<ResidencyCounters>,
     status: &Mutex<Vec<String>>,
@@ -1609,6 +1826,7 @@ fn engine_loop(
             &mut scratch,
             &staged,
             &sim,
+            memo,
             job,
         );
         // Recycle the staging buffer to the lane pool (ignore failure:
@@ -1630,6 +1848,7 @@ fn shard_loop(
     library: &ModelLibrary,
     graph: &CsrGraph,
     cache: &FeatureCache,
+    memo: Option<&MemoCache>,
     counters: &PoolCounters,
     res_counters: &Arc<ResidencyCounters>,
     status: &Mutex<Vec<String>>,
@@ -1676,6 +1895,7 @@ fn shard_loop(
             library,
             graph,
             cache,
+            memo,
             counters,
             engine.backend.as_mut(),
             &mut engine.store,
@@ -1699,6 +1919,7 @@ fn execute_job(
     library: &ModelLibrary,
     graph: &CsrGraph,
     cache: &FeatureCache,
+    memo: Option<&MemoCache>,
     counters: &PoolCounters,
     backend: &mut dyn NumericsBackend,
     store: &mut WeightStore,
@@ -1731,7 +1952,7 @@ fn execute_job(
             t.boundary_wait_us = boundary_us;
         }
     }
-    execute_staged(spec, library, counters, backend, store, scratch, staged, &sim, job);
+    execute_staged(spec, library, counters, backend, store, scratch, staged, &sim, memo, job);
 }
 
 /// The vertex-centric phase: account the job's (already-run) cycle
@@ -1747,10 +1968,18 @@ fn execute_staged(
     scratch: &mut BackendScratch,
     staged: &StagedFeatures,
     sim: &SimResult,
+    memo: Option<&MemoCache>,
     job: ExecJob,
 ) {
-    let ExecJob { model, nf, mut members, t_dequeue, t_built: _ } = job;
+    let ExecJob { model, nf, mut members, t_dequeue, t_built: _, memo: memo_plan } = job;
     let telemetry = &spec.telemetry;
+    // Fold the build-side memo telemetry now: the pruning already
+    // happened when the nodeflow was built, whatever execution does.
+    if let Some(p) = &memo_plan {
+        counters.memo_pruned_vertices.fetch_add(p.pruned_vertices, Ordering::Relaxed);
+        counters.memo_pruned_edges.fetch_add(p.pruned_edges, Ordering::Relaxed);
+        counters.memo_dedup_hits.fetch_add(p.dedup_hits, Ordering::Relaxed);
+    }
     // This job is now on an engine, not upstream of one (see the
     // engine-stall accounting); the gauge drops again with the replies.
     counters.executing.fetch_add(1, Ordering::Relaxed);
@@ -1798,9 +2027,17 @@ fn execute_staged(
     };
 
     // 3. Numerics: one backend call, whatever the engine, over the
-    //    pre-gathered feature rows.
+    //    pre-gathered feature rows — splicing cached interior rows in
+    //    (and harvesting fresh ones out) when a memo plan rode along.
+    let mut harvest = MemoHarvest::default();
+    let memo_ctx = match (&memo_plan, memo) {
+        (Some(p), Some(_)) if !p.is_empty() => {
+            Some(MemoCtx { plan: p, harvest: &mut harvest })
+        }
+        _ => None,
+    };
     let t_exec = Instant::now();
-    let outcome = backend.execute(prepared, &nf, staged, scratch);
+    let outcome = backend.execute(prepared, &nf, staged, scratch, memo_ctx);
     telemetry.stages().compute.record_us(t_exec.elapsed().as_secs_f64() * 1e6);
     let engine_end_us = telemetry.now_us();
 
@@ -1814,6 +2051,14 @@ fn execute_staged(
             }
         }
         Ok(out) => {
+            // Deposit the harvested interior rows before fanning out:
+            // the values are pure, so the very next request for the
+            // same hub can already hit.
+            if let Some(cache) = memo {
+                if !harvest.rows.is_empty() {
+                    cache.deposit(model, spec.weight_seed, harvest);
+                }
+            }
             let timing_only = !out.numerics.is_numeric();
             if timing_only {
                 counters.timing_only.fetch_add(1, Ordering::Relaxed);
@@ -1903,6 +2148,47 @@ mod tests {
             }],
             t_dequeue: Instant::now(),
             t_built: Instant::now(),
+            memo: None,
+        })
+        .unwrap();
+        rrx
+    }
+
+    /// `submit` through the pool's [`MemoRouter`], the way the
+    /// coordinator's builders do when `--memo-rows > 0`: consult the
+    /// target's home cache while building, ship the splice plan with
+    /// the job.
+    fn submit_memo(
+        tx: &mpsc::Sender<ExecJob>,
+        router: &MemoRouter,
+        g: &CsrGraph,
+        mc: &ModelConfig,
+        model: GnnModel,
+        id: u64,
+        targets: &[u32],
+    ) -> mpsc::Receiver<Result<InferenceResponse, String>> {
+        let scope = router.scope(model.key(), targets[0]);
+        let (nf, plan) = Nodeflow::build_layers_memo(
+            g,
+            &Sampler::new(9),
+            targets,
+            &[mc.sample1, mc.sample2],
+            Some(&scope),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(ExecJob {
+            model: model.key(),
+            nf,
+            members: vec![ReplySlot {
+                id,
+                n_targets: targets.len(),
+                t_submit: Instant::now(),
+                reply: rtx,
+                trace: None,
+            }],
+            t_dequeue: Instant::now(),
+            t_built: Instant::now(),
+            memo: if plan.is_empty() { None } else { Some(plan) },
         })
         .unwrap();
         rrx
@@ -2155,6 +2441,7 @@ mod tests {
                 }],
                 t_dequeue: Instant::now(),
                 t_built: Instant::now(),
+                memo: None,
             };
             (job, rrx)
         };
@@ -2162,7 +2449,7 @@ mod tests {
         // 1. A numeric job fills the shared embedding buffer.
         let (job, rx1) = mk_job(0);
         execute_job(
-            &spec, &library, &g, &cache, &counters, fixed.as_mut(), &mut store_fx,
+            &spec, &library, &g, &cache, None, &counters, fixed.as_mut(), &mut store_fx,
             &mut scratch, &mut staged, None, job,
         );
         let r1 = rx1.recv().unwrap().unwrap();
@@ -2171,7 +2458,7 @@ mod tests {
         // 2. A timing-only job reusing the same scratch must reply empty.
         let (job, rx2) = mk_job(1);
         execute_job(
-            &spec, &library, &g, &cache, &counters, timing.as_mut(), &mut store_t,
+            &spec, &library, &g, &cache, None, &counters, timing.as_mut(), &mut store_t,
             &mut scratch, &mut staged, None, job,
         );
         let r2 = rx2.recv().unwrap().unwrap();
@@ -2526,5 +2813,159 @@ mod tests {
         // shard 1 gets nothing.
         let (_, stats) = run_pool_on_graph(g, spec, &[0, 2]);
         assert_eq!(stats.routed_jobs, vec![2, 0]);
+    }
+
+    /// The highest-degree vertices of the test graph — guaranteed to
+    /// sit in the top degree classes the memo cache admits.
+    fn hub_targets(g: &CsrGraph, n: usize) -> Vec<u32> {
+        let mut by_degree: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        by_degree.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+        by_degree.truncate(n);
+        by_degree
+    }
+
+    #[test]
+    fn memoized_pool_hits_prunes_and_stays_bit_identical() {
+        // THE tentpole property at pool level: serving the same hub
+        // targets twice through the memo path must (a) hit the cache,
+        // (b) prune build work and stage fewer rows, and (c) change not
+        // one bit of any reply relative to the memo-off pool.
+        let g = graph();
+        let mc = small_mc();
+        let targets = hub_targets(&g, 4);
+        // Each hub target twice, serially (reply awaited between
+        // submissions so the first job's deposit precedes the second
+        // job's build-time lookup — deterministic hits).
+        let schedule: Vec<u32> = targets.iter().chain(targets.iter()).copied().collect();
+
+        let run = |memo_rows: usize| {
+            let spec = ShardSpec {
+                shards: 1,
+                model_cfg: mc,
+                backend: BackendChoice::Fixed,
+                cache_rows: 256,
+                memo_rows,
+                ..Default::default()
+            };
+            let (tx, rx) = mpsc::channel();
+            let library = Arc::new(ModelLibrary::presets(&mc));
+            let pool =
+                ShardPool::start(&spec, library, g.clone(), rx, gauge(schedule.len())).unwrap();
+            let router = pool.memo_router();
+            assert_eq!(router.is_some(), memo_rows > 0, "router gated on the budget");
+            let mut out = Vec::new();
+            for (i, &t) in schedule.iter().enumerate() {
+                let rrx = match &router {
+                    Some(r) => submit_memo(&tx, r, &g, &mc, GnnModel::Gcn, i as u64, &[t]),
+                    None => submit(&tx, &g, &mc, GnnModel::Gcn, i as u64, &[t]),
+                };
+                out.push(rrx.recv().unwrap().unwrap());
+            }
+            drop(tx);
+            let stats = pool.stats();
+            drop(pool);
+            (out, stats)
+        };
+
+        let (want, base) = run(0);
+        assert_eq!(base.memo_rows_total, 0);
+        assert_eq!(base.memo_hits + base.memo_misses + base.memo_deposits, 0);
+        assert_eq!(base.memo_pruned_vertices, 0);
+        assert!(base.staged_rows > 0, "staged-row accounting is always on");
+
+        let (got, stats) = run(4096);
+        assert_eq!(stats.memo_rows_total, 4096);
+        assert_eq!(stats.shard_memo_rows, vec![4096]);
+        assert!(stats.memo_deposits > 0, "first pass harvested hub rows");
+        assert!(stats.memo_hits > 0, "second pass must hit the deposited hubs");
+        assert!(stats.memo_hit_rate > 0.0);
+        assert!(stats.memo_pruned_vertices > 0);
+        assert!(stats.memo_pruned_edges > 0);
+        assert!(stats.memo_resident_rows > 0);
+        assert!(stats.memo_resident_bytes > 0);
+        assert!(
+            stats.staged_rows < base.staged_rows,
+            "subtree pruning must gather fewer layer-0 rows ({} vs {})",
+            stats.staged_rows,
+            base.staged_rows
+        );
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.embedding, b.embedding, "id {}: memoization changed numerics", a.id);
+            assert!(
+                b.accel_us <= a.accel_us,
+                "id {}: pruned nodeflow simulated slower ({} > {})",
+                a.id,
+                b.accel_us,
+                a.accel_us
+            );
+        }
+    }
+
+    #[test]
+    fn memo_budget_splits_and_series_gate_like_residency() {
+        let g = graph();
+        // Partitioned: the memo budget splits across shards by largest
+        // remainder, exactly like --cache-rows.
+        for shards in [1usize, 3, 4] {
+            let spec = ShardSpec {
+                shards,
+                model_cfg: small_mc(),
+                backend: BackendChoice::Fixed,
+                cache_rows: 64,
+                memo_rows: 1000,
+                partition: PartitionStrategy::Degree,
+                ..Default::default()
+            };
+            let (tx, rx) = mpsc::channel();
+            let library = Arc::new(ModelLibrary::presets(&small_mc()));
+            let pool = ShardPool::start(&spec, library, g.clone(), rx, gauge(0)).unwrap();
+            drop(tx);
+            let stats = pool.stats();
+            drop(pool);
+            assert_eq!(stats.shard_memo_rows.len(), shards);
+            assert_eq!(stats.memo_rows_total, 1000, "shards={shards}");
+            let min = *stats.shard_memo_rows.iter().min().unwrap();
+            let max = *stats.shard_memo_rows.iter().max().unwrap();
+            assert!(max - min <= 1, "{:?}", stats.shard_memo_rows);
+            // Prometheus renders every memo series iff the budget is on.
+            let prom = stats.render_prometheus(&Telemetry::default());
+            for series in [
+                "grip_memo_rows_total",
+                "grip_memo_hits_total",
+                "grip_memo_misses_total",
+                "grip_memo_hit_rate",
+                "grip_memo_deposits_total",
+                "grip_memo_evictions_total",
+                "grip_memo_resident_rows",
+                "grip_memo_resident_bytes",
+                "grip_memo_pruned_vertices_total",
+                "grip_memo_pruned_edges_total",
+                "grip_memo_dedup_hits_total",
+            ] {
+                assert!(prom.contains(series), "missing {series}");
+            }
+            assert!(prom.contains("grip_staged_rows_total"), "staged rows always render");
+        }
+        // A non-exact backend ignores the budget entirely: no caches,
+        // no router, no leaked series — same bytes as --memo-rows 0.
+        let spec = ShardSpec {
+            shards: 2,
+            model_cfg: small_mc(),
+            backend: BackendChoice::TimingOnly,
+            cache_rows: 64,
+            memo_rows: 4096,
+            ..Default::default()
+        };
+        let (tx, rx) = mpsc::channel();
+        let library = Arc::new(ModelLibrary::presets(&small_mc()));
+        let pool = ShardPool::start(&spec, library, g, rx, gauge(0)).unwrap();
+        drop(tx);
+        assert!(pool.memo_router().is_none());
+        let stats = pool.stats();
+        drop(pool);
+        assert_eq!(stats.memo_rows_total, 0);
+        let prom = stats.render_prometheus(&Telemetry::default());
+        assert!(!prom.contains("grip_memo_"), "timing-only pool must not leak memo series");
     }
 }

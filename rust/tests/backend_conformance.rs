@@ -85,7 +85,7 @@ fn run_direct(choice: BackendChoice, targets: &[u32]) -> Vec<(String, Vec<f32>, 
             // Edge-centric phase first (what a prefetch lane does),
             // then the vertex engine consumes the staged rows.
             staged.stage(&nf, plan.layers[0].in_dim, &mut store);
-            let o = backend.execute(&prepared, &nf, &staged, &mut scratch).expect("execute");
+            let o = backend.execute(&prepared, &nf, &staged, &mut scratch, None).expect("execute");
             out.push((format!("{}@{t}", lib.name(key)), o.embeddings.to_vec(), o.numerics));
         }
     }
@@ -235,12 +235,12 @@ fn pjrt_backend_matches_fixed_backend_within_quantization_error() {
         let mut staged = StagedFeatures::new();
         staged.stage(&nf, mc.f_in, &mut store);
         let float = {
-            let o = pjrt.execute(&prepared_p, &nf, &staged, &mut scratch_p).unwrap();
+            let o = pjrt.execute(&prepared_p, &nf, &staged, &mut scratch_p, None).unwrap();
             assert_eq!(o.numerics, Numerics::Float, "{model:?}");
             o.embeddings.to_vec()
         };
         let fx = {
-            let o = fixed.execute(&prepared_f, &nf, &staged, &mut scratch_f).unwrap();
+            let o = fixed.execute(&prepared_f, &nf, &staged, &mut scratch_f, None).unwrap();
             assert_eq!(o.numerics, Numerics::FixedQ412, "{model:?}");
             o.embeddings.to_vec()
         };

@@ -1,0 +1,395 @@
+//! Property tests for the PR-10 cross-request activation memo
+//! (hand-rolled seeded cases, same style as `residency_props.rs`; the
+//! offline crate set has no `proptest`).
+//!
+//! THE property: memoizing interior-layer hub embeddings moves *work*
+//! (sampling, gathering, staging, matmul width), never *bits*. For the
+//! same request stream — all four presets plus a depth-3 custom spec,
+//! every (model, target) pair requested twice so the second pass can
+//! reuse the first — replies must be bit-identical across
+//! {off, tight, generous} memo budgets × {1, 4} shards ×
+//! {off, degree} partitioning × {pipelined, sequential} shards, while
+//! the generous run demonstrably hits, prunes, and stages fewer
+//! layer-0 rows. `accel_us` is asserted `<=` the baseline (never `==`):
+//! a hit prunes the hit vertex's whole sampling subtree, so the
+//! simulated pass legitimately shrinks — the embedding bytes are the
+//! invariant the design hangs on.
+
+use grip::backend::BackendChoice;
+use grip::config::ModelConfig;
+use grip::coordinator::{Coordinator, InferenceRequest, InferenceResponse, ServeConfig};
+use grip::fixed::Fx16;
+use grip::graph::{generate, CsrGraph, GeneratorParams, PartitionStrategy};
+use grip::greta::{
+    Activate, LayerSpec, ModelKey, ModelLibrary, ModelSpec, ProgramSpec, ReduceOp,
+};
+use grip::rng::SplitMix64;
+use grip::serve::{
+    split_cache_rows, DegreeClasses, MemoCache, MemoKey, PipelineConfig, ServeStats,
+    MEMO_MIN_CLASS,
+};
+use std::cmp::Reverse;
+
+/// Small enough to evict under the distinct hub rows one pass deposits.
+const TIGHT: usize = 8;
+/// Large enough that nothing admitted is ever evicted.
+const GENEROUS: usize = 65_536;
+
+fn serving_graph(seed: u64) -> CsrGraph {
+    generate(&GeneratorParams { nodes: 1_500, mean_degree: 7.0, seed, ..Default::default() })
+}
+
+fn small_mc() -> ModelConfig {
+    ModelConfig { sample1: 4, sample2: 3, f_in: 12, f_hid: 10, f_out: 6 }
+}
+
+/// A depth-3 mean-aggregate spec (8 → 6 → 5 → 3) so the matrix covers
+/// a model whose interior has *two* memoizable layers.
+fn depth3_spec() -> ModelSpec {
+    ModelSpec::builder("memo3")
+        .layer(LayerSpec::new(8, 6).sample(3).program(
+            ProgramSpec::new("m0")
+                .reduce(ReduceOp::Mean)
+                .transform("m_w0", 8, 6)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(6, 5).sample(2).program(
+            ProgramSpec::new("m1")
+                .reduce(ReduceOp::Mean)
+                .transform("m_w1", 6, 5)
+                .activate(Activate::Relu),
+        ))
+        .layer(LayerSpec::new(5, 3).sample(2).program(
+            ProgramSpec::new("m2")
+                .reduce(ReduceOp::Mean)
+                .transform("m_w2", 5, 3)
+                .activate(Activate::Relu),
+        ))
+        .build()
+}
+
+/// The generator draws power-law degrees *randomly per vertex* — low
+/// ids are not hubs. Deterministic hits need the actual top of the
+/// degree distribution as targets.
+fn hub_targets(g: &CsrGraph, n: usize) -> Vec<u32> {
+    let mut vs: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    vs.sort_by_key(|&v| Reverse(g.degree(v)));
+    vs.truncate(n);
+    vs
+}
+
+/// Two identical passes over model × hub: every (model, target) pair
+/// repeats exactly once, so pass 2 re-requests what pass 1 deposited.
+fn two_pass_hub_requests(keys: &[ModelKey], hubs: &[u32]) -> Vec<(ModelKey, u32)> {
+    let mut reqs = Vec::with_capacity(2 * keys.len() * hubs.len());
+    for _pass in 0..2 {
+        for &h in hubs {
+            for &k in keys {
+                reqs.push((k, h));
+            }
+        }
+    }
+    reqs
+}
+
+/// Serve `reqs` through a fixed-point pool with the given memo budget,
+/// shard count, partitioning, and pipeline mode. Requests are submitted
+/// *serially* (await each reply before the next submit): the deposits
+/// from request i are then deterministically visible to the build of
+/// request i+1, whatever the shard/pipeline width.
+fn serve_all_memo(
+    graph: &CsrGraph,
+    memo_rows: usize,
+    shards: usize,
+    partition: PartitionStrategy,
+    pipeline: PipelineConfig,
+    reqs: &[(ModelKey, u32)],
+) -> (Vec<InferenceResponse>, ServeStats) {
+    let cfg = ServeConfig {
+        backend: BackendChoice::Fixed,
+        shards,
+        builders: 3,
+        model_cfg: small_mc(),
+        custom_specs: vec![depth3_spec()],
+        partition,
+        pipeline,
+        memo_rows,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(graph.clone(), 11, cfg).unwrap();
+    let responses: Vec<InferenceResponse> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, t))| {
+            coord.submit(InferenceRequest::single(i as u64, m, t)).unwrap().recv().unwrap().unwrap()
+        })
+        .collect();
+    let stats = coord.serve_stats();
+    (responses, stats)
+}
+
+#[test]
+fn prop_memoization_is_bit_identical_across_budgets_shards_partition_pipeline() {
+    let graph = serving_graph(29);
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &[depth3_spec()]).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    assert_eq!(keys.len(), 5, "4 presets + the depth-3 spec");
+    let hubs = hub_targets(&graph, 6);
+    let reqs = two_pass_hub_requests(&keys, &hubs);
+
+    // Baseline: memo off, single shard, shared queue, pipelined.
+    let (want, base) = serve_all_memo(
+        &graph,
+        0,
+        1,
+        PartitionStrategy::Off,
+        PipelineConfig::default(),
+        &reqs,
+    );
+    assert!(want.iter().all(|r| !r.timing_only));
+    assert_eq!(base.memo_rows_total, 0);
+    assert_eq!(
+        base.memo_hits + base.memo_misses + base.memo_deposits,
+        0,
+        "--memo-rows 0 keeps every memo counter silent"
+    );
+    assert_eq!(base.memo_hit_rate, 0.0);
+    assert!(base.staged_rows > 0, "staged-row accounting is always on");
+
+    for memo_rows in [TIGHT, GENEROUS] {
+        for shards in [1usize, 4] {
+            for partition in [PartitionStrategy::Off, PartitionStrategy::Degree] {
+                for sequential in [false, true] {
+                    let pipeline =
+                        if sequential { PipelineConfig::off() } else { PipelineConfig::default() };
+                    let tag = format!(
+                        "memo={memo_rows} x {shards} shards x {partition:?} x seq={sequential}"
+                    );
+                    let (got, stats) =
+                        serve_all_memo(&graph, memo_rows, shards, partition, pipeline, &reqs);
+                    assert_eq!(got.len(), want.len(), "{tag}");
+                    for (a, b) in want.iter().zip(got.iter()) {
+                        assert_eq!(a.id, b.id);
+                        assert_eq!(
+                            a.embedding, b.embedding,
+                            "id {}: {tag} changed numerics",
+                            a.id
+                        );
+                        assert!(
+                            b.accel_us <= a.accel_us,
+                            "id {}: {tag} grew the simulated pass ({} > {})",
+                            a.id,
+                            b.accel_us,
+                            a.accel_us
+                        );
+                        assert!(b.neighborhood <= a.neighborhood, "id {}: {tag}", a.id);
+                        assert!(!b.timing_only);
+                    }
+                    assert_eq!(stats.memo_rows_total, memo_rows, "{tag}");
+                    let caches =
+                        if matches!(partition, PartitionStrategy::Off) { 1 } else { shards };
+                    assert_eq!(stats.shard_memo_rows.len(), caches, "{tag}");
+                    assert_eq!(
+                        stats.shard_memo_rows.iter().sum::<usize>(),
+                        memo_rows,
+                        "{tag}: rows lost in the shard split"
+                    );
+                    assert!(
+                        stats.memo_resident_rows <= memo_rows as u64,
+                        "{tag}: resident rows {} exceed the budget",
+                        stats.memo_resident_rows
+                    );
+                    if memo_rows == GENEROUS {
+                        assert!(stats.memo_deposits > 0, "{tag}: pass 1 must harvest hub rows");
+                        assert!(
+                            stats.memo_hits > 0,
+                            "{tag}: pass 2 must hit what pass 1 deposited"
+                        );
+                        assert!(stats.memo_hit_rate > 0.0, "{tag}");
+                        assert!(stats.memo_pruned_vertices > 0, "{tag}: hits must prune");
+                        assert!(stats.memo_pruned_edges > 0, "{tag}");
+                        assert!(stats.memo_resident_bytes > 0, "{tag}");
+                        assert_eq!(
+                            stats.memo_evictions, 0,
+                            "{tag}: a generous budget never evicts"
+                        );
+                        assert!(
+                            stats.staged_rows < base.staged_rows,
+                            "{tag}: pruning must gather fewer layer-0 rows ({} vs {})",
+                            stats.staged_rows,
+                            base.staged_rows
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_thrashing_memo_budget_still_replies_bit_identically() {
+    // A two-row cache under dozens of distinct hub rows turns over
+    // constantly; turnover may cost hits, never bits.
+    let graph = serving_graph(31);
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &[depth3_spec()]).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    let hubs = hub_targets(&graph, 8);
+    let reqs = two_pass_hub_requests(&keys, &hubs);
+
+    let (want, _) = serve_all_memo(
+        &graph,
+        0,
+        1,
+        PartitionStrategy::Off,
+        PipelineConfig::default(),
+        &reqs,
+    );
+    let (got, stats) = serve_all_memo(
+        &graph,
+        2,
+        1,
+        PartitionStrategy::Off,
+        PipelineConfig::default(),
+        &reqs,
+    );
+    for (a, b) in want.iter().zip(got.iter()) {
+        assert_eq!(a.embedding, b.embedding, "id {}: thrashing changed numerics", a.id);
+        assert!(b.accel_us <= a.accel_us, "id {}", a.id);
+    }
+    assert_eq!(stats.memo_rows_total, 2);
+    assert!(stats.memo_resident_rows <= 2, "residency stays under the budget while thrashing");
+    assert!(stats.memo_deposits > 0);
+    assert!(
+        stats.memo_evictions > 0,
+        "a two-row cache under {} requests over {} hubs must turn over",
+        reqs.len(),
+        hubs.len()
+    );
+}
+
+#[test]
+fn prop_memo_budget_split_conserves_rows_and_the_pool_applies_it() {
+    // `--memo-rows` shares `split_cache_rows` with the feature cache:
+    // largest remainder, total conserved, shares within one row.
+    let mut rng = SplitMix64::new(0x4D45_4D4F);
+    for case in 0..200 {
+        let rows = rng.gen_range(1 << 16) + 1;
+        let shards = rng.gen_range(8) + 1;
+        let split = split_cache_rows(rows, shards);
+        assert_eq!(split.len(), shards, "case {case}");
+        assert_eq!(split.iter().sum::<usize>(), rows, "case {case}: rows lost in the split");
+        let min = *split.iter().min().unwrap();
+        let max = *split.iter().max().unwrap();
+        assert!(max - min <= 1, "case {case}: uneven split {split:?}");
+    }
+    assert_eq!(split_cache_rows(0, 4), vec![0; 4], "budget 0 splits to 0 everywhere");
+
+    // The partitioned pool reports exactly that split back.
+    let graph = serving_graph(33);
+    let hubs = hub_targets(&graph, 2);
+    let reqs: Vec<(ModelKey, u32)> =
+        hubs.iter().map(|&h| (ModelKey::from_index(0), h)).collect();
+    let (_, stats) = serve_all_memo(
+        &graph,
+        1_001,
+        3,
+        PartitionStrategy::Degree,
+        PipelineConfig::default(),
+        &reqs,
+    );
+    assert_eq!(stats.shard_memo_rows, split_cache_rows(1_001, 3));
+    assert_eq!(stats.memo_rows_total, 1_001);
+}
+
+#[test]
+fn prop_admission_is_hub_only_per_calibrated_classes() {
+    // Synthetic skew: a heavy degree-2 tail under a 10-vertex hub band.
+    let degrees: Vec<usize> = (0..100).map(|i| if i < 90 { 2 } else { 140 + i }).collect();
+    let classes = DegreeClasses::from_degrees(degrees);
+    let cache = MemoCache::with_classes(64, classes);
+    assert!(!cache.admits(0));
+    assert!(!cache.admits(classes.b2), "class 2 (at the p75 breakpoint) is refused");
+    assert!(cache.admits(classes.b2 + 1), "just above p75 = class 3: admitted");
+    assert!(cache.admits(1_000_000), "class 4: admitted");
+    // The gate is exactly `class >= MEMO_MIN_CLASS`, nothing looser.
+    for d in [0, 1, 2, classes.b1, classes.b2, classes.b2 + 1, classes.b3, classes.b3 + 1, 10_000]
+    {
+        assert_eq!(cache.admits(d), classes.class(d) >= MEMO_MIN_CLASS, "degree {d}");
+    }
+
+    // Over the real serving graph: the hubs the design is about are
+    // admitted, the minimum-degree tail never is.
+    let g = serving_graph(29);
+    let gc = DegreeClasses::from_graph(&g);
+    let gcache = MemoCache::with_classes(64, gc);
+    for &h in &hub_targets(&g, 4) {
+        assert!(gcache.admits(g.degree(h)), "top-degree hub {h} must be admitted");
+    }
+    let tail = (0..g.num_vertices() as u32).min_by_key(|&v| g.degree(v)).unwrap();
+    assert!(!gcache.admits(g.degree(tail)), "the minimum-degree vertex is never a hub");
+    // And a zero-row budget admits nothing at any degree.
+    assert!(!MemoCache::with_classes(0, gc).admits(1_000_000));
+}
+
+#[test]
+fn prop_weight_seed_is_part_of_the_key_and_memoized_serving_respects_it() {
+    // Unit level: the same (model, layer, vertex) under two weight
+    // seeds must never alias to one slot.
+    let c = MemoCache::with_classes(8, DegreeClasses::default());
+    let k1 = MemoKey { model: ModelKey::from_index(2), seed: 0xA11CE, layer: 1, vertex: 7 };
+    let k2 = MemoKey { seed: 0xB0B, ..k1 };
+    c.insert(k1, 1_000, vec![Fx16::from_raw(1_111); 5]);
+    assert_eq!(c.lookup(k2), None, "a different weight seed must miss");
+    assert_eq!(c.lookup(k1), Some(vec![Fx16::from_raw(1_111); 5]), "the original seed hits");
+    assert_eq!(c.resident_rows(), 1);
+
+    // End to end: under a non-default weight seed the memoized pool
+    // still matches its own memo-off baseline bit for bit (the cached
+    // rows are keyed by *that* seed), while serving visibly different
+    // bits than the default-seed pool (the weights really changed).
+    let graph = serving_graph(37);
+    let (lib, _) = ModelLibrary::with_customs(&small_mc(), &[depth3_spec()]).unwrap();
+    let keys: Vec<ModelKey> = lib.keys().collect();
+    let hubs = hub_targets(&graph, 4);
+    let reqs = two_pass_hub_requests(&keys, &hubs);
+    let run = |memo_rows: usize, seed: u64| {
+        let cfg = ServeConfig {
+            backend: BackendChoice::Fixed,
+            shards: 1,
+            builders: 3,
+            model_cfg: small_mc(),
+            custom_specs: vec![depth3_spec()],
+            weight_seed: seed,
+            memo_rows,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(graph.clone(), 11, cfg).unwrap();
+        let responses: Vec<InferenceResponse> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, t))| {
+                coord
+                    .submit(InferenceRequest::single(i as u64, m, t))
+                    .unwrap()
+                    .recv()
+                    .unwrap()
+                    .unwrap()
+            })
+            .collect();
+        let stats = coord.serve_stats();
+        (responses, stats)
+    };
+
+    let (want, _) = run(0, 0xBEEF);
+    let (got, stats) = run(GENEROUS, 0xBEEF);
+    for (a, b) in want.iter().zip(got.iter()) {
+        assert_eq!(a.embedding, b.embedding, "id {}: memo changed numerics under seed", a.id);
+    }
+    assert!(stats.memo_hits > 0, "repeated hub targets must hit under any seed");
+
+    let (base, _) = run(0, ServeConfig::default().weight_seed);
+    assert!(
+        want.iter().zip(base.iter()).any(|(a, b)| a.embedding != b.embedding),
+        "two weight seeds must not serve the same function"
+    );
+}
